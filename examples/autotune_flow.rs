@@ -1,0 +1,61 @@
+//! The §5 / Fig. 5 autotuning workflow, end to end:
+//!
+//!   1. microbenchmark sweep over (batch, seqlen, decode-share) scenarios
+//!      against every compiled kernel artifact,
+//!   2. per-scenario winner table,
+//!   3. greedy decision-tree fit,
+//!   4. export as heuristics.json + a Listing-2-style if/else dump,
+//!   5. regret comparison: tuned tree vs. untuned default vs. oracle.
+//!
+//!   make artifacts            # (or artifacts-bench for the full grid)
+//!   cargo run --release --example autotune_flow
+
+use anyhow::Result;
+use triton_anatomy::autotune;
+use triton_anatomy::heuristics::Heuristics;
+use triton_anatomy::microbench::BenchOpts;
+use triton_anatomy::runtime::Runtime;
+use triton_anatomy::workload::Rng;
+
+fn main() -> Result<()> {
+    let dir = triton_anatomy::default_artifacts_dir();
+    let rt = Runtime::load_dir(dir.clone())?;
+    let n_kernels = rt.manifest.kernel_artifacts().count();
+
+    let mut rng = Rng::new(0xBEEF);
+    // cap sequence lengths to what the present kernel buckets support
+    let max_len = rt
+        .manifest
+        .kernel_artifacts()
+        .map(|a| a.bucket.max_blocks * a.config.block_size)
+        .max()
+        .unwrap_or(512);
+    let grid = autotune::default_grid(&mut rng, max_len.min(2048));
+    println!("sweeping {} scenarios over {n_kernels} kernel artifacts...",
+             grid.len());
+
+    let samples = autotune::sweep(
+        &rt, &grid, BenchOpts { warmup: 1, iters: 3 }, false)?;
+
+    println!("\n--- per-scenario winners ---");
+    for s in &samples {
+        let (best, us) = s.best();
+        println!("{:<28} -> {:<8} tile_n={:<3} ({:>8.0} us)",
+                 s.scenario, best.variant.name(), best.tile_n, us);
+    }
+
+    let tuned = autotune::fit_heuristics(&samples, 4);
+    println!("\n--- exported decode tree (Listing 2 analogue) ---");
+    print!("{}", tuned.decode.render(0));
+    println!("--- exported prefill tree ---");
+    print!("{}", tuned.prefill.render(0));
+
+    let out = dir.join("heuristics.json");
+    tuned.save(&out)?;
+    println!("\nwrote {out:?}");
+
+    let r_tuned = autotune::regret_pct(&tuned, &samples);
+    let r_default = autotune::regret_pct(&Heuristics::default_tree(), &samples);
+    println!("regret vs oracle: tuned {r_tuned:.1}%, untuned default {r_default:.1}%");
+    Ok(())
+}

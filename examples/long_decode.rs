@@ -1,0 +1,80 @@
+//! Fig. 9-style single-sequence long generation across kernel variants:
+//! batch size 1, fixed prompt, growing output length — the configuration
+//! the paper uses to isolate kernel improvements from scheduling effects.
+//!
+//!   make artifacts-e2e
+//!   cargo run --release --example long_decode -- [--model small]
+//!       [--prompt-len 100] [--outputs 16,32,64,128]
+
+use std::rc::Rc;
+
+use anyhow::Result;
+use triton_anatomy::config::{EngineConfig, Variant};
+use triton_anatomy::engine::Engine;
+use triton_anatomy::heuristics::{DecisionTree, Heuristics, KernelChoice};
+use triton_anatomy::runtime::Runtime;
+use triton_anatomy::workload::Rng;
+
+fn flag(args: &[String], name: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+/// Heuristics that always pick one variant — for ablation runs.
+fn pinned(variant: Variant) -> Heuristics {
+    let leaf = DecisionTree::Leaf(KernelChoice {
+        variant,
+        tile_n: 32,
+        block_q: if variant == Variant::Parts { 1 } else { 16 },
+        num_segments: 8,
+        use_dot: false,
+    });
+    Heuristics { decode: leaf.clone(), prefill: leaf }
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = flag(&args, "--model").unwrap_or_else(|| "small".into());
+    let prompt_len: usize =
+        flag(&args, "--prompt-len").map_or(100, |v| v.parse().unwrap());
+    let outputs: Vec<usize> = flag(&args, "--outputs")
+        .unwrap_or_else(|| "16,32,64".into())
+        .split(',')
+        .map(|s| s.parse().unwrap())
+        .collect();
+
+    let dir = triton_anatomy::default_artifacts_dir();
+    println!("model={model} prompt_len={prompt_len}");
+    println!("{:<10} {:>8} {:>14} {:>12} {:>12}",
+             "variant", "out_toks", "latency_ms", "ms/token", "steps");
+
+    for &n_out in &outputs {
+        for variant in [Variant::Naive, Variant::QBlock, Variant::Parts,
+                        Variant::Static, Variant::Flash] {
+            let rt = Rc::new(Runtime::load_dir(dir.clone())?);
+            let ecfg = EngineConfig { model: model.clone(),
+                                      ..Default::default() };
+            let mut engine = match Engine::new(rt, ecfg) {
+                Ok(e) => e,
+                Err(_) => continue,
+            };
+            engine.heuristics = pinned(variant);
+            engine.warmup()?;
+            let mut rng = Rng::new(42);
+            let prompt = rng.tokens(prompt_len, engine.model_cfg.vocab_size);
+            let t0 = std::time::Instant::now();
+            engine.add_request(prompt, n_out)?;
+            let fin = engine.run_to_completion()?;
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            // variants the heuristics couldn't satisfy fall back; report
+            // what actually ran
+            let ran: Vec<&String> = engine.metrics.variant_picks.keys().collect();
+            println!("{:<10} {:>8} {:>14.1} {:>12.2} {:>12}   ran={ran:?}",
+                     variant.name(), fin[0].output.len(), ms,
+                     ms / fin[0].output.len() as f64, engine.metrics.steps);
+        }
+        println!();
+    }
+    Ok(())
+}

@@ -1,0 +1,33 @@
+//! Quickstart: load the AOT artifacts, build an engine, generate a few
+//! tokens. This is the 20-line "hello world" of the stack.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use std::rc::Rc;
+
+use anyhow::Result;
+use triton_anatomy::{Engine, EngineConfig, Runtime};
+
+fn main() -> Result<()> {
+    // 1. Load the manifest + compiled HLO artifacts (written once by
+    //    `make artifacts`; Python never runs again after that).
+    let rt = Rc::new(Runtime::load_dir(triton_anatomy::default_artifacts_dir())?);
+
+    // 2. Build the serving engine for the tiny demo model. Warmup compiles
+    //    every bucketed executable — the CUDA-graph-capture analogue.
+    let mut engine = Engine::new(rt, EngineConfig::default())?;
+    let n = engine.warmup()?;
+    println!("warmed up {n} step executables for '{}'", engine.model_name);
+
+    // 3. Generate greedily from a fixed prompt.
+    let prompt = vec![11, 542, 7, 1023, 77, 3];
+    engine.add_request(prompt.clone(), 12)?;
+    let finished = engine.run_to_completion()?;
+
+    let r = &finished[0];
+    println!("prompt : {prompt:?}");
+    println!("output : {:?}", r.output);
+    println!("steps  : {}", engine.metrics.steps);
+    println!("picked : {:?}", engine.metrics.variant_picks);
+    Ok(())
+}

@@ -1,0 +1,116 @@
+//! End-to-end validation driver: online serving under a Poisson workload.
+//!
+//! Boots the TCP server on the 'small' (or --model=...) model, replays a
+//! Poisson arrival trace with zipf-ish prompt lengths from concurrent
+//! clients, and reports the serving metrics the paper's end-to-end section
+//! cares about: time-to-first-token, per-request latency, token
+//! throughput. The run is recorded in EXPERIMENTS.md §E2E.
+//!
+//!   make artifacts-e2e
+//!   cargo run --release --example serving -- [--model small] [--requests 24]
+//!       [--rate 2.0] [--clients 4]
+
+use std::net::TcpListener;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use triton_anatomy::config::EngineConfig;
+use triton_anatomy::metrics::Histogram;
+use triton_anatomy::server::{serve, Client};
+use triton_anatomy::workload::{ArrivalProcess, Rng};
+
+fn flag(args: &[String], name: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1).cloned())
+        .or_else(|| {
+            args.iter()
+                .find_map(|a| a.strip_prefix(&format!("{name}=")).map(String::from))
+        })
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = flag(&args, "--model").unwrap_or_else(|| "small".into());
+    let n_requests: usize = flag(&args, "--requests").map_or(24, |v| v.parse().unwrap());
+    let rate: f64 = flag(&args, "--rate").map_or(2.0, |v| v.parse().unwrap());
+    let n_clients: usize = flag(&args, "--clients").map_or(4, |v| v.parse().unwrap());
+
+    // spawn the server on an ephemeral port
+    let probe = TcpListener::bind("127.0.0.1:0")?;
+    let addr = format!("127.0.0.1:{}", probe.local_addr()?.port());
+    drop(probe);
+    let dir = triton_anatomy::default_artifacts_dir();
+    let ecfg = EngineConfig {
+        model: model.clone(),
+        max_batched_tokens: 256,
+        max_num_seqs: 4,
+        ..Default::default()
+    };
+    let server_addr = addr.clone();
+    let server = std::thread::spawn(move || {
+        serve(dir, ecfg, &server_addr, Some(n_requests))
+    });
+    std::thread::sleep(Duration::from_millis(500));
+
+    // sample the arrival trace
+    let mut rng = Rng::new(2024);
+    let process = ArrivalProcess {
+        rate_per_s: rate,
+        min_prompt: 16,
+        max_prompt: 96,
+        min_new: 8,
+        max_new: 32,
+    };
+    let events = process.sample(n_requests, &mut rng);
+    println!("serving model '{model}' @ {addr}: {n_requests} requests, \
+              Poisson rate {rate}/s, {n_clients} clients");
+
+    // replay: each client thread owns a slice of the trace
+    let ttft = Arc::new(Mutex::new(Histogram::new()));
+    let e2e = Arc::new(Mutex::new(Histogram::new()));
+    let tokens_out = Arc::new(Mutex::new(0u64));
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..n_clients {
+        let my_events: Vec<_> = events
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| i % n_clients == c)
+            .map(|(_, e)| e.clone())
+            .collect();
+        let addr = addr.clone();
+        let (ttft, e2e, tokens_out) =
+            (ttft.clone(), e2e.clone(), tokens_out.clone());
+        handles.push(std::thread::spawn(move || -> Result<()> {
+            let mut client = Client::connect(&addr)?;
+            let mut rng = Rng::new(77 + c as u64);
+            for ev in my_events {
+                // honor the arrival time
+                let now = t0.elapsed().as_secs_f64();
+                if ev.at_s > now {
+                    std::thread::sleep(Duration::from_secs_f64(ev.at_s - now));
+                }
+                let prompt = rng.tokens(ev.prompt_len, 1024);
+                let done = client.generate(&prompt, ev.max_new_tokens)?;
+                ttft.lock().unwrap().record(done.ttft_ms * 1000.0);
+                e2e.lock().unwrap().record(done.total_ms * 1000.0);
+                *tokens_out.lock().unwrap() += done.tokens.len() as u64;
+            }
+            Ok(())
+        }));
+    }
+    for h in handles {
+        h.join().unwrap()?;
+    }
+    server.join().unwrap()?;
+
+    let wall = t0.elapsed().as_secs_f64();
+    let total_tokens = *tokens_out.lock().unwrap();
+    println!("\n=== serving summary ({n_requests} requests, {wall:.1}s wall) ===");
+    println!("ttft_us  {}", ttft.lock().unwrap().summary());
+    println!("e2e_us   {}", e2e.lock().unwrap().summary());
+    println!("decode throughput: {:.1} tok/s", total_tokens as f64 / wall);
+    Ok(())
+}

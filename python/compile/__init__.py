@@ -1,0 +1,6 @@
+"""Build-time Python package: L1 Pallas kernels, L2 JAX model, AOT export.
+
+Never imported at serving time — ``make artifacts`` runs it once to produce
+``artifacts/*.hlo.txt`` + weights + manifest, after which the Rust binary
+is self-contained.
+"""

@@ -1,0 +1,171 @@
+"""Analytic kernel performance model — the TPU-facing targets of DESIGN §7.
+
+Interpret-mode wallclock on XLA-CPU cannot expose parallelism effects
+(grid cells execute sequentially), so the structural quantities the paper
+optimizes for on GPUs are computed analytically per kernel config:
+
+  * per-instance VMEM footprint — the tile working set that must fit the
+    TPU's ~16 MiB VMEM (the analogue of Triton's shared-memory budget),
+  * MXU-eligible FLOP fraction — how much of the arithmetic runs on the
+    systolic array (`jnp.dot`) vs. the VPU (elementwise path),
+  * program-instance count and per-instance critical path (serial tile
+    iterations) — the occupancy/wave model behind §4.5's parallel tiled
+    softmax and §6.2's excess-instance discussion,
+  * bytes moved per instance and arithmetic intensity.
+
+``python -m compile.analysis`` prints the model for every config the AOT
+profiles export; pytest pins the qualitative claims (naive has 4x the
+loads of qblock, parts divides the critical path by the segment count,
+everything fits VMEM).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import math
+
+from .config import Bucket, KernelConfig, ModelConfig, cdiv
+
+F32 = 4
+VMEM_BYTES = 16 * 2 ** 20          # per-core VMEM on current TPUs
+MXU_FLOPS_PER_CYCLE = 2 * 128 * 128   # one 128x128 MAC array
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioShape:
+    """Analytic stand-in for a batch: uniform sequences."""
+    num_seqs: int
+    seq_len: int          # context + query
+    query_len: int        # tokens per sequence this step (1 = decode)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelModel:
+    variant: str
+    #: program instances launched (the grid size)
+    instances: int
+    #: serial tile-loop iterations on the longest instance (critical path)
+    critical_path_tiles: int
+    #: f32 bytes resident per instance (Q block + K/V tiles + accumulators)
+    vmem_bytes: int
+    #: fraction of FLOPs eligible for the MXU (dot path)
+    mxu_fraction: float
+    #: K/V bytes loaded from HBM across all instances (redundancy shows here)
+    hbm_bytes: int
+    #: total FLOPs across instances
+    flops: int
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.flops / max(self.hbm_bytes, 1)
+
+    @property
+    def parallel_tile_steps(self) -> int:
+        """Idealized wave count on an infinitely parallel device: the
+        longest serial chain of tile iterations."""
+        return self.critical_path_tiles
+
+
+def _tile_flops(m: int, n: int, d: int) -> int:
+    # scores (m×d · d×n) + weighted sum (m×n · n×d), MACs×2
+    return 2 * m * n * d * 2
+
+
+def model_kernel(cfg: KernelConfig, geom: ModelConfig,
+                 shape: ScenarioShape) -> KernelModel:
+    """Analytic model of one kernel launch for a uniform batch."""
+    d = geom.head_size
+    kvh = geom.num_kv_heads
+    qh = geom.num_q_heads
+    qpk = geom.queries_per_kv
+    tiles_per_seq = cdiv(shape.seq_len, cfg.tile_n)
+    kv_tile_bytes = 2 * cfg.tile_n * d * F32        # K and V tiles
+
+    if cfg.variant == "naive":
+        # one (token, head) per instance; elementwise path; every instance
+        # re-loads its KV head's tiles → qpk-fold redundancy vs qblock
+        inst = shape.num_seqs * shape.query_len * qh
+        m = 1
+        vmem = (m * d + 2 * cfg.tile_n * d + m * cfg.tile_n + m * d) * F32
+        hbm = inst * tiles_per_seq * kv_tile_bytes
+        flops = inst * tiles_per_seq * _tile_flops(m, cfg.tile_n, d)
+        return KernelModel(cfg.variant, inst, tiles_per_seq, vmem,
+                           1.0 if cfg.use_dot else 0.0, hbm, flops)
+
+    if cfg.variant in ("qblock", "static", "flash"):
+        m = cfg.block_q * qpk
+        qblocks = shape.num_seqs * cdiv(shape.query_len, cfg.block_q)
+        inst = (cfg.static_programs * kvh if cfg.variant == "static"
+                else qblocks * kvh)
+        work_per_prog = (cdiv(qblocks, cfg.static_programs)
+                         if cfg.variant == "static" else 1)
+        vmem = (m * d + 2 * cfg.tile_n * d + m * cfg.tile_n + m * d) * F32
+        hbm = qblocks * kvh * tiles_per_seq * kv_tile_bytes
+        flops = qblocks * kvh * tiles_per_seq * _tile_flops(m, cfg.tile_n, d)
+        return KernelModel(cfg.variant, inst,
+                           work_per_prog * tiles_per_seq, vmem,
+                           1.0 if cfg.use_dot else 0.0, hbm, flops)
+
+    if cfg.variant == "parts":
+        # decode-only: segments divide the per-sequence tile chain, plus a
+        # reduction pass over num_segments partials (§4.5)
+        m = qpk
+        inst = shape.num_seqs * kvh * cfg.num_segments
+        tiles_per_segment = cdiv(tiles_per_seq, cfg.num_segments)
+        vmem = (m * d + 2 * cfg.tile_n * d + m * cfg.tile_n + m * d) * F32
+        hbm = shape.num_seqs * kvh * tiles_per_seq * kv_tile_bytes
+        flops = shape.num_seqs * kvh * tiles_per_seq * _tile_flops(
+            m, cfg.tile_n, d)
+        # +1: the reduce_segments kernel counts as one extra serial step
+        return KernelModel(cfg.variant, inst, tiles_per_segment + 1, vmem,
+                           1.0 if cfg.use_dot else 0.0, hbm, flops)
+
+    raise ValueError(cfg.variant)
+
+
+def mxu_utilization_estimate(cfg: KernelConfig, geom: ModelConfig) -> float:
+    """Fraction of MXU lanes a dot-path tile occupies: (m×n×d) contraction
+    mapped onto 128×128 MACs — the paper's Tensor-Core-occupancy analogue."""
+    if not cfg.use_dot:
+        return 0.0
+    m = cfg.block_q * geom.queries_per_kv
+    return min(1.0, m / 128) * min(1.0, cfg.tile_n / 128)
+
+
+def report(cfg: KernelConfig, geom: ModelConfig, shape: ScenarioShape) -> str:
+    km = model_kernel(cfg, geom, shape)
+    return (f"{cfg.tag():<38} inst={km.instances:<6} "
+            f"crit_path={km.parallel_tile_steps:<5} "
+            f"vmem={km.vmem_bytes / 1024:>6.1f}KiB "
+            f"mxu={km.mxu_fraction:>4.0%} "
+            f"hbm={km.hbm_bytes / 1e6:>7.2f}MB "
+            f"ai={km.arithmetic_intensity:>5.2f}")
+
+
+def main() -> None:
+    from .aot import KERNEL_GEOM, PROFILES
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--profile", default="default", choices=list(PROFILES))
+    ap.add_argument("--num-seqs", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=1024)
+    ap.add_argument("--query-len", type=int, default=1)
+    args = ap.parse_args()
+
+    shape = ScenarioShape(args.num_seqs, args.seq_len, args.query_len)
+    arts, _ = PROFILES[args.profile]()
+    seen = set()
+    print(f"# analytic kernel model — batch={shape.num_seqs} "
+          f"seqlen={shape.seq_len} qlen={shape.query_len}")
+    for a in arts:
+        if a.kind != "kernel" or a.cfg in seen:
+            continue
+        seen.add(a.cfg)
+        if a.cfg.variant == "parts" and shape.query_len != 1:
+            continue
+        print(report(a.cfg, KERNEL_GEOM, shape))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,462 @@
+"""AOT export: lower L2/L1 to HLO **text** artifacts + weights + manifest.
+
+Python runs exactly once, at build time (``make artifacts``); the Rust
+coordinator then loads ``artifacts/*.hlo.txt`` through
+``HloModuleProto::from_text_file`` and never touches Python again.
+
+HLO *text* — not ``lowered.compile().serialize()`` — is the interchange
+format: jax ≥ 0.5 emits HloModuleProtos with 64-bit instruction ids that
+xla_extension 0.5.1 (the version behind the published ``xla`` crate)
+rejects; the text parser reassigns ids and round-trips cleanly.
+
+Each artifact freezes one (kernel config, bucket) pair — the AOT analogue
+of one recorded CUDA/HIP graph (§6.2): vLLM records one graph per
+power-of-two batch size; we compile one executable per power-of-two
+bucket, and the Rust heuristics (§5) choose among them with zero JIT cost.
+
+Profiles:
+  default  tiny-model step executables (all variants) + a small kernel set
+           — what tests, examples/quickstart and cargo test use.
+  bench    kernel-only executables over the Fig. 6/7/8 sweep grid
+           (Llama-3-8B-like head geometry, scaled).
+  e2e      small-model step executables for Fig. 9 / examples/serving.
+  100m     ~100M-parameter model for the heavy end-to-end run.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .config import Bucket, KernelConfig, ModelConfig, decode_bucket
+from .kernels import get_kernel
+from .kernels.common import kernel_signature
+from .model import (Params, SAMPLE_PAD, extract_tokens, init_params,
+                    make_model_fn, model_step_signature, state_len)
+
+# ---------------------------------------------------------------- model zoo
+
+MODELS: dict[str, ModelConfig] = {
+    # CI / quickstart: small enough that every variant exports in seconds.
+    "tiny": ModelConfig(num_layers=2, hidden_size=256, num_q_heads=8,
+                        num_kv_heads=2, head_size=32, intermediate_size=512,
+                        vocab_size=2048, max_model_len=512),
+    # Fig. 9 / serving example: Llama-like head geometry, 4 layers.
+    "small": ModelConfig(num_layers=4, hidden_size=512, num_q_heads=8,
+                         num_kv_heads=2, head_size=64,
+                         intermediate_size=1024, vocab_size=4096,
+                         max_model_len=1024),
+    # ~100M parameters for the headline end-to-end validation.
+    "llama100m": ModelConfig(num_layers=10, hidden_size=768, num_q_heads=12,
+                             num_kv_heads=4, head_size=64,
+                             intermediate_size=2048, vocab_size=8192,
+                             max_model_len=1024),
+}
+
+#: Geometry of the kernel-only microbench artifacts. The paper bases its
+#: microbenchmarks on Llama-3-8B (128 head size, 32 Q heads, 8 KV heads);
+#: we scale to 64/8/2 — same queries_per_kv=4 GQA ratio — per DESIGN.md §5.
+KERNEL_GEOM = ModelConfig(num_layers=1, hidden_size=512, num_q_heads=8,
+                          num_kv_heads=2, head_size=64,
+                          intermediate_size=1024, vocab_size=1024,
+                          max_model_len=4096)
+
+
+def dtype_str(dt) -> str:
+    return {"float32": "f32", "int32": "i32"}[jnp.dtype(dt).name]
+
+
+def to_hlo_text(lowered) -> str:
+    # return_tuple=False: every artifact is built to return exactly ONE
+    # array (see model_step_flat) so PJRT hands back a plain buffer that
+    # can be chained into the next execute without a host round-trip.
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False)
+    return comp.as_hlo_text()
+
+
+# ------------------------------------------------------------- artifact set
+
+
+@dataclasses.dataclass
+class Artifact:
+    kind: str                  # "kernel" | "model"
+    name: str
+    fn: object                 # callable to lower
+    inputs: list               # [(name, shape, dtype)]
+    outputs: list
+    cfg: KernelConfig
+    bucket: Bucket
+    model_name: str | None = None
+
+    def manifest_entry(self, path: str) -> dict:
+        return {
+            "kind": self.kind,
+            "name": self.name,
+            "path": path,
+            "variant": self.cfg.variant,
+            "config": self.cfg.to_json(),
+            "bucket": self.bucket.to_json(),
+            "model": self.model_name,
+            "inputs": [
+                {"name": n, "shape": list(s), "dtype": dtype_str(d)}
+                for n, s, d in self.inputs
+            ],
+            "outputs": [
+                {"name": n, "shape": list(s), "dtype": dtype_str(d)}
+                for n, s, d in self.outputs
+            ],
+        }
+
+
+def kernel_artifact(cfg: KernelConfig, bucket: Bucket,
+                    geom: ModelConfig = KERNEL_GEOM) -> Artifact:
+    kern = get_kernel(cfg)
+
+    def fn(*ops):
+        return kern(*ops, cfg=cfg, model=geom, bucket=bucket)
+
+    sig = kernel_signature(bucket, geom)
+    out_sig = [("out", (bucket.max_tokens, geom.num_q_heads, geom.head_size),
+                jnp.float32)]
+    name = f"kernel-{cfg.tag()}-{bucket.tag()}"
+    return Artifact("kernel", name, fn, sig, out_sig, cfg, bucket)
+
+
+def model_artifact(model_name: str, cfg: KernelConfig, bucket: Bucket,
+                   params_sig: list) -> Artifact:
+    model = MODELS[model_name]
+    fn = make_model_fn(cfg, model, bucket)
+    sig = params_sig + model_step_signature(model, bucket)
+    out_sig = [("state", (state_len(model, bucket.num_slots),), jnp.float32)]
+    name = f"model-{model_name}-{cfg.tag()}-{bucket.tag()}"
+    return Artifact("model", name, fn, sig, out_sig, cfg, bucket, model_name)
+
+
+def extract_artifact(model_name: str, num_slots: int,
+                     any_cfg: KernelConfig, any_bucket: Bucket) -> Artifact:
+    """Tiny executable reading the sampled-token tail out of the flat state
+    (CopyRawToHost is unimplemented in xla_extension 0.5.1, so the partial
+    read is itself a compiled computation — one extra 'kernel launch' per
+    step, the same launch-overhead trade-off the paper dissects in §6.2)."""
+    model = MODELS[model_name]
+
+    def fn(state):
+        return extract_tokens(state, model=model, num_slots=num_slots)
+
+    sig = [("state", (state_len(model, num_slots),), jnp.float32)]
+    out_sig = [("tokens", (SAMPLE_PAD,), jnp.float32)]
+    name = f"extract-{model_name}"
+    return Artifact("extract", name, fn, sig, out_sig, any_cfg, any_bucket,
+                    model_name)
+
+
+# --------------------------------------------------------------- weights IO
+
+
+def write_weights(params: Params, path: str) -> list[dict]:
+    """Raw little-endian f32 concatenation + per-tensor index (the manifest
+    carries offsets so Rust mmap/reads it without a numpy dependency)."""
+    index = []
+    offset = 0
+    with open(path, "wb") as f:
+        for name in Params._fields:
+            arr = np.ascontiguousarray(np.asarray(getattr(params, name)),
+                                       dtype=np.float32)
+            data = arr.tobytes()
+            index.append({"name": name, "shape": list(arr.shape),
+                          "dtype": "f32", "offset": offset,
+                          "nbytes": len(data)})
+            f.write(data)
+            offset += len(data)
+    return index
+
+
+# ----------------------------------------------------------------- profiles
+
+
+def model_buckets(model: ModelConfig, block_size: int,
+                  decode_seqs: list[int], prefill: list[tuple[int, int]],
+                  cache_seqs: int) -> list[Bucket]:
+    """Bucket set for one model: shared cache sizing, power-of-two shapes."""
+    max_blocks = model.max_model_len // block_size
+    # +1 page: physical page 0 is the scratch page for padded slots.
+    num_slots = (cache_seqs * max_blocks + 1) * block_size
+    out = [decode_bucket(s, max_blocks=max_blocks, num_slots=num_slots)
+           for s in decode_seqs]
+    out += [Bucket(max_seqs=s, max_tokens=t, max_blocks=max_blocks,
+                   num_slots=num_slots) for s, t in prefill]
+    return out
+
+
+def profile_default() -> tuple[list[Artifact], list[str]]:
+    arts: list[Artifact] = []
+    models = ["tiny"]
+    model = MODELS["tiny"]
+    params_sig = _params_sig(model)
+    buckets = model_buckets(model, 16, decode_seqs=[4],
+                            prefill=[(4, 64)], cache_seqs=4)
+    dec, pre = buckets[0], buckets[1]
+    # use_dot=False throughout: on the XLA-CPU substrate tiny-tile GEMM
+    # dispatch overhead inverts the paper's §8 tl.dot recommendation; the
+    # bench profile exports dot variants for the ablation (EXPERIMENTS.md).
+    for variant, bucket, kw in [
+        ("naive", dec, dict(block_q=1)),
+        ("qblock", dec, dict(block_q=1)),
+        ("parts", dec, dict(block_q=1, num_segments=4)),
+        ("static", dec, dict(block_q=1, static_programs=4)),
+        ("flash", dec, dict(block_q=1)),
+        ("naive", pre, dict(block_q=1)),
+        ("qblock", pre, dict(block_q=4)),
+        ("static", pre, dict(block_q=4, static_programs=8)),
+        ("flash", pre, dict(block_q=4)),
+    ]:
+        cfg = KernelConfig(variant=variant, block_size=16, tile_n=16,
+                           use_dot=False, **kw)
+        arts.append(model_artifact("tiny", cfg, bucket, params_sig))
+    arts.append(extract_artifact("tiny", dec.num_slots,
+                                 arts[0].cfg, dec))
+    # small kernel-only set so `repro bench-micro`, `repro tune` and the
+    # quick-mode figure benches work out of the box
+    slots = (4 * 32 + 1) * 16                     # seqlens up to 512
+    kb = decode_bucket(4, max_blocks=32, num_slots=slots)
+    for variant, kw in [("naive", {}), ("qblock", {}),
+                        ("parts", dict(num_segments=4)), ("flash", {}),
+                        ("static", dict(static_programs=4))]:
+        cfg = KernelConfig(variant=variant, block_size=16, tile_n=16,
+                           block_q=1, use_dot=False, **kw)
+        arts.append(kernel_artifact(cfg, kb))
+    # the tl.dot ablation pair (§8): same qblock config, MMA path
+    arts.append(kernel_artifact(KernelConfig(
+        variant="qblock", block_size=16, tile_n=16, block_q=1), kb))
+    # flex-tile decode variants (quick Fig. 7)
+    for tn in (32, 64):
+        arts.append(kernel_artifact(KernelConfig(
+            variant="qblock", block_size=16, tile_n=tn, block_q=1,
+            use_dot=False), kb))
+        arts.append(kernel_artifact(KernelConfig(
+            variant="parts", block_size=16, tile_n=tn, block_q=1,
+            num_segments=4, use_dot=False), kb))
+    # mixed/prefill bucket (quick Fig. 6c/8)
+    mb = Bucket(max_seqs=4, max_tokens=128, max_blocks=32, num_slots=slots)
+    for variant, kw in [("naive", dict(block_q=1)),
+                        ("qblock", dict(block_q=4)),
+                        ("qblock", dict(block_q=16)),
+                        ("static", dict(block_q=4, static_programs=8)),
+                        ("flash", dict(block_q=4))]:
+        cfg = KernelConfig(variant=variant, block_size=16, tile_n=16,
+                           use_dot=False, **kw)
+        arts.append(kernel_artifact(cfg, mb))
+    for tn in (32, 64):
+        arts.append(kernel_artifact(KernelConfig(
+            variant="qblock", block_size=16, tile_n=tn, block_q=4,
+            use_dot=False), mb))
+    return arts, models
+
+
+def profile_bench() -> tuple[list[Artifact], list[str]]:
+    """Fig. 6/7/8 kernel grid: variants × tile sizes × buckets."""
+    arts: list[Artifact] = []
+    bs = 16
+    max_blocks = 2048 // bs                       # seqlens up to 2048
+    slots = (8 * max_blocks + 1) * bs
+
+    dec_buckets = [decode_bucket(s, max_blocks=max_blocks, num_slots=slots)
+                   for s in (1, 2, 4, 8)]
+    mix_buckets = [Bucket(max_seqs=8, max_tokens=t, max_blocks=max_blocks,
+                          num_slots=slots) for t in (128, 512)]
+
+    for b in dec_buckets:
+        arts.append(kernel_artifact(KernelConfig(
+            variant="naive", block_size=bs, tile_n=bs, block_q=1,
+            use_dot=False), b))
+        arts.append(kernel_artifact(KernelConfig(
+            variant="qblock", block_size=bs, tile_n=bs, block_q=1,
+            use_dot=False), b))
+        # the §8 tl.dot ablation pair
+        arts.append(kernel_artifact(KernelConfig(
+            variant="qblock", block_size=bs, tile_n=bs, block_q=1), b))
+        arts.append(kernel_artifact(KernelConfig(
+            variant="static", block_size=bs, tile_n=bs, block_q=1,
+            static_programs=16, use_dot=False), b))
+        for tn in (16, 32, 64):                    # §4.6 adjustable tiles
+            for nseg in (4, 8):
+                arts.append(kernel_artifact(KernelConfig(
+                    variant="parts", block_size=bs, tile_n=tn, block_q=1,
+                    num_segments=nseg, use_dot=False), b))
+            if tn != bs:
+                arts.append(kernel_artifact(KernelConfig(
+                    variant="qblock", block_size=bs, tile_n=tn,
+                    block_q=1, use_dot=False), b))
+        arts.append(kernel_artifact(KernelConfig(
+            variant="flash", block_size=bs, tile_n=bs, block_q=1,
+            use_dot=False), b))
+    for b in mix_buckets:
+        arts.append(kernel_artifact(KernelConfig(
+            variant="naive", block_size=bs, tile_n=bs, block_q=1,
+            use_dot=False), b))
+        for bq in (4, 16):
+            for tn in (16, 32, 64):
+                arts.append(kernel_artifact(KernelConfig(
+                    variant="qblock", block_size=bs, tile_n=tn,
+                    block_q=bq, use_dot=False), b))
+            arts.append(kernel_artifact(KernelConfig(
+                variant="static", block_size=bs, tile_n=32, block_q=bq,
+                static_programs=16, use_dot=False), b))
+        arts.append(kernel_artifact(KernelConfig(
+            variant="flash", block_size=bs, tile_n=bs, block_q=4,
+            use_dot=False), b))
+    return arts, []
+
+
+def profile_e2e() -> tuple[list[Artifact], list[str]]:
+    """Fig. 9 / serving: small model, decode + prefill buckets, all variants."""
+    arts: list[Artifact] = []
+    model = MODELS["small"]
+    params_sig = _params_sig(model)
+    buckets = model_buckets(model, 16, decode_seqs=[1, 2, 4],
+                            prefill=[(1, 128), (2, 128), (4, 256)],
+                            cache_seqs=4)
+    dec_b, pre_b = buckets[:3], buckets[3:]
+    for b in dec_b:
+        for variant, kw in [
+            ("naive", dict(tile_n=16)),
+            ("qblock", {}),
+            ("parts", dict(num_segments=8)),
+            ("static", dict(static_programs=8)),
+            ("flash", {}),
+        ]:
+            cfg = KernelConfig(**{**dict(variant=variant, block_size=16,
+                                         tile_n=32, block_q=1,
+                                         use_dot=False), **kw})
+            arts.append(model_artifact("small", cfg, b, params_sig))
+    for b in pre_b:
+        for variant, kw in [
+            ("naive", dict(block_q=1, tile_n=16)),
+            ("qblock", dict(block_q=16)),
+            ("static", dict(block_q=16, static_programs=8)),
+            ("flash", dict(block_q=16)),
+        ]:
+            cfg = KernelConfig(**{**dict(variant=variant, block_size=16,
+                                         tile_n=32, use_dot=False), **kw})
+            arts.append(model_artifact("small", cfg, b, params_sig))
+    arts.append(extract_artifact("small", dec_b[0].num_slots,
+                                 arts[0].cfg, dec_b[0]))
+    return arts, ["small"]
+
+
+def profile_100m() -> tuple[list[Artifact], list[str]]:
+    arts: list[Artifact] = []
+    model = MODELS["llama100m"]
+    params_sig = _params_sig(model)
+    buckets = model_buckets(model, 16, decode_seqs=[2, 4],
+                            prefill=[(2, 128), (4, 256)], cache_seqs=4)
+    for b in buckets:
+        bq = 1 if b.max_tokens == b.max_seqs else 16
+        cfg = KernelConfig(variant="static", block_size=16, tile_n=32,
+                           block_q=bq, static_programs=8, use_dot=False)
+        arts.append(model_artifact("llama100m", cfg, b, params_sig))
+    arts.append(extract_artifact("llama100m", buckets[0].num_slots,
+                                 arts[0].cfg, buckets[0]))
+    return arts, ["llama100m"]
+
+
+PROFILES = {
+    "default": profile_default,
+    "bench": profile_bench,
+    "e2e": profile_e2e,
+    "100m": profile_100m,
+}
+
+
+def _params_sig(model: ModelConfig) -> list:
+    L, H = model.num_layers, model.hidden_size
+    I, V = model.intermediate_size, model.vocab_size
+    QS, KS = model.q_size, model.kv_size
+    f32 = jnp.float32
+    return [
+        ("embed", (V, H), f32),
+        ("attn_norm", (L, H), f32),
+        ("wq", (L, H, QS), f32), ("wk", (L, H, KS), f32),
+        ("wv", (L, H, KS), f32), ("wo", (L, QS, H), f32),
+        ("mlp_norm", (L, H), f32),
+        ("w_gate", (L, H, I), f32), ("w_up", (L, H, I), f32),
+        ("w_down", (L, I, H), f32),
+        ("final_norm", (H,), f32),
+        ("lm_head", (H, V), f32),
+    ]
+
+
+# -------------------------------------------------------------------- main
+
+
+def export(out_dir: str, profile: str, *, verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    arts, weight_models = PROFILES[profile]()
+
+    manifest = {
+        "version": 1,
+        "profile": profile,
+        "kernel_geom": KERNEL_GEOM.to_json(),
+        "models": {},
+        "artifacts": [],
+    }
+
+    for mname in weight_models:
+        model = MODELS[mname]
+        params = init_params(model, seed=1234)
+        wpath = f"weights-{mname}.bin"
+        index = write_weights(params, os.path.join(out_dir, wpath))
+        manifest["models"][mname] = {
+            "config": model.to_json(),
+            "weights_path": wpath,
+            "tensors": index,
+        }
+        if verbose:
+            total = sum(t["nbytes"] for t in index)
+            print(f"[aot] weights {mname}: {total / 1e6:.1f} MB "
+                  f"({model.param_count() / 1e6:.1f}M params)")
+
+    for art in arts:
+        t0 = time.time()
+        specs = [jax.ShapeDtypeStruct(s, d) for _, s, d in art.inputs]
+        lowered = jax.jit(art.fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{art.name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(art.manifest_entry(fname))
+        if verbose:
+            print(f"[aot] {fname}: {len(text) / 1e6:.2f} MB "
+                  f"({time.time() - t0:.1f}s)")
+
+    mpath = os.path.join(out_dir, f"manifest-{profile}.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    if verbose:
+        print(f"[aot] wrote {mpath} ({len(arts)} artifacts)")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--profile", default="default",
+                    choices=[*PROFILES.keys(), "all"])
+    args = ap.parse_args()
+    profiles = list(PROFILES) if args.profile == "all" else [args.profile]
+    for p in profiles:
+        export(args.out_dir, p)
+
+
+if __name__ == "__main__":
+    main()

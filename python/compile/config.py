@@ -1,0 +1,178 @@
+"""Configuration dataclasses shared by the L1 kernels, the L2 model, and the
+AOT export pipeline.
+
+Terminology follows the paper (§4.2):
+  * context length — past tokens already in the KV cache,
+  * query length   — new tokens being processed this step,
+  * sequence length — context + query,
+  * prefix length  — tokens preceding a given token (context + earlier
+    in-prompt tokens), which is what the causal mask exposes.
+
+A ``KernelConfig`` is the analogue of a Triton *kernel configuration*
+(BLOCK_M / BLOCK_N / num_warps ...): a set of compile-time constants baked
+into one AOT artifact.  The Rust coordinator's heuristics (the paper's
+Listing 2 decision trees) choose among compiled configs at step time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+
+VARIANTS = ("naive", "qblock", "parts", "static", "flash")
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelConfig:
+    """Compile-time constants of one paged-attention kernel artifact."""
+
+    variant: str = "qblock"
+    #: KV-cache page size in tokens (vLLM BLOCK_SIZE). Power of two.
+    block_size: int = 16
+    #: Tile size of the tiled softmax along the KV axis (§4.6 decouples
+    #: this from ``block_size``; the naive kernel pins it equal).
+    tile_n: int = 16
+    #: Query tokens per Q block (§4.4). 1 for decode.
+    block_q: int = 4
+    #: Number of segments for the parallel tiled softmax (§4.5).
+    num_segments: int = 4
+    #: Width of the static launch grid (§4.7). Only used by ``static``.
+    static_programs: int = 16
+    #: Use the MMA path (``jnp.dot`` → MXU) instead of elementwise
+    #: multiply + reduce (§8 "Usage of tl.dot").
+    use_dot: bool = True
+
+    def __post_init__(self) -> None:
+        if self.variant not in VARIANTS:
+            raise ValueError(f"unknown variant {self.variant!r}")
+        for name in ("block_size", "tile_n", "block_q", "num_segments",
+                     "static_programs"):
+            v = getattr(self, name)
+            if v < 1 or (v & (v - 1)) != 0:
+                raise ValueError(f"{name}={v} must be a positive power of two")
+        if self.variant == "naive" and self.tile_n != self.block_size:
+            raise ValueError("naive kernel requires tile_n == block_size")
+
+    def tag(self) -> str:
+        """Stable identifier used in artifact file names."""
+        parts = [self.variant, f"bs{self.block_size}", f"tn{self.tile_n}"]
+        if self.variant in ("qblock", "static", "flash"):
+            parts.append(f"bq{self.block_q}")
+        if self.variant == "parts":
+            parts.append(f"sg{self.num_segments}")
+        if self.variant == "static":
+            parts.append(f"sp{self.static_programs}")
+        if not self.use_dot:
+            parts.append("nodot")
+        return "-".join(parts)
+
+    def to_json(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Llama-3-style decoder geometry (scaled-down defaults for XLA-CPU)."""
+
+    num_layers: int = 2
+    hidden_size: int = 256
+    num_q_heads: int = 8
+    num_kv_heads: int = 2
+    head_size: int = 32
+    intermediate_size: int = 512
+    vocab_size: int = 2048
+    rope_theta: float = 10000.0
+    max_model_len: int = 2048
+    dtype: str = "float32"
+
+    def __post_init__(self) -> None:
+        if self.num_q_heads % self.num_kv_heads:
+            raise ValueError("num_q_heads must be divisible by num_kv_heads")
+        if self.head_size & (self.head_size - 1):
+            raise ValueError("head_size must be a power of two")
+
+    @property
+    def queries_per_kv(self) -> int:
+        return self.num_q_heads // self.num_kv_heads
+
+    @property
+    def q_size(self) -> int:
+        return self.num_q_heads * self.head_size
+
+    @property
+    def kv_size(self) -> int:
+        return self.num_kv_heads * self.head_size
+
+    def param_count(self) -> int:
+        h, i, v = self.hidden_size, self.intermediate_size, self.vocab_size
+        per_layer = (
+            h * self.q_size            # wq
+            + 2 * h * self.kv_size     # wk, wv
+            + self.q_size * h          # wo
+            + 3 * h * i                # w_gate, w_up (h*i each) + w_down (i*h)
+            + 2 * h                    # the two rmsnorm gains
+        )
+        return v * h + self.num_layers * per_layer + h + h * v
+
+    def to_json(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+#: ~100M-parameter configuration used by the end-to-end example
+#: (examples/serving.rs); mirrors Llama-3-8B head geometry scaled down.
+MODEL_100M = ModelConfig(
+    num_layers=10,
+    hidden_size=768,
+    num_q_heads=12,
+    num_kv_heads=4,
+    head_size=64,
+    intermediate_size=2048,
+    vocab_size=8192,
+    max_model_len=2048,
+)
+
+#: Tiny config for CI tests and kernel microbenches.
+MODEL_TINY = ModelConfig()
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    """Static-shape envelope of one AOT executable — the analogue of one
+    recorded CUDA/HIP graph (§6.2): shapes are frozen, batches are padded
+    up to the bucket, excess lanes are masked out in-kernel."""
+
+    #: maximum sequences in the batch
+    max_seqs: int = 4
+    #: maximum packed query tokens (>= max_seqs; == max_seqs for decode)
+    max_tokens: int = 4
+    #: maximum KV blocks per sequence (ceil(max_model_len / block_size))
+    max_blocks: int = 128
+    #: total KV-cache slots (num_blocks * block_size)
+    num_slots: int = 4096
+
+    def tag(self) -> str:
+        return f"s{self.max_seqs}t{self.max_tokens}"
+
+    def to_json(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def decode_bucket(max_seqs: int, *, max_blocks: int, num_slots: int) -> Bucket:
+    return Bucket(max_seqs=max_seqs, max_tokens=max_seqs,
+                  max_blocks=max_blocks, num_slots=num_slots)
+
+
+def max_q_blocks(bucket: Bucket, block_q: int) -> int:
+    """Upper bound on the number of Q blocks in a bucket.
+
+    Rust aligns each sequence's query region to ``block_q`` (so Q-block
+    stores never cross sequence boundaries); in the worst case every
+    sequence wastes ``block_q - 1`` slots.
+    """
+    return max(1, math.ceil(bucket.max_tokens / block_q) )
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)

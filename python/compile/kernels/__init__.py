@@ -1,0 +1,37 @@
+"""L1 — the paged-attention Pallas kernel family (paper §4).
+
+``get_kernel(cfg)`` dispatches a :class:`~compile.config.KernelConfig` to
+the matching implementation; all kernels share the uniform operand list
+``(q, k_cache, v_cache, block_table, seq_lens, ctx_lens, query_start_loc)``
+(see :func:`compile.kernels.common.kernel_signature`).
+"""
+
+from __future__ import annotations
+
+from ..config import KernelConfig
+from .flash_baseline import flash_attention_baseline
+from .naive import paged_attention_naive
+from .parts import paged_attention_parts
+from .qblock import paged_attention_qblock, paged_attention_static
+
+_DISPATCH = {
+    "naive": paged_attention_naive,
+    "qblock": paged_attention_qblock,
+    "parts": paged_attention_parts,
+    "static": paged_attention_static,
+    "flash": flash_attention_baseline,
+}
+
+
+def get_kernel(cfg: KernelConfig):
+    return _DISPATCH[cfg.variant]
+
+
+__all__ = [
+    "get_kernel",
+    "paged_attention_naive",
+    "paged_attention_qblock",
+    "paged_attention_static",
+    "paged_attention_parts",
+    "flash_attention_baseline",
+]

@@ -1,0 +1,154 @@
+"""Shared machinery for the paged-attention Pallas kernels.
+
+Triton → Pallas mapping used throughout (see DESIGN.md §Hardware-Adaptation):
+
+  * ``tl.program_id(i)``            → ``pl.program_id(i)``
+  * ``tl.load(ptr + offs, mask=m)`` → ``ref[pl.dslice(start, SIZE), ...]``
+    with a *static* size and dynamic start; invalid lanes are masked with
+    ``jnp.where`` on index validity instead of a pointer mask.
+  * ``tl.dot``                      → ``jnp.dot(..., preferred_element_type=f32)``
+    (MXU systolic array instead of Tensor-Core MMA).
+  * binary search over the cumulative query-start tensor (paper §6.1)
+    → ``jnp.searchsorted`` over the tiny metadata vector.
+
+All shapes are compile-time constants per artifact (the AOT analogue of a
+recorded CUDA/HIP graph); batch padding lanes compute garbage into padding
+rows of the output, exactly like the paper's "excess instances exit
+immediately" behaviour under a frozen launch grid (§6.2).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..config import KernelConfig
+
+NEG_INF = float("-inf")
+
+
+def find_seq_idx(starts: jax.Array, t: jax.Array, max_seqs: int) -> jax.Array:
+    """Binary search: which sequence owns packed position ``t``.
+
+    ``starts`` is the (block_q-aligned) query_start_loc tensor of length
+    ``max_seqs + 1``. Mirrors the paper's ``find_seq_idx`` (Listing 3 l.8).
+    """
+    idx = jnp.searchsorted(starts, t, side="right") - 1
+    return jnp.clip(idx, 0, max_seqs - 1)
+
+
+def load_kv_tile(
+    cache_ref,
+    bt_ref,
+    seq: jax.Array,
+    kv_head: jax.Array,
+    tile_idx: jax.Array,
+    cfg: KernelConfig,
+) -> jax.Array:
+    """Load one ``[tile_n, head_size]`` K or V tile for ``(seq, kv_head)``
+    through the block table (paper §4.6: tile size decoupled from the KV
+    page size — smaller, equal, or larger, powers of two).
+
+    ``cache_ref`` has layout ``[num_slots, num_kv_heads, head_size]`` where
+    physical page ``b`` occupies slot range ``[b*block_size, (b+1)*block_size)``.
+    """
+    tn, bs = cfg.tile_n, cfg.block_size
+    if tn <= bs:
+        # Tile lives inside a single page (tn divides bs, both powers of 2).
+        token0 = tile_idx * tn
+        page = token0 // bs
+        offset = token0 % bs
+        blk = bt_ref[seq, page]
+        return cache_ref[pl.dslice(blk * bs + offset, tn), kv_head, :]
+    # Tile spans tn // bs whole pages (tile start is page aligned).
+    pages = tn // bs
+    first = tile_idx * pages
+    chunks = [
+        cache_ref[pl.dslice(bt_ref[seq, first + p] * bs, bs), kv_head, :]
+        for p in range(pages)
+    ]
+    return jnp.concatenate(chunks, axis=0)
+
+
+def softmax_tile_update(
+    q: jax.Array,      # [m, head_size]
+    k: jax.Array,      # [n, head_size]
+    v: jax.Array,      # [n, head_size]
+    mask: jax.Array,   # [m, n] bool — causal & length validity
+    m_prev: jax.Array,   # [m] running max
+    l_prev: jax.Array,   # [m] running sum of exponentials
+    acc_prev: jax.Array,  # [m, head_size] running unnormalized output
+    scale: float,
+    use_dot: bool,
+):
+    """One step of the tiled (online) softmax (paper §4.1, Eq. 2).
+
+    Maintains the running row maximum and sum of exponentials, rescaling
+    the accumulator when the maximum changes. Keeps everything in f32.
+    """
+    if use_dot:
+        # MXU path — the paper's ``tl.dot`` recommendation (§8).
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    else:
+        # Elementwise-multiply + reduce: the naive kernel's vector path,
+        # which the compiler does *not* map to the MMA/MXU units.
+        s = jnp.sum(q[:, None, :] * k[None, :, :], axis=-1) * scale
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    # exp(-inf - -inf) would be NaN; rows that have seen no valid key keep
+    # m == -inf and contribute zero via the guards below.
+    m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+    p = jnp.exp(s - m_safe[:, None])
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.where(jnp.isneginf(m_prev), 0.0, jnp.exp(m_prev - m_safe))
+
+    l_new = alpha * l_prev + jnp.sum(p, axis=1)
+    if use_dot:
+        pv = jnp.dot(p, v, preferred_element_type=jnp.float32)
+    else:
+        pv = jnp.sum(p[:, :, None] * v[None, :, :], axis=1)
+    acc_new = alpha[:, None] * acc_prev + pv
+    return m_new, l_new, acc_new
+
+
+def finalize(l: jax.Array, acc: jax.Array) -> jax.Array:
+    """Delayed division by the sum of exponentials (§4.1); guards the
+    all-masked (padding) rows against 0/0."""
+    denom = jnp.where(l == 0.0, 1.0, l)
+    return acc / denom[:, None]
+
+
+def cdiv(a, b):
+    return (a + b - 1) // b
+
+
+def attn_scale(head_size: int) -> float:
+    return 1.0 / math.sqrt(head_size)
+
+
+def kernel_signature(bucket, model, extra: dict[str, Any] | None = None):
+    """Shapes/dtypes of the uniform paged-attention operand list.
+
+    Order: q, k_cache, v_cache, block_table, seq_lens, ctx_lens,
+    query_start_loc. (``parts`` ignores query_start_loc: decode packs one
+    token per sequence.)
+    """
+    f32, i32 = jnp.float32, jnp.int32
+    sig = [
+        ("q", (bucket.max_tokens, model.num_q_heads, model.head_size), f32),
+        ("k_cache", (bucket.num_slots, model.num_kv_heads, model.head_size), f32),
+        ("v_cache", (bucket.num_slots, model.num_kv_heads, model.head_size), f32),
+        ("block_table", (bucket.max_seqs, bucket.max_blocks), i32),
+        ("seq_lens", (bucket.max_seqs,), i32),
+        ("ctx_lens", (bucket.max_seqs,), i32),
+        ("query_start_loc", (bucket.max_seqs + 1,), i32),
+    ]
+    if extra:
+        for name, (shape, dtype) in extra.items():
+            sig.append((name, shape, dtype))
+    return sig

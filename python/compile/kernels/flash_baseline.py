@@ -1,0 +1,105 @@
+"""Flash-attention-style fused baseline — the SoTA comparator.
+
+The paper benchmarks against FlashAttention-3 / flash_attn, a CUDA-only
+library. Substitution (DESIGN.md §5): we implement the same *algorithm
+class* — a fused tiled-softmax attention over **contiguous** K/V with no
+paging indirection — as a Pallas kernel. The paged kernels pay block-table
+lookups and per-page loads; this baseline reads dense, gathered K/V with
+whole-tile contiguous accesses, which is precisely the advantage a
+fragmentation-free flash kernel has. (The gather from the paged cache is
+part of the wrapper, mirroring paged-FA implementations that also traverse
+the page table — its cost is included so the comparison is end-to-end
+honest.)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..config import Bucket, KernelConfig, ModelConfig
+from . import common
+
+
+def _kernel(q_ref, kd_ref, vd_ref, sl_ref, cl_ref, qsl_ref, o_ref,
+            *, cfg: KernelConfig, model: ModelConfig, bucket: Bucket,
+            dense_len: int):
+    qb = pl.program_id(0)
+    kvh = pl.program_id(1)
+    bq, qpk, hs = cfg.block_q, model.queries_per_kv, model.head_size
+    bm = bq * qpk
+
+    t0 = qb * bq
+    starts = qsl_ref[...]
+    seq = common.find_seq_idx(starts, t0, bucket.max_seqs)
+    qb_in_seq = (t0 - starts[seq]) // bq
+    ctx = cl_ref[seq]
+    # excess instances exit immediately (§6.2) — see qblock.py
+    in_range = t0 < starts[bucket.max_seqs]
+    q_len = jnp.where(in_range, sl_ref[seq] - ctx, 0)
+    qh0 = kvh * qpk
+
+    qblk = q_ref[pl.dslice(t0, bq), pl.dslice(qh0, qpk), :].reshape(bm, hs)
+    row_tok = jnp.arange(bm) // qpk
+    row_local = qb_in_seq * bq + row_tok
+    row_pos = ctx + row_local
+    row_valid = row_local < q_len
+    max_visible = jnp.where(
+        q_len > 0,
+        jnp.maximum(ctx + jnp.minimum(qb_in_seq * bq + bq, q_len), 0), 0)
+
+    scale = common.attn_scale(hs)
+    m0 = jnp.full((bm,), common.NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bm,), jnp.float32)
+    acc0 = jnp.zeros((bm, hs), jnp.float32)
+    num_tiles = common.cdiv(max_visible, cfg.tile_n)
+
+    def body(j, carry):
+        m, l, acc = carry
+        # Dense, contiguous tile loads — no block-table indirection.
+        k = kd_ref[seq, pl.dslice(j * cfg.tile_n, cfg.tile_n), kvh, :]
+        v = vd_ref[seq, pl.dslice(j * cfg.tile_n, cfg.tile_n), kvh, :]
+        key_idx = j * cfg.tile_n + jnp.arange(cfg.tile_n)
+        mask = (key_idx[None, :] <= row_pos[:, None]) & row_valid[:, None]
+        return common.softmax_tile_update(
+            qblk, k, v, mask, m, l, acc, scale, cfg.use_dot)
+
+    m, l, acc = jax.lax.fori_loop(0, num_tiles, body, (m0, l0, acc0))
+    out = common.finalize(l, acc).reshape(bq, qpk, hs)
+    o_ref[pl.dslice(t0, bq), pl.dslice(qh0, qpk), :] = out
+
+
+def flash_attention_baseline(
+    q, k_cache, v_cache, block_table, seq_lens, ctx_lens, query_start_loc,
+    *, cfg: KernelConfig, model: ModelConfig, bucket: Bucket,
+):
+    """Gather pages into dense per-sequence K/V, then run the fused kernel.
+
+    Launch grid: (total Q Blocks, num_kv_heads) — same Q-Block structure as
+    the optimized kernel so the comparison isolates paging indirection.
+    """
+    assert bucket.max_tokens % cfg.block_q == 0
+    bs = cfg.block_size
+    dense_len = bucket.max_blocks * bs
+    # pad dense_len up to a tile multiple so in-kernel loads stay in bounds
+    dense_len = common.cdiv(dense_len, cfg.tile_n) * cfg.tile_n
+
+    # slot index of token t of sequence s: block_table[s, t // bs]*bs + t % bs
+    tok = jnp.arange(dense_len)
+    page = jnp.minimum(tok // bs, bucket.max_blocks - 1)
+    slots = block_table[:, page] * bs + (tok % bs)[None, :]
+    k_dense = k_cache[slots]                     # [seqs, dense_len, kvh, hs]
+    v_dense = v_cache[slots]
+
+    n_qblocks = bucket.max_tokens // cfg.block_q
+    kernel = functools.partial(_kernel, cfg=cfg, model=model, bucket=bucket,
+                               dense_len=dense_len)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_qblocks, model.num_kv_heads),
+        out_shape=jax.ShapeDtypeStruct(q.shape, jnp.float32),
+        interpret=True,
+    )(q, k_dense, v_dense, seq_lens, ctx_lens, query_start_loc)

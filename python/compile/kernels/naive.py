@@ -1,0 +1,77 @@
+"""Baseline paged-attention kernel (paper §4.3, Appendix A / Listing 3).
+
+One program instance per (query token, query head) — the launch-grid shape
+the paper starts from. Every instance re-loads the K/V tiles of its KV head
+from the paged cache, so heads sharing a KV head perform redundant memory
+traffic; scores are computed with the elementwise-multiply + reduce vector
+path rather than the MMA/MXU path. Both inefficiencies are what §4.4 then
+removes — keeping them here is the point of the baseline.
+
+The softmax tile size is pinned to the KV-cache page size (tile_n ==
+block_size), as in the original PagedAttention algorithm.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..config import Bucket, KernelConfig, ModelConfig
+from . import common
+
+
+def _kernel(
+    q_ref, kc_ref, vc_ref, bt_ref, sl_ref, cl_ref, qsl_ref, o_ref,
+    *, cfg: KernelConfig, model: ModelConfig, bucket: Bucket,
+):
+    t = pl.program_id(0)       # packed query-token index
+    qh = pl.program_id(1)      # query head
+    kvh = qh // model.queries_per_kv
+
+    starts = qsl_ref[...]
+    seq = common.find_seq_idx(starts, t, bucket.max_seqs)
+    local = t - starts[seq]
+    ctx = cl_ref[seq]
+    q_len = sl_ref[seq] - ctx
+    valid = local < q_len
+    # prefix length of this token (paper §4.2): tokens it may attend to.
+    visible = jnp.where(valid, ctx + local + 1, 0)
+
+    q = q_ref[t, qh, :][None, :]                       # [1, head_size]
+    scale = common.attn_scale(model.head_size)
+
+    m0 = jnp.full((1,), common.NEG_INF, jnp.float32)
+    l0 = jnp.zeros((1,), jnp.float32)
+    acc0 = jnp.zeros((1, model.head_size), jnp.float32)
+
+    num_tiles = common.cdiv(visible, cfg.tile_n)
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = common.load_kv_tile(kc_ref, bt_ref, seq, kvh, j, cfg)
+        v = common.load_kv_tile(vc_ref, bt_ref, seq, kvh, j, cfg)
+        key_idx = j * cfg.tile_n + jnp.arange(cfg.tile_n)
+        mask = (key_idx < visible)[None, :]
+        return common.softmax_tile_update(
+            q, k, v, mask, m, l, acc, scale, cfg.use_dot)
+
+    m, l, acc = jax.lax.fori_loop(0, num_tiles, body, (m0, l0, acc0))
+    o_ref[t, qh, :] = common.finalize(l, acc)[0]
+
+
+def paged_attention_naive(
+    q, k_cache, v_cache, block_table, seq_lens, ctx_lens, query_start_loc,
+    *, cfg: KernelConfig, model: ModelConfig, bucket: Bucket,
+):
+    """Launch grid: (max_tokens, num_query_heads) — Listing 3 line 37."""
+    assert cfg.tile_n == cfg.block_size, "baseline pins tile size to page size"
+    kernel = functools.partial(_kernel, cfg=cfg, model=model, bucket=bucket)
+    return pl.pallas_call(
+        kernel,
+        grid=(bucket.max_tokens, model.num_q_heads),
+        out_shape=jax.ShapeDtypeStruct(q.shape, jnp.float32),
+        interpret=True,
+    )(q, k_cache, v_cache, block_table, seq_lens, ctx_lens, query_start_loc)

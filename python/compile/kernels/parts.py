@@ -1,0 +1,128 @@
+"""Parallel tiled softmax kernel pair (paper §4.5, Appendix C / Listing 5).
+
+Decode attention launches only (sequences × heads) program instances; small
+batches of long sequences therefore under-utilize the machine. This kernel
+splits the KV tiles of each sequence into ``num_segments`` *segments*
+(Figure 4), processes the segments in independent program instances (each
+running the usual iterative tiled softmax over its tile range), and then a
+second, small *reduction* kernel merges the per-segment partial results —
+unnormalized accumulator, running maximum, and sum of exponentials — with
+the standard rescaling.
+
+Decode-only contract: the packed ``q`` tensor holds exactly one token per
+sequence (``max_tokens == max_seqs``); ``query_start_loc`` is accepted for
+signature uniformity but the token of sequence ``i`` is row ``i``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..config import Bucket, KernelConfig, ModelConfig
+from . import common
+
+
+def _segment_kernel(
+    q_ref, kc_ref, vc_ref, bt_ref, sl_ref, cl_ref, qsl_ref,
+    so_ref, sm_ref, sl_out_ref,
+    *, cfg: KernelConfig, model: ModelConfig, bucket: Bucket,
+):
+    seq = pl.program_id(0)
+    kvh = pl.program_id(1)
+    seg = pl.program_id(2)
+    qpk, hs = model.queries_per_kv, model.head_size
+
+    seqlen = sl_ref[seq]                       # decode: query attends to all
+    num_tiles = common.cdiv(seqlen, cfg.tile_n)
+    tiles_per_segment = common.cdiv(num_tiles, cfg.num_segments)
+    j_lo = seg * tiles_per_segment
+    j_hi = jnp.minimum(j_lo + tiles_per_segment, num_tiles)
+
+    qh0 = kvh * qpk
+    qblk = q_ref[seq, pl.dslice(qh0, qpk), :]  # [qpk, head]
+
+    scale = common.attn_scale(hs)
+    m0 = jnp.full((qpk,), common.NEG_INF, jnp.float32)
+    l0 = jnp.zeros((qpk,), jnp.float32)
+    acc0 = jnp.zeros((qpk, hs), jnp.float32)
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = common.load_kv_tile(kc_ref, bt_ref, seq, kvh, j, cfg)
+        v = common.load_kv_tile(vc_ref, bt_ref, seq, kvh, j, cfg)
+        key_idx = j * cfg.tile_n + jnp.arange(cfg.tile_n)
+        mask = jnp.broadcast_to((key_idx < seqlen)[None, :],
+                                (qpk, cfg.tile_n))
+        return common.softmax_tile_update(
+            qblk, k, v, mask, m, l, acc, scale, cfg.use_dot)
+
+    m, l, acc = jax.lax.fori_loop(j_lo, j_hi, body, (m0, l0, acc0))
+
+    # Store *unnormalized* segment results (Listing 5 lines 37-40); the
+    # reduction kernel performs the delayed merge + rescale.
+    so_ref[seq, kvh, seg, :, :] = acc
+    sm_ref[seq, kvh, seg, :] = m
+    sl_out_ref[seq, kvh, seg, :] = l
+
+
+def _reduce_kernel(so_ref, sm_ref, sl_ref, o_ref,
+                   *, cfg: KernelConfig, model: ModelConfig, bucket: Bucket):
+    """Merge segments (Listing 5 ``reduce_segments``): grid
+    (num_seqs, num_query_heads)."""
+    seq = pl.program_id(0)
+    qh = pl.program_id(1)
+    qpk = model.queries_per_kv
+    kvh = qh // qpk
+    within = qh % qpk
+
+    seg_m = sm_ref[seq, kvh, :, within]        # [num_segments]
+    seg_l = sl_ref[seq, kvh, :, within]        # [num_segments]
+    seg_acc = so_ref[seq, kvh, :, within, :]   # [num_segments, head]
+
+    m_star = jnp.max(seg_m)
+    m_safe = jnp.where(jnp.isneginf(m_star), 0.0, m_star)
+    # Segments that saw no tiles carry m == -inf and l == 0: their weight
+    # must be exactly zero rather than NaN.
+    w = jnp.where(jnp.isneginf(seg_m), 0.0, jnp.exp(seg_m - m_safe))
+    l_total = jnp.sum(w * seg_l)
+    acc = jnp.sum(w[:, None] * seg_acc, axis=0)
+    denom = jnp.where(l_total == 0.0, 1.0, l_total)
+    o_ref[seq, qh, :] = acc / denom
+
+
+def paged_attention_parts(
+    q, k_cache, v_cache, block_table, seq_lens, ctx_lens, query_start_loc,
+    *, cfg: KernelConfig, model: ModelConfig, bucket: Bucket,
+):
+    """Two chained pallas_calls lowered into one HLO module: the segmented
+    attention (grid seqs × kv_heads × segments, Listing 5 line 61) and the
+    segment reduction (grid seqs × query_heads)."""
+    assert bucket.max_tokens == bucket.max_seqs, "parts kernel is decode-only"
+    s, qpk, hs = bucket.max_seqs, model.queries_per_kv, model.head_size
+    nseg, nkvh = cfg.num_segments, model.num_kv_heads
+
+    seg_kernel = functools.partial(_segment_kernel, cfg=cfg, model=model,
+                                   bucket=bucket)
+    seg_out, seg_max, seg_sum = pl.pallas_call(
+        seg_kernel,
+        grid=(s, nkvh, nseg),
+        out_shape=(
+            jax.ShapeDtypeStruct((s, nkvh, nseg, qpk, hs), jnp.float32),
+            jax.ShapeDtypeStruct((s, nkvh, nseg, qpk), jnp.float32),
+            jax.ShapeDtypeStruct((s, nkvh, nseg, qpk), jnp.float32),
+        ),
+        interpret=True,
+    )(q, k_cache, v_cache, block_table, seq_lens, ctx_lens, query_start_loc)
+
+    red_kernel = functools.partial(_reduce_kernel, cfg=cfg, model=model,
+                                   bucket=bucket)
+    return pl.pallas_call(
+        red_kernel,
+        grid=(s, model.num_q_heads),
+        out_shape=jax.ShapeDtypeStruct(q.shape, jnp.float32),
+        interpret=True,
+    )(seg_out, seg_max, seg_sum)

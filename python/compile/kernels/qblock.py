@@ -1,0 +1,162 @@
+"""Q-Block / GQA-optimized paged-attention kernel (paper §4.4, Listing 4)
+and its static-launch-grid variant (paper §4.7).
+
+A *Q Block* covers ``block_q`` successive query tokens of one sequence ×
+all ``queries_per_kv`` query heads mapped to a single KV head, flattened to
+a ``[block_m, head_size]`` tensor with ``block_m = block_q *
+queries_per_kv`` (Figure 3). Each K/V tile is then loaded **once** per Q
+Block instead of once per (token, head) pair, raising arithmetic density;
+the score and output products go through ``jnp.dot`` (MXU / Tensor-Core
+path, §8 "Usage of tl.dot").
+
+Layout contract with the Rust metadata builder (§6.1): each sequence's
+query region in the packed ``q`` tensor is aligned to ``block_q`` rows, so
+a Q Block never straddles two sequences and stores need no cross-sequence
+masking. ``query_start_loc`` holds the aligned starts; the cumulative
+Q-block tensor of the paper is ``query_start_loc // block_q``.
+
+The static variant fixes the launch grid to ``static_programs`` instances
+(close to but below the number of cores, §4.7/§6.2); each instance strides
+over Q Blocks, so the same compiled artifact — the CUDA-graph analogue —
+serves every batch shape in its bucket with no excess-wave penalty.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..config import Bucket, KernelConfig, ModelConfig
+from . import common
+
+
+def _qblock_body(
+    q_ref, kc_ref, vc_ref, bt_ref, sl_ref, cl_ref, qsl_ref,
+    qb, kvh, *, cfg: KernelConfig, model: ModelConfig, bucket: Bucket,
+):
+    """Compute one Q Block; returns (t0, qh0, [block_q, qpk, head] values)."""
+    bq, qpk, hs = cfg.block_q, model.queries_per_kv, model.head_size
+    bm = bq * qpk
+
+    t0 = qb * bq
+    starts = qsl_ref[...]
+    seq = common.find_seq_idx(starts, t0, bucket.max_seqs)
+    qb_in_seq = (t0 - starts[seq]) // bq
+    ctx = cl_ref[seq]
+    # Excess instances — Q Blocks beyond the batch's packed total, which a
+    # frozen launch grid (CUDA-graph analogue) launches anyway — must
+    # "exit immediately" (§6.2): zero their query length so the tile loop
+    # below runs zero iterations instead of replaying the last sequence.
+    in_range = t0 < starts[bucket.max_seqs]
+    q_len = jnp.where(in_range, sl_ref[seq] - ctx, 0)
+    qh0 = kvh * qpk
+
+    # Q Block: [block_q, qpk, head] → flattened [block_m, head] (§4.4:
+    # "represented as a two-dimensional tensor ... this flattening
+    # simplifies memory access patterns").
+    qblk = q_ref[pl.dslice(t0, bq), pl.dslice(qh0, qpk), :]
+    qblk = qblk.reshape(bm, hs)
+
+    row_tok = jnp.arange(bm) // qpk                 # local token per row
+    row_local = qb_in_seq * bq + row_tok
+    row_pos = ctx + row_local                       # prefix length - 1
+    row_valid = row_local < q_len
+    # Max prefix length across the block (§4.4): tiles span the tokens
+    # preceding those in the Q Block up to this bound.
+    max_visible = jnp.maximum(ctx + jnp.minimum(qb_in_seq * bq + bq, q_len), 0)
+    max_visible = jnp.where(q_len > 0, max_visible, 0)
+
+    scale = common.attn_scale(hs)
+    m0 = jnp.full((bm,), common.NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bm,), jnp.float32)
+    acc0 = jnp.zeros((bm, hs), jnp.float32)
+    num_tiles = common.cdiv(max_visible, cfg.tile_n)
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = common.load_kv_tile(kc_ref, bt_ref, seq, kvh, j, cfg)
+        v = common.load_kv_tile(vc_ref, bt_ref, seq, kvh, j, cfg)
+        key_idx = j * cfg.tile_n + jnp.arange(cfg.tile_n)
+        # causal: key position must not exceed the row's prefix length.
+        mask = (key_idx[None, :] <= row_pos[:, None]) & row_valid[:, None]
+        return common.softmax_tile_update(
+            qblk, k, v, mask, m, l, acc, scale, cfg.use_dot)
+
+    m, l, acc = jax.lax.fori_loop(0, num_tiles, body, (m0, l0, acc0))
+    out = common.finalize(l, acc).reshape(bq, qpk, hs)
+    return t0, qh0, out
+
+
+def _kernel(q_ref, kc_ref, vc_ref, bt_ref, sl_ref, cl_ref, qsl_ref, o_ref,
+            *, cfg, model, bucket):
+    qb = pl.program_id(0)
+    kvh = pl.program_id(1)
+    t0, qh0, out = _qblock_body(
+        q_ref, kc_ref, vc_ref, bt_ref, sl_ref, cl_ref, qsl_ref,
+        qb, kvh, cfg=cfg, model=model, bucket=bucket)
+    o_ref[pl.dslice(t0, cfg.block_q),
+          pl.dslice(qh0, model.queries_per_kv), :] = out
+
+
+def paged_attention_qblock(
+    q, k_cache, v_cache, block_table, seq_lens, ctx_lens, query_start_loc,
+    *, cfg: KernelConfig, model: ModelConfig, bucket: Bucket,
+):
+    """Launch grid: (total Q Blocks, num_kv_heads) — Listing 4 line 38."""
+    assert bucket.max_tokens % cfg.block_q == 0
+    n_qblocks = bucket.max_tokens // cfg.block_q
+    kernel = functools.partial(_kernel, cfg=cfg, model=model, bucket=bucket)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_qblocks, model.num_kv_heads),
+        out_shape=jax.ShapeDtypeStruct(q.shape, jnp.float32),
+        interpret=True,
+    )(q, k_cache, v_cache, block_table, seq_lens, ctx_lens, query_start_loc)
+
+
+def _static_kernel(q_ref, kc_ref, vc_ref, bt_ref, sl_ref, cl_ref, qsl_ref,
+                   o_ref, *, cfg, model, bucket):
+    pid = pl.program_id(0)
+    kvh = pl.program_id(1)
+    n_qblocks = bucket.max_tokens // cfg.block_q
+    rounds = common.cdiv(n_qblocks, cfg.static_programs)
+    # Only Q Blocks below the batch's true total do useful work; the rest
+    # are masked — the paper's excess instances, but *without* extra
+    # launch waves because the grid never exceeds static_programs.
+    total_qb = qsl_ref[bucket.max_seqs] // cfg.block_q
+
+    for w in range(rounds):
+        qb = w * cfg.static_programs + pid
+        active = qb < total_qb
+        qb_c = jnp.minimum(qb, n_qblocks - 1)
+        t0, qh0, out = _qblock_body(
+            q_ref, kc_ref, vc_ref, bt_ref, sl_ref, cl_ref, qsl_ref,
+            qb_c, kvh, cfg=cfg, model=model, bucket=bucket)
+        idx = (pl.dslice(t0, cfg.block_q),
+               pl.dslice(qh0, model.queries_per_kv), slice(None))
+        # Inactive strides must not clobber a valid Q Block (the clamp can
+        # alias the last one). Read-modify-write + plain dynamic slices:
+        # a masked `pl.store` lowers to a scatter that is ~10x slower on
+        # the XLA-CPU backend (see EXPERIMENTS.md §Perf).
+        cur = o_ref[idx]
+        o_ref[idx] = jnp.where(active, out, cur)
+
+
+def paged_attention_static(
+    q, k_cache, v_cache, block_table, seq_lens, ctx_lens, query_start_loc,
+    *, cfg: KernelConfig, model: ModelConfig, bucket: Bucket,
+):
+    """Static launch grid (§4.7): (static_programs, num_kv_heads),
+    independent of the batch; each instance strides over Q Blocks."""
+    assert bucket.max_tokens % cfg.block_q == 0
+    kernel = functools.partial(_static_kernel, cfg=cfg, model=model,
+                               bucket=bucket)
+    return pl.pallas_call(
+        kernel,
+        grid=(cfg.static_programs, model.num_kv_heads),
+        out_shape=jax.ShapeDtypeStruct(q.shape, jnp.float32),
+        interpret=True,
+    )(q, k_cache, v_cache, block_table, seq_lens, ctx_lens, query_start_loc)

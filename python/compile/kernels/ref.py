@@ -1,0 +1,79 @@
+"""Pure-jnp / numpy oracle for paged attention — the correctness anchor.
+
+Implements exact causal attention (Eq. 1 + numerically-stable softmax,
+Eq. 2) with none of the tiling machinery: gather each sequence's keys and
+values from the paged cache through the block table, form the full score
+matrix, softmax in f64, and compare. Every L1 kernel is pytest-asserted
+against this.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def gather_dense_kv(k_cache, v_cache, block_table, seq_len, block_size):
+    """Dense [seq_len, kv_heads, head] K/V for one sequence."""
+    tok = np.arange(seq_len)
+    slots = np.asarray(block_table)[tok // block_size] * block_size + tok % block_size
+    return np.asarray(k_cache)[slots], np.asarray(v_cache)[slots]
+
+
+def paged_attention_ref(
+    q, k_cache, v_cache, block_table, seq_lens, ctx_lens, query_start_loc,
+    *, block_size: int, queries_per_kv: int,
+):
+    """Oracle over the packed (block_q-aligned) batch layout.
+
+    Returns an output tensor of the same shape as ``q``; rows outside any
+    sequence's valid query range are zero (kernels leave garbage there —
+    tests compare valid rows only).
+    """
+    q = np.asarray(q, np.float64)
+    seq_lens = np.asarray(seq_lens)
+    ctx_lens = np.asarray(ctx_lens)
+    starts = np.asarray(query_start_loc)
+    num_q_heads, head = q.shape[1], q.shape[2]
+    out = np.zeros_like(q)
+    scale = 1.0 / np.sqrt(head)
+
+    num_seqs = len(seq_lens)
+    for s in range(num_seqs):
+        q_len = int(seq_lens[s] - ctx_lens[s])
+        if q_len <= 0:
+            continue
+        t0 = int(starts[s])
+        k, v = gather_dense_kv(k_cache, v_cache, block_table[s],
+                               int(seq_lens[s]), block_size)
+        k = k.astype(np.float64)
+        v = v.astype(np.float64)
+        for qh in range(num_q_heads):
+            kvh = qh // queries_per_kv
+            for i in range(q_len):
+                pos = int(ctx_lens[s]) + i       # prefix length - 1
+                qi = q[t0 + i, qh]
+                scores = k[: pos + 1, kvh] @ qi * scale
+                scores -= scores.max()
+                p = np.exp(scores)
+                p /= p.sum()
+                out[t0 + i, qh] = p @ v[: pos + 1, kvh]
+    return out
+
+
+def dense_attention_ref(q, k, v, *, causal=True):
+    """Plain dense multi-head attention oracle, [tokens, heads, head]."""
+    q = np.asarray(q, np.float64)
+    k = np.asarray(k, np.float64)
+    v = np.asarray(v, np.float64)
+    n, h, d = q.shape
+    out = np.zeros_like(q)
+    scale = 1.0 / np.sqrt(d)
+    for head in range(h):
+        s = q[:, head] @ k[:, head].T * scale
+        if causal:
+            s = np.where(np.tril(np.ones((n, n), bool)), s, -np.inf)
+        s -= s.max(axis=1, keepdims=True)
+        p = np.exp(s)
+        p /= p.sum(axis=1, keepdims=True)
+        out[:, head] = p @ v[:, head]
+    return out

@@ -1,0 +1,254 @@
+"""L2 — Llama-3-style decoder whose attention layers call the L1 kernels.
+
+This is the analogue of vLLM's model runner: the "simple" layers (RMSNorm,
+projections, RoPE, SwiGLU) are plain JAX — lowered and fused by XLA the way
+vLLM lowers them with torch.compile — while the performance-critical
+attention layer is the Pallas paged-attention kernel selected by the
+compile-time :class:`KernelConfig`.
+
+One jitted ``model_step`` handles both prefill and decode: the phase is
+purely a property of the batch metadata (query lengths), exactly as in
+vLLM v1. Sampling is greedy and happens in-graph so the serving hot path
+never ships logits across PJRT.
+
+KV-cache convention shared with the Rust coordinator:
+  * the whole mutable state is ONE f32 array
+    ``[num_layers, 2, num_slots, num_kv_heads, head_size]`` (k=index 0,
+    v=index 1); physical page ``b`` owns slots
+    ``[b*block_size, (b+1)*block_size)``;
+  * physical page 0 is reserved as a scratch page — padded ``slot_mapping``
+    entries point into it so masked lanes scatter harmlessly, and the
+    sampled tokens are stashed in its V region for the extract executable;
+  * the executable returns the updated state; Rust chains it as a
+    device-resident PJRT buffer between steps (no host round-trip).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import Bucket, KernelConfig, ModelConfig
+from .kernels import get_kernel
+
+
+class Params(NamedTuple):
+    """Model weights; per-layer tensors are stacked on a leading layer axis
+    so the layer loop lowers to one ``scan`` body (compact HLO) and the
+    weight file has a fixed tensor count regardless of depth."""
+
+    embed: jax.Array        # [vocab, hidden]
+    attn_norm: jax.Array    # [layers, hidden]
+    wq: jax.Array           # [layers, hidden, q_heads*head]
+    wk: jax.Array           # [layers, hidden, kv_heads*head]
+    wv: jax.Array           # [layers, hidden, kv_heads*head]
+    wo: jax.Array           # [layers, q_heads*head, hidden]
+    mlp_norm: jax.Array     # [layers, hidden]
+    w_gate: jax.Array       # [layers, hidden, intermediate]
+    w_up: jax.Array         # [layers, hidden, intermediate]
+    w_down: jax.Array       # [layers, intermediate, hidden]
+    final_norm: jax.Array   # [hidden]
+    lm_head: jax.Array      # [hidden, vocab]
+
+
+def init_params(model: ModelConfig, seed: int = 0) -> Params:
+    """Random weights with 1/sqrt(fan_in) scaling (numerically tame logits;
+    attention cost does not depend on weight values — DESIGN.md §5)."""
+    rng = np.random.default_rng(seed)
+    L, H = model.num_layers, model.hidden_size
+    I, V = model.intermediate_size, model.vocab_size
+    QS, KS = model.q_size, model.kv_size
+
+    def w(*shape):
+        fan_in = shape[-2] if len(shape) > 1 else shape[-1]
+        return (rng.standard_normal(shape) / np.sqrt(fan_in)).astype(np.float32)
+
+    p = Params(
+        embed=w(V, H),
+        attn_norm=np.ones((L, H), np.float32),
+        wq=w(L, H, QS), wk=w(L, H, KS), wv=w(L, H, KS), wo=w(L, QS, H),
+        mlp_norm=np.ones((L, H), np.float32),
+        w_gate=w(L, H, I), w_up=w(L, H, I), w_down=w(L, I, H),
+        final_norm=np.ones((H,), np.float32),
+        lm_head=w(H, V),
+    )
+    return Params(*(jnp.asarray(t) for t in p))
+
+
+def rms_norm(x: jax.Array, gain: jax.Array, eps: float = 1e-5) -> jax.Array:
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * gain
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding, [tokens, heads, head] with absolute positions."""
+    head = x.shape[-1]
+    freqs = theta ** (-jnp.arange(0, head // 2, dtype=jnp.float32)
+                      / (head // 2))
+    angles = positions[:, None].astype(jnp.float32) * freqs[None, :]
+    cos = jnp.cos(angles)[:, None, :]     # [tokens, 1, head/2]
+    sin = jnp.sin(angles)[:, None, :]
+    x1, x2 = x[..., : head // 2], x[..., head // 2:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+
+
+def model_step(
+    params: Params,
+    token_ids: jax.Array,        # [max_tokens] i32
+    positions: jax.Array,        # [max_tokens] i32 (ctx + local)
+    kv_caches: jax.Array,        # [layers, 2, slots, kv_heads, head]
+    block_table: jax.Array,      # [max_seqs, max_blocks] i32
+    seq_lens: jax.Array,         # [max_seqs] i32
+    ctx_lens: jax.Array,         # [max_seqs] i32
+    query_start_loc: jax.Array,  # [max_seqs+1] i32 (block_q aligned)
+    slot_mapping: jax.Array,     # [max_tokens] i32 (padding → scratch page 0)
+    last_token_idx: jax.Array,   # [max_seqs] i32 (packed row of last token)
+    *,
+    cfg: KernelConfig,
+    model: ModelConfig,
+    bucket: Bucket,
+):
+    """One serving step. Returns (next_tokens [max_seqs], kv_caches).
+
+    K and V caches are interleaved per layer (``kv_caches[l, 0]`` = keys,
+    ``kv_caches[l, 1]`` = values) so the whole mutable state is ONE array.
+    The layer loop is *unrolled* rather than ``scan``-ed: chained scatters
+    on one buffer let XLA's copy elision update the state nearly in place,
+    where scan's per-layer slice/stack forced two layer-sized copies per
+    layer — a 1.45x step-time win (EXPERIMENTS.md §Perf P6). Without PJRT
+    buffer donation one state-sized copy per step is the floor.
+    """
+    kernel = get_kernel(cfg)
+    H, D = model.num_q_heads, model.head_size
+    KV = model.num_kv_heads
+
+    x = params.embed[token_ids]            # [tokens, hidden]
+    kv = kv_caches
+
+    for l in range(model.num_layers):
+        # --- attention ---
+        h = rms_norm(x, params.attn_norm[l])
+        q = (h @ params.wq[l]).reshape(-1, H, D)
+        k = (h @ params.wk[l]).reshape(-1, KV, D)
+        v = (h @ params.wv[l]).reshape(-1, KV, D)
+        q = rope(q, positions, model.rope_theta)
+        k = rope(k, positions, model.rope_theta)
+        # reshape_and_cache: write new K/V into the paged cache first, then
+        # attend against the cache (vLLM ordering — queries see their own
+        # keys through the cache).
+        kv = kv.at[l, 0, slot_mapping].set(k)
+        kv = kv.at[l, 1, slot_mapping].set(v)
+        attn = kernel(q, kv[l, 0], kv[l, 1], block_table, seq_lens,
+                      ctx_lens, query_start_loc, cfg=cfg, model=model,
+                      bucket=bucket)
+        x = x + attn.reshape(-1, H * D) @ params.wo[l]
+        # --- mlp (SwiGLU) ---
+        h = rms_norm(x, params.mlp_norm[l])
+        x = x + (jax.nn.silu(h @ params.w_gate[l])
+                 * (h @ params.w_up[l])) @ params.w_down[l]
+    kv_caches = kv
+
+    x = rms_norm(x, params.final_norm)
+    last = x[last_token_idx]               # [max_seqs, hidden]
+    logits = last @ params.lm_head
+    next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return next_tokens, kv_caches
+
+
+#: Number of sampled-token floats stashed into the state (must exceed
+#: every bucket's max_seqs so state is interchangeable across all of a
+#: model's executables). The stash lives inside layer 0's V-cache scratch
+#: page (physical page 0, never read by kernels), so the state needs no
+#: extra tail and the step avoids a concatenate copy (§Perf P6).
+SAMPLE_PAD = 64
+
+
+def cache_elements(model: ModelConfig, num_slots: int) -> int:
+    return (model.num_layers * num_slots * model.num_kv_heads
+            * model.head_size)
+
+
+def state_len(model: ModelConfig, num_slots: int) -> int:
+    return 2 * cache_elements(model, num_slots)
+
+
+def stash_offset(model: ModelConfig, num_slots: int) -> int:
+    """Flat-state offset of (layer 0, V-cache, slot 0): the token stash."""
+    return num_slots * model.num_kv_heads * model.head_size
+
+
+def model_step_flat(
+    params: Params,
+    token_ids, positions, state, block_table, seq_lens, ctx_lens,
+    query_start_loc, slot_mapping, last_token_idx,
+    *, cfg: KernelConfig, model: ModelConfig, bucket: Bucket,
+):
+    """Single-output wrapper around :func:`model_step`.
+
+    The PJRT C wrapper (xla_extension 0.5.1) returns multi-result
+    executables as ONE tuple buffer that can only be decomposed via a full
+    host copy, and buffer donation is not exposed. To keep the KV cache
+    device-resident across steps, the whole mutable state travels as one
+    flat f32 array that the Rust engine feeds straight back into the next
+    step (`execute_b` chaining). Sampled tokens are stashed inside the
+    scratch page (kernels never read physical page 0) and recovered by a
+    tiny separate *extract* executable — no concatenate, so the step pays
+    only the scan's single state-sized copy (§Perf P6).
+    """
+    L, KV, D = model.num_layers, model.num_kv_heads, model.head_size
+    assert SAMPLE_PAD <= cfg.block_size * KV * D, "stash must fit page 0"
+    kv_caches = state.reshape(L, 2, bucket.num_slots, KV, D)
+    next_tokens, kv_caches = model_step(
+        params, token_ids, positions, kv_caches, block_table,
+        seq_lens, ctx_lens, query_start_loc, slot_mapping, last_token_idx,
+        cfg=cfg, model=model, bucket=bucket)
+    flat = kv_caches.reshape(-1)
+    stash = jnp.zeros((SAMPLE_PAD,), jnp.float32)
+    stash = stash.at[: bucket.max_seqs].set(next_tokens.astype(jnp.float32))
+    off = stash_offset(model, bucket.num_slots)
+    return jax.lax.dynamic_update_slice(flat, stash, (off,))
+
+
+def extract_tokens(state, *, model: ModelConfig, num_slots: int):
+    """The extract executable: the sampled-token stash in the scratch page."""
+    off = stash_offset(model, num_slots)
+    return jax.lax.dynamic_slice(state, (off,), (SAMPLE_PAD,))
+
+
+def make_model_fn(cfg: KernelConfig, model: ModelConfig, bucket: Bucket):
+    """Positional-only closure for AOT lowering: params tensors first (in
+    Params field order), then the step operands (order documented in the
+    manifest and mirrored by rust/src/runtime)."""
+
+    def fn(*ops):
+        params = Params(*ops[: len(Params._fields)])
+        rest = ops[len(Params._fields):]
+        return model_step_flat(params, *rest, cfg=cfg, model=model,
+                               bucket=bucket)
+
+    return fn
+
+
+def model_step_signature(model: ModelConfig, bucket: Bucket):
+    """(name, shape, dtype) list of the non-param operands."""
+    f32, i32 = jnp.float32, jnp.int32
+    return [
+        ("token_ids", (bucket.max_tokens,), i32),
+        ("positions", (bucket.max_tokens,), i32),
+        ("state", (state_len(model, bucket.num_slots),), f32),
+        ("block_table", (bucket.max_seqs, bucket.max_blocks), i32),
+        ("seq_lens", (bucket.max_seqs,), i32),
+        ("ctx_lens", (bucket.max_seqs,), i32),
+        ("query_start_loc", (bucket.max_seqs + 1,), i32),
+        ("slot_mapping", (bucket.max_tokens,), i32),
+        ("last_token_idx", (bucket.max_seqs,), i32),
+    ]
+
+
+def params_signature(model: ModelConfig):
+    p = init_params(ModelConfig(**{**model.to_json()}))  # shapes only
+    return [(name, tuple(np.asarray(getattr(p, name)).shape), jnp.float32)
+            for name in Params._fields]

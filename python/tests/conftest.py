@@ -1,0 +1,120 @@
+"""Shared fixtures: synthetic paged-cache scenario builder.
+
+A *scenario* is a batch of sequences, each with a context length (tokens
+already in the KV cache) and a query length (new tokens this step), laid
+out exactly the way the Rust metadata builder (§6.1) lays them out:
+
+  * packed query tensor with each sequence's region aligned to ``block_q``,
+  * KV pages assigned through a shuffled block table (pages are
+    deliberately non-contiguous to exercise the indirection),
+  * seq_lens / ctx_lens / query_start_loc metadata vectors padded to the
+    bucket's ``max_seqs``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from compile.config import Bucket, KernelConfig, ModelConfig, cdiv  # noqa: E402
+
+
+@dataclasses.dataclass
+class Scenario:
+    q: np.ndarray
+    k_cache: np.ndarray
+    v_cache: np.ndarray
+    block_table: np.ndarray
+    seq_lens: np.ndarray
+    ctx_lens: np.ndarray
+    query_start_loc: np.ndarray
+    bucket: Bucket
+    model: ModelConfig
+    cfg: KernelConfig
+
+    def operands(self):
+        return (self.q, self.k_cache, self.v_cache, self.block_table,
+                self.seq_lens, self.ctx_lens, self.query_start_loc)
+
+    def valid_rows(self):
+        """Indices of packed q rows that carry real query tokens."""
+        rows = []
+        for s in range(len(self.seq_lens)):
+            q_len = int(self.seq_lens[s] - self.ctx_lens[s])
+            t0 = int(self.query_start_loc[s])
+            rows.extend(range(t0, t0 + q_len))
+        return np.array(rows, dtype=np.int64)
+
+
+def align(x: int, a: int) -> int:
+    return cdiv(x, a) * a
+
+
+def make_scenario(
+    seqs: list[tuple[int, int]],       # (context_len, query_len) per seq
+    cfg: KernelConfig,
+    model: ModelConfig,
+    *,
+    bucket: Bucket | None = None,
+    seed: int = 0,
+) -> Scenario:
+    rng = np.random.default_rng(seed)
+    bs = cfg.block_size
+    align_q = cfg.block_q if cfg.variant in ("qblock", "static", "flash") else 1
+
+    total_aligned = sum(align(q, align_q) for _, q in seqs)
+    max_len = max((c + q) for c, q in seqs)
+    blocks_per_seq = [cdiv(c + q, bs) for c, q in seqs]
+
+    if bucket is None:
+        max_tokens = max(align(total_aligned, max(align_q, 1)), align_q)
+        max_blocks = max(blocks_per_seq)
+        num_blocks = sum(blocks_per_seq) + 2     # a couple of spare pages
+        bucket = Bucket(max_seqs=len(seqs), max_tokens=max_tokens,
+                        max_blocks=max_blocks, num_slots=num_blocks * bs)
+
+    S, T = bucket.max_seqs, bucket.max_tokens
+    H, KVH, D = model.num_q_heads, model.num_kv_heads, model.head_size
+    assert len(seqs) <= S
+
+    q = rng.standard_normal((T, H, D)).astype(np.float32)
+    k_cache = rng.standard_normal((bucket.num_slots, KVH, D)).astype(np.float32)
+    v_cache = rng.standard_normal((bucket.num_slots, KVH, D)).astype(np.float32)
+
+    # Shuffled page assignment: sequences own disjoint random physical pages.
+    num_pages = bucket.num_slots // bs
+    perm = rng.permutation(num_pages)
+    block_table = np.zeros((S, bucket.max_blocks), np.int32)
+    next_page = 0
+    for s, nb in enumerate(blocks_per_seq):
+        assert nb <= bucket.max_blocks
+        block_table[s, :nb] = perm[next_page:next_page + nb]
+        next_page += nb
+
+    seq_lens = np.zeros(S, np.int32)
+    ctx_lens = np.zeros(S, np.int32)
+    starts = np.zeros(S + 1, np.int32)
+    t = 0
+    for s, (c, ql) in enumerate(seqs):
+        seq_lens[s] = c + ql
+        ctx_lens[s] = c
+        starts[s] = t
+        t += align(ql, align_q)
+    starts[len(seqs):] = t
+    assert t <= T, f"scenario needs {t} tokens, bucket has {T}"
+
+    return Scenario(q, k_cache, v_cache, block_table, seq_lens, ctx_lens,
+                    starts, bucket, model, cfg)
+
+
+@pytest.fixture
+def tiny_model():
+    return ModelConfig(num_layers=2, hidden_size=64, num_q_heads=4,
+                       num_kv_heads=2, head_size=16, intermediate_size=128,
+                       vocab_size=256, max_model_len=256)

@@ -1,0 +1,102 @@
+"""Pins the qualitative claims of the analytic kernel model (DESIGN §7):
+the quantities that drive the paper's GPU results but cannot appear in
+interpret-mode wallclock."""
+
+from __future__ import annotations
+
+import pytest
+
+from compile.analysis import (ScenarioShape, VMEM_BYTES, model_kernel,
+                              mxu_utilization_estimate)
+from compile.aot import KERNEL_GEOM, PROFILES
+from compile.config import KernelConfig
+
+GEOM = KERNEL_GEOM
+DECODE = ScenarioShape(num_seqs=2, seq_len=2048, query_len=1)
+PREFILL = ScenarioShape(num_seqs=2, seq_len=512, query_len=512)
+
+
+def cfg(variant, **kw):
+    base = dict(block_size=16, tile_n=16, block_q=1, num_segments=8,
+                static_programs=16, use_dot=False)
+    base.update(kw)
+    return KernelConfig(variant=variant, **base)
+
+
+class TestRedundancy:
+    def test_naive_loads_qpk_times_more_than_qblock(self):
+        # the §4.4 claim: Q-Block loads each K/V tile once per KV head,
+        # naive once per query head.
+        n = model_kernel(cfg("naive"), GEOM, DECODE)
+        q = model_kernel(cfg("qblock"), GEOM, DECODE)
+        assert n.hbm_bytes == GEOM.queries_per_kv * q.hbm_bytes
+        assert n.flops == q.flops  # same math, more traffic
+
+    def test_qblock_raises_arithmetic_intensity(self):
+        n = model_kernel(cfg("naive"), GEOM, PREFILL)
+        q = model_kernel(cfg("qblock", block_q=16), GEOM, PREFILL)
+        assert q.arithmetic_intensity > 2 * n.arithmetic_intensity
+
+
+class TestParallelism:
+    def test_parts_divides_critical_path(self):
+        # §4.5: segments shorten the serial tile chain for long decodes
+        q = model_kernel(cfg("qblock"), GEOM, DECODE)
+        p8 = model_kernel(cfg("parts", num_segments=8), GEOM, DECODE)
+        assert p8.critical_path_tiles < q.critical_path_tiles / 4
+        assert p8.instances == 8 * GEOM.num_kv_heads * DECODE.num_seqs
+
+    def test_more_segments_more_instances_shorter_path(self):
+        prev_path, prev_inst = None, None
+        for s in (1, 2, 4, 8, 16):
+            m = model_kernel(cfg("parts", num_segments=s), GEOM, DECODE)
+            if prev_path is not None:
+                assert m.critical_path_tiles <= prev_path
+                assert m.instances > prev_inst
+            prev_path, prev_inst = m.critical_path_tiles, m.instances
+
+    def test_static_grid_bounds_instances(self):
+        # §4.7: instance count independent of the batch
+        small = ScenarioShape(1, 128, 1)
+        big = ScenarioShape(8, 128, 1)
+        a = model_kernel(cfg("static", static_programs=16), GEOM, small)
+        b = model_kernel(cfg("static", static_programs=16), GEOM, big)
+        assert a.instances == b.instances == 16 * GEOM.num_kv_heads
+
+    def test_prefill_has_enough_instances_without_segments(self):
+        # §4.5: "this limitation does not apply to prefill attention"
+        q = model_kernel(cfg("qblock", block_q=16), GEOM, PREFILL)
+        d = model_kernel(cfg("qblock"), GEOM,
+                         ScenarioShape(1, 2048, 1))
+        assert q.instances > 8 * d.instances
+
+
+class TestVmemBudget:
+    @pytest.mark.parametrize("profile", ["default", "bench"])
+    def test_every_exported_config_fits_vmem(self, profile):
+        arts, _ = PROFILES[profile]()
+        for a in arts:
+            if a.kind != "kernel":
+                continue
+            m = model_kernel(a.cfg, GEOM, DECODE if a.cfg.block_q == 1
+                             else PREFILL)
+            assert m.vmem_bytes < VMEM_BYTES, a.name
+
+    def test_vmem_grows_with_tile_and_block(self):
+        small = model_kernel(cfg("qblock"), GEOM, PREFILL).vmem_bytes
+        big = model_kernel(cfg("qblock", tile_n=64, block_q=16),
+                           GEOM, PREFILL).vmem_bytes
+        assert big > 4 * small
+
+
+class TestMxu:
+    def test_elementwise_path_never_uses_mxu(self):
+        assert mxu_utilization_estimate(cfg("qblock"), GEOM) == 0.0
+
+    def test_dot_path_utilization_scales_with_tiles(self):
+        lo = mxu_utilization_estimate(cfg("qblock", use_dot=True), GEOM)
+        hi = mxu_utilization_estimate(
+            cfg("qblock", use_dot=True, tile_n=128, block_q=32), GEOM)
+        assert 0.0 < lo < hi <= 1.0
+        # block_q=32 × qpk=4 = 128 rows, tile 128 → full MXU occupancy
+        assert hi == 1.0

@@ -1,0 +1,217 @@
+"""L1 correctness: every kernel variant vs. the pure-numpy oracle.
+
+These are the paper's functional guarantees: identical results across the
+naive, Q-Block, parallel-tiled-softmax, static-grid, and flash-baseline
+kernels, for prefill, decode, and mixed batches, GQA/MQA/MHA mappings, and
+tile sizes below/equal/above the KV page size (§4.6).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from compile.config import Bucket, KernelConfig, ModelConfig
+from compile.kernels import get_kernel
+from compile.kernels.ref import paged_attention_ref
+from conftest import make_scenario
+
+MODEL = ModelConfig(num_layers=1, hidden_size=64, num_q_heads=4,
+                    num_kv_heads=2, head_size=16, intermediate_size=128,
+                    vocab_size=256, max_model_len=512)
+MQA = ModelConfig(num_layers=1, hidden_size=64, num_q_heads=4,
+                  num_kv_heads=1, head_size=16, intermediate_size=128,
+                  vocab_size=256, max_model_len=512)
+MHA = ModelConfig(num_layers=1, hidden_size=64, num_q_heads=4,
+                  num_kv_heads=4, head_size=16, intermediate_size=128,
+                  vocab_size=256, max_model_len=512)
+
+
+def run_and_check(scn, atol=2e-5):
+    kernel = get_kernel(scn.cfg)
+    out = jax.jit(
+        lambda *ops: kernel(*ops, cfg=scn.cfg, model=scn.model,
+                            bucket=scn.bucket)
+    )(*scn.operands())
+    out = np.asarray(out)
+    ref = paged_attention_ref(*scn.operands(), block_size=scn.cfg.block_size,
+                              queries_per_kv=scn.model.queries_per_kv)
+    rows = scn.valid_rows()
+    np.testing.assert_allclose(out[rows], ref[rows], atol=atol, rtol=1e-4)
+
+
+# ---------------------------------------------------------------- naive
+
+class TestNaive:
+    def test_single_decode(self):
+        cfg = KernelConfig(variant="naive", block_size=8, tile_n=8,
+                           block_q=1, use_dot=False)
+        run_and_check(make_scenario([(37, 1)], cfg, MODEL))
+
+    def test_decode_batch(self):
+        cfg = KernelConfig(variant="naive", block_size=8, tile_n=8,
+                           block_q=1, use_dot=False)
+        run_and_check(make_scenario([(17, 1), (64, 1), (3, 1), (128, 1)],
+                                    cfg, MODEL))
+
+    def test_prefill(self):
+        cfg = KernelConfig(variant="naive", block_size=8, tile_n=8,
+                           block_q=1, use_dot=False)
+        run_and_check(make_scenario([(0, 29)], cfg, MODEL))
+
+    def test_mixed_batch(self):
+        cfg = KernelConfig(variant="naive", block_size=8, tile_n=8,
+                           block_q=1, use_dot=False)
+        run_and_check(make_scenario([(0, 13), (40, 1), (5, 7)], cfg, MODEL))
+
+    def test_chunked_prefill_continuation(self):
+        # context > 0 AND query > 1: a chunked-prefill continuation step.
+        cfg = KernelConfig(variant="naive", block_size=8, tile_n=8,
+                           block_q=1, use_dot=False)
+        run_and_check(make_scenario([(24, 9)], cfg, MODEL))
+
+    def test_exact_page_boundary(self):
+        cfg = KernelConfig(variant="naive", block_size=8, tile_n=8,
+                           block_q=1, use_dot=False)
+        run_and_check(make_scenario([(16, 8), (8, 8)], cfg, MODEL))
+
+    def test_dot_path_matches(self):
+        cfg = KernelConfig(variant="naive", block_size=8, tile_n=8,
+                           block_q=1, use_dot=True)
+        run_and_check(make_scenario([(11, 5), (30, 1)], cfg, MODEL))
+
+
+# --------------------------------------------------------------- qblock
+
+class TestQBlock:
+    def test_prefill(self):
+        cfg = KernelConfig(variant="qblock", block_size=8, tile_n=8, block_q=4)
+        run_and_check(make_scenario([(0, 30)], cfg, MODEL))
+
+    def test_prefill_batch(self):
+        cfg = KernelConfig(variant="qblock", block_size=8, tile_n=8, block_q=4)
+        run_and_check(make_scenario([(0, 30), (0, 7), (0, 16)], cfg, MODEL))
+
+    def test_decode_batch(self):
+        cfg = KernelConfig(variant="qblock", block_size=8, tile_n=8, block_q=1)
+        run_and_check(make_scenario([(33, 1), (8, 1), (100, 1)], cfg, MODEL))
+
+    def test_mixed(self):
+        cfg = KernelConfig(variant="qblock", block_size=8, tile_n=8, block_q=4)
+        run_and_check(make_scenario([(0, 19), (55, 1), (12, 6)], cfg, MODEL))
+
+    def test_block_q_larger_than_query(self):
+        cfg = KernelConfig(variant="qblock", block_size=8, tile_n=8, block_q=16)
+        run_and_check(make_scenario([(0, 5)], cfg, MODEL))
+
+    def test_mqa(self):
+        cfg = KernelConfig(variant="qblock", block_size=8, tile_n=8, block_q=2)
+        run_and_check(make_scenario([(0, 12), (21, 1)], cfg, MQA))
+
+    def test_mha(self):
+        cfg = KernelConfig(variant="qblock", block_size=8, tile_n=8, block_q=2)
+        run_and_check(make_scenario([(0, 12), (21, 1)], cfg, MHA))
+
+    def test_elementwise_path(self):
+        cfg = KernelConfig(variant="qblock", block_size=8, tile_n=8,
+                           block_q=4, use_dot=False)
+        run_and_check(make_scenario([(0, 10), (9, 3)], cfg, MODEL))
+
+
+# --------------------------------------------- adjustable tile sizes (§4.6)
+
+class TestFlexTiles:
+    @pytest.mark.parametrize("tile_n", [4, 8, 16, 32])
+    def test_qblock_tile_sweep(self, tile_n):
+        cfg = KernelConfig(variant="qblock", block_size=8, tile_n=tile_n,
+                           block_q=4)
+        run_and_check(make_scenario([(0, 27), (50, 1), (13, 6)], cfg, MODEL))
+
+    @pytest.mark.parametrize("tile_n", [4, 8, 32])
+    def test_parts_tile_sweep(self, tile_n):
+        cfg = KernelConfig(variant="parts", block_size=8, tile_n=tile_n,
+                           block_q=1, num_segments=4)
+        run_and_check(make_scenario([(61, 1), (15, 1)], cfg, MODEL))
+
+    def test_non_pow2_total_length(self):
+        cfg = KernelConfig(variant="qblock", block_size=8, tile_n=32, block_q=4)
+        run_and_check(make_scenario([(0, 37)], cfg, MODEL))
+
+
+# ------------------------------------------------ parallel tiled softmax
+
+class TestParts:
+    def test_single_long_decode(self):
+        cfg = KernelConfig(variant="parts", block_size=8, tile_n=8,
+                           block_q=1, num_segments=4)
+        run_and_check(make_scenario([(200, 1)], cfg, MODEL))
+
+    def test_decode_batch(self):
+        cfg = KernelConfig(variant="parts", block_size=8, tile_n=8,
+                           block_q=1, num_segments=4)
+        run_and_check(make_scenario([(31, 1), (111, 1), (64, 1), (7, 1)],
+                                    cfg, MODEL))
+
+    @pytest.mark.parametrize("nseg", [1, 2, 8, 16])
+    def test_segment_count_sweep(self, nseg):
+        # merge must be exact for any segmentation, incl. empty segments
+        cfg = KernelConfig(variant="parts", block_size=8, tile_n=8,
+                           block_q=1, num_segments=nseg)
+        run_and_check(make_scenario([(90, 1), (5, 1)], cfg, MODEL))
+
+    def test_more_segments_than_tiles(self):
+        cfg = KernelConfig(variant="parts", block_size=8, tile_n=8,
+                           block_q=1, num_segments=16)
+        run_and_check(make_scenario([(9, 1)], cfg, MODEL))
+
+    def test_mqa(self):
+        cfg = KernelConfig(variant="parts", block_size=8, tile_n=8,
+                           block_q=1, num_segments=2)
+        run_and_check(make_scenario([(44, 1)], cfg, MQA))
+
+
+# ------------------------------------------------------ static launch grid
+
+class TestStaticGrid:
+    @pytest.mark.parametrize("programs", [1, 2, 8])
+    def test_programs_sweep(self, programs):
+        cfg = KernelConfig(variant="static", block_size=8, tile_n=8,
+                           block_q=4, static_programs=programs)
+        run_and_check(make_scenario([(0, 21), (30, 1), (4, 9)], cfg, MODEL))
+
+    def test_more_programs_than_qblocks(self):
+        cfg = KernelConfig(variant="static", block_size=8, tile_n=8,
+                           block_q=4, static_programs=64)
+        run_and_check(make_scenario([(0, 6)], cfg, MODEL))
+
+    def test_matches_qblock_exactly(self):
+        scn_args = [(0, 18), (25, 1), (7, 5)]
+        cfg_s = KernelConfig(variant="static", block_size=8, tile_n=16,
+                             block_q=4, static_programs=4)
+        cfg_q = KernelConfig(variant="qblock", block_size=8, tile_n=16,
+                             block_q=4)
+        scn_s = make_scenario(scn_args, cfg_s, MODEL, seed=3)
+        scn_q = make_scenario(scn_args, cfg_q, MODEL, seed=3)
+        out_s = np.asarray(get_kernel(cfg_s)(
+            *scn_s.operands(), cfg=cfg_s, model=MODEL, bucket=scn_s.bucket))
+        out_q = np.asarray(get_kernel(cfg_q)(
+            *scn_q.operands(), cfg=cfg_q, model=MODEL, bucket=scn_q.bucket))
+        rows = scn_s.valid_rows()
+        np.testing.assert_allclose(out_s[rows], out_q[rows], atol=1e-6)
+
+
+# --------------------------------------------------------- flash baseline
+
+class TestFlashBaseline:
+    def test_prefill(self):
+        cfg = KernelConfig(variant="flash", block_size=8, tile_n=16, block_q=4)
+        run_and_check(make_scenario([(0, 30), (0, 9)], cfg, MODEL))
+
+    def test_decode(self):
+        cfg = KernelConfig(variant="flash", block_size=8, tile_n=8, block_q=1)
+        run_and_check(make_scenario([(73, 1), (12, 1)], cfg, MODEL))
+
+    def test_mixed(self):
+        cfg = KernelConfig(variant="flash", block_size=8, tile_n=8, block_q=4)
+        run_and_check(make_scenario([(0, 11), (40, 1)], cfg, MODEL))

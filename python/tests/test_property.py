@@ -1,0 +1,158 @@
+"""Property-based kernel sweeps (hypothesis): random geometries, batch
+compositions, page sizes and tile sizes must all agree with the oracle.
+
+These complement test_kernels.py's directed cases by searching the shape
+space the paper's autotuner sweeps: block_size × tile_n × block_q ×
+segments × GQA ratio × batch composition.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from compile.config import KernelConfig, ModelConfig
+from compile.kernels import get_kernel
+from compile.kernels.ref import paged_attention_ref
+from conftest import make_scenario
+
+SETTINGS = dict(
+    max_examples=25,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+
+
+def model_for(qpk: int, kv_heads: int, head: int) -> ModelConfig:
+    return ModelConfig(num_layers=1, hidden_size=qpk * kv_heads * head,
+                       num_q_heads=qpk * kv_heads, num_kv_heads=kv_heads,
+                       head_size=head, intermediate_size=64,
+                       vocab_size=128, max_model_len=1024)
+
+
+def check(scn, atol=3e-5):
+    kernel = get_kernel(scn.cfg)
+    out = np.asarray(jax.jit(
+        lambda *ops: kernel(*ops, cfg=scn.cfg, model=scn.model,
+                            bucket=scn.bucket))(*scn.operands()))
+    ref = paged_attention_ref(*scn.operands(), block_size=scn.cfg.block_size,
+                              queries_per_kv=scn.model.queries_per_kv)
+    rows = scn.valid_rows()
+    np.testing.assert_allclose(out[rows], ref[rows], atol=atol, rtol=1e-4)
+
+
+seq_strategy = st.lists(
+    st.tuples(st.integers(0, 70), st.integers(1, 20)),
+    min_size=1, max_size=4,
+)
+
+
+@settings(**SETTINGS)
+@given(
+    seqs=seq_strategy,
+    block_size=st.sampled_from([4, 8, 16]),
+    qpk=st.sampled_from([1, 2, 4]),
+    kv_heads=st.sampled_from([1, 2]),
+    head=st.sampled_from([8, 16]),
+    use_dot=st.booleans(),
+    seed=st.integers(0, 2**31),
+)
+def test_naive_matches_oracle(seqs, block_size, qpk, kv_heads, head,
+                              use_dot, seed):
+    cfg = KernelConfig(variant="naive", block_size=block_size,
+                       tile_n=block_size, block_q=1, use_dot=use_dot)
+    model = model_for(qpk, kv_heads, head)
+    check(make_scenario(seqs, cfg, model, seed=seed))
+
+
+@settings(**SETTINGS)
+@given(
+    seqs=seq_strategy,
+    block_size=st.sampled_from([4, 8, 16]),
+    tile_exp=st.integers(-1, 2),       # tile_n = block_size * 2**exp
+    block_q=st.sampled_from([1, 2, 4, 8]),
+    qpk=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 2**31),
+)
+def test_qblock_matches_oracle(seqs, block_size, tile_exp, block_q, qpk, seed):
+    tile_n = max(2, int(block_size * 2.0 ** tile_exp))
+    cfg = KernelConfig(variant="qblock", block_size=block_size,
+                       tile_n=tile_n, block_q=block_q)
+    model = model_for(qpk, 2, 16)
+    check(make_scenario(seqs, cfg, model, seed=seed))
+
+
+@settings(**SETTINGS)
+@given(
+    ctxs=st.lists(st.integers(1, 150), min_size=1, max_size=4),
+    block_size=st.sampled_from([4, 8, 16]),
+    tile_exp=st.integers(-1, 2),
+    num_segments=st.sampled_from([1, 2, 4, 8, 16]),
+    qpk=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 2**31),
+)
+def test_parts_matches_oracle(ctxs, block_size, tile_exp, num_segments,
+                              qpk, seed):
+    # decode-only: one query token per sequence
+    seqs = [(c, 1) for c in ctxs]
+    tile_n = max(2, int(block_size * 2.0 ** tile_exp))
+    cfg = KernelConfig(variant="parts", block_size=block_size,
+                       tile_n=tile_n, block_q=1, num_segments=num_segments)
+    model = model_for(qpk, 2, 16)
+    check(make_scenario(seqs, cfg, model, seed=seed))
+
+
+@settings(**SETTINGS)
+@given(
+    seqs=seq_strategy,
+    static_programs=st.sampled_from([1, 2, 4, 16]),
+    block_q=st.sampled_from([1, 4]),
+    seed=st.integers(0, 2**31),
+)
+def test_static_matches_oracle(seqs, static_programs, block_q, seed):
+    cfg = KernelConfig(variant="static", block_size=8, tile_n=8,
+                       block_q=block_q, static_programs=static_programs)
+    model = model_for(2, 2, 16)
+    check(make_scenario(seqs, cfg, model, seed=seed))
+
+
+@settings(**SETTINGS)
+@given(
+    seqs=seq_strategy,
+    block_q=st.sampled_from([1, 4]),
+    tile_n=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**31),
+)
+def test_flash_matches_oracle(seqs, block_q, tile_n, seed):
+    cfg = KernelConfig(variant="flash", block_size=8, tile_n=tile_n,
+                       block_q=block_q)
+    model = model_for(2, 2, 16)
+    check(make_scenario(seqs, cfg, model, seed=seed))
+
+
+@settings(**SETTINGS)
+@given(
+    seqs=seq_strategy,
+    seed=st.integers(0, 2**31),
+)
+def test_variant_cross_agreement(seqs, seed):
+    """All variants must produce identical outputs on identical inputs —
+    the paper's functional bar for swapping kernels via heuristics."""
+    model = model_for(2, 2, 16)
+    outs = {}
+    for variant, extra in [("naive", {}), ("qblock", {}), ("static", {}),
+                           ("flash", {})]:
+        cfg = KernelConfig(variant=variant, block_size=8, tile_n=8,
+                           block_q=1, use_dot=False,
+                           static_programs=2, **extra)
+        scn = make_scenario(seqs, cfg, model, seed=seed)
+        kernel = get_kernel(cfg)
+        out = np.asarray(kernel(*scn.operands(), cfg=cfg, model=model,
+                                bucket=scn.bucket))
+        outs[variant] = out[scn.valid_rows()]
+    base = outs.pop("naive")
+    for name, o in outs.items():
+        np.testing.assert_allclose(o, base, atol=3e-5, rtol=1e-4,
+                                   err_msg=f"{name} != naive")

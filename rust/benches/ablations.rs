@@ -1,0 +1,85 @@
+//! Ablations over the design knobs the paper singles out:
+//!
+//!   A1 — `tl.dot` (MXU/MMA path) vs elementwise multiply-reduce (§8
+//!        "Usage of tl.dot"; inverts on the CPU substrate — DESIGN.md D3).
+//!   A2 — static launch-grid width (§4.7: "close but smaller than the
+//!        number of available GPU cores").
+//!   A3 — parallel-tiled-softmax segment count (§4.5, Figure 4).
+//!   A4 — Q-Block size on prefill (Listing 2's BLOCK_M axis).
+//!
+//! Requires `make artifacts` (A1/A3 quick points) and picks up the full
+//! grid from `make artifacts-bench` when present.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::*;
+use triton_anatomy::microbench;
+use triton_anatomy::workload::{Rng, Scenario};
+use triton_anatomy::Variant;
+
+fn sweep<F>(rt: &triton_anatomy::Runtime, scn: &Scenario, title: &str,
+            axis: &str, select: F)
+where
+    F: Fn(&triton_anatomy::KernelConfig) -> Option<usize>,
+{
+    println!("\n--- {title} ---");
+    println!("{:<12} {:>12} {:>28}", axis, "mean_us", "artifact");
+    let mut points: Vec<(usize, f64, String)> = Vec::new();
+    for a in rt.manifest.kernel_artifacts() {
+        let Some(x) = select(&a.config) else { continue };
+        if !microbench::scenario_fits(a, scn) {
+            continue;
+        }
+        let us = measure(rt, a, scn, 4242);
+        points.push((x, us, a.name.clone()));
+    }
+    points.sort_by(|a, b| (a.0, a.1).partial_cmp(&(b.0, b.1)).unwrap());
+    points.dedup_by_key(|(x, ..)| *x);
+    for (x, us, name) in &points {
+        println!("{x:<12} {us:>12.0} {name:>28}");
+    }
+    if points.is_empty() {
+        println!("(no fitting artifacts — build artifacts-bench)");
+    }
+}
+
+fn main() {
+    let rt = load_runtime();
+    let mut rng = Rng::new(0xAB1A);
+    banner("Design-knob ablations (EXPERIMENTS.md §Ablations)");
+
+    // A1 — dot vs elementwise on the same qblock config
+    let scn = Scenario::decode(4, 448, &mut rng, true);
+    println!("\n--- A1: tl.dot (MXU) vs elementwise, qblock decode b4 l448 ---");
+    for a in rt.manifest.kernel_artifacts() {
+        if a.config.variant == Variant::QBlock
+            && a.config.tile_n == a.config.block_size
+            && a.config.block_q == 1
+            && microbench::scenario_fits(a, &scn)
+        {
+            let us = measure(&rt, a, &scn, 99);
+            let path = if a.config.use_dot { "dot (MMA/MXU)" } else { "elementwise" };
+            println!("{path:<16} {us:>10.0} us   {}", a.name);
+        }
+    }
+    println!("(paper §8: dot wins on GPU MMA units; inverted here — D3)");
+
+    // A2 — static grid width
+    let scn = Scenario::mixed(2, 48, 0.0, &mut rng);
+    sweep(&rt, &scn, "A2: static launch-grid width, prefill b2 l48",
+          "programs", |c| (c.variant == Variant::Static)
+              .then_some(c.static_programs));
+
+    // A3 — segment count for long decode
+    let scn = Scenario::decode(1, 448, &mut rng, false);
+    sweep(&rt, &scn, "A3: parallel-tiled segments, decode b1 l448",
+          "segments", |c| (c.variant == Variant::Parts
+              && c.tile_n == c.block_size).then_some(c.num_segments));
+
+    // A4 — Q-Block size on prefill
+    let scn = Scenario::prefill(2, 48, &mut rng, true);
+    sweep(&rt, &scn, "A4: Q-Block size (BLOCK_M axis), prefill b2 l48",
+          "block_q", |c| (c.variant == Variant::QBlock
+              && c.tile_n == c.block_size).then_some(c.block_q));
+}

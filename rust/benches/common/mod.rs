@@ -1,0 +1,117 @@
+//! Shared helpers for the figure-reproduction benches.
+//!
+//! Each bench prints the paper-style series to stdout AND writes a CSV to
+//! `target/figures/` so the series can be re-plotted. Benches degrade
+//! gracefully: they sweep whatever artifact grid is present (default
+//! profile = a small CI set; `make artifacts-bench` / `artifacts-e2e`
+//! unlock the full sweep of the corresponding figure).
+
+#![allow(dead_code)] // each bench uses a subset of these helpers
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::PathBuf;
+
+use triton_anatomy::manifest::ArtifactSpec;
+use triton_anatomy::microbench::{self, BenchOpts};
+use triton_anatomy::runtime::Runtime;
+use triton_anatomy::workload::{Rng, Scenario};
+use triton_anatomy::Variant;
+
+pub fn figures_dir() -> PathBuf {
+    let d = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("target")
+        .join("figures");
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+pub struct Csv {
+    file: std::fs::File,
+    pub path: PathBuf,
+}
+
+impl Csv {
+    pub fn create(name: &str, header: &str) -> Self {
+        let path = figures_dir().join(name);
+        let mut file = std::fs::File::create(&path).unwrap();
+        writeln!(file, "{header}").unwrap();
+        Csv { file, path }
+    }
+
+    pub fn row(&mut self, fields: &[String]) {
+        writeln!(self.file, "{}", fields.join(",")).unwrap();
+    }
+}
+
+/// Quick-mode switch: `REPRO_BENCH_FULL=1` runs the paper-scale sweep;
+/// default keeps CI fast.
+pub fn full_mode() -> bool {
+    std::env::var("REPRO_BENCH_FULL").is_ok()
+}
+
+pub fn bench_opts() -> BenchOpts {
+    if full_mode() {
+        BenchOpts { warmup: 3, iters: 10 }
+    } else {
+        BenchOpts { warmup: 1, iters: 3 }
+    }
+}
+
+/// Variant label used in figure legends (the paper's naming).
+pub fn legend(v: Variant) -> &'static str {
+    match v {
+        Variant::Naive => "Triton (naive)",
+        Variant::QBlock => "Triton (GQA opt.)",
+        Variant::Parts => "Triton (parallel tiled)",
+        Variant::Static => "Triton (static grid)",
+        Variant::Flash => "flash_attn (baseline)",
+    }
+}
+
+/// Pick one representative kernel artifact per variant for a scenario:
+/// smallest fitting bucket, preferring tile_n == block_size (the
+/// fixed-tile configuration, so Fig. 7 can contrast flex tiles).
+pub fn representative(rt: &Runtime, scn: &Scenario)
+    -> BTreeMap<Variant, ArtifactSpec> {
+    let mut out: BTreeMap<Variant, ArtifactSpec> = BTreeMap::new();
+    for a in rt.manifest.kernel_artifacts() {
+        if !microbench::scenario_fits(a, scn) {
+            continue;
+        }
+        let better = |b: &ArtifactSpec, a: &ArtifactSpec| {
+            let fixed_b = (b.config.tile_n != b.config.block_size) as usize;
+            let fixed_a = (a.config.tile_n != a.config.block_size) as usize;
+            (fixed_b, b.bucket.max_tokens, b.bucket.max_seqs)
+                < (fixed_a, a.bucket.max_tokens, a.bucket.max_seqs)
+        };
+        match out.get(&a.config.variant) {
+            Some(cur) if !better(a, cur) => {}
+            _ => {
+                out.insert(a.config.variant, a.clone());
+            }
+        }
+    }
+    out
+}
+
+/// Measure mean latency of one artifact on one scenario.
+pub fn measure(rt: &Runtime, spec: &ArtifactSpec, scn: &Scenario,
+               seed: u64) -> f64 {
+    let mut rng = Rng::new(seed);
+    microbench::bench_artifact(rt, spec, scn, &mut rng, bench_opts())
+        .map(|r| r.mean_us)
+        .unwrap_or(f64::NAN)
+}
+
+pub fn load_runtime() -> Runtime {
+    Runtime::load_dir(triton_anatomy::default_artifacts_dir())
+        .expect("run `make artifacts` first")
+}
+
+/// Print a header in the bench output.
+pub fn banner(title: &str) {
+    println!("\n================================================================");
+    println!("{title}");
+    println!("================================================================");
+}

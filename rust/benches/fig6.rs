@@ -1,0 +1,121 @@
+//! Figure 6 — kernel optimization steps vs. the flash baseline.
+//!
+//! 6a/6b (paper: H100 / MI300): per max-sequence-length panel, latency vs.
+//! batch size for Triton (naive), Triton (GQA opt.), Triton (parallel
+//! tiled) and flash_attn. Latencies are normalized to the leftmost
+//! baseline value, as in the paper.
+//!
+//! 6c/6d: the same measurements re-grouped by batch composition — decode
+//! share 0% / 50% / 100% — against total batch·seqlen tokens, which is
+//! the view where the Q-Block (prefill-heavy) vs. parallel-tiled-softmax
+//! (decode-heavy) split becomes visible.
+//!
+//! Substrate note (DESIGN.md §5): absolute µs are XLA-CPU interpret-mode
+//! numbers; the series *shape* — who wins where — is the reproduction
+//! target. Expected: naive ≫ everyone (≈5–10× at long seqlen); GQA opt.
+//! strongest on prefill-heavy batches; parallel tiled closing the gap on
+//! decode-only batches; flash ≈ the optimized kernels.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::*;
+use triton_anatomy::workload::{Rng, Scenario};
+
+fn main() {
+    let rt = load_runtime();
+    let mut rng = Rng::new(6);
+
+    // ------------------------------------------------ view A (fig 6a/6b)
+    banner("Fig 6a/6b analogue: latency vs batch size, per max seqlen \
+            (normalized to flash at the leftmost point)");
+    let mut csv = Csv::create("fig6_by_seqlen.csv",
+                              "seqlen,batch,variant,mean_us,normalized");
+    let seqlens: Vec<usize> = if full_mode() {
+        vec![128, 512, 2048]
+    } else {
+        vec![128, 448]
+    };
+    let batches: Vec<usize> =
+        if full_mode() { vec![1, 2, 4, 8] } else { vec![1, 2, 4] };
+
+    for &l in &seqlens {
+        println!("\n--- max seqlen {l} (decode batches, varied lengths) ---");
+        println!("{:<26} {}", "variant",
+                 batches.iter().map(|b| format!("{b:>10}"))
+                        .collect::<String>());
+        let mut norm = None;
+        let mut rows: Vec<(String, Vec<f64>)> = Vec::new();
+        for &b in &batches {
+            let scn = Scenario::decode(b, l, &mut rng, true);
+            for (variant, spec) in representative(&rt, &scn) {
+                let us = measure(&rt, &spec, &scn, 1000 + b as u64);
+                if variant == triton_anatomy::Variant::Flash && norm.is_none() {
+                    norm = Some(us);
+                }
+                let name = legend(variant).to_string();
+                match rows.iter_mut().find(|(n, _)| *n == name) {
+                    Some((_, v)) => v.push(us),
+                    None => rows.push((name, vec![us])),
+                }
+            }
+        }
+        let norm = norm.unwrap_or(1.0);
+        for (name, vals) in &rows {
+            print!("{name:<26}");
+            for (i, us) in vals.iter().enumerate() {
+                print!("{:>10.2}", us / norm);
+                csv.row(&[l.to_string(), batches[i].to_string(),
+                          name.clone(), us.to_string(),
+                          (us / norm).to_string()]);
+            }
+            println!();
+        }
+    }
+    println!("\n(1.00 = flash baseline at batch {}; paper Fig.6a shows \
+              naive ~an order of magnitude above baseline)", batches[0]);
+
+    // ------------------------------------------------ view B (fig 6c/6d)
+    banner("Fig 6c/6d analogue: latency vs total batch tokens, grouped by \
+            decode share");
+    let mut csv = Csv::create("fig6_by_share.csv",
+                              "share,total_tokens,variant,mean_us");
+    let shares = [0.0, 0.5, 1.0];
+    let sizes: Vec<(usize, usize)> = if full_mode() {
+        vec![(2, 128), (4, 128), (4, 512), (8, 512), (8, 2048)]
+    } else {
+        vec![(2, 32), (4, 32), (4, 448)]
+    };
+    for &share in &shares {
+        println!("\n--- decode share {:.0}% ---", share * 100.0);
+        println!("{:<26} {}", "variant",
+                 sizes.iter().map(|(b, l)| format!("{:>12}", b * l))
+                      .collect::<String>());
+        let mut rows: Vec<(String, Vec<f64>)> = Vec::new();
+        for &(b, l) in &sizes {
+            let scn = if share == 1.0 {
+                Scenario::decode(b, l, &mut rng, true)
+            } else {
+                Scenario::mixed(b, l, share, &mut rng)
+            };
+            for (variant, spec) in representative(&rt, &scn) {
+                let us = measure(&rt, &spec, &scn, 2000 + (b * l) as u64);
+                let name = legend(variant).to_string();
+                match rows.iter_mut().find(|(n, _)| *n == name) {
+                    Some((_, v)) => v.push(us),
+                    None => rows.push((name, vec![us])),
+                }
+                csv.row(&[share.to_string(), (b * l).to_string(),
+                          legend(variant).to_string(), us.to_string()]);
+            }
+        }
+        for (name, vals) in &rows {
+            print!("{name:<26}");
+            for us in vals {
+                print!("{:>12.0}", us);
+            }
+            println!("  (us)");
+        }
+    }
+    println!("\nwrote {:?} and fig6_by_share.csv", figures_dir());
+}

@@ -1,0 +1,92 @@
+//! Figure 7 — adjustable tile sizes (§4.6).
+//!
+//! Contrasts the flex-tile kernels (tile_n decoupled from the KV page
+//! size: 16 / 32 / 64 over block_size 16) against the fixed-tile versions
+//! (tile_n == block_size), grouped by decode share as in the paper ("the
+//! flex block versions both outperform their respective comparable
+//! implementations").
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::*;
+use triton_anatomy::manifest::ArtifactSpec;
+use triton_anatomy::microbench;
+use triton_anatomy::workload::{Rng, Scenario};
+use triton_anatomy::Variant;
+
+fn main() {
+    let rt = load_runtime();
+    let mut rng = Rng::new(7);
+    let mut csv = Csv::create("fig7_flex_tiles.csv",
+                              "share,total_tokens,variant,tile_n,mean_us");
+
+    banner("Fig 7 analogue: adjustable tile sizes vs fixed, by decode share");
+
+    // every (variant, tile_n) kernel family present in the manifest
+    let families: Vec<(Variant, usize)> = {
+        let mut v: Vec<(Variant, usize)> = rt
+            .manifest
+            .kernel_artifacts()
+            .filter(|a| matches!(a.config.variant,
+                                 Variant::QBlock | Variant::Parts))
+            .map(|a| (a.config.variant, a.config.tile_n))
+            .collect();
+        v.sort();
+        v.dedup();
+        v
+    };
+    println!("tile families present: {:?}\n",
+             families.iter().map(|(v, t)| format!("{}/tn{}", v.name(), t))
+                     .collect::<Vec<_>>());
+
+    let shares = [0.0, 0.5, 1.0];
+    let sizes: Vec<(usize, usize)> = if full_mode() {
+        vec![(2, 256), (4, 512), (8, 1024), (8, 2048)]
+    } else {
+        vec![(2, 32), (4, 256), (4, 448)]
+    };
+
+    for &share in &shares {
+        println!("--- decode share {:.0}% ---", share * 100.0);
+        println!("{:<30} {}", "kernel",
+                 sizes.iter().map(|(b, l)| format!("{:>12}", b * l))
+                      .collect::<String>());
+        for &(variant, tile_n) in &families {
+            let mut vals = Vec::new();
+            for &(b, l) in &sizes {
+                let scn = if share == 1.0 {
+                    Scenario::decode(b, l, &mut rng, true)
+                } else {
+                    Scenario::mixed(b, l, share, &mut rng)
+                };
+                let spec: Option<ArtifactSpec> = rt
+                    .manifest
+                    .kernel_artifacts()
+                    .filter(|a| a.config.variant == variant
+                        && a.config.tile_n == tile_n
+                        && microbench::scenario_fits(a, &scn))
+                    .min_by_key(|a| (a.bucket.max_tokens, a.bucket.max_seqs))
+                    .cloned();
+                match spec {
+                    Some(spec) => {
+                        let us = measure(&rt, &spec, &scn, 70 + (b * l) as u64);
+                        csv.row(&[share.to_string(), (b * l).to_string(),
+                                  variant.name().to_string(),
+                                  tile_n.to_string(), us.to_string()]);
+                        vals.push(format!("{us:>12.0}"));
+                    }
+                    None => vals.push(format!("{:>12}", "-")),
+                }
+            }
+            let tag = if tile_n == 16 { "fixed" } else { "flex" };
+            println!("{:<30} {}  (us)",
+                     format!("{} tn={tile_n} ({tag})", legend(variant)),
+                     vals.join(""));
+        }
+        println!();
+    }
+    println!("expected shape: larger tiles win on long sequences (fewer \
+              page lookups per token), matching the paper's flex > fixed.");
+    println!("wrote {:?}", csv.path);
+}

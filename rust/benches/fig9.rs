@@ -1,0 +1,113 @@
+//! Figure 9 — end-to-end latency vs. output length (§7.4).
+//!
+//! The paper's configuration: batch size 1, fixed prompt (500 tokens on
+//! the H100/MI300 testbed; scaled here), varying generated-output lengths,
+//! one series per kernel stage — naive → Q-Block → Q-Block + parallel
+//! tiled softmax → static launch grid (full-graph analogue) → flash
+//! baseline. Headline numbers being reproduced in shape:
+//!   * naive ≈ 19.7% of flash throughput,
+//!   * optimized stages step up monotonically,
+//!   * static grid ≈ 98.6–105.9% of flash.
+//!
+//! Uses model-step executables end to end (scheduler + metadata + PJRT
+//! dispatch + sampling), not kernel microbenches. Runs on the 'tiny'
+//! model by default; `make artifacts-e2e` + REPRO_BENCH_FULL=1 switches
+//! to the 'small' model with longer outputs.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::rc::Rc;
+
+use common::*;
+use triton_anatomy::config::{EngineConfig, Variant};
+use triton_anatomy::engine::Engine;
+use triton_anatomy::heuristics::{DecisionTree, Heuristics, KernelChoice};
+use triton_anatomy::runtime::Runtime;
+use triton_anatomy::workload::Rng;
+
+fn pinned(variant: Variant) -> Heuristics {
+    let leaf = |bq: usize| DecisionTree::Leaf(KernelChoice {
+        variant, tile_n: 32, block_q: bq, num_segments: 8, use_dot: false });
+    Heuristics { decode: leaf(1), prefill: leaf(16) }
+}
+
+fn main() {
+    let dir = triton_anatomy::default_artifacts_dir();
+    let full = full_mode();
+    let (model, prompt_len, outputs): (&str, usize, Vec<usize>) = if full {
+        ("small", 500, vec![25, 50, 100, 200])
+    } else {
+        ("tiny", 50, vec![8, 16, 32])
+    };
+    // fall back to tiny when e2e artifacts are absent
+    let probe = Runtime::load_dir(dir.clone()).expect("make artifacts first");
+    let model = if probe.manifest.models.contains_key(model) {
+        model
+    } else {
+        "tiny"
+    };
+    drop(probe);
+
+    banner(&format!(
+        "Fig 9 analogue: e2e latency, batch 1, prompt {prompt_len}, \
+         model '{model}' (per-variant engines)"));
+    let mut csv = Csv::create("fig9_e2e.csv",
+                              "variant,output_tokens,latency_ms,ms_per_token");
+
+    println!("{:<26} {}", "kernel stage",
+             outputs.iter().map(|o| format!("{o:>12}")).collect::<String>());
+
+    let stages = [Variant::Naive, Variant::QBlock, Variant::Parts,
+                  Variant::Static, Variant::Flash];
+    let mut flash_ms: Vec<f64> = vec![f64::NAN; outputs.len()];
+    let mut naive_ms: Vec<f64> = vec![f64::NAN; outputs.len()];
+    let mut static_ms: Vec<f64> = vec![f64::NAN; outputs.len()];
+
+    for variant in stages {
+        let mut cells = Vec::new();
+        for (i, &n_out) in outputs.iter().enumerate() {
+            let rt = Rc::new(Runtime::load_dir(dir.clone()).unwrap());
+            let ecfg = EngineConfig { model: model.to_string(),
+                                      ..Default::default() };
+            let mut engine = Engine::new(rt, ecfg).unwrap();
+            engine.heuristics = pinned(variant);
+            engine.warmup().unwrap();
+            let mut rng = Rng::new(9);
+            let prompt = rng.tokens(prompt_len, engine.model_cfg.vocab_size);
+            let t0 = std::time::Instant::now();
+            engine.add_request(prompt, n_out).unwrap();
+            let fin = engine.run_to_completion().unwrap();
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            assert_eq!(fin[0].output.len(), n_out.min(
+                engine.model_cfg.max_model_len - prompt_len));
+            cells.push(ms);
+            csv.row(&[variant.name().to_string(), n_out.to_string(),
+                      ms.to_string(), (ms / n_out as f64).to_string()]);
+            match variant {
+                Variant::Flash => flash_ms[i] = ms,
+                Variant::Naive => naive_ms[i] = ms,
+                Variant::Static => static_ms[i] = ms,
+                _ => {}
+            }
+        }
+        print!("{:<26}", legend(variant));
+        for ms in &cells {
+            print!("{ms:>12.1}");
+        }
+        println!("  (ms)");
+    }
+
+    // headline ratios (paper: naive 19.7% of FA3, static grid 98.6–105.9%)
+    let last = outputs.len() - 1;
+    if flash_ms[last].is_finite() {
+        println!("\nheadline @ {} output tokens:", outputs[last]);
+        println!("  naive  / flash throughput ratio: {:.1}%  (paper: 19.7%)",
+                 100.0 * flash_ms[last] / naive_ms[last]);
+        println!("  static / flash throughput ratio: {:.1}%  (paper: 98.6–105.9%)",
+                 100.0 * flash_ms[last] / static_ms[last]);
+        println!("  total naive→static speedup: {:.2}x  (paper: up to 5.9x on MI300)",
+                 naive_ms[last] / static_ms[last]);
+    }
+    println!("wrote {:?}", csv.path);
+}

@@ -1,0 +1,326 @@
+//! Offline autotuning → decision-tree export (§5, Fig. 5).
+//!
+//! The paper's answer to Triton-autotuner overhead: run the sweep *outside*
+//! the serving runtime against the same compiled kernels, then distill the
+//! winner table into a small decision tree over batch features that the
+//! engine evaluates in nanoseconds — covering scenarios that were never
+//! tuned (unlike cache-replay autotuning, which only helps on exact
+//! repeats of a tuned scenario).
+//!
+//! Workflow: `scenario grid → microbench every fitting artifact → per-
+//! scenario winner → greedy regret-minimizing tree fit → heuristics.json`.
+
+use anyhow::Result;
+
+use crate::batch::BatchFeatures;
+use crate::heuristics::{DecisionTree, Feature, Heuristics, KernelChoice};
+use crate::manifest::{ArtifactKind, ArtifactSpec};
+use crate::microbench::{self, BenchOpts};
+use crate::runtime::Runtime;
+use crate::workload::{Rng, Scenario};
+
+/// One tuning sample: a scenario's features plus the measured latency of
+/// every kernel choice that could run it.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub features: BatchFeatures,
+    pub scenario: String,
+    pub latencies: Vec<(KernelChoice, f64)>,
+}
+
+impl Sample {
+    pub fn best(&self) -> (KernelChoice, f64) {
+        self.latencies
+            .iter()
+            .cloned()
+            .min_by(|a, b| a.1.total_cmp(&b.1))
+            .expect("sample with no measurements")
+    }
+
+    /// Latency of `choice` on this scenario; scenarios that cannot run the
+    /// choice are charged twice their worst measured latency so the tree
+    /// steers around infeasible picks without poisoning the fit.
+    fn cost_of(&self, choice: &KernelChoice) -> f64 {
+        self.latencies
+            .iter()
+            .find(|(c, _)| c == choice)
+            .map(|(_, l)| *l)
+            .unwrap_or_else(|| {
+                2.0 * self
+                    .latencies
+                    .iter()
+                    .map(|(_, l)| *l)
+                    .fold(0.0, f64::max)
+            })
+    }
+}
+
+fn features_of_scenario(scn: &Scenario) -> BatchFeatures {
+    let qlens: Vec<usize> = scn.seqs.iter().map(|s| s.1).collect();
+    BatchFeatures {
+        num_seqs: scn.seqs.len(),
+        num_decodes: scn.seqs.iter().filter(|s| s.1 == 1 && s.0 > 0).count(),
+        max_query_len: qlens.iter().copied().max().unwrap_or(0),
+        avg_query_len: qlens.iter().sum::<usize>() as f64
+            / qlens.len().max(1) as f64,
+        max_seq_len: scn.max_seq_len(),
+        total_kv_tokens: scn.total_kv_tokens(),
+        total_new_tokens: scn.total_query_tokens(),
+    }
+}
+
+fn choice_of(spec: &ArtifactSpec) -> KernelChoice {
+    KernelChoice {
+        variant: spec.config.variant,
+        tile_n: spec.config.tile_n,
+        block_q: spec.config.block_q,
+        num_segments: spec.config.num_segments,
+        use_dot: spec.config.use_dot,
+    }
+}
+
+/// The tuning scenario grid. Mirrors the paper's sweep axes: batch size ×
+/// sequence length × decode share, with variable lengths inside batches.
+pub fn default_grid(rng: &mut Rng, max_seq_len: usize) -> Vec<Scenario> {
+    let mut grid = Vec::new();
+    let lens: Vec<usize> = [128, 256, 512, 1024, 2048]
+        .into_iter()
+        .filter(|&l| l <= max_seq_len)
+        .collect();
+    for &b in &[1usize, 2, 4, 8] {
+        for &l in &lens {
+            grid.push(Scenario::decode(b, l, rng, true));
+        }
+    }
+    for &b in &[1usize, 2, 4] {
+        for &l in &[32usize, 64, 128] {
+            grid.push(Scenario::prefill(b, l, rng, true));
+        }
+    }
+    for &share in &[0.0f64, 0.5] {
+        for &l in &[64usize, 128] {
+            grid.push(Scenario::mixed(4, l, share, rng));
+        }
+    }
+    grid
+}
+
+/// Run the sweep over every kernel artifact in the manifest.
+pub fn sweep(rt: &Runtime, grid: &[Scenario], opts: BenchOpts,
+             verbose: bool) -> Result<Vec<Sample>> {
+    let arts: Vec<ArtifactSpec> = rt
+        .manifest
+        .artifacts
+        .iter()
+        .filter(|a| a.kind == ArtifactKind::Kernel)
+        .cloned()
+        .collect();
+    let mut samples = Vec::new();
+    for scn in grid {
+        let mut lat = Vec::new();
+        for spec in &arts {
+            if !microbench::scenario_fits(spec, scn) {
+                continue;
+            }
+            let mut rng = Rng::new(0xC0FFEE);
+            let r = microbench::bench_artifact(rt, spec, scn, &mut rng, opts)?;
+            lat.push((choice_of(spec), r.mean_us));
+            if verbose {
+                eprintln!("[tune] {:<28} {:<26} {:>10.0} us",
+                          scn.name, spec.name, r.mean_us);
+            }
+        }
+        if !lat.is_empty() {
+            samples.push(Sample {
+                features: features_of_scenario(scn),
+                scenario: scn.name.clone(),
+                latencies: lat,
+            });
+        }
+    }
+    Ok(samples)
+}
+
+/// Total cost of serving all samples with one fixed choice.
+fn pool_cost(samples: &[&Sample], choice: &KernelChoice) -> f64 {
+    samples.iter().map(|s| s.cost_of(choice)).sum()
+}
+
+/// Best single choice for a sample pool.
+fn best_leaf(samples: &[&Sample]) -> (KernelChoice, f64) {
+    let mut candidates: Vec<KernelChoice> = Vec::new();
+    for s in samples {
+        for (c, _) in &s.latencies {
+            if !candidates.contains(c) {
+                candidates.push(*c);
+            }
+        }
+    }
+    candidates
+        .into_iter()
+        .map(|c| (c, pool_cost(samples, &c)))
+        .min_by(|a, b| a.1.total_cmp(&b.1))
+        .expect("empty pool")
+}
+
+/// Greedy regret-minimizing tree fit (CART-style, exhaustive over feature
+/// midpoints). `min_gain` is the relative improvement needed to split —
+/// keeps the tree as small as Listing 2.
+pub fn fit_tree(samples: &[&Sample], max_depth: usize, min_gain: f64)
+    -> DecisionTree {
+    let (leaf_choice, leaf_cost) = best_leaf(samples);
+    if max_depth == 0 || samples.len() < 2 {
+        return DecisionTree::Leaf(leaf_choice);
+    }
+
+    let mut best: Option<(Feature, f64, f64)> = None; // (feat, thr, cost)
+    for feat in Feature::ALL {
+        let mut vals: Vec<f64> =
+            samples.iter().map(|s| feat.extract(&s.features)).collect();
+        vals.sort_by(f64::total_cmp);
+        vals.dedup();
+        for w in vals.windows(2) {
+            let thr = (w[0] + w[1]) / 2.0;
+            let left: Vec<&Sample> = samples.iter().cloned()
+                .filter(|s| feat.extract(&s.features) < thr).collect();
+            let right: Vec<&Sample> = samples.iter().cloned()
+                .filter(|s| feat.extract(&s.features) >= thr).collect();
+            if left.is_empty() || right.is_empty() {
+                continue;
+            }
+            let cost = best_leaf(&left).1 + best_leaf(&right).1;
+            if best.map_or(true, |(_, _, c)| cost < c) {
+                best = Some((feat, thr, cost));
+            }
+        }
+    }
+
+    match best {
+        Some((feat, thr, cost)) if cost < leaf_cost * (1.0 - min_gain) => {
+            let left: Vec<&Sample> = samples.iter().cloned()
+                .filter(|s| feat.extract(&s.features) < thr).collect();
+            let right: Vec<&Sample> = samples.iter().cloned()
+                .filter(|s| feat.extract(&s.features) >= thr).collect();
+            DecisionTree::Split {
+                feature: feat,
+                threshold: thr,
+                left: Box::new(fit_tree(&left, max_depth - 1, min_gain)),
+                right: Box::new(fit_tree(&right, max_depth - 1, min_gain)),
+            }
+        }
+        _ => DecisionTree::Leaf(leaf_choice),
+    }
+}
+
+/// Fit the two-tree heuristics from sweep samples.
+pub fn fit_heuristics(samples: &[Sample], max_depth: usize) -> Heuristics {
+    let decode: Vec<&Sample> =
+        samples.iter().filter(|s| s.features.is_decode_only()).collect();
+    let prefill: Vec<&Sample> =
+        samples.iter().filter(|s| !s.features.is_decode_only()).collect();
+    let fallback = Heuristics::default_tree();
+    Heuristics {
+        decode: if decode.is_empty() {
+            fallback.decode
+        } else {
+            fit_tree(&decode, max_depth, 0.02)
+        },
+        prefill: if prefill.is_empty() {
+            fallback.prefill
+        } else {
+            fit_tree(&prefill, max_depth, 0.02)
+        },
+    }
+}
+
+/// Regret of a heuristics tree vs. per-scenario oracle, in percent.
+pub fn regret_pct(h: &Heuristics, samples: &[Sample]) -> f64 {
+    let mut chosen = 0.0;
+    let mut oracle = 0.0;
+    for s in samples {
+        chosen += s.cost_of(&h.choose(&s.features));
+        oracle += s.best().1;
+    }
+    (chosen / oracle - 1.0) * 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Variant;
+
+    fn choice(v: Variant) -> KernelChoice {
+        KernelChoice { variant: v, tile_n: 16, block_q: 1, num_segments: 4,
+                       use_dot: false }
+    }
+
+    fn sample(num_seqs: usize, max_seq: usize, fast: Variant) -> Sample {
+        let mk = |v: Variant| {
+            let lat = if v == fast { 10.0 } else { 100.0 };
+            (choice(v), lat)
+        };
+        Sample {
+            features: BatchFeatures {
+                num_seqs,
+                num_decodes: num_seqs,
+                max_query_len: 1,
+                avg_query_len: 1.0,
+                max_seq_len: max_seq,
+                total_kv_tokens: max_seq * num_seqs,
+                total_new_tokens: num_seqs,
+            },
+            scenario: format!("s{num_seqs}-l{max_seq}"),
+            latencies: vec![mk(Variant::QBlock), mk(Variant::Parts)],
+        }
+    }
+
+    #[test]
+    fn tree_learns_a_threshold() {
+        // parts wins on long sequences, qblock on short — the paper's
+        // actual finding; tree must recover a max_seq_len-ish split.
+        let samples: Vec<Sample> = vec![
+            sample(1, 64, Variant::QBlock),
+            sample(1, 128, Variant::QBlock),
+            sample(1, 1024, Variant::Parts),
+            sample(1, 2048, Variant::Parts),
+            sample(2, 96, Variant::QBlock),
+            sample(2, 1536, Variant::Parts),
+        ];
+        let refs: Vec<&Sample> = samples.iter().collect();
+        let tree = fit_tree(&refs, 3, 0.02);
+        for s in &samples {
+            assert_eq!(tree.choose(&s.features).variant, s.best().0.variant,
+                       "wrong pick for {}", s.scenario);
+        }
+        assert!(tree.num_leaves() <= 4, "tree should stay small");
+    }
+
+    #[test]
+    fn leaf_when_one_choice_dominates() {
+        let samples: Vec<Sample> = (1..6)
+            .map(|i| sample(i, 100 * i, Variant::QBlock))
+            .collect();
+        let refs: Vec<&Sample> = samples.iter().collect();
+        let tree = fit_tree(&refs, 3, 0.02);
+        assert_eq!(tree.num_leaves(), 1, "no split needed");
+    }
+
+    #[test]
+    fn infeasible_choice_is_penalized() {
+        let mut s = sample(1, 64, Variant::QBlock);
+        s.latencies.retain(|(c, _)| c.variant == Variant::QBlock);
+        assert!(s.cost_of(&choice(Variant::Parts)) > s.cost_of(&choice(Variant::QBlock)));
+    }
+
+    #[test]
+    fn fitted_heuristics_beat_static_choice() {
+        let samples: Vec<Sample> = vec![
+            sample(1, 64, Variant::QBlock),
+            sample(1, 2048, Variant::Parts),
+            sample(4, 64, Variant::QBlock),
+            sample(4, 2048, Variant::Parts),
+        ];
+        let h = fit_heuristics(&samples, 3);
+        assert!(regret_pct(&h, &samples) < 1.0);
+    }
+}

@@ -1,0 +1,306 @@
+//! Attention-metadata builder — the paper's §6.1 integration work.
+//!
+//! After the scheduler picks the step's sequences, this module produces the
+//! padded, bucket-shaped operand tensors the AOT executable was compiled
+//! for: token ids, positions, the slot mapping into the paged cache, the
+//! block-table tensor, sequence/context lengths, and the (block_q-aligned)
+//! cumulative query-start tensor on which the kernels binary-search — the
+//! paper's "tensor that stores the accumulated number of Q Blocks".
+//!
+//! It also extracts the *batch features* (decode count, query-length
+//! statistics) that drive the kernel-selection heuristics (§5, Listing 2).
+
+use anyhow::{bail, Result};
+
+use crate::config::{align_up, cdiv, Bucket, KernelConfig};
+use crate::kvcache::KvCacheManager;
+use crate::scheduler::{RequestId, ScheduledBatch};
+
+/// Scenario features consumed by the heuristics decision tree.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BatchFeatures {
+    pub num_seqs: usize,
+    pub num_decodes: usize,
+    pub max_query_len: usize,
+    pub avg_query_len: f64,
+    pub max_seq_len: usize,
+    pub total_kv_tokens: usize,
+    pub total_new_tokens: usize,
+}
+
+impl BatchFeatures {
+    pub fn decode_share(&self) -> f64 {
+        if self.num_seqs == 0 {
+            0.0
+        } else {
+            self.num_decodes as f64 / self.num_seqs as f64
+        }
+    }
+
+    pub fn is_decode_only(&self) -> bool {
+        self.num_seqs > 0 && self.num_decodes == self.num_seqs
+    }
+}
+
+/// Bucket-shaped host tensors for one step, in artifact operand order.
+#[derive(Debug, Clone)]
+pub struct BatchMetadata {
+    pub token_ids: Vec<i32>,
+    pub positions: Vec<i32>,
+    pub slot_mapping: Vec<i32>,
+    pub block_table: Vec<i32>,
+    pub seq_lens: Vec<i32>,
+    pub ctx_lens: Vec<i32>,
+    pub query_start_loc: Vec<i32>,
+    pub last_token_idx: Vec<i32>,
+    /// Request order matching rows 0..n of the metadata tensors.
+    pub order: Vec<RequestId>,
+    pub features: BatchFeatures,
+    pub bucket: Bucket,
+}
+
+pub fn features_of(batch: &ScheduledBatch) -> BatchFeatures {
+    let num_seqs = batch.seqs.len();
+    let qlens: Vec<usize> = batch.seqs.iter().map(|s| s.tokens.len()).collect();
+    let seqlens: Vec<usize> =
+        batch.seqs.iter().map(|s| s.ctx_len + s.tokens.len()).collect();
+    BatchFeatures {
+        num_seqs,
+        num_decodes: batch.num_decodes(),
+        max_query_len: qlens.iter().copied().max().unwrap_or(0),
+        avg_query_len: if num_seqs == 0 {
+            0.0
+        } else {
+            qlens.iter().sum::<usize>() as f64 / num_seqs as f64
+        },
+        max_seq_len: seqlens.iter().copied().max().unwrap_or(0),
+        total_kv_tokens: seqlens.iter().sum(),
+        total_new_tokens: qlens.iter().sum(),
+    }
+}
+
+/// Aligned packed-token footprint of a batch under a kernel config.
+pub fn packed_tokens(batch: &ScheduledBatch, cfg: &KernelConfig) -> usize {
+    let a = cfg.q_align();
+    batch.seqs.iter().map(|s| align_up(s.tokens.len(), a)).sum()
+}
+
+/// Does this batch fit the bucket under the kernel's layout rules?
+pub fn fits(batch: &ScheduledBatch, cfg: &KernelConfig, bucket: &Bucket,
+            kv: &KvCacheManager) -> bool {
+    if batch.seqs.len() > bucket.max_seqs {
+        return false;
+    }
+    if packed_tokens(batch, cfg) > bucket.max_tokens {
+        return false;
+    }
+    if cfg.variant.decode_only() && !batch.is_decode_only() {
+        return false;
+    }
+    batch.seqs.iter().all(|s| {
+        cdiv(s.ctx_len + s.tokens.len(), kv.block_size()) <= bucket.max_blocks
+    })
+}
+
+/// Build the operand tensors. Fails loudly if the batch violates the
+/// bucket envelope — the engine must have bucketed correctly.
+pub fn build(batch: &ScheduledBatch, cfg: &KernelConfig, bucket: &Bucket,
+             kv: &KvCacheManager) -> Result<BatchMetadata> {
+    if !fits(batch, cfg, bucket, kv) {
+        bail!("batch does not fit bucket {bucket:?} under {:?}", cfg.variant);
+    }
+    let align = cfg.q_align();
+    let (s_cap, t_cap) = (bucket.max_seqs, bucket.max_tokens);
+
+    let mut md = BatchMetadata {
+        token_ids: vec![0; t_cap],
+        positions: vec![0; t_cap],
+        // padding lanes scatter into the scratch page (physical page 0)
+        slot_mapping: vec![0; t_cap],
+        block_table: vec![0; s_cap * bucket.max_blocks],
+        seq_lens: vec![0; s_cap],
+        ctx_lens: vec![0; s_cap],
+        query_start_loc: vec![0; s_cap + 1],
+        last_token_idx: vec![0; s_cap],
+        order: Vec::with_capacity(batch.seqs.len()),
+        features: features_of(batch),
+        bucket: *bucket,
+    };
+
+    let mut t = 0usize;
+    for (i, s) in batch.seqs.iter().enumerate() {
+        let table = kv.table(s.handle);
+        let total = s.ctx_len + s.tokens.len();
+        debug_assert!(table.len() >= total,
+                      "cache not grown before metadata build");
+        md.seq_lens[i] = total as i32;
+        md.ctx_lens[i] = s.ctx_len as i32;
+        md.query_start_loc[i] = t as i32;
+        for (b, &p) in table.pages().iter().enumerate() {
+            md.block_table[i * bucket.max_blocks + b] = p as i32;
+        }
+        for (j, &tok) in s.tokens.iter().enumerate() {
+            let pos = s.ctx_len + j;
+            md.token_ids[t + j] = tok;
+            md.positions[t + j] = pos as i32;
+            md.slot_mapping[t + j] = kv.slot(s.handle, pos) as i32;
+        }
+        md.last_token_idx[i] = (t + s.tokens.len() - 1) as i32;
+        md.order.push(s.id);
+        t += align_up(s.tokens.len(), align);
+    }
+    for i in batch.seqs.len()..=s_cap {
+        md.query_start_loc[i] = t as i32;
+    }
+    Ok(md)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EngineConfig, Variant};
+    use crate::scheduler::Scheduler;
+
+    fn cfg_with(variant: Variant, block_q: usize) -> KernelConfig {
+        KernelConfig {
+            variant,
+            block_size: 16,
+            tile_n: 16,
+            block_q,
+            num_segments: 4,
+            static_programs: 8,
+            use_dot: true,
+        }
+    }
+
+    fn setup(prompts: &[usize]) -> (Scheduler, KvCacheManager, ScheduledBatch) {
+        let ecfg = EngineConfig {
+            max_batched_tokens: 512,
+            max_num_seqs: 8,
+            watermark_blocks: 0,
+            ..Default::default()
+        };
+        let mut s = Scheduler::new(ecfg);
+        let mut kv = KvCacheManager::new(16 * 65, 16);
+        for (i, &p) in prompts.iter().enumerate() {
+            s.add_request(i as u64, vec![(i + 1) as i32; p], 4, 0);
+        }
+        let b = s.schedule(&mut kv);
+        (s, kv, b)
+    }
+
+    #[test]
+    fn prefill_layout_aligned() {
+        let (_s, kv, b) = setup(&[5, 9]);
+        let cfg = cfg_with(Variant::QBlock, 4);
+        let bucket = Bucket { max_seqs: 4, max_tokens: 32, max_blocks: 8,
+                              num_slots: 16 * 65 };
+        let md = build(&b, &cfg, &bucket, &kv).unwrap();
+        // seq0: 5 tokens → aligned 8; seq1 starts at 8, 9 tokens → aligned 12
+        assert_eq!(md.query_start_loc[..3], [0, 8, 20]);
+        assert_eq!(md.seq_lens[..2], [5, 9]);
+        assert_eq!(md.ctx_lens[..2], [0, 0]);
+        assert_eq!(md.last_token_idx[..2], [4, 16]);
+        assert_eq!(md.token_ids[0], 1);
+        assert_eq!(md.token_ids[8], 2);
+        // padding lanes keep slot 0 (scratch page)
+        assert_eq!(md.slot_mapping[5], 0);
+        assert_eq!(md.positions[..5], [0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn slot_mapping_tracks_block_table() {
+        let (_s, kv, b) = setup(&[20]);
+        let cfg = cfg_with(Variant::QBlock, 4);
+        let bucket = Bucket { max_seqs: 4, max_tokens: 32, max_blocks: 8,
+                              num_slots: 16 * 65 };
+        let md = build(&b, &cfg, &bucket, &kv).unwrap();
+        let first_page = md.block_table[0];
+        let second_page = md.block_table[1];
+        assert_eq!(md.slot_mapping[0], first_page * 16);
+        assert_eq!(md.slot_mapping[15], first_page * 16 + 15);
+        assert_eq!(md.slot_mapping[16], second_page * 16);
+        assert_ne!(first_page, 0, "scratch page must not be mapped");
+    }
+
+    #[test]
+    fn monotone_query_start_loc() {
+        let (_s, kv, b) = setup(&[3, 1, 7, 2]);
+        let cfg = cfg_with(Variant::Static, 8);
+        let bucket = Bucket { max_seqs: 8, max_tokens: 64, max_blocks: 8,
+                              num_slots: 16 * 65 };
+        let md = build(&b, &cfg, &bucket, &kv).unwrap();
+        for w in md.query_start_loc.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+        // trailing entries all equal the packed total
+        let total = packed_tokens(&b, &cfg) as i32;
+        assert_eq!(*md.query_start_loc.last().unwrap(), total);
+    }
+
+    #[test]
+    fn rejects_overflow() {
+        let (_s, kv, b) = setup(&[40]);
+        let cfg = cfg_with(Variant::QBlock, 4);
+        let bucket = Bucket { max_seqs: 1, max_tokens: 16, max_blocks: 8,
+                              num_slots: 16 * 65 };
+        assert!(build(&b, &cfg, &bucket, &kv).is_err());
+    }
+
+    #[test]
+    fn parts_requires_decode_only() {
+        let (_s, kv, b) = setup(&[5]);
+        let cfg = cfg_with(Variant::Parts, 1);
+        let bucket = Bucket { max_seqs: 4, max_tokens: 4, max_blocks: 8,
+                              num_slots: 16 * 65 };
+        assert!(!fits(&b, &cfg, &bucket, &kv));
+    }
+
+    #[test]
+    fn features_mixed_batch() {
+        let (mut s, mut kv, b) = setup(&[6]);
+        let results: Vec<_> = b.seqs.iter().map(|x| (x.id, 5i32)).collect();
+        s.on_step_complete(&b, &results, &mut kv, 0);
+        s.add_request(99, vec![3; 10], 2, 0);
+        let b2 = s.schedule(&mut kv);
+        let f = features_of(&b2);
+        assert_eq!(f.num_seqs, 2);
+        assert_eq!(f.num_decodes, 1);
+        assert_eq!(f.max_query_len, 10);
+        assert!((f.decode_share() - 0.5).abs() < 1e-9);
+        assert_eq!(f.max_seq_len, 10);
+        assert_eq!(f.total_new_tokens, 11);
+    }
+
+    /// Randomized: layout regions never overlap and stay inside the bucket.
+    #[test]
+    fn random_batches_pack_disjointly() {
+        let mut state = 0xabcdefu64;
+        let mut rand = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        for round in 0..40 {
+            let n = 1 + (rand() as usize % 6);
+            let prompts: Vec<usize> =
+                (0..n).map(|_| 1 + (rand() as usize % 30)).collect();
+            let (_s, kv, b) = setup(&prompts);
+            let bq = [1, 2, 4, 8][round % 4];
+            let cfg = cfg_with(Variant::QBlock, bq);
+            let bucket = Bucket { max_seqs: 8, max_tokens: 256, max_blocks: 8,
+                                  num_slots: 16 * 65 };
+            let md = build(&b, &cfg, &bucket, &kv).unwrap();
+            let mut covered = vec![false; bucket.max_tokens];
+            for (i, s) in b.seqs.iter().enumerate() {
+                let t0 = md.query_start_loc[i] as usize;
+                for j in 0..s.tokens.len() {
+                    assert!(!covered[t0 + j], "overlap at {}", t0 + j);
+                    covered[t0 + j] = true;
+                }
+                assert_eq!(t0 % bq, 0, "region must be block_q aligned");
+            }
+        }
+    }
+}

@@ -1,0 +1,223 @@
+//! Rust mirrors of the Python-side configuration types (`compile/config.py`)
+//! plus the engine-level configuration that has no Python counterpart.
+
+use anyhow::{bail, Result};
+
+use crate::json::Value;
+
+/// Kernel variant — one of the paper's implementations (§4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Variant {
+    /// §4.3 baseline: one (token, head) per program instance.
+    Naive,
+    /// §4.4 Q-Block / GQA-optimized.
+    QBlock,
+    /// §4.5 parallel tiled softmax (decode-only).
+    Parts,
+    /// §4.7 static launch grid (Q-Block body).
+    Static,
+    /// flash_attn-style fused baseline (SoTA comparator).
+    Flash,
+}
+
+impl Variant {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "naive" => Variant::Naive,
+            "qblock" => Variant::QBlock,
+            "parts" => Variant::Parts,
+            "static" => Variant::Static,
+            "flash" => Variant::Flash,
+            other => bail!("unknown kernel variant '{other}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Variant::Naive => "naive",
+            Variant::QBlock => "qblock",
+            Variant::Parts => "parts",
+            Variant::Static => "static",
+            Variant::Flash => "flash",
+        }
+    }
+
+    /// The parallel-tiled-softmax kernel only handles one query token per
+    /// sequence (§4.5): the heuristics must not pick it for prefill.
+    pub fn decode_only(&self) -> bool {
+        matches!(self, Variant::Parts)
+    }
+
+    pub const ALL: [Variant; 5] = [Variant::Naive, Variant::QBlock,
+                                   Variant::Parts, Variant::Static,
+                                   Variant::Flash];
+}
+
+/// Compile-time constants of one kernel artifact (mirror of KernelConfig).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct KernelConfig {
+    pub variant: Variant,
+    pub block_size: usize,
+    pub tile_n: usize,
+    pub block_q: usize,
+    pub num_segments: usize,
+    pub static_programs: usize,
+    pub use_dot: bool,
+}
+
+impl KernelConfig {
+    pub fn from_json(v: &Value) -> Result<Self> {
+        Ok(KernelConfig {
+            variant: Variant::parse(v.req("variant")?.as_str()?)?,
+            block_size: v.usize_field("block_size")?,
+            tile_n: v.usize_field("tile_n")?,
+            block_q: v.usize_field("block_q")?,
+            num_segments: v.usize_field("num_segments")?,
+            static_programs: v.usize_field("static_programs")?,
+            use_dot: v.req("use_dot")?.as_bool()?,
+        })
+    }
+
+    /// Query-region alignment required by the metadata builder: Q-Block
+    /// kernels need every sequence's packed query region padded to a
+    /// multiple of `block_q` (DESIGN.md §3, qblock layout contract).
+    pub fn q_align(&self) -> usize {
+        match self.variant {
+            Variant::QBlock | Variant::Static | Variant::Flash => self.block_q,
+            _ => 1,
+        }
+    }
+}
+
+/// Static-shape envelope of one executable (mirror of Bucket) — the AOT
+/// analogue of one recorded CUDA/HIP graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Bucket {
+    pub max_seqs: usize,
+    pub max_tokens: usize,
+    pub max_blocks: usize,
+    pub num_slots: usize,
+}
+
+impl Bucket {
+    pub fn from_json(v: &Value) -> Result<Self> {
+        Ok(Bucket {
+            max_seqs: v.usize_field("max_seqs")?,
+            max_tokens: v.usize_field("max_tokens")?,
+            max_blocks: v.usize_field("max_blocks")?,
+            num_slots: v.usize_field("num_slots")?,
+        })
+    }
+
+    pub fn is_decode(&self) -> bool {
+        self.max_tokens == self.max_seqs
+    }
+}
+
+/// Model geometry (mirror of ModelConfig).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub num_layers: usize,
+    pub hidden_size: usize,
+    pub num_q_heads: usize,
+    pub num_kv_heads: usize,
+    pub head_size: usize,
+    pub intermediate_size: usize,
+    pub vocab_size: usize,
+    pub rope_theta: f64,
+    pub max_model_len: usize,
+}
+
+impl ModelConfig {
+    pub fn from_json(v: &Value) -> Result<Self> {
+        Ok(ModelConfig {
+            num_layers: v.usize_field("num_layers")?,
+            hidden_size: v.usize_field("hidden_size")?,
+            num_q_heads: v.usize_field("num_q_heads")?,
+            num_kv_heads: v.usize_field("num_kv_heads")?,
+            head_size: v.usize_field("head_size")?,
+            intermediate_size: v.usize_field("intermediate_size")?,
+            vocab_size: v.usize_field("vocab_size")?,
+            rope_theta: v.req("rope_theta")?.as_f64()?,
+            max_model_len: v.usize_field("max_model_len")?,
+        })
+    }
+
+    pub fn queries_per_kv(&self) -> usize {
+        self.num_q_heads / self.num_kv_heads
+    }
+}
+
+/// Engine-level knobs (the vLLM-engine-args analogue).
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// KV page size in tokens; must match the compiled artifacts.
+    pub block_size: usize,
+    /// Admission cap: maximum new (query) tokens per step across the batch.
+    pub max_batched_tokens: usize,
+    /// Admission cap: maximum concurrently running sequences.
+    pub max_num_seqs: usize,
+    /// Keep this many KV pages free as headroom before admitting prefills
+    /// (prevents immediate preemption of fresh requests).
+    pub watermark_blocks: usize,
+    /// Which model's artifacts to serve (manifest key).
+    pub model: String,
+    /// Fallback kernel variant when the heuristics file has no opinion.
+    pub default_variant: Variant,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            block_size: 16,
+            max_batched_tokens: 256,
+            max_num_seqs: 8,
+            watermark_blocks: 2,
+            model: "tiny".to_string(),
+            default_variant: Variant::QBlock,
+        }
+    }
+}
+
+pub fn cdiv(a: usize, b: usize) -> usize {
+    a.div_ceil(b)
+}
+
+pub fn align_up(x: usize, a: usize) -> usize {
+    cdiv(x, a) * a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json;
+
+    #[test]
+    fn kernel_config_roundtrip() {
+        let v = json::parse(
+            r#"{"variant": "qblock", "block_size": 16, "tile_n": 32,
+                "block_q": 4, "num_segments": 4, "static_programs": 16,
+                "use_dot": true}"#,
+        )
+        .unwrap();
+        let c = KernelConfig::from_json(&v).unwrap();
+        assert_eq!(c.variant, Variant::QBlock);
+        assert_eq!(c.tile_n, 32);
+        assert_eq!(c.q_align(), 4);
+    }
+
+    #[test]
+    fn variant_names_roundtrip() {
+        for v in Variant::ALL {
+            assert_eq!(Variant::parse(v.name()).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn align_helpers() {
+        assert_eq!(align_up(0, 4), 0);
+        assert_eq!(align_up(1, 4), 4);
+        assert_eq!(align_up(8, 4), 8);
+        assert_eq!(cdiv(9, 4), 3);
+    }
+}

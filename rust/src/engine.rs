@@ -1,0 +1,412 @@
+//! The serving engine: scheduler → metadata → heuristic kernel pick →
+//! AOT executable dispatch → sample accounting. One `step()` is one
+//! forward pass of the whole model over the current batch — the Rust
+//! analogue of vLLM's `gpu_model_runner.execute_model` (Fig. 2 ②).
+//!
+//! The flat model state (both KV caches + sampled-token tail) lives in a
+//! device-resident PJRT buffer that is chained from step to step; only the
+//! small metadata tensors cross the host boundary each step, plus one tiny
+//! extract dispatch to read the sampled tokens back (see aot.py).
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::batch::{self, BatchMetadata};
+use crate::config::{EngineConfig, ModelConfig, Variant};
+use crate::heuristics::{Heuristics, KernelChoice};
+use crate::kvcache::KvCacheManager;
+use crate::manifest::ArtifactSpec;
+use crate::metrics::EngineMetrics;
+use crate::runtime::{Executable, HostTensor, Runtime};
+use crate::scheduler::{Request, RequestId, ScheduledBatch, Scheduler};
+
+/// Report of one engine step (for logs, benches and tests).
+#[derive(Debug, Clone)]
+pub struct StepReport {
+    pub artifact: String,
+    pub variant: Variant,
+    pub num_seqs: usize,
+    pub new_tokens: usize,
+    pub num_decodes: usize,
+    pub preempted: usize,
+    pub step_us: f64,
+    pub dispatch_us: f64,
+}
+
+pub struct Engine {
+    rt: Rc<Runtime>,
+    pub model_name: String,
+    pub model_cfg: ModelConfig,
+    pub ecfg: EngineConfig,
+    pub heuristics: Heuristics,
+    scheduler: Scheduler,
+    kv: KvCacheManager,
+    weights: Vec<xla::PjRtBuffer>,
+    state: xla::PjRtBuffer,
+    extract: Rc<Executable>,
+    step_specs: Vec<ArtifactSpec>,
+    started: Instant,
+    pub metrics: EngineMetrics,
+    next_id: RequestId,
+    finished: Vec<Request>,
+}
+
+impl Engine {
+    pub fn new(rt: Rc<Runtime>, ecfg: EngineConfig) -> Result<Self> {
+        let model_name = ecfg.model.clone();
+        let entry = rt
+            .manifest
+            .models
+            .get(&model_name)
+            .with_context(|| format!("model '{model_name}' has no weights in manifest"))?;
+        let model_cfg = entry.config.clone();
+
+        let step_specs: Vec<ArtifactSpec> = rt
+            .manifest
+            .model_artifacts(&model_name)
+            .cloned()
+            .collect();
+        if step_specs.is_empty() {
+            bail!("no model artifacts for '{model_name}'");
+        }
+        let num_slots = step_specs[0].bucket.num_slots;
+        let block_size = step_specs[0].config.block_size;
+        for s in &step_specs {
+            if s.bucket.num_slots != num_slots || s.config.block_size != block_size {
+                bail!("model artifacts disagree on cache shape: {}", s.name);
+            }
+        }
+        if block_size != ecfg.block_size {
+            bail!(
+                "engine block_size {} != artifact block_size {block_size}",
+                ecfg.block_size
+            );
+        }
+
+        // Clamp admission caps to the compiled envelope set — a batch the
+        // scheduler admits must always have *some* executable that fits
+        // (vLLM similarly derives its limits from the recorded graph set).
+        let mut ecfg = ecfg;
+        let cap_tokens = step_specs.iter().map(|s| s.bucket.max_tokens)
+            .max().unwrap();
+        let cap_seqs = step_specs.iter().map(|s| s.bucket.max_seqs)
+            .max().unwrap();
+        ecfg.max_batched_tokens = ecfg.max_batched_tokens.min(cap_tokens);
+        ecfg.max_num_seqs = ecfg.max_num_seqs.min(cap_seqs);
+
+        // Upload weights once; they are step operands 0..12 forever after.
+        let weights_host = rt.manifest.read_weights(&model_name)?;
+        let mut weights = Vec::with_capacity(weights_host.len());
+        for (entry, data) in &weights_host {
+            weights.push(rt.upload(&HostTensor::F32(data.clone()), &entry.shape)?);
+        }
+
+        // Initial flat state: all-zero caches + token tail.
+        let extract_spec = rt.extract_artifact(&model_name)?.clone();
+        let state_len = extract_spec.inputs[0].elements();
+        let state = rt.upload(&HostTensor::F32(vec![0.0; state_len]), &[state_len])?;
+        let extract = rt.executable(&extract_spec.name)?;
+
+        let kv = KvCacheManager::new(num_slots, block_size);
+        let scheduler = Scheduler::new(ecfg.clone());
+        Ok(Engine {
+            rt,
+            model_name,
+            model_cfg,
+            ecfg,
+            heuristics: Heuristics::default_tree(),
+            scheduler,
+            kv,
+            weights,
+            state,
+            extract,
+            step_specs,
+            started: Instant::now(),
+            metrics: EngineMetrics::default(),
+            next_id: 1,
+            finished: Vec::new(),
+        })
+    }
+
+    /// Pre-compile every step executable (CUDA-graph-capture analogue).
+    pub fn warmup(&self) -> Result<usize> {
+        for s in &self.step_specs {
+            self.rt.executable(&s.name)?;
+        }
+        Ok(self.step_specs.len())
+    }
+
+    pub fn now_ns(&self) -> u64 {
+        self.started.elapsed().as_nanos() as u64
+    }
+
+    /// Enqueue a generation request; returns its id.
+    pub fn add_request(&mut self, prompt: Vec<i32>, max_new_tokens: usize)
+        -> Result<RequestId> {
+        for &t in &prompt {
+            if t < 0 || t as usize >= self.model_cfg.vocab_size {
+                bail!("token {t} out of vocab");
+            }
+        }
+        let limit = self.model_cfg.max_model_len.saturating_sub(prompt.len());
+        if limit == 0 {
+            bail!("prompt exceeds max_model_len");
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.scheduler.add_request(
+            id, prompt, max_new_tokens.min(limit), self.now_ns());
+        Ok(id)
+    }
+
+    pub fn has_unfinished(&self) -> bool {
+        self.scheduler.has_unfinished()
+    }
+
+    pub fn take_finished(&mut self) -> Vec<Request> {
+        std::mem::take(&mut self.finished)
+    }
+
+    pub fn free_page_fraction(&self) -> f64 {
+        self.kv.free_pages() as f64 / self.kv.total_pages() as f64
+    }
+
+    /// Pick the artifact for this batch: heuristics choose the variant and
+    /// config knobs; bucketing picks the smallest compiled envelope that
+    /// fits (the paper's power-of-two graph set, §6.2).
+    fn select_artifact(&self, batch: &ScheduledBatch) -> Result<ArtifactSpec> {
+        let features = batch::features_of(batch);
+        let choice = self.heuristics.choose(&features);
+        self.select_for_choice(batch, choice)
+            .or_else(|_| {
+                // fall back to the default variant if the tuned choice has
+                // no compiled artifact that fits
+                let fallback = KernelChoice {
+                    variant: self.ecfg.default_variant,
+                    tile_n: choice.tile_n,
+                    block_q: choice.block_q,
+                    num_segments: choice.num_segments,
+                    use_dot: choice.use_dot,
+                };
+                self.select_for_choice(batch, fallback)
+            })
+            .or_else(|_| {
+                // last resort: anything that fits
+                self.step_specs
+                    .iter()
+                    .filter(|s| batch::fits(batch, &s.config, &s.bucket, &self.kv))
+                    .min_by_key(|s| (s.bucket.max_tokens, s.bucket.max_seqs))
+                    .cloned()
+                    .ok_or_else(|| anyhow!(
+                        "no compiled artifact fits batch of {} seqs / {} tokens",
+                        batch.seqs.len(), batch.total_new_tokens()))
+            })
+    }
+
+    fn select_for_choice(&self, batch: &ScheduledBatch, choice: KernelChoice)
+        -> Result<ArtifactSpec> {
+        self.step_specs
+            .iter()
+            .filter(|s| s.config.variant == choice.variant)
+            .filter(|s| batch::fits(batch, &s.config, &s.bucket, &self.kv))
+            .min_by_key(|s| {
+                let tile_miss = s.config.tile_n.abs_diff(choice.tile_n);
+                let bq_miss = s.config.block_q.abs_diff(choice.block_q);
+                let dot_miss = (s.config.use_dot != choice.use_dot) as usize;
+                (s.bucket.max_tokens, s.bucket.max_seqs, dot_miss,
+                 tile_miss, bq_miss)
+            })
+            .cloned()
+            .ok_or_else(|| anyhow!("no fitting artifact for {:?}", choice.variant))
+    }
+
+    /// One engine step. Returns None when there is nothing to do.
+    pub fn step(&mut self) -> Result<Option<StepReport>> {
+        let t_step = Instant::now();
+        let batch = self.scheduler.schedule(&mut self.kv);
+        if batch.is_empty() {
+            return Ok(None);
+        }
+        let spec = self.select_artifact(&batch)?;
+        let md = batch::build(&batch, &spec.config, &spec.bucket, &self.kv)?;
+
+        let t_dispatch = Instant::now();
+        let tokens = self.dispatch(&spec, &md)?;
+        let dispatch_us = t_dispatch.elapsed().as_secs_f64() * 1e6;
+
+        // pair sampled tokens with request ids (row order == md.order)
+        let results: Vec<(RequestId, i32)> = md
+            .order
+            .iter()
+            .enumerate()
+            .map(|(i, &id)| (id, tokens[i]))
+            .collect();
+        let now = self.now_ns();
+        self.scheduler.on_step_complete(&batch, &results, &mut self.kv, now);
+        self.finished.extend(self.scheduler.take_finished());
+
+        // bookkeeping
+        let step_us = t_step.elapsed().as_secs_f64() * 1e6;
+        let report = StepReport {
+            artifact: spec.name.clone(),
+            variant: spec.config.variant,
+            num_seqs: batch.seqs.len(),
+            new_tokens: batch.total_new_tokens(),
+            num_decodes: batch.num_decodes(),
+            preempted: batch.preempted.len(),
+            step_us,
+            dispatch_us,
+        };
+        self.metrics.steps += 1;
+        self.metrics.step_us.record(step_us);
+        self.metrics.dispatch_us.record(dispatch_us);
+        self.metrics.overhead_us.record(step_us - dispatch_us);
+        self.metrics.preemptions += batch.preempted.len() as u64;
+        let decodes = batch
+            .seqs
+            .iter()
+            .filter(|s| s.samples)
+            .count() as u64;
+        self.metrics.generated_tokens += decodes;
+        self.metrics.prompt_tokens += batch
+            .seqs
+            .iter()
+            .filter(|s| s.ctx_len == 0 || !s.samples)
+            .map(|s| s.tokens.len() as u64)
+            .sum::<u64>();
+        *self
+            .metrics
+            .variant_picks
+            .entry(spec.config.variant.name().to_string())
+            .or_default() += 1;
+        Ok(Some(report))
+    }
+
+    /// Upload metadata, chain the state buffer through the step
+    /// executable, and read back the sampled tokens.
+    fn dispatch(&mut self, spec: &ArtifactSpec, md: &BatchMetadata)
+        -> Result<Vec<i32>> {
+        let exe = self.rt.executable(&spec.name)?;
+        let n_params = self.weights.len();
+        let meta = [
+            HostTensor::I32(md.token_ids.clone()),
+            HostTensor::I32(md.positions.clone()),
+            // state goes between positions and block_table (operand order)
+            HostTensor::I32(md.block_table.clone()),
+            HostTensor::I32(md.seq_lens.clone()),
+            HostTensor::I32(md.ctx_lens.clone()),
+            HostTensor::I32(md.query_start_loc.clone()),
+            HostTensor::I32(md.slot_mapping.clone()),
+            HostTensor::I32(md.last_token_idx.clone()),
+        ];
+        let mut uploaded = Vec::with_capacity(meta.len());
+        for (j, t) in meta.iter().enumerate() {
+            // operand index: params, then token_ids/positions (j<2),
+            // then state, then the rest shifted by one
+            let idx = if j < 2 { n_params + j } else { n_params + j + 1 };
+            uploaded.push(self.rt.upload_for(&exe, idx, t)?);
+        }
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(
+            n_params + meta.len() + 1);
+        args.extend(self.weights.iter());
+        args.push(&uploaded[0]);
+        args.push(&uploaded[1]);
+        args.push(&self.state);
+        args.extend(uploaded[2..].iter());
+
+        let new_state = self.rt.execute(&exe, &args)?;
+        self.state = new_state;
+
+        let toks = self.rt.execute(&self.extract.clone(), &[&self.state])?;
+        let tail = self.rt.download_f32(&toks)?;
+        Ok(md
+            .order
+            .iter()
+            .enumerate()
+            .map(|(i, _)| tail[i] as i32)
+            .collect())
+    }
+
+    /// Drive until all requests finish; returns them in finish order.
+    pub fn run_to_completion(&mut self) -> Result<Vec<Request>> {
+        while self.has_unfinished() {
+            if self.step()?.is_none() && self.has_unfinished() {
+                bail!("scheduler made no progress with work pending");
+            }
+        }
+        Ok(self.take_finished())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn engine() -> Engine {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let rt = Rc::new(Runtime::load_dir(dir).unwrap());
+        Engine::new(rt, EngineConfig {
+            max_batched_tokens: 64,
+            max_num_seqs: 4,
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn generates_deterministically() {
+        let mut e1 = engine();
+        let prompt = vec![5, 99, 1023, 7, 42];
+        e1.add_request(prompt.clone(), 8).unwrap();
+        let out1 = e1.run_to_completion().unwrap();
+        assert_eq!(out1.len(), 1);
+        assert_eq!(out1[0].output.len(), 8);
+
+        let mut e2 = engine();
+        e2.add_request(prompt, 8).unwrap();
+        let out2 = e2.run_to_completion().unwrap();
+        assert_eq!(out1[0].output, out2[0].output,
+                   "greedy decode must be deterministic");
+    }
+
+    #[test]
+    fn batching_does_not_change_tokens() {
+        let p1 = vec![11, 22, 33, 44];
+        let p2 = vec![100, 200, 300, 400, 500, 600];
+        let mut solo = engine();
+        solo.add_request(p1.clone(), 5).unwrap();
+        let a = solo.run_to_completion().unwrap();
+        let mut solo2 = engine();
+        solo2.add_request(p2.clone(), 5).unwrap();
+        let b = solo2.run_to_completion().unwrap();
+
+        let mut both = engine();
+        let id1 = both.add_request(p1, 5).unwrap();
+        both.add_request(p2, 5).unwrap();
+        let mut fin = both.run_to_completion().unwrap();
+        fin.sort_by_key(|r| r.id);
+        assert_eq!(fin[if fin[0].id == id1 { 0 } else { 1 }].output,
+                   a[0].output);
+        assert_eq!(fin[if fin[0].id == id1 { 1 } else { 0 }].output,
+                   b[0].output);
+    }
+
+    #[test]
+    fn variant_is_recorded() {
+        let mut e = engine();
+        e.add_request(vec![1, 2, 3], 2).unwrap();
+        e.run_to_completion().unwrap();
+        assert!(e.metrics.steps >= 2);
+        assert!(!e.metrics.variant_picks.is_empty());
+    }
+
+    #[test]
+    fn rejects_bad_tokens() {
+        let mut e = engine();
+        assert!(e.add_request(vec![-1], 2).is_err());
+        assert!(e.add_request(vec![1_000_000], 2).is_err());
+    }
+}

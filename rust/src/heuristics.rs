@@ -1,0 +1,345 @@
+//! Kernel-selection heuristics — the paper's §5 contribution.
+//!
+//! Instead of runtime autotuning (too slow: ~24 h per GPU, and impossible
+//! under replayed graphs), autotuning results are exported as simple
+//! decision trees over batch features — "simple if-else decision trees"
+//! (Listing 2) — evaluated in nanoseconds on every step. Trees are
+//! JSON-serializable so `repro tune` (src/autotune.rs) can regenerate them
+//! from microbenchmark results, exactly the Fig. 5 workflow:
+//! microbenchmark sweep → analyze → export heuristics.
+
+use anyhow::{bail, Result};
+
+use crate::batch::BatchFeatures;
+use crate::config::Variant;
+use crate::json::{self, obj, Value};
+
+/// Feature axis a tree node can split on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Feature {
+    /// Sequences in the batch.
+    NumSeqs,
+    /// Maximum query length (max_seqlen_q in Listing 2).
+    MaxQueryLen,
+    /// Average query length (avg_seqlen_q in Listing 2).
+    AvgQueryLen,
+    /// Maximum total sequence length (context + query).
+    MaxSeqLen,
+    /// Fraction of decode requests in the batch (0..=1).
+    DecodeShare,
+    /// Total KV tokens covered by the batch (batch·seqlen axis of Fig 6c).
+    TotalKvTokens,
+}
+
+impl Feature {
+    pub const ALL: [Feature; 6] = [
+        Feature::NumSeqs, Feature::MaxQueryLen, Feature::AvgQueryLen,
+        Feature::MaxSeqLen, Feature::DecodeShare, Feature::TotalKvTokens,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Feature::NumSeqs => "num_seqs",
+            Feature::MaxQueryLen => "max_query_len",
+            Feature::AvgQueryLen => "avg_query_len",
+            Feature::MaxSeqLen => "max_seq_len",
+            Feature::DecodeShare => "decode_share",
+            Feature::TotalKvTokens => "total_kv_tokens",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        for f in Self::ALL {
+            if f.name() == s {
+                return Ok(f);
+            }
+        }
+        bail!("unknown feature '{s}'")
+    }
+
+    pub fn extract(&self, f: &BatchFeatures) -> f64 {
+        match self {
+            Feature::NumSeqs => f.num_seqs as f64,
+            Feature::MaxQueryLen => f.max_query_len as f64,
+            Feature::AvgQueryLen => f.avg_query_len,
+            Feature::MaxSeqLen => f.max_seq_len as f64,
+            Feature::DecodeShare => f.decode_share(),
+            Feature::TotalKvTokens => f.total_kv_tokens as f64,
+        }
+    }
+}
+
+/// The tunable outcome: which kernel variant + config knobs to run.
+/// (The analogue of one Triton autotuner config choice.)
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KernelChoice {
+    pub variant: Variant,
+    pub tile_n: usize,
+    pub block_q: usize,
+    pub num_segments: usize,
+    /// MMA path (`tl.dot` → MXU) vs elementwise multiply+reduce. On GPUs
+    /// the paper finds dot "almost always" wins (§8); on the XLA-CPU
+    /// substrate tiny-tile GEMM dispatch overhead inverts this — exactly
+    /// the kind of platform split the autotuner exists to discover.
+    pub use_dot: bool,
+}
+
+impl KernelChoice {
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("variant", json::s(self.variant.name())),
+            ("tile_n", json::num(self.tile_n as f64)),
+            ("block_q", json::num(self.block_q as f64)),
+            ("num_segments", json::num(self.num_segments as f64)),
+            ("use_dot", Value::Bool(self.use_dot)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        Ok(KernelChoice {
+            variant: Variant::parse(v.req("variant")?.as_str()?)?,
+            tile_n: v.usize_field("tile_n")?,
+            block_q: v.usize_field("block_q")?,
+            num_segments: v.usize_field("num_segments")?,
+            use_dot: v.get("use_dot").map(|b| b.as_bool()).transpose()?
+                .unwrap_or(false),
+        })
+    }
+}
+
+/// Binary decision tree over batch features.
+#[derive(Debug, Clone)]
+pub enum DecisionTree {
+    Leaf(KernelChoice),
+    Split {
+        feature: Feature,
+        /// go left when `feature < threshold`
+        threshold: f64,
+        left: Box<DecisionTree>,
+        right: Box<DecisionTree>,
+    },
+}
+
+impl DecisionTree {
+    pub fn choose(&self, f: &BatchFeatures) -> KernelChoice {
+        match self {
+            DecisionTree::Leaf(c) => *c,
+            DecisionTree::Split { feature, threshold, left, right } => {
+                if feature.extract(f) < *threshold {
+                    left.choose(f)
+                } else {
+                    right.choose(f)
+                }
+            }
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        match self {
+            DecisionTree::Leaf(_) => 1,
+            DecisionTree::Split { left, right, .. } =>
+                1 + left.depth().max(right.depth()),
+        }
+    }
+
+    pub fn num_leaves(&self) -> usize {
+        match self {
+            DecisionTree::Leaf(_) => 1,
+            DecisionTree::Split { left, right, .. } =>
+                left.num_leaves() + right.num_leaves(),
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        match self {
+            DecisionTree::Leaf(c) => obj(vec![("leaf", c.to_json())]),
+            DecisionTree::Split { feature, threshold, left, right } => obj(vec![
+                ("feature", json::s(feature.name())),
+                ("threshold", json::num(*threshold)),
+                ("left", left.to_json()),
+                ("right", right.to_json()),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        if let Some(leaf) = v.get("leaf") {
+            return Ok(DecisionTree::Leaf(KernelChoice::from_json(leaf)?));
+        }
+        Ok(DecisionTree::Split {
+            feature: Feature::parse(v.req("feature")?.as_str()?)?,
+            threshold: v.req("threshold")?.as_f64()?,
+            left: Box::new(Self::from_json(v.req("left")?)?),
+            right: Box::new(Self::from_json(v.req("right")?)?),
+        })
+    }
+
+    /// Human-readable if/else rendering, mirroring Listing 2.
+    pub fn render(&self, indent: usize) -> String {
+        let pad = "  ".repeat(indent);
+        match self {
+            DecisionTree::Leaf(c) => format!(
+                "{pad}use {} (tile_n={}, block_q={}, segments={}, {})\n",
+                c.variant.name(), c.tile_n, c.block_q, c.num_segments,
+                if c.use_dot { "dot" } else { "elementwise" }),
+            DecisionTree::Split { feature, threshold, left, right } => format!(
+                "{pad}if {} < {:.1}:\n{}{pad}else:\n{}",
+                feature.name(), threshold,
+                left.render(indent + 1), right.render(indent + 1)),
+        }
+    }
+}
+
+/// Heuristics = one tree per phase family (the paper keeps separate
+/// decode/prefill kernels; §8 "Triton kernels need to be specific").
+#[derive(Debug, Clone)]
+pub struct Heuristics {
+    /// Applied when the batch is decode-only.
+    pub decode: DecisionTree,
+    /// Applied to prefill / mixed batches.
+    pub prefill: DecisionTree,
+}
+
+impl Heuristics {
+    pub fn choose(&self, f: &BatchFeatures) -> KernelChoice {
+        if f.is_decode_only() {
+            self.decode.choose(f)
+        } else {
+            self.prefill.choose(f)
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("decode", self.decode.to_json()),
+            ("prefill", self.prefill.to_json()),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        Ok(Heuristics {
+            decode: DecisionTree::from_json(v.req("decode")?)?,
+            prefill: DecisionTree::from_json(v.req("prefill")?)?,
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        Self::from_json(&json::parse(&std::fs::read_to_string(path)?)?)
+    }
+
+    /// The untuned default, transcribing the paper's hand analysis:
+    /// decode-only batches with long sequences and few programs go to the
+    /// parallel tiled softmax (§4.5: "only launched for decode attention
+    /// on small batches involving longer sequences"); everything else uses
+    /// the Q-Block kernel; Listing 2's tile/block thresholds seed the
+    /// prefill side.
+    pub fn default_tree() -> Heuristics {
+        let qb = |tile_n, block_q| {
+            DecisionTree::Leaf(KernelChoice {
+                variant: Variant::QBlock, tile_n, block_q, num_segments: 4,
+                use_dot: false,
+            })
+        };
+        let decode = DecisionTree::Split {
+            feature: Feature::NumSeqs,
+            threshold: 5.0,
+            left: Box::new(DecisionTree::Split {
+                feature: Feature::MaxSeqLen,
+                threshold: 512.0,
+                left: Box::new(qb(16, 1)),
+                right: Box::new(DecisionTree::Leaf(KernelChoice {
+                    variant: Variant::Parts,
+                    tile_n: 32,
+                    block_q: 1,
+                    num_segments: 8,
+                    use_dot: false,
+                })),
+            }),
+            right: Box::new(qb(32, 1)),
+        };
+        // Listing 2: BLOCK_M = 64 for long-prompt batches else 16;
+        // BLOCK_N = 32 for short contexts else 64.
+        let prefill = DecisionTree::Split {
+            feature: Feature::AvgQueryLen,
+            threshold: 4096.0,
+            left: Box::new(DecisionTree::Split {
+                feature: Feature::MaxSeqLen,
+                threshold: 64.0,
+                left: Box::new(qb(32, 16)),
+                right: Box::new(qb(64, 16)),
+            }),
+            right: Box::new(qb(32, 64)),
+        };
+        Heuristics { decode, prefill }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn feats(num_seqs: usize, num_decodes: usize, max_q: usize,
+             max_seq: usize) -> BatchFeatures {
+        BatchFeatures {
+            num_seqs,
+            num_decodes,
+            max_query_len: max_q,
+            avg_query_len: max_q as f64,
+            max_seq_len: max_seq,
+            total_kv_tokens: max_seq * num_seqs,
+            total_new_tokens: max_q * num_seqs,
+        }
+    }
+
+    #[test]
+    fn default_tree_routes_long_decode_to_parts() {
+        let h = Heuristics::default_tree();
+        let c = h.choose(&feats(1, 1, 1, 2048));
+        assert_eq!(c.variant, Variant::Parts);
+        // short decode stays on qblock
+        let c = h.choose(&feats(1, 1, 1, 64));
+        assert_eq!(c.variant, Variant::QBlock);
+        // large decode batch has enough parallelism without segments
+        let c = h.choose(&feats(8, 8, 1, 2048));
+        assert_eq!(c.variant, Variant::QBlock);
+    }
+
+    #[test]
+    fn default_tree_prefill_never_picks_parts() {
+        let h = Heuristics::default_tree();
+        for (s, q, l) in [(1, 500, 500), (8, 100, 4000), (4, 9000, 9000)] {
+            let c = h.choose(&feats(s, 0, q, l));
+            assert_ne!(c.variant, Variant::Parts);
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let h = Heuristics::default_tree();
+        let text = h.to_json().to_string();
+        let h2 = Heuristics::from_json(&json::parse(&text).unwrap()).unwrap();
+        // identical decisions over a probe grid
+        for s in [1usize, 2, 4, 8] {
+            for l in [16usize, 128, 1024, 4096] {
+                for d in [0, s] {
+                    let f = feats(s, d, if d == s { 1 } else { l }, l);
+                    assert_eq!(h.choose(&f), h2.choose(&f));
+                }
+            }
+        }
+        assert_eq!(h.decode.num_leaves(), h2.decode.num_leaves());
+    }
+
+    #[test]
+    fn render_mentions_features() {
+        let h = Heuristics::default_tree();
+        let r = h.decode.render(0);
+        assert!(r.contains("if num_seqs"));
+        assert!(r.contains("parts"));
+    }
+}

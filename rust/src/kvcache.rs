@@ -1,0 +1,397 @@
+//! Paged KV-cache manager — the PagedAttention substrate (§2.4).
+//!
+//! GPU memory for keys/values is carved into fixed-size *pages* of
+//! `block_size` tokens. A sequence owns a growing list of physical pages
+//! (its *block table*, the analogue of a process page table); pages are
+//! handed out on demand as the sequence generates tokens and returned when
+//! it finishes or is preempted. Reference counting supports copy-on-write
+//! prefix sharing (fork).
+//!
+//! Physical page 0 is reserved as the *scratch page*: padded slot-mapping
+//! lanes scatter into it, so it is never allocated to a sequence.
+
+use anyhow::{bail, Result};
+
+use crate::config::cdiv;
+
+/// Physical page id inside the device-resident cache buffers.
+pub type PageId = u32;
+
+/// Free-list block allocator with reference counts.
+#[derive(Debug)]
+pub struct BlockAllocator {
+    block_size: usize,
+    num_pages: usize,
+    free: Vec<PageId>,
+    refcount: Vec<u32>,
+}
+
+impl BlockAllocator {
+    /// `num_slots` is the total slot capacity of the compiled cache
+    /// buffers; page 0 is reserved for scratch.
+    pub fn new(num_slots: usize, block_size: usize) -> Self {
+        let num_pages = num_slots / block_size;
+        assert!(num_pages >= 2, "cache too small: {num_pages} pages");
+        // LIFO free list: most-recently-freed pages are reused first,
+        // which keeps the hot working set dense.
+        let free: Vec<PageId> = (1..num_pages as PageId).rev().collect();
+        BlockAllocator {
+            block_size,
+            num_pages,
+            free,
+            refcount: vec![0; num_pages],
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    /// Pages available for allocation (excludes scratch page 0).
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn total_pages(&self) -> usize {
+        self.num_pages - 1
+    }
+
+    pub fn allocate(&mut self) -> Result<PageId> {
+        match self.free.pop() {
+            Some(p) => {
+                debug_assert_eq!(self.refcount[p as usize], 0);
+                self.refcount[p as usize] = 1;
+                Ok(p)
+            }
+            None => bail!("out of KV cache pages"),
+        }
+    }
+
+    pub fn retain(&mut self, page: PageId) {
+        assert!(self.refcount[page as usize] > 0, "retain of free page");
+        self.refcount[page as usize] += 1;
+    }
+
+    pub fn release(&mut self, page: PageId) {
+        let rc = &mut self.refcount[page as usize];
+        assert!(*rc > 0, "double free of page {page}");
+        *rc -= 1;
+        if *rc == 0 {
+            self.free.push(page);
+        }
+    }
+
+    pub fn ref_count(&self, page: PageId) -> u32 {
+        self.refcount[page as usize]
+    }
+}
+
+/// Per-sequence page list + token accounting.
+#[derive(Debug, Clone, Default)]
+pub struct BlockTable {
+    pages: Vec<PageId>,
+    /// tokens whose K/V live in the cache (context + written this step)
+    len: usize,
+}
+
+impl BlockTable {
+    pub fn pages(&self) -> &[PageId] {
+        &self.pages
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Capacity in tokens of the currently-owned pages.
+    pub fn capacity(&self, block_size: usize) -> usize {
+        self.pages.len() * block_size
+    }
+}
+
+/// The cache manager: allocator + all live block tables.
+#[derive(Debug)]
+pub struct KvCacheManager {
+    alloc: BlockAllocator,
+    tables: Vec<Option<BlockTable>>,
+}
+
+/// Handle to one sequence's cache state.
+pub type SeqHandle = usize;
+
+impl KvCacheManager {
+    pub fn new(num_slots: usize, block_size: usize) -> Self {
+        KvCacheManager {
+            alloc: BlockAllocator::new(num_slots, block_size),
+            tables: Vec::new(),
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.alloc.block_size()
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.alloc.free_pages()
+    }
+
+    pub fn total_pages(&self) -> usize {
+        self.alloc.total_pages()
+    }
+
+    pub fn register(&mut self) -> SeqHandle {
+        if let Some(i) = self.tables.iter().position(|t| t.is_none()) {
+            self.tables[i] = Some(BlockTable::default());
+            return i;
+        }
+        self.tables.push(Some(BlockTable::default()));
+        self.tables.len() - 1
+    }
+
+    pub fn table(&self, h: SeqHandle) -> &BlockTable {
+        self.tables[h].as_ref().expect("freed sequence handle")
+    }
+
+    /// Pages that `grow` would need to fit `new_total` tokens.
+    pub fn pages_needed(&self, h: SeqHandle, new_total: usize) -> usize {
+        let t = self.table(h);
+        cdiv(new_total, self.alloc.block_size).saturating_sub(t.pages.len())
+    }
+
+    /// Ensure capacity for `new_total` tokens, allocating pages on demand.
+    /// On failure the table is left unchanged (all-or-nothing) so the
+    /// scheduler can preempt and retry.
+    pub fn grow(&mut self, h: SeqHandle, new_total: usize) -> Result<()> {
+        let need = self.pages_needed(h, new_total);
+        if need > self.alloc.free_pages() {
+            bail!("need {need} pages, only {} free", self.alloc.free_pages());
+        }
+        for _ in 0..need {
+            let p = self.alloc.allocate()?;
+            self.tables[h].as_mut().unwrap().pages.push(p);
+        }
+        self.tables[h].as_mut().unwrap().len = new_total;
+        Ok(())
+    }
+
+    /// Release every page of the sequence (finish or preemption-by-recompute).
+    pub fn free(&mut self, h: SeqHandle) {
+        if let Some(t) = self.tables[h].take() {
+            for p in t.pages {
+                self.alloc.release(p);
+            }
+        }
+    }
+
+    /// Copy-on-write fork: the child shares all of the parent's pages
+    /// (prefix caching substrate; full CoW splitting is done by `unshare`).
+    pub fn fork(&mut self, parent: SeqHandle) -> SeqHandle {
+        let pt = self.table(parent).clone();
+        for &p in &pt.pages {
+            self.alloc.retain(p);
+        }
+        let h = self.register();
+        self.tables[h] = Some(pt);
+        h
+    }
+
+    /// Make the last page private before writing into it (copy-on-write).
+    /// Returns Some((old, new)) when a copy is required so the engine can
+    /// schedule a device-side page copy.
+    pub fn unshare_last(&mut self, h: SeqHandle) -> Result<Option<(PageId, PageId)>> {
+        let last = match self.table(h).pages.last() {
+            Some(&p) => p,
+            None => return Ok(None),
+        };
+        if self.alloc.ref_count(last) == 1 {
+            return Ok(None);
+        }
+        let fresh = self.alloc.allocate()?;
+        let t = self.tables[h].as_mut().unwrap();
+        *t.pages.last_mut().unwrap() = fresh;
+        self.alloc.release(last);
+        Ok(Some((last, fresh)))
+    }
+
+    /// Flat slot index for token `pos` of the sequence.
+    pub fn slot(&self, h: SeqHandle, pos: usize) -> u32 {
+        let bs = self.alloc.block_size;
+        let t = self.table(h);
+        t.pages[pos / bs] * bs as u32 + (pos % bs) as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocate_free_roundtrip() {
+        let mut a = BlockAllocator::new(16 * 8, 16); // 8 pages, 7 usable
+        assert_eq!(a.free_pages(), 7);
+        let p = a.allocate().unwrap();
+        assert_ne!(p, 0, "scratch page must never be allocated");
+        assert_eq!(a.free_pages(), 6);
+        a.release(p);
+        assert_eq!(a.free_pages(), 7);
+    }
+
+    #[test]
+    fn exhaustion_errors() {
+        let mut a = BlockAllocator::new(16 * 3, 16); // 2 usable
+        a.allocate().unwrap();
+        a.allocate().unwrap();
+        assert!(a.allocate().is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut a = BlockAllocator::new(16 * 4, 16);
+        let p = a.allocate().unwrap();
+        a.release(p);
+        a.release(p);
+    }
+
+    #[test]
+    fn grow_allocates_on_page_boundaries() {
+        let mut m = KvCacheManager::new(16 * 16, 16);
+        let h = m.register();
+        m.grow(h, 10).unwrap();
+        assert_eq!(m.table(h).pages().len(), 1);
+        m.grow(h, 16).unwrap();
+        assert_eq!(m.table(h).pages().len(), 1);
+        m.grow(h, 17).unwrap();
+        assert_eq!(m.table(h).pages().len(), 2);
+        assert_eq!(m.table(h).len(), 17);
+    }
+
+    #[test]
+    fn grow_is_all_or_nothing() {
+        let mut m = KvCacheManager::new(16 * 3, 16); // 2 usable pages
+        let h = m.register();
+        m.grow(h, 16).unwrap();
+        let before_pages = m.table(h).pages().len();
+        let before_free = m.free_pages();
+        assert!(m.grow(h, 16 * 4).is_err());
+        assert_eq!(m.table(h).pages().len(), before_pages);
+        assert_eq!(m.free_pages(), before_free);
+    }
+
+    #[test]
+    fn free_restores_capacity() {
+        let mut m = KvCacheManager::new(16 * 8, 16);
+        let total = m.free_pages();
+        let h1 = m.register();
+        let h2 = m.register();
+        m.grow(h1, 40).unwrap();
+        m.grow(h2, 20).unwrap();
+        m.free(h1);
+        m.free(h2);
+        assert_eq!(m.free_pages(), total);
+    }
+
+    #[test]
+    fn slot_mapping_matches_pages() {
+        let mut m = KvCacheManager::new(16 * 8, 16);
+        let h = m.register();
+        m.grow(h, 33).unwrap();
+        let pages = m.table(h).pages().to_vec();
+        assert_eq!(m.slot(h, 0), pages[0] * 16);
+        assert_eq!(m.slot(h, 15), pages[0] * 16 + 15);
+        assert_eq!(m.slot(h, 16), pages[1] * 16);
+        assert_eq!(m.slot(h, 32), pages[2] * 16);
+    }
+
+    #[test]
+    fn fork_shares_then_unshares() {
+        let mut m = KvCacheManager::new(16 * 8, 16);
+        let h = m.register();
+        m.grow(h, 20).unwrap();
+        let free_before = m.free_pages();
+        let c = m.fork(h);
+        assert_eq!(m.free_pages(), free_before, "fork must not allocate");
+        assert_eq!(m.table(c).pages(), m.table(h).pages());
+        // writing to the child's last page triggers a copy
+        let cow = m.unshare_last(c).unwrap();
+        assert!(cow.is_some());
+        assert_ne!(m.table(c).pages().last(), m.table(h).pages().last());
+        // parent unaffected; freeing both returns everything
+        m.free(h);
+        m.free(c);
+        assert_eq!(m.free_pages(), 7);
+    }
+
+    #[test]
+    fn handle_reuse_after_free() {
+        let mut m = KvCacheManager::new(16 * 8, 16);
+        let h1 = m.register();
+        m.grow(h1, 5).unwrap();
+        m.free(h1);
+        let h2 = m.register();
+        assert_eq!(h1, h2, "slots are recycled");
+        assert_eq!(m.table(h2).len(), 0);
+    }
+
+    /// Randomized invariant check (hand-rolled property test): a random
+    /// interleaving of register/grow/free never double-allocates a page
+    /// and always restores full capacity at the end.
+    #[test]
+    fn random_interleaving_preserves_invariants() {
+        let mut rng = 0x12345678u64;
+        let mut rand = move || {
+            rng ^= rng << 13;
+            rng ^= rng >> 7;
+            rng ^= rng << 17;
+            rng
+        };
+        for _ in 0..50 {
+            let mut m = KvCacheManager::new(16 * 32, 16);
+            let capacity = m.free_pages();
+            let mut live: Vec<(SeqHandle, usize)> = Vec::new();
+            for _ in 0..200 {
+                match rand() % 3 {
+                    0 => {
+                        let h = m.register();
+                        live.push((h, 0));
+                    }
+                    1 => {
+                        if let Some(i) = live.len().checked_sub(1) {
+                            let idx = rand() as usize % (i + 1);
+                            let (h, len) = live[idx];
+                            let new_len = len + 1 + (rand() as usize % 24);
+                            if m.grow(h, new_len).is_ok() {
+                                live[idx].1 = new_len;
+                            }
+                        }
+                    }
+                    _ => {
+                        if !live.is_empty() {
+                            let idx = rand() as usize % live.len();
+                            let (h, _) = live.swap_remove(idx);
+                            m.free(h);
+                        }
+                    }
+                }
+                // invariant: no page owned twice across live tables
+                let mut seen = std::collections::HashSet::new();
+                for &(h, _) in &live {
+                    for &p in m.table(h).pages() {
+                        assert!(seen.insert(p), "page {p} double-owned");
+                        assert_ne!(p, 0);
+                    }
+                }
+                // invariant: free + owned == capacity
+                assert_eq!(m.free_pages() + seen.len(), capacity);
+            }
+            for (h, _) in live {
+                m.free(h);
+            }
+            assert_eq!(m.free_pages(), capacity);
+        }
+    }
+}

@@ -1,0 +1,44 @@
+//! # triton-anatomy
+//!
+//! Reproduction of *"The Anatomy of a Triton Attention Kernel"* as a
+//! three-layer Rust + JAX + Pallas serving stack:
+//!
+//! * **L1** — Pallas paged-attention kernels (naive / Q-Block / parallel
+//!   tiled softmax / static launch grid / flash baseline), compiled AOT
+//!   from `python/compile/kernels/`.
+//! * **L2** — a Llama-style JAX model whose attention layers call L1,
+//!   exported as HLO-text artifacts per (kernel config, batch bucket).
+//! * **L3** — this crate: the vLLM-like coordinator. Paged KV-cache
+//!   manager, continuous-batching scheduler, attention-metadata builder,
+//!   decision-tree kernel heuristics, autotuner, PJRT runtime, serving
+//!   engine, TCP front-end, workload generators, benches for every figure
+//!   of the paper's evaluation.
+//!
+//! Python never runs on the request path: `make artifacts` is the only
+//! Python step, after which the `repro` binary is self-contained.
+
+pub mod autotune;
+pub mod batch;
+pub mod config;
+pub mod engine;
+pub mod heuristics;
+pub mod json;
+pub mod kvcache;
+pub mod manifest;
+pub mod metrics;
+pub mod microbench;
+pub mod runtime;
+pub mod scheduler;
+pub mod server;
+pub mod workload;
+
+pub use config::{Bucket, EngineConfig, KernelConfig, ModelConfig, Variant};
+pub use engine::{Engine, StepReport};
+pub use heuristics::{Heuristics, KernelChoice};
+pub use manifest::Manifest;
+pub use runtime::Runtime;
+
+/// Default artifacts directory (next to Cargo.toml).
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

@@ -1,0 +1,230 @@
+//! `repro` — CLI for the triton-anatomy serving stack.
+//!
+//! Subcommands:
+//!   serve        run the TCP JSON-lines inference server
+//!   run          generate from a synthetic prompt (offline, one-shot)
+//!   bench-micro  kernel microbenchmarks for one scenario
+//!   tune         §5 autotuning flow → heuristics.json + Listing-2 dump
+//!   inspect      list artifacts / models / heuristics
+//!
+//! (Hand-rolled arg parsing: the offline vendored crate set has no clap.)
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use triton_anatomy::autotune;
+use triton_anatomy::config::EngineConfig;
+use triton_anatomy::engine::Engine;
+use triton_anatomy::heuristics::Heuristics;
+use triton_anatomy::microbench::{self, BenchOpts};
+use triton_anatomy::runtime::Runtime;
+use triton_anatomy::server;
+use triton_anatomy::workload::{Rng, Scenario};
+
+struct Args {
+    #[allow(dead_code)] // kept for subcommands that may take positionals
+    positional: Vec<String>,
+    flags: std::collections::BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Self {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::BTreeMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    flags.insert(name.to_string(), "true".to_string());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Args { positional, flags }
+    }
+
+    fn get(&self, k: &str) -> Option<&str> {
+        self.flags.get(k).map(|s| s.as_str())
+    }
+
+    fn usize_or(&self, k: &str, d: usize) -> Result<usize> {
+        self.get(k).map_or(Ok(d), |v| {
+            v.parse().with_context(|| format!("--{k} {v}"))
+        })
+    }
+
+    fn f64_or(&self, k: &str, d: f64) -> Result<f64> {
+        self.get(k).map_or(Ok(d), |v| {
+            v.parse().with_context(|| format!("--{k} {v}"))
+        })
+    }
+}
+
+const USAGE: &str = "\
+repro — 'The Anatomy of a Triton Attention Kernel' reproduction stack
+
+USAGE: repro <command> [--artifacts DIR] [options]
+
+COMMANDS:
+  serve        --addr 127.0.0.1:7001 --model tiny [--max-requests N]
+  run          --prompt-len 16 --max-new 16 --model tiny [--heuristics F]
+  bench-micro  --scenario decode|prefill|mixed --batch 4 --seq-len 256
+               [--decode-share 0.5] [--iters 5] [--warmup 2]
+  tune         --out artifacts/heuristics.json [--iters 3] [--max-seq-len 2048]
+  inspect      (lists artifacts, models and the default decision tree)
+";
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        eprintln!("{USAGE}");
+        bail!("missing command");
+    }
+    let cmd = argv[0].clone();
+    let args = Args::parse(&argv[1..]);
+    let dir: PathBuf = args
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(triton_anatomy::default_artifacts_dir);
+
+    match cmd.as_str() {
+        "serve" => cmd_serve(&args, dir),
+        "run" => cmd_run(&args, dir),
+        "bench-micro" => cmd_bench_micro(&args, dir),
+        "tune" => cmd_tune(&args, dir),
+        "inspect" => cmd_inspect(dir),
+        other => {
+            eprintln!("{USAGE}");
+            bail!("unknown command '{other}'");
+        }
+    }
+}
+
+fn engine_config(args: &Args) -> Result<EngineConfig> {
+    Ok(EngineConfig {
+        model: args.get("model").unwrap_or("tiny").to_string(),
+        max_batched_tokens: args.usize_or("max-batched-tokens", 256)?,
+        max_num_seqs: args.usize_or("max-num-seqs", 8)?,
+        ..Default::default()
+    })
+}
+
+fn cmd_serve(args: &Args, dir: PathBuf) -> Result<()> {
+    let addr = args.get("addr").unwrap_or("127.0.0.1:7001").to_string();
+    let max_requests = args.get("max-requests")
+        .map(|v| v.parse()).transpose()?;
+    server::serve(dir, engine_config(args)?, &addr, max_requests)
+}
+
+fn cmd_run(args: &Args, dir: PathBuf) -> Result<()> {
+    let rt = Rc::new(Runtime::load_dir(dir)?);
+    let mut engine = Engine::new(rt, engine_config(args)?)?;
+    if let Some(h) = args.get("heuristics") {
+        engine.heuristics = Heuristics::load(std::path::Path::new(h))?;
+        eprintln!("[run] loaded tuned heuristics from {h}");
+    }
+    let prompt_len = args.usize_or("prompt-len", 16)?;
+    let max_new = args.usize_or("max-new", 16)?;
+    let mut rng = Rng::new(args.usize_or("seed", 7)? as u64);
+    let prompt = rng.tokens(prompt_len, engine.model_cfg.vocab_size);
+
+    engine.warmup()?;
+    let t0 = std::time::Instant::now();
+    engine.add_request(prompt, max_new)?;
+    let fin = engine.run_to_completion()?;
+    let dt = t0.elapsed().as_secs_f64();
+    let r = &fin[0];
+    println!("prompt_len={prompt_len} generated={} in {:.3}s ({:.1} tok/s)",
+             r.output.len(), dt, r.output.len() as f64 / dt);
+    println!("tokens: {:?}", r.output);
+    println!("--- metrics ---\n{}", engine.metrics.dump());
+    Ok(())
+}
+
+fn cmd_bench_micro(args: &Args, dir: PathBuf) -> Result<()> {
+    let rt = Runtime::load_dir(dir)?;
+    let kind = args.get("scenario").unwrap_or("decode");
+    let batch = args.usize_or("batch", 4)?;
+    let seq_len = args.usize_or("seq-len", 256)?;
+    let share = args.f64_or("decode-share", 0.5)?;
+    let opts = BenchOpts {
+        warmup: args.usize_or("warmup", 2)?,
+        iters: args.usize_or("iters", 5)?,
+    };
+    let mut rng = Rng::new(11);
+    let scn = match kind {
+        "decode" => Scenario::decode(batch, seq_len, &mut rng, true),
+        "prefill" => Scenario::prefill(batch, seq_len, &mut rng, true),
+        "mixed" => Scenario::mixed(batch, seq_len, share, &mut rng),
+        other => bail!("unknown scenario kind '{other}'"),
+    };
+    println!("scenario {}: seqs={:?}", scn.name, scn.seqs);
+    println!("{:<40} {:>12} {:>12} {:>12}", "artifact", "mean_us", "min_us", "max_us");
+    let specs: Vec<_> = rt.manifest.kernel_artifacts().cloned().collect();
+    for spec in &specs {
+        if !microbench::scenario_fits(spec, &scn) {
+            continue;
+        }
+        let r = microbench::bench_artifact(&rt, spec, &scn, &mut rng, opts)?;
+        println!("{:<40} {:>12.0} {:>12.0} {:>12.0}",
+                 r.artifact, r.mean_us, r.min_us, r.max_us);
+    }
+    Ok(())
+}
+
+fn cmd_tune(args: &Args, dir: PathBuf) -> Result<()> {
+    let rt = Runtime::load_dir(dir.clone())?;
+    let out = args.get("out")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| dir.join("heuristics.json"));
+    let opts = BenchOpts {
+        warmup: args.usize_or("warmup", 1)?,
+        iters: args.usize_or("iters", 3)?,
+    };
+    let max_seq = args.usize_or("max-seq-len", 2048)?;
+    let mut rng = Rng::new(0xBEEF);
+    let grid = autotune::default_grid(&mut rng, max_seq);
+    eprintln!("[tune] sweeping {} scenarios over {} kernel artifacts",
+              grid.len(), rt.manifest.kernel_artifacts().count());
+    let samples = autotune::sweep(&rt, &grid, opts, true)?;
+    let h = autotune::fit_heuristics(&samples, 4);
+    let regret = autotune::regret_pct(&h, &samples);
+    let default_regret = autotune::regret_pct(&Heuristics::default_tree(), &samples);
+    h.save(&out)?;
+    println!("--- tuned decode tree (Listing 2 analogue) ---");
+    print!("{}", h.decode.render(0));
+    println!("--- tuned prefill tree ---");
+    print!("{}", h.prefill.render(0));
+    println!("tuned regret vs oracle: {regret:.1}%  (untuned default: {default_regret:.1}%)");
+    println!("wrote {out:?}");
+    Ok(())
+}
+
+fn cmd_inspect(dir: PathBuf) -> Result<()> {
+    let rt = Runtime::load_dir(dir)?;
+    println!("models:");
+    for (name, m) in &rt.manifest.models {
+        println!("  {name}: {} layers, hidden {}, {} q-heads / {} kv-heads, head {}",
+                 m.config.num_layers, m.config.hidden_size,
+                 m.config.num_q_heads, m.config.num_kv_heads,
+                 m.config.head_size);
+    }
+    println!("artifacts ({}):", rt.manifest.artifacts.len());
+    for a in &rt.manifest.artifacts {
+        println!("  [{:?}] {} bucket=s{}t{}", a.kind, a.name,
+                 a.bucket.max_seqs, a.bucket.max_tokens);
+    }
+    println!("default heuristics (decode):");
+    print!("{}", Heuristics::default_tree().decode.render(1));
+    Ok(())
+}

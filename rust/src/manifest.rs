@@ -1,0 +1,263 @@
+//! Artifact manifest loader: discovers `manifest-*.json` files written by
+//! `python -m compile.aot`, merges them, and exposes typed descriptions of
+//! every compiled executable plus the weight-file index.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{Bucket, KernelConfig, ModelConfig};
+use crate::json::{self, Value};
+
+/// Element type of an operand (the manifest only emits these two).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            other => bail!("unknown dtype '{other}'"),
+        })
+    }
+
+    pub fn bytes(&self) -> usize {
+        4
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    fn from_json(v: &Value) -> Result<Self> {
+        Ok(TensorSpec {
+            name: v.str_field("name")?,
+            shape: v.req("shape")?.as_arr()?.iter()
+                .map(|x| x.as_usize()).collect::<Result<_>>()?,
+            dtype: DType::parse(v.req("dtype")?.as_str()?)?,
+        })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// Attention-layer-only executable (microbench / autotune target).
+    Kernel,
+    /// Full model step executable (engine target).
+    Model,
+    /// Sampled-token extractor over the flat state (see aot.py).
+    Extract,
+}
+
+/// One compiled HLO module + everything needed to call it.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub kind: ArtifactKind,
+    pub name: String,
+    pub path: PathBuf,
+    pub config: KernelConfig,
+    pub bucket: Bucket,
+    /// Manifest model key (model artifacts only).
+    pub model: Option<String>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct WeightEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub config: ModelConfig,
+    pub weights_path: PathBuf,
+    pub tensors: Vec<WeightEntry>,
+}
+
+/// Merged view over every manifest profile present in the artifacts dir.
+#[derive(Debug, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+    pub models: BTreeMap<String, ModelEntry>,
+    pub kernel_geom: Option<ModelConfig>,
+}
+
+impl Manifest {
+    /// Load and merge all `manifest-*.json` under `dir`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let mut m = Manifest { dir: dir.clone(), ..Default::default() };
+        let mut found = false;
+        let entries = fs::read_dir(&dir)
+            .with_context(|| format!("artifacts dir {dir:?} (run `make artifacts` first)"))?;
+        let mut paths: Vec<PathBuf> = entries
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| {
+                p.file_name().and_then(|n| n.to_str())
+                    .map(|n| n.starts_with("manifest-") && n.ends_with(".json"))
+                    .unwrap_or(false)
+            })
+            .collect();
+        paths.sort();
+        for p in paths {
+            m.merge_file(&p)?;
+            found = true;
+        }
+        if !found {
+            bail!("no manifest-*.json in {dir:?}; run `make artifacts`");
+        }
+        Ok(m)
+    }
+
+    fn merge_file(&mut self, path: &Path) -> Result<()> {
+        let text = fs::read_to_string(path)
+            .with_context(|| format!("reading {path:?}"))?;
+        let v = json::parse(&text)
+            .with_context(|| format!("parsing {path:?}"))?;
+
+        if self.kernel_geom.is_none() {
+            if let Some(kg) = v.get("kernel_geom") {
+                self.kernel_geom = Some(ModelConfig::from_json(kg)?);
+            }
+        }
+
+        for (name, entry) in v.req("models")?.as_obj()? {
+            let tensors = entry.req("tensors")?.as_arr()?.iter()
+                .map(|t| {
+                    Ok(WeightEntry {
+                        name: t.str_field("name")?,
+                        shape: t.req("shape")?.as_arr()?.iter()
+                            .map(|x| x.as_usize()).collect::<Result<_>>()?,
+                        offset: t.usize_field("offset")?,
+                        nbytes: t.usize_field("nbytes")?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            self.models.insert(name.clone(), ModelEntry {
+                config: ModelConfig::from_json(entry.req("config")?)?,
+                weights_path: self.dir.join(entry.str_field("weights_path")?),
+                tensors,
+            });
+        }
+
+        for a in v.req("artifacts")?.as_arr()? {
+            let kind = match a.str_field("kind")?.as_str() {
+                "kernel" => ArtifactKind::Kernel,
+                "model" => ArtifactKind::Model,
+                "extract" => ArtifactKind::Extract,
+                other => bail!("unknown artifact kind '{other}'"),
+            };
+            let model = match a.get("model") {
+                Some(Value::Str(s)) => Some(s.clone()),
+                _ => None,
+            };
+            let spec = ArtifactSpec {
+                kind,
+                name: a.str_field("name")?,
+                path: self.dir.join(a.str_field("path")?),
+                config: KernelConfig::from_json(a.req("config")?)?,
+                bucket: Bucket::from_json(a.req("bucket")?)?,
+                model,
+                inputs: a.req("inputs")?.as_arr()?.iter()
+                    .map(TensorSpec::from_json).collect::<Result<_>>()?,
+                outputs: a.req("outputs")?.as_arr()?.iter()
+                    .map(TensorSpec::from_json).collect::<Result<_>>()?,
+            };
+            // later profiles may re-export the same artifact; keep one
+            if !self.artifacts.iter().any(|x| x.name == spec.name) {
+                self.artifacts.push(spec);
+            }
+        }
+        Ok(())
+    }
+
+    pub fn kernel_artifacts(&self) -> impl Iterator<Item = &ArtifactSpec> {
+        self.artifacts.iter().filter(|a| a.kind == ArtifactKind::Kernel)
+    }
+
+    pub fn model_artifacts<'a>(&'a self, model: &'a str)
+        -> impl Iterator<Item = &'a ArtifactSpec> + 'a {
+        self.artifacts.iter().filter(move |a| {
+            a.kind == ArtifactKind::Model && a.model.as_deref() == Some(model)
+        })
+    }
+
+    /// Load one weight tensor as f32 from the raw weight file.
+    pub fn read_weights(&self, model: &str) -> Result<Vec<(WeightEntry, Vec<f32>)>> {
+        let entry = self.models.get(model)
+            .with_context(|| format!("model '{model}' not in manifest (build the matching artifacts profile)"))?;
+        let raw = fs::read(&entry.weights_path)
+            .with_context(|| format!("reading {:?}", entry.weights_path))?;
+        entry.tensors.iter().map(|t| {
+            let bytes = raw.get(t.offset..t.offset + t.nbytes)
+                .with_context(|| format!("weight {} out of range", t.name))?;
+            let mut data = vec![0f32; t.nbytes / 4];
+            for (i, ch) in bytes.chunks_exact(4).enumerate() {
+                data[i] = f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]);
+            }
+            Ok((t.clone(), data))
+        }).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_default_manifest() {
+        let m = Manifest::load(artifacts_dir()).unwrap();
+        assert!(!m.artifacts.is_empty());
+        assert!(m.models.contains_key("tiny"));
+        let tiny = &m.models["tiny"];
+        assert_eq!(tiny.tensors.len(), 12); // Params has 12 fields
+        // every artifact's HLO file exists
+        for a in &m.artifacts {
+            assert!(a.path.exists(), "missing {:?}", a.path);
+            assert!(!a.inputs.is_empty());
+        }
+    }
+
+    #[test]
+    fn weights_readable_and_sized() {
+        let m = Manifest::load(artifacts_dir()).unwrap();
+        let w = m.read_weights("tiny").unwrap();
+        for (e, data) in &w {
+            assert_eq!(data.len() * 4, e.nbytes);
+            let n: usize = e.shape.iter().product();
+            assert_eq!(n, data.len());
+            assert!(data.iter().all(|x| x.is_finite()));
+        }
+    }
+
+    #[test]
+    fn kernel_artifacts_present() {
+        let m = Manifest::load(artifacts_dir()).unwrap();
+        assert!(m.kernel_artifacts().count() >= 4);
+        assert!(m.kernel_geom.is_some());
+    }
+}

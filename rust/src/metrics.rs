@@ -1,0 +1,179 @@
+//! Serving metrics: log-bucketed latency histograms and counters, dumped
+//! in a Prometheus-like text format. Allocation-free on the record path.
+
+use std::fmt::Write as _;
+
+/// Log-bucketed histogram for microsecond-scale latencies.
+/// Buckets are powers of √2 from 1 µs to ~1100 s.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+const NUM_BUCKETS: usize = 60;
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            buckets: vec![0; NUM_BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    fn bucket_of(v: f64) -> usize {
+        if v <= 1.0 {
+            return 0;
+        }
+        // log base sqrt(2)
+        let b = (v.ln() / std::f64::consts::LN_2 * 2.0).ceil() as usize;
+        b.min(NUM_BUCKETS - 1)
+    }
+
+    fn bucket_upper(i: usize) -> f64 {
+        (2f64).powf(i as f64 / 2.0)
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.buckets[Self::bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.min }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.max }
+    }
+
+    /// Upper bound of the bucket containing quantile `q` (0..=1).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target.max(1) {
+                return Self::bucket_upper(i);
+            }
+        }
+        self.max
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.1} p50={:.1} p90={:.1} p99={:.1} min={:.1} max={:.1}",
+            self.count,
+            self.mean(),
+            self.quantile(0.5),
+            self.quantile(0.9),
+            self.quantile(0.99),
+            self.min(),
+            self.max()
+        )
+    }
+}
+
+/// Engine-level counters + histograms.
+#[derive(Debug, Default, Clone)]
+pub struct EngineMetrics {
+    /// Wall time of each full engine step, µs.
+    pub step_us: Histogram,
+    /// Model executable dispatch time, µs.
+    pub dispatch_us: Histogram,
+    /// Metadata build + upload time, µs (the paper's per-launch software
+    /// overhead bucket).
+    pub overhead_us: Histogram,
+    pub steps: u64,
+    pub generated_tokens: u64,
+    pub prompt_tokens: u64,
+    pub preemptions: u64,
+    /// Picks per kernel variant name.
+    pub variant_picks: std::collections::BTreeMap<String, u64>,
+}
+
+impl EngineMetrics {
+    pub fn dump(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "engine_steps {}", self.steps);
+        let _ = writeln!(s, "generated_tokens {}", self.generated_tokens);
+        let _ = writeln!(s, "prompt_tokens {}", self.prompt_tokens);
+        let _ = writeln!(s, "preemptions {}", self.preemptions);
+        let _ = writeln!(s, "step_us {}", self.step_us.summary());
+        let _ = writeln!(s, "dispatch_us {}", self.dispatch_us.summary());
+        let _ = writeln!(s, "overhead_us {}", self.overhead_us.summary());
+        for (v, n) in &self.variant_picks {
+            let _ = writeln!(s, "variant_picks{{variant=\"{v}\"}} {n}");
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_are_monotone_and_bounding() {
+        let mut h = Histogram::new();
+        for i in 1..=1000 {
+            h.record(i as f64);
+        }
+        let p50 = h.quantile(0.5);
+        let p90 = h.quantile(0.9);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p90 && p90 <= p99);
+        // log buckets: p50 within a sqrt(2) factor of the true median
+        assert!(p50 >= 500.0 / 1.5 && p50 <= 500.0 * 1.5, "p50={p50}");
+        assert_eq!(h.count(), 1000);
+        assert!((h.mean() - 500.5).abs() < 1.0);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.99), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0.0);
+    }
+
+    #[test]
+    fn metrics_dump_contains_counters() {
+        let mut m = EngineMetrics::default();
+        m.steps = 3;
+        m.variant_picks.insert("qblock".into(), 2);
+        let d = m.dump();
+        assert!(d.contains("engine_steps 3"));
+        assert!(d.contains("variant_picks{variant=\"qblock\"} 2"));
+    }
+}

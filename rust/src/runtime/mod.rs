@@ -1,0 +1,292 @@
+//! PJRT runtime: loads AOT HLO-text artifacts, compiles them on the CPU
+//! PJRT client once at startup, and executes them from the serving hot
+//! path (`execute_b`, device-resident buffers, no Python anywhere).
+//!
+//! Compilation happens eagerly when an executable is first requested and
+//! is cached by artifact name — the analogue of vLLM's CUDA-graph capture
+//! pass at server startup (§3 ⑥a): after warmup, a step is a single
+//! dispatch against a frozen executable.
+//!
+//! NOTE: `PjRtClient` is `Rc`-based (not `Send`), so a `Runtime` lives on
+//! one thread; the server front-end talks to it over channels.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::manifest::{ArtifactKind, ArtifactSpec, DType, Manifest, TensorSpec};
+
+/// Host-side tensor handed to `execute`: either f32 or i32 payload.
+#[derive(Debug, Clone)]
+pub enum HostTensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32(v) => v.len(),
+            HostTensor::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn matches(&self, spec: &TensorSpec) -> bool {
+        self.len() == spec.elements()
+            && matches!(
+                (self, spec.dtype),
+                (HostTensor::F32(_), DType::F32) | (HostTensor::I32(_), DType::I32)
+            )
+    }
+}
+
+/// A compiled executable + its manifest spec.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Timing of one dispatch, split the way §6.2 splits launch overhead from
+/// kernel runtime.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExecTiming {
+    /// Host→device upload of the step's small metadata tensors.
+    pub upload_us: f64,
+    /// `execute_b` wall time (dispatch + computation on CPU PJRT).
+    pub execute_us: f64,
+}
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    executables: RefCell<HashMap<String, std::rc::Rc<Executable>>>,
+    /// Cumulative dispatch statistics (count, totals) per artifact name.
+    pub timings: RefCell<HashMap<String, (u64, ExecTiming)>>,
+    pub verbose: bool,
+}
+
+impl Runtime {
+    pub fn new(manifest: Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            executables: RefCell::new(HashMap::new()),
+            timings: RefCell::new(HashMap::new()),
+            verbose: std::env::var("REPRO_VERBOSE").is_ok(),
+        })
+    }
+
+    pub fn load_dir(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        Self::new(Manifest::load(dir)?)
+    }
+
+    /// Compile (or fetch cached) the named artifact.
+    pub fn executable(&self, name: &str) -> Result<std::rc::Rc<Executable>> {
+        if let Some(e) = self.executables.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self
+            .manifest
+            .artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))?
+            .clone();
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow!("parsing {:?}: {e}", spec.path))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e}"))?;
+        let compiled = std::rc::Rc::new(Executable { spec, exe });
+        if self.verbose {
+            eprintln!(
+                "[runtime] compiled {name} in {:.2}s",
+                t0.elapsed().as_secs_f64()
+            );
+        }
+        self.executables
+            .borrow_mut()
+            .insert(name.to_string(), compiled.clone());
+        Ok(compiled)
+    }
+
+    /// Eagerly compile every artifact matching `pred` (startup warmup —
+    /// the CUDA-graph capture analogue).
+    pub fn warmup(&self, pred: impl Fn(&ArtifactSpec) -> bool) -> Result<usize> {
+        let names: Vec<String> = self
+            .manifest
+            .artifacts
+            .iter()
+            .filter(|a| pred(a))
+            .map(|a| a.name.clone())
+            .collect();
+        for n in &names {
+            self.executable(n)?;
+        }
+        Ok(names.len())
+    }
+
+    /// Upload a host tensor as a device buffer.
+    pub fn upload(&self, t: &HostTensor, dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        let buf = match t {
+            HostTensor::F32(v) => self.client.buffer_from_host_buffer(v, dims, None),
+            HostTensor::I32(v) => self.client.buffer_from_host_buffer(v, dims, None),
+        };
+        buf.map_err(|e| anyhow!("upload: {e}"))
+    }
+
+    /// Upload validated against an input spec of an executable.
+    pub fn upload_for(&self, exe: &Executable, idx: usize,
+                      t: &HostTensor) -> Result<xla::PjRtBuffer> {
+        let spec = &exe.spec.inputs[idx];
+        if !t.matches(spec) {
+            bail!(
+                "operand {idx} ({}) expects {:?} {:?}, got {} elements",
+                spec.name, spec.dtype, spec.shape, t.len()
+            );
+        }
+        self.upload(t, &spec.shape)
+    }
+
+    /// Run with pre-uploaded buffers (the hot path). Returns the single
+    /// output buffer (all artifacts are single-result by construction).
+    pub fn execute(&self, exe: &Executable,
+                   args: &[&xla::PjRtBuffer]) -> Result<xla::PjRtBuffer> {
+        if args.len() != exe.spec.inputs.len() {
+            bail!(
+                "{} expects {} operands, got {}",
+                exe.spec.name, exe.spec.inputs.len(), args.len()
+            );
+        }
+        let t0 = Instant::now();
+        let mut out = exe
+            .exe
+            .execute_b(args)
+            .map_err(|e| anyhow!("execute {}: {e}", exe.spec.name))?;
+        let execute_us = t0.elapsed().as_secs_f64() * 1e6;
+        self.record(&exe.spec.name, ExecTiming { upload_us: 0.0, execute_us });
+        let replica = out
+            .first_mut()
+            .ok_or_else(|| anyhow!("no replica output"))?;
+        replica
+            .pop()
+            .ok_or_else(|| anyhow!("no output buffer"))
+    }
+
+    /// Convenience: upload host tensors, execute, and download the single
+    /// f32 output (used by microbench / autotune / kernel tests).
+    pub fn execute_host(&self, exe: &Executable,
+                        args: &[HostTensor]) -> Result<Vec<f32>> {
+        let t0 = Instant::now();
+        let bufs: Vec<xla::PjRtBuffer> = args
+            .iter()
+            .enumerate()
+            .map(|(i, t)| self.upload_for(exe, i, t))
+            .collect::<Result<_>>()?;
+        let upload_us = t0.elapsed().as_secs_f64() * 1e6;
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        let out = self.execute(exe, &refs)?;
+        self.record(&exe.spec.name,
+                    ExecTiming { upload_us, execute_us: 0.0 });
+        self.download_f32(&out)
+    }
+
+    pub fn download_f32(&self, buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
+        let lit = buf
+            .to_literal_sync()
+            .map_err(|e| anyhow!("download: {e}"))?;
+        lit.to_vec::<f32>().map_err(|e| anyhow!("literal to_vec: {e}"))
+    }
+
+    fn record(&self, name: &str, t: ExecTiming) {
+        let mut map = self.timings.borrow_mut();
+        let entry = map.entry(name.to_string()).or_default();
+        entry.0 += 1;
+        entry.1.upload_us += t.upload_us;
+        entry.1.execute_us += t.execute_us;
+    }
+
+    /// Find a model artifact by (model, predicate).
+    pub fn find_model_artifact(
+        &self,
+        model: &str,
+        pred: impl Fn(&ArtifactSpec) -> bool,
+    ) -> Option<&ArtifactSpec> {
+        self.manifest
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::Model
+                && a.model.as_deref() == Some(model))
+            .find(|a| pred(a))
+    }
+
+    pub fn extract_artifact(&self, model: &str) -> Result<&ArtifactSpec> {
+        self.manifest
+            .artifacts
+            .iter()
+            .find(|a| a.kind == ArtifactKind::Extract
+                && a.model.as_deref() == Some(model))
+            .with_context(|| format!("no extract artifact for model '{model}'"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn runtime() -> Runtime {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Runtime::load_dir(dir).unwrap()
+    }
+
+    #[test]
+    fn compiles_and_runs_kernel_artifact() {
+        let rt = runtime();
+        let spec = rt.manifest.kernel_artifacts().next().unwrap().clone();
+        let exe = rt.executable(&spec.name).unwrap();
+        // zero-filled operands of the right shapes: result must be finite
+        let args: Vec<HostTensor> = spec
+            .inputs
+            .iter()
+            .map(|t| match t.dtype {
+                DType::F32 => HostTensor::F32(vec![0.0; t.elements()]),
+                DType::I32 => HostTensor::I32(vec![0; t.elements()]),
+            })
+            .collect();
+        let out = rt.execute_host(&exe, &args).unwrap();
+        assert_eq!(out.len(), spec.outputs[0].elements());
+        assert!(out.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn executable_cache_hits() {
+        let rt = runtime();
+        let name = rt.manifest.kernel_artifacts().next().unwrap().name.clone();
+        let a = rt.executable(&name).unwrap();
+        let b = rt.executable(&name).unwrap();
+        assert!(std::rc::Rc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn operand_validation_rejects_bad_shapes() {
+        let rt = runtime();
+        let name = rt.manifest.kernel_artifacts().next().unwrap().name.clone();
+        let exe = rt.executable(&name).unwrap();
+        let bad = HostTensor::F32(vec![0.0; 3]);
+        assert!(rt.upload_for(&exe, 0, &bad).is_err());
+    }
+}

@@ -1,0 +1,520 @@
+//! Continuous-batching scheduler — the vLLM-core analogue (Fig. 1 ①).
+//!
+//! Policy (vLLM V1-style, which the paper's batch-composition analysis in
+//! §7.2 presupposes):
+//!   1. **Decode first**: every running sequence gets its next token
+//!      scheduled before any prefill is admitted ("vLLM is always
+//!      prioritizing decode requests", §7.2).
+//!   2. **Prefill admission** under three caps: the per-step token budget
+//!      (`max_batched_tokens`), the sequence cap (`max_num_seqs`), and a
+//!      free-page watermark. Prompts longer than the remaining budget are
+//!      *chunked* (chunked prefill) and continue next step.
+//!   3. **Preemption by recompute**: when the page allocator cannot grow a
+//!      decoding sequence, the most-recently-arrived running sequence is
+//!      evicted, its pages freed, and its full context re-prefilled later.
+
+use std::collections::VecDeque;
+
+use crate::config::EngineConfig;
+use crate::kvcache::{KvCacheManager, SeqHandle};
+
+pub type RequestId = u64;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Generated `max_new_tokens`.
+    Length,
+    /// Hit the model's max length.
+    ModelLimit,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum State {
+    Waiting,
+    Running,
+    Finished(FinishReason),
+}
+
+/// One in-flight generation request.
+#[derive(Debug)]
+pub struct Request {
+    pub id: RequestId,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub state: State,
+    pub output: Vec<i32>,
+    /// KV handle, valid while Running.
+    pub handle: Option<SeqHandle>,
+    /// Tokens of (prompt + output) whose KV is already computed.
+    pub computed: usize,
+    pub arrival_seq: u64,
+    // ----- telemetry -----
+    pub enqueue_ns: u64,
+    pub first_token_ns: Option<u64>,
+    pub finish_ns: Option<u64>,
+    pub preemptions: u32,
+}
+
+impl Request {
+    /// Full token sequence so far (prompt + generated).
+    pub fn total_len(&self) -> usize {
+        self.prompt.len() + self.output.len()
+    }
+
+    fn token_at(&self, i: usize) -> i32 {
+        if i < self.prompt.len() {
+            self.prompt[i]
+        } else {
+            self.output[i - self.prompt.len()]
+        }
+    }
+}
+
+/// What the engine must feed the model for one sequence this step.
+#[derive(Debug, Clone)]
+pub struct ScheduledSeq {
+    pub id: RequestId,
+    pub handle: SeqHandle,
+    /// Context length: tokens already in the KV cache.
+    pub ctx_len: usize,
+    /// New tokens to process this step (1 for decode, >1 for prefill chunk).
+    pub tokens: Vec<i32>,
+    /// Does the sampled token become visible output? (false for non-final
+    /// prefill chunks — their sample is discarded.)
+    pub samples: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct ScheduledBatch {
+    pub seqs: Vec<ScheduledSeq>,
+    pub preempted: Vec<RequestId>,
+}
+
+impl ScheduledBatch {
+    pub fn is_empty(&self) -> bool {
+        self.seqs.is_empty()
+    }
+
+    pub fn num_decodes(&self) -> usize {
+        // §6.1: "we count the number of decodes in the batch" to drive the
+        // kernel-variant heuristic.
+        self.seqs.iter().filter(|s| s.tokens.len() == 1 && s.ctx_len > 0).count()
+    }
+
+    pub fn total_new_tokens(&self) -> usize {
+        self.seqs.iter().map(|s| s.tokens.len()).sum()
+    }
+
+    pub fn is_decode_only(&self) -> bool {
+        self.seqs.iter().all(|s| s.tokens.len() == 1 && s.ctx_len > 0)
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct SchedulerStats {
+    pub steps: u64,
+    pub preemptions: u64,
+    pub scheduled_tokens: u64,
+}
+
+pub struct Scheduler {
+    cfg: EngineConfig,
+    waiting: VecDeque<Request>,
+    running: Vec<Request>,
+    finished: Vec<Request>,
+    next_arrival: u64,
+    pub stats: SchedulerStats,
+}
+
+impl Scheduler {
+    pub fn new(cfg: EngineConfig) -> Self {
+        Scheduler {
+            cfg,
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+            finished: Vec::new(),
+            next_arrival: 0,
+            stats: SchedulerStats::default(),
+        }
+    }
+
+    pub fn add_request(&mut self, id: RequestId, prompt: Vec<i32>,
+                       max_new_tokens: usize, now_ns: u64) {
+        assert!(!prompt.is_empty(), "empty prompt");
+        let r = Request {
+            id,
+            prompt,
+            max_new_tokens,
+            state: State::Waiting,
+            output: Vec::new(),
+            handle: None,
+            computed: 0,
+            arrival_seq: self.next_arrival,
+            enqueue_ns: now_ns,
+            first_token_ns: None,
+            finish_ns: None,
+            preemptions: 0,
+        };
+        self.next_arrival += 1;
+        self.waiting.push_back(r);
+    }
+
+    pub fn has_unfinished(&self) -> bool {
+        !self.waiting.is_empty() || !self.running.is_empty()
+    }
+
+    pub fn num_waiting(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn num_running(&self) -> usize {
+        self.running.len()
+    }
+
+    /// Drain finished requests (ownership moves to the caller).
+    pub fn take_finished(&mut self) -> Vec<Request> {
+        std::mem::take(&mut self.finished)
+    }
+
+    /// Build the next batch. `kv` is mutated: pages are allocated for the
+    /// scheduled work and freed for preempted sequences.
+    pub fn schedule(&mut self, kv: &mut KvCacheManager) -> ScheduledBatch {
+        let mut batch = ScheduledBatch::default();
+        let mut budget = self.cfg.max_batched_tokens;
+
+        // ---- phase 1: decodes (and prefill continuations), oldest first
+        self.running.sort_by_key(|r| r.arrival_seq);
+        let mut i = 0;
+        while i < self.running.len() {
+            if budget == 0 {
+                break;
+            }
+            let r = &self.running[i];
+            let handle = r.handle.expect("running without handle");
+            let total = r.total_len();
+            let (n_new, samples) = if r.computed < total {
+                // prefill (possibly chunked) continuation
+                let n = (total - r.computed).min(budget);
+                (n, r.computed + n == total)
+            } else {
+                (1, true) // decode: feed last sampled token
+            };
+            let new_total = r.computed + n_new.max(1);
+            // decode grows by the token being generated
+            let target = if r.computed >= total { total + 1 } else { new_total };
+
+            if kv.grow(handle, target).is_err() {
+                // ---- preemption by recompute: evict the youngest runner
+                if let Some(victim) = self.pick_victim(i) {
+                    let mut v = self.running.remove(victim);
+                    kv.free(v.handle.take().unwrap());
+                    v.computed = 0;
+                    v.state = State::Waiting;
+                    v.preemptions += 1;
+                    self.stats.preemptions += 1;
+                    batch.preempted.push(v.id);
+                    self.waiting.push_front(v);
+                    if victim < i {
+                        i -= 1;
+                    }
+                    continue; // retry the same sequence
+                }
+                break; // nothing to evict — leave for next step
+            }
+
+            let r = &mut self.running[i];
+            let tokens: Vec<i32> = if r.computed < total {
+                (r.computed..r.computed + n_new).map(|j| r.token_at(j)).collect()
+            } else {
+                vec![*r.output.last().or(r.prompt.last()).unwrap()]
+            };
+            budget -= tokens.len().min(budget);
+            batch.seqs.push(ScheduledSeq {
+                id: r.id,
+                handle: r.handle.unwrap(),
+                ctx_len: r.computed,
+                tokens,
+                samples,
+            });
+            i += 1;
+        }
+
+        // ---- phase 2: admit waiting prefills
+        while let Some(front) = self.waiting.front() {
+            if self.running.len() >= self.cfg.max_num_seqs
+                || batch.seqs.len() >= self.cfg.max_num_seqs
+            {
+                break;
+            }
+            let total = front.total_len();
+            let chunk = total.min(budget);
+            if chunk == 0 {
+                break;
+            }
+            let pages = crate::config::cdiv(chunk, kv.block_size());
+            if kv.free_pages() < pages + self.cfg.watermark_blocks {
+                break;
+            }
+            let mut r = self.waiting.pop_front().unwrap();
+            let handle = kv.register();
+            kv.grow(handle, chunk).expect("watermark check guaranteed pages");
+            r.handle = Some(handle);
+            r.state = State::Running;
+            let tokens: Vec<i32> = (0..chunk).map(|j| r.token_at(j)).collect();
+            budget -= chunk;
+            batch.seqs.push(ScheduledSeq {
+                id: r.id,
+                handle,
+                ctx_len: 0,
+                tokens,
+                samples: chunk == total,
+            });
+            self.running.push(r);
+        }
+
+        self.stats.steps += 1;
+        self.stats.scheduled_tokens += batch.total_new_tokens() as u64;
+        batch
+    }
+
+    /// Victim for preemption: the most recently arrived running sequence
+    /// other than the one being grown (vLLM recompute policy).
+    fn pick_victim(&self, protect: usize) -> Option<usize> {
+        self.running
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| *i != protect)
+            .max_by_key(|(_, r)| r.arrival_seq)
+            .map(|(i, _)| i)
+    }
+
+    /// Record the model's sampled tokens for a completed step.
+    /// `results` pairs each scheduled seq id with its next token.
+    pub fn on_step_complete(
+        &mut self,
+        batch: &ScheduledBatch,
+        results: &[(RequestId, i32)],
+        kv: &mut KvCacheManager,
+        now_ns: u64,
+    ) {
+        for s in &batch.seqs {
+            let r = self
+                .running
+                .iter_mut()
+                .find(|r| r.id == s.id)
+                .expect("scheduled seq vanished");
+            r.computed = s.ctx_len + s.tokens.len();
+            if !s.samples {
+                continue; // mid-prefill chunk: sample discarded
+            }
+            let tok = results
+                .iter()
+                .find(|(id, _)| *id == s.id)
+                .map(|(_, t)| *t)
+                .expect("missing sample for sequence");
+            // re-prefill after preemption replays already-known outputs
+            if r.computed >= r.prompt.len() + r.output.len() {
+                r.output.push(tok);
+                if r.first_token_ns.is_none() {
+                    r.first_token_ns = Some(now_ns);
+                }
+            }
+            let done_len = r.output.len() >= r.max_new_tokens;
+            let done_model = false; // model limit enforced by engine
+            if done_len || done_model {
+                r.state = State::Finished(if done_len {
+                    FinishReason::Length
+                } else {
+                    FinishReason::ModelLimit
+                });
+                r.finish_ns = Some(now_ns);
+            }
+        }
+        // retire finished sequences and release their pages
+        let mut j = 0;
+        while j < self.running.len() {
+            if matches!(self.running[j].state, State::Finished(_)) {
+                let mut r = self.running.remove(j);
+                kv.free(r.handle.take().unwrap());
+                self.finished.push(r);
+            } else {
+                j += 1;
+            }
+        }
+    }
+
+    /// Force-finish a sequence that hit the model length limit.
+    pub fn finish_at_model_limit(&mut self, id: RequestId,
+                                 kv: &mut KvCacheManager, now_ns: u64) {
+        if let Some(pos) = self.running.iter().position(|r| r.id == id) {
+            let mut r = self.running.remove(pos);
+            kv.free(r.handle.take().unwrap());
+            r.state = State::Finished(FinishReason::ModelLimit);
+            r.finish_ns = Some(now_ns);
+            self.finished.push(r);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(max_tokens: usize, max_seqs: usize, pages: usize)
+        -> (Scheduler, KvCacheManager) {
+        let cfg = EngineConfig {
+            max_batched_tokens: max_tokens,
+            max_num_seqs: max_seqs,
+            watermark_blocks: 0,
+            ..Default::default()
+        };
+        (Scheduler::new(cfg), KvCacheManager::new(16 * (pages + 1), 16))
+    }
+
+    fn step_all(s: &mut Scheduler, kv: &mut KvCacheManager,
+                batch: &ScheduledBatch) {
+        let results: Vec<_> = batch.seqs.iter().map(|x| (x.id, 7i32)).collect();
+        s.on_step_complete(batch, &results, kv, 0);
+    }
+
+    #[test]
+    fn prefill_then_decode() {
+        let (mut s, mut kv) = mk(64, 4, 32);
+        s.add_request(1, vec![1, 2, 3, 4, 5], 3, 0);
+        let b = s.schedule(&mut kv);
+        assert_eq!(b.seqs.len(), 1);
+        assert_eq!(b.seqs[0].tokens, vec![1, 2, 3, 4, 5]);
+        assert_eq!(b.num_decodes(), 0);
+        step_all(&mut s, &mut kv, &b);
+
+        let b = s.schedule(&mut kv);
+        assert_eq!(b.seqs[0].tokens.len(), 1);
+        assert_eq!(b.seqs[0].ctx_len, 5);
+        assert!(b.is_decode_only());
+        step_all(&mut s, &mut kv, &b);
+
+        let b = s.schedule(&mut kv);
+        step_all(&mut s, &mut kv, &b);
+        assert!(!s.has_unfinished());
+        let fin = s.take_finished();
+        assert_eq!(fin.len(), 1);
+        assert_eq!(fin[0].output.len(), 3);
+        assert_eq!(fin[0].state, State::Finished(FinishReason::Length));
+        assert_eq!(kv.free_pages(), 32);
+    }
+
+    #[test]
+    fn decode_scheduled_before_new_prefill() {
+        let (mut s, mut kv) = mk(8, 4, 32);
+        s.add_request(1, vec![1, 2, 3], 5, 0);
+        let b = s.schedule(&mut kv);
+        step_all(&mut s, &mut kv, &b);
+        // now a decode exists; add a prefill
+        s.add_request(2, vec![9; 8], 2, 0);
+        let b = s.schedule(&mut kv);
+        assert_eq!(b.seqs[0].id, 1, "decode first");
+        assert_eq!(b.seqs[0].tokens.len(), 1);
+        // budget 8: decode took 1, prefill gets a 7-token chunk
+        assert_eq!(b.seqs[1].id, 2);
+        assert_eq!(b.seqs[1].tokens.len(), 7);
+        assert!(!b.seqs[1].samples, "chunked prefill must not sample yet");
+    }
+
+    #[test]
+    fn chunked_prefill_completes() {
+        let (mut s, mut kv) = mk(4, 2, 32);
+        s.add_request(1, (0..10).collect(), 1, 0);
+        let mut seen = Vec::new();
+        for _ in 0..5 {
+            let b = s.schedule(&mut kv);
+            if b.is_empty() {
+                break;
+            }
+            seen.extend(b.seqs[0].tokens.clone());
+            step_all(&mut s, &mut kv, &b);
+        }
+        // prompt fed exactly once across chunks, then one decode token
+        assert_eq!(&seen[..10], &(0..10).collect::<Vec<i32>>()[..]);
+        assert!(!s.has_unfinished());
+    }
+
+    #[test]
+    fn token_budget_respected() {
+        let (mut s, mut kv) = mk(16, 8, 64);
+        for id in 0..4 {
+            s.add_request(id, vec![1; 10], 1, 0);
+        }
+        let b = s.schedule(&mut kv);
+        assert!(b.total_new_tokens() <= 16);
+    }
+
+    #[test]
+    fn max_num_seqs_respected() {
+        let (mut s, mut kv) = mk(256, 2, 64);
+        for id in 0..5 {
+            s.add_request(id, vec![1; 4], 2, 0);
+        }
+        let b = s.schedule(&mut kv);
+        assert_eq!(b.seqs.len(), 2);
+    }
+
+    #[test]
+    fn preemption_frees_and_requeues() {
+        // 4 usable pages; two seqs of 32 tokens each fill them exactly
+        let (mut s, mut kv) = mk(64, 4, 4);
+        s.add_request(1, vec![1; 32], 8, 0);
+        s.add_request(2, vec![2; 32], 8, 0);
+        let b = s.schedule(&mut kv);
+        assert_eq!(b.seqs.len(), 2);
+        step_all(&mut s, &mut kv, &b);
+        // both now need page 3 for their next token → seq 2 (youngest) is evicted
+        let b = s.schedule(&mut kv);
+        assert_eq!(b.preempted, vec![2]);
+        assert_eq!(b.seqs.iter().filter(|x| x.id == 1).count(), 1);
+        assert_eq!(s.num_waiting(), 1);
+        step_all(&mut s, &mut kv, &b);
+        // the preempted request eventually finishes
+        for _ in 0..60 {
+            let b = s.schedule(&mut kv);
+            if b.is_empty() && !s.has_unfinished() {
+                break;
+            }
+            step_all(&mut s, &mut kv, &b);
+        }
+        let fin = s.take_finished();
+        assert_eq!(fin.len(), 2);
+        let r2 = fin.iter().find(|r| r.id == 2).unwrap();
+        assert!(r2.preemptions >= 1);
+        assert_eq!(r2.output.len(), 8);
+    }
+
+    #[test]
+    fn no_starvation_fcfs() {
+        let (mut s, mut kv) = mk(8, 1, 64);
+        s.add_request(1, vec![1; 4], 2, 0);
+        s.add_request(2, vec![2; 4], 2, 0);
+        // run to completion; request 2 must finish after 1 admits
+        for _ in 0..20 {
+            let b = s.schedule(&mut kv);
+            if b.is_empty() {
+                break;
+            }
+            step_all(&mut s, &mut kv, &b);
+        }
+        let fin = s.take_finished();
+        assert_eq!(fin.len(), 2);
+    }
+
+    #[test]
+    fn decode_share_metadata() {
+        let (mut s, mut kv) = mk(64, 4, 32);
+        s.add_request(1, vec![1; 6], 4, 0);
+        let b = s.schedule(&mut kv);
+        step_all(&mut s, &mut kv, &b);
+        s.add_request(2, vec![2; 6], 4, 0);
+        let b = s.schedule(&mut kv);
+        assert_eq!(b.num_decodes(), 1);
+        assert!(!b.is_decode_only());
+        assert_eq!(b.total_new_tokens(), 7);
+    }
+}

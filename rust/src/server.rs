@@ -1,0 +1,326 @@
+//! TCP JSON-lines serving front-end.
+//!
+//! The PJRT client is not `Send`, so the engine owns its thread; listener
+//! and per-connection reader/writer threads talk to it over channels. The
+//! engine loop interleaves request intake with `step()` — continuous
+//! batching means new requests join the running batch at the next step.
+//!
+//! Protocol (one JSON object per line):
+//!   → {"prompt": [1,2,3], "max_new_tokens": 8}
+//!   ← {"event":"token","id":1,"token":42,"index":0}
+//!   ← {"event":"done","id":1,"tokens":[42,...],"ttft_ms":1.2,"total_ms":9.9}
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::config::EngineConfig;
+use crate::engine::Engine;
+use crate::json::{self, num, obj, Value};
+use crate::runtime::Runtime;
+use crate::scheduler::RequestId;
+
+/// A request forwarded from a connection to the engine thread.
+struct Incoming {
+    prompt: Vec<i32>,
+    max_new_tokens: usize,
+    reply: Sender<Outgoing>,
+}
+
+/// Events streamed back to the connection writer.
+enum Outgoing {
+    Token { id: RequestId, token: i32, index: usize },
+    Done { id: RequestId, tokens: Vec<i32>, ttft_ms: f64, total_ms: f64 },
+    Error(String),
+}
+
+fn event_json(ev: &Outgoing) -> String {
+    match ev {
+        Outgoing::Token { id, token, index } => obj(vec![
+            ("event", json::s("token")),
+            ("id", num(*id as f64)),
+            ("token", num(*token as f64)),
+            ("index", num(*index as f64)),
+        ])
+        .to_string(),
+        Outgoing::Done { id, tokens, ttft_ms, total_ms } => obj(vec![
+            ("event", json::s("done")),
+            ("id", num(*id as f64)),
+            ("tokens", Value::Arr(tokens.iter().map(|t| num(*t as f64)).collect())),
+            ("ttft_ms", num(*ttft_ms)),
+            ("total_ms", num(*total_ms)),
+        ])
+        .to_string(),
+        Outgoing::Error(msg) => obj(vec![
+            ("event", json::s("error")),
+            ("message", json::s(msg)),
+        ])
+        .to_string(),
+    }
+}
+
+/// Serve forever (or until `max_requests` complete, for tests).
+pub fn serve(artifacts_dir: std::path::PathBuf, ecfg: EngineConfig,
+             addr: &str, max_requests: Option<usize>) -> Result<()> {
+    let listener = TcpListener::bind(addr)
+        .with_context(|| format!("binding {addr}"))?;
+    let local = listener.local_addr()?;
+    eprintln!("[server] listening on {local}");
+    let (tx, rx) = channel::<Incoming>();
+
+    // acceptor: one reader thread per connection
+    thread::spawn(move || {
+        for stream in listener.incoming().flatten() {
+            let tx = tx.clone();
+            thread::spawn(move || {
+                let _ = handle_connection(stream, tx);
+            });
+        }
+    });
+
+    engine_loop(artifacts_dir, ecfg, rx, max_requests)
+}
+
+fn handle_connection(stream: TcpStream, tx: Sender<Incoming>) -> Result<()> {
+    let peer = stream.peer_addr()?;
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    let (reply_tx, reply_rx) = channel::<Outgoing>();
+
+    // writer thread: serialize events back to the socket
+    let w = thread::spawn(move || {
+        for ev in reply_rx {
+            let line = event_json(&ev);
+            if writeln!(writer, "{line}").is_err() {
+                break;
+            }
+            let _ = writer.flush();
+        }
+    });
+
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        match parse_request(&line) {
+            Ok((prompt, max_new)) => {
+                tx.send(Incoming { prompt, max_new_tokens: max_new,
+                                   reply: reply_tx.clone() })
+                    .context("engine gone")?;
+            }
+            Err(e) => {
+                let _ = reply_tx.send(Outgoing::Error(format!("{e:#}")));
+            }
+        }
+    }
+    drop(reply_tx);
+    let _ = w.join();
+    eprintln!("[server] {peer} disconnected");
+    Ok(())
+}
+
+fn parse_request(line: &str) -> Result<(Vec<i32>, usize)> {
+    let v = json::parse(line)?;
+    let prompt: Vec<i32> = v
+        .req("prompt")?
+        .as_arr()?
+        .iter()
+        .map(|x| Ok(x.as_i64()? as i32))
+        .collect::<Result<_>>()?;
+    let max_new = v.get("max_new_tokens").map(|x| x.as_usize())
+        .transpose()?.unwrap_or(16);
+    Ok((prompt, max_new))
+}
+
+/// The engine thread: intake + step loop.
+fn engine_loop(artifacts_dir: std::path::PathBuf, ecfg: EngineConfig,
+               rx: Receiver<Incoming>, max_requests: Option<usize>) -> Result<()> {
+    let rt = std::rc::Rc::new(Runtime::load_dir(artifacts_dir)?);
+    let mut engine = Engine::new(rt, ecfg)?;
+    let n = engine.warmup()?;
+    eprintln!("[server] warmed up {n} executables for '{}'", engine.model_name);
+
+    let mut inflight: HashMap<RequestId, (Sender<Outgoing>, usize, u64)> =
+        HashMap::new();
+    let mut completed = 0usize;
+
+    loop {
+        // intake: drain pending requests (block briefly when idle)
+        loop {
+            let msg = if engine.has_unfinished() {
+                match rx.try_recv() {
+                    Ok(m) => Some(m),
+                    Err(TryRecvError::Empty) => None,
+                    Err(TryRecvError::Disconnected) => return Ok(()),
+                }
+            } else {
+                match rx.recv_timeout(Duration::from_millis(50)) {
+                    Ok(m) => Some(m),
+                    Err(_) => None,
+                }
+            };
+            let Some(m) = msg else { break };
+            match engine.add_request(m.prompt, m.max_new_tokens) {
+                Ok(id) => {
+                    inflight.insert(id, (m.reply, 0, engine.now_ns()));
+                }
+                Err(e) => {
+                    let _ = m.reply.send(Outgoing::Error(format!("{e:#}")));
+                }
+            }
+        }
+
+        if !engine.has_unfinished() {
+            if max_requests.is_some_and(|m| completed >= m) {
+                eprintln!("[server] served {completed} requests, exiting");
+                eprintln!("{}", engine.metrics.dump());
+                return Ok(());
+            }
+            continue;
+        }
+
+        engine.step()?;
+
+        // stream any newly finished requests
+        for r in engine.take_finished() {
+            if let Some((reply, _, enq)) = inflight.remove(&r.id) {
+                for (i, &t) in r.output.iter().enumerate() {
+                    let _ = reply.send(Outgoing::Token {
+                        id: r.id, token: t, index: i });
+                }
+                let ttft_ms = r.first_token_ns
+                    .map(|t| (t.saturating_sub(enq)) as f64 / 1e6)
+                    .unwrap_or(0.0);
+                let total_ms = r.finish_ns
+                    .map(|t| (t.saturating_sub(enq)) as f64 / 1e6)
+                    .unwrap_or(0.0);
+                let _ = reply.send(Outgoing::Done {
+                    id: r.id, tokens: r.output.clone(), ttft_ms, total_ms });
+                completed += 1;
+            }
+        }
+    }
+}
+
+/// Blocking client for examples/tests.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub tokens: Vec<i32>,
+    pub ttft_ms: f64,
+    pub total_ms: f64,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting {addr}"))?;
+        Ok(Client {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+        })
+    }
+
+    pub fn submit(&mut self, prompt: &[i32], max_new_tokens: usize) -> Result<()> {
+        let req = obj(vec![
+            ("prompt", Value::Arr(prompt.iter().map(|t| num(*t as f64)).collect())),
+            ("max_new_tokens", num(max_new_tokens as f64)),
+        ]);
+        writeln!(self.writer, "{req}")?;
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    /// Wait for the next `done` event (token events are passed through).
+    pub fn wait_done(&mut self) -> Result<Completion> {
+        loop {
+            let mut line = String::new();
+            if self.reader.read_line(&mut line)? == 0 {
+                anyhow::bail!("server closed connection");
+            }
+            let v = json::parse(line.trim())?;
+            match v.req("event")?.as_str()? {
+                "done" => {
+                    let tokens = v.req("tokens")?.as_arr()?.iter()
+                        .map(|x| Ok(x.as_i64()? as i32))
+                        .collect::<Result<_>>()?;
+                    return Ok(Completion {
+                        tokens,
+                        ttft_ms: v.req("ttft_ms")?.as_f64()?,
+                        total_ms: v.req("total_ms")?.as_f64()?,
+                    });
+                }
+                "error" => anyhow::bail!("server error: {}",
+                                         v.str_field("message")?),
+                _ => continue,
+            }
+        }
+    }
+
+    pub fn generate(&mut self, prompt: &[i32], max_new_tokens: usize)
+        -> Result<Completion> {
+        self.submit(prompt, max_new_tokens)?;
+        self.wait_done()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_parsing() {
+        let (p, n) = parse_request(r#"{"prompt": [1, 2, 3], "max_new_tokens": 4}"#).unwrap();
+        assert_eq!(p, vec![1, 2, 3]);
+        assert_eq!(n, 4);
+        let (_, n) = parse_request(r#"{"prompt": [5]}"#).unwrap();
+        assert_eq!(n, 16, "default max_new_tokens");
+        assert!(parse_request(r#"{"max_new_tokens": 4}"#).is_err());
+    }
+
+    #[test]
+    fn event_serialization_roundtrips() {
+        let ev = Outgoing::Done {
+            id: 3, tokens: vec![7, 8], ttft_ms: 1.5, total_ms: 2.5 };
+        let v = json::parse(&event_json(&ev)).unwrap();
+        assert_eq!(v.str_field("event").unwrap(), "done");
+        assert_eq!(v.req("tokens").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    /// Full loop: spawn a server bound to an ephemeral port, run two
+    /// clients against the tiny model, check determinism vs. the engine.
+    #[test]
+    fn end_to_end_serving() {
+        let dir = crate::default_artifacts_dir();
+        let addr = "127.0.0.1:0";
+        // find a port by binding, then immediately reuse it for the server
+        let probe = TcpListener::bind(addr).unwrap();
+        let port = probe.local_addr().unwrap().port();
+        drop(probe);
+        let bound = format!("127.0.0.1:{port}");
+        let server_addr = bound.clone();
+        let d2 = dir.clone();
+        let handle = std::thread::spawn(move || {
+            serve(d2, EngineConfig::default(), &server_addr, Some(2))
+        });
+        std::thread::sleep(Duration::from_millis(300));
+
+        let mut c = Client::connect(&bound).unwrap();
+        let a = c.generate(&[5, 9, 13], 4).unwrap();
+        assert_eq!(a.tokens.len(), 4);
+        assert!(a.total_ms >= a.ttft_ms);
+        let b = c.generate(&[5, 9, 13], 4).unwrap();
+        assert_eq!(a.tokens, b.tokens, "same prompt, same greedy tokens");
+        handle.join().unwrap().unwrap();
+    }
+}

@@ -1,0 +1,262 @@
+//! Synthetic workload generators for the microbenchmarks and end-to-end
+//! runs — the paper's micro-benchmark framework simulates "varying context
+//! lengths, prompt lengths, and batch sizes" (§5.2) rather than the
+//! fixed-size batches that flatter some kernels.
+//!
+//! Deterministic xorshift RNG so every bench run is reproducible.
+
+/// Small deterministic RNG (xorshift64*).
+#[derive(Debug, Clone)]
+pub struct Rng(u64);
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng(seed.max(1))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n.max(1) as u64) as usize
+    }
+
+    /// Uniform in [lo, hi].
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below(hi - lo + 1)
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-12);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Exponential with rate `lambda` (Poisson inter-arrival times).
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        -self.f64().max(1e-12).ln() / lambda
+    }
+
+    /// Zipf-like length in [1, max]: heavy tail of long sequences, the
+    /// shape real prompt-length distributions show.
+    pub fn zipf_len(&mut self, max: usize, alpha: f64) -> usize {
+        let u = self.f64().max(1e-9);
+        let x = (u.powf(-1.0 / alpha) - 1.0) / ((max as f64).powf(1.0) - 1.0).max(1.0)
+            * max as f64;
+        (x as usize % max) + 1
+    }
+
+    pub fn f32_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.normal() as f32).collect()
+    }
+
+    pub fn tokens(&mut self, n: usize, vocab: usize) -> Vec<i32> {
+        (0..n).map(|_| self.below(vocab) as i32).collect()
+    }
+}
+
+/// One sequence of a microbench scenario: (context_len, query_len).
+pub type SeqShape = (usize, usize);
+
+/// A micro-benchmark scenario (§5.2): a batch composition over sequence
+/// shapes, matching how Figures 6–8 parameterize their sweeps.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: String,
+    pub seqs: Vec<SeqShape>,
+}
+
+impl Scenario {
+    /// Decode-only batch: every sequence has query_len == 1.
+    /// `vary` jitters context lengths around `seq_len` like real batches
+    /// ("sequences contained within a batch have variable lengths", §7.1).
+    pub fn decode(batch: usize, seq_len: usize, rng: &mut Rng, vary: bool) -> Self {
+        let seqs = (0..batch)
+            .map(|_| {
+                let len = if vary {
+                    rng.range(seq_len / 2, seq_len).max(1)
+                } else {
+                    seq_len
+                };
+                (len, 1)
+            })
+            .collect();
+        Scenario { name: format!("decode-b{batch}-l{seq_len}"), seqs }
+    }
+
+    /// Prefill-only batch of prompts around `prompt_len`.
+    pub fn prefill(batch: usize, prompt_len: usize, rng: &mut Rng, vary: bool) -> Self {
+        let seqs = (0..batch)
+            .map(|_| {
+                let len = if vary {
+                    rng.range(prompt_len / 2, prompt_len).max(1)
+                } else {
+                    prompt_len
+                };
+                (0, len)
+            })
+            .collect();
+        Scenario { name: format!("prefill-b{batch}-l{prompt_len}"), seqs }
+    }
+
+    /// Mixed batch with a given decode share (Fig. 6c/6d x-axis families:
+    /// 0%, 50%, 100% decode).
+    pub fn mixed(batch: usize, seq_len: usize, decode_share: f64,
+                 rng: &mut Rng) -> Self {
+        let n_decode = (batch as f64 * decode_share).round() as usize;
+        let mut seqs: Vec<SeqShape> = Vec::with_capacity(batch);
+        for i in 0..batch {
+            let len = rng.range(seq_len / 2, seq_len).max(2);
+            if i < n_decode {
+                seqs.push((len - 1, 1));
+            } else {
+                // prefill: whole prompt is new
+                seqs.push((0, len));
+            }
+        }
+        Scenario {
+            name: format!("mixed-b{batch}-l{seq_len}-d{:.0}",
+                          decode_share * 100.0),
+            seqs,
+        }
+    }
+
+    pub fn total_query_tokens(&self) -> usize {
+        self.seqs.iter().map(|s| s.1).sum()
+    }
+
+    pub fn total_kv_tokens(&self) -> usize {
+        self.seqs.iter().map(|s| s.0 + s.1).sum()
+    }
+
+    pub fn max_seq_len(&self) -> usize {
+        self.seqs.iter().map(|s| s.0 + s.1).max().unwrap_or(0)
+    }
+
+    pub fn decode_share(&self) -> f64 {
+        if self.seqs.is_empty() {
+            return 0.0;
+        }
+        self.seqs.iter().filter(|s| s.1 == 1 && s.0 > 0).count() as f64
+            / self.seqs.len() as f64
+    }
+}
+
+/// Poisson request arrivals with zipf-ish prompt lengths, for the serving
+/// example and end-to-end throughput runs.
+#[derive(Debug, Clone)]
+pub struct ArrivalProcess {
+    pub rate_per_s: f64,
+    pub min_prompt: usize,
+    pub max_prompt: usize,
+    pub min_new: usize,
+    pub max_new: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArrivalEvent {
+    /// Seconds after start.
+    pub at_s: f64,
+    pub prompt_len: usize,
+    pub max_new_tokens: usize,
+}
+
+impl ArrivalProcess {
+    pub fn sample(&self, n: usize, rng: &mut Rng) -> Vec<ArrivalEvent> {
+        let mut t = 0.0;
+        (0..n)
+            .map(|_| {
+                t += rng.exponential(self.rate_per_s);
+                ArrivalEvent {
+                    at_s: t,
+                    prompt_len: rng.range(self.min_prompt, self.max_prompt),
+                    max_new_tokens: rng.range(self.min_new, self.max_new),
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn ranges_are_bounded() {
+        let mut rng = Rng::new(7);
+        for _ in 0..1000 {
+            let v = rng.range(3, 9);
+            assert!((3..=9).contains(&v));
+            let z = rng.zipf_len(100, 1.1);
+            assert!((1..=100).contains(&z));
+        }
+    }
+
+    #[test]
+    fn decode_scenario_shape() {
+        let mut rng = Rng::new(1);
+        let s = Scenario::decode(4, 256, &mut rng, true);
+        assert_eq!(s.seqs.len(), 4);
+        assert!(s.seqs.iter().all(|&(c, q)| q == 1 && c >= 128 && c <= 256));
+        assert_eq!(s.decode_share(), 1.0);
+    }
+
+    #[test]
+    fn mixed_scenario_share() {
+        let mut rng = Rng::new(2);
+        let s = Scenario::mixed(8, 128, 0.5, &mut rng);
+        assert_eq!(s.seqs.len(), 8);
+        assert!((s.decode_share() - 0.5).abs() < 0.26);
+        let p = Scenario::mixed(8, 128, 0.0, &mut rng);
+        assert_eq!(p.decode_share(), 0.0);
+    }
+
+    #[test]
+    fn arrivals_monotone() {
+        let mut rng = Rng::new(3);
+        let proc = ArrivalProcess {
+            rate_per_s: 10.0,
+            min_prompt: 4,
+            max_prompt: 64,
+            min_new: 1,
+            max_new: 16,
+        };
+        let ev = proc.sample(50, &mut rng);
+        for w in ev.windows(2) {
+            assert!(w[0].at_s <= w[1].at_s);
+        }
+        assert!(ev.iter().all(|e| e.prompt_len >= 4 && e.prompt_len <= 64));
+    }
+
+    #[test]
+    fn normal_has_sane_moments() {
+        let mut rng = Rng::new(11);
+        let xs: Vec<f64> = (0..20000).map(|_| rng.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / xs.len() as f64;
+        assert!(mean.abs() < 0.05, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.1, "var={var}");
+    }
+}

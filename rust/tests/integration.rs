@@ -1,0 +1,194 @@
+//! Cross-module integration tests: runtime + engine + scheduler + kvcache
+//! against the real compiled artifacts (requires `make artifacts`).
+
+use std::rc::Rc;
+
+use triton_anatomy::config::{EngineConfig, Variant};
+use triton_anatomy::engine::Engine;
+use triton_anatomy::heuristics::{DecisionTree, Heuristics, KernelChoice};
+use triton_anatomy::microbench::{self, BenchOpts};
+use triton_anatomy::runtime::Runtime;
+use triton_anatomy::workload::{Rng, Scenario};
+
+fn runtime() -> Rc<Runtime> {
+    Rc::new(Runtime::load_dir(triton_anatomy::default_artifacts_dir()).unwrap())
+}
+
+fn engine_with(max_tokens: usize, max_seqs: usize) -> Engine {
+    Engine::new(runtime(), EngineConfig {
+        max_batched_tokens: max_tokens,
+        max_num_seqs: max_seqs,
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+fn pinned(variant: Variant, block_q: usize) -> Heuristics {
+    let leaf = DecisionTree::Leaf(KernelChoice {
+        variant, tile_n: 16, block_q, num_segments: 4, use_dot: false });
+    Heuristics { decode: leaf.clone(), prefill: leaf }
+}
+
+/// Greedy generation must be identical under every kernel variant that
+/// has compiled artifacts — the functional bar for heuristic swapping.
+#[test]
+fn all_variants_generate_identical_tokens() {
+    let prompt = vec![42, 901, 13, 512, 7, 1100, 64];
+    let mut reference: Option<Vec<i32>> = None;
+    for variant in [Variant::QBlock, Variant::Naive, Variant::Static,
+                    Variant::Flash, Variant::Parts] {
+        let mut e = engine_with(64, 4);
+        e.heuristics = pinned(variant, 1);
+        e.add_request(prompt.clone(), 6).unwrap();
+        let fin = e.run_to_completion().unwrap();
+        let toks = fin[0].output.clone();
+        match &reference {
+            None => reference = Some(toks),
+            Some(r) => assert_eq!(&toks, r, "variant {variant:?} diverged"),
+        }
+    }
+}
+
+/// Chunked prefill through the real engine: a prompt longer than the
+/// token budget must produce the same output as an unconstrained run.
+#[test]
+fn chunked_prefill_is_equivalent() {
+    let prompt: Vec<i32> = (1..=40).collect();
+    let mut unchunked = engine_with(64, 4);
+    unchunked.add_request(prompt.clone(), 4).unwrap();
+    let a = unchunked.run_to_completion().unwrap();
+
+    let mut chunked = engine_with(16, 4); // forces 3 prefill chunks
+    chunked.add_request(prompt, 4).unwrap();
+    let b = chunked.run_to_completion().unwrap();
+    assert_eq!(a[0].output, b[0].output);
+    assert!(chunked.metrics.steps > unchunked.metrics.steps);
+}
+
+/// Many concurrent requests with tight cache pressure: everything must
+/// finish, pages must be recycled, and per-request outputs must match a
+/// solo run (continuous batching is transparent).
+#[test]
+fn saturated_engine_drains_correctly() {
+    let mut e = engine_with(64, 4);
+    let mut prompts = Vec::new();
+    let mut rng = Rng::new(3);
+    for i in 0..6 {
+        let p = rng.tokens(5 + (i * 3) % 11, 2048);
+        e.add_request(p.clone(), 3 + i % 4).unwrap();
+        prompts.push(p);
+    }
+    let mut fin = e.run_to_completion().unwrap();
+    assert_eq!(fin.len(), 6);
+    fin.sort_by_key(|r| r.id);
+    assert_eq!(e.free_page_fraction(), 1.0, "all pages returned");
+    // spot-check one against a solo engine
+    let mut solo = engine_with(64, 4);
+    solo.add_request(prompts[2].clone(), 3 + 2 % 4).unwrap();
+    let s = solo.run_to_completion().unwrap();
+    assert_eq!(fin[2].output, s[0].output);
+}
+
+/// The engine's heuristic dispatch must route decode-only batches and
+/// prefill batches to different kernels (per the default tree) and record
+/// the picks.
+#[test]
+fn heuristics_route_by_phase() {
+    let mut e = engine_with(64, 4);
+    e.add_request(vec![5; 20], 4).unwrap();
+    e.run_to_completion().unwrap();
+    // both prefill and decode steps ran; variant picks recorded
+    let total: u64 = e.metrics.variant_picks.values().sum();
+    assert_eq!(total, e.metrics.steps);
+    assert!(e.metrics.generated_tokens >= 4);
+}
+
+/// Microbench + runtime agreement across buckets: the same logical
+/// scenario executed through two differently-sized compiled envelopes
+/// must produce the same numbers (padding is inert).
+#[test]
+fn bucket_padding_is_inert() {
+    let rt = runtime();
+    let arts: Vec<_> = rt.manifest.kernel_artifacts()
+        .filter(|a| a.config.variant == Variant::QBlock
+            && a.config.tile_n == 16 && !a.config.use_dot)
+        .cloned()
+        .collect();
+    // need at least two buckets of the same kernel family
+    if arts.len() < 2 {
+        return;
+    }
+    let mut rng = Rng::new(10);
+    let scn = Scenario::decode(2, 60, &mut rng, true);
+    for pair in arts.windows(2) {
+        // operand streams are only comparable when the cache geometry
+        // matches (see build_operands)
+        if pair[0].bucket.num_slots != pair[1].bucket.num_slots
+            || !microbench::scenario_fits(&pair[0], &scn)
+            || !microbench::scenario_fits(&pair[1], &scn) {
+            continue;
+        }
+        assert!(microbench::outputs_match(&rt, &pair[0], &pair[1], &scn,
+                                          123, 2e-4).unwrap(),
+                "{} vs {}", pair[0].name, pair[1].name);
+    }
+}
+
+/// Preemption under extreme page pressure still completes and stays
+/// deterministic.
+#[test]
+fn preemption_preserves_determinism() {
+    // tiny page pool via a large request load on the default cache
+    let mut e = engine_with(256, 4);
+    let p1 = vec![9; 100];
+    let p2 = vec![17; 100];
+    e.add_request(p1.clone(), 20).unwrap();
+    e.add_request(p2.clone(), 20).unwrap();
+    let mut fin = e.run_to_completion().unwrap();
+    fin.sort_by_key(|r| r.id);
+    assert_eq!(fin.len(), 2);
+
+    let mut solo = engine_with(256, 1);
+    solo.add_request(p2, 20).unwrap();
+    let s = solo.run_to_completion().unwrap();
+    assert_eq!(fin[1].output, s[0].output,
+               "preemption/recompute must not change tokens");
+}
+
+/// Throughput accounting sanity: generated tokens equal the sum of
+/// finished outputs.
+#[test]
+fn metrics_token_accounting() {
+    let mut e = engine_with(64, 4);
+    e.add_request(vec![3; 8], 5).unwrap();
+    e.add_request(vec![4; 12], 7).unwrap();
+    let fin = e.run_to_completion().unwrap();
+    let out_total: usize = fin.iter().map(|r| r.output.len()).sum();
+    assert_eq!(out_total, 12);
+    assert_eq!(e.metrics.generated_tokens as usize, out_total);
+}
+
+/// Autotune sweep smoke over the real artifacts: samples come back for
+/// every scenario that fits, and the fitted tree beats or ties the
+/// default on its own training set.
+#[test]
+fn autotune_sweep_and_fit() {
+    use triton_anatomy::autotune;
+    let rt = runtime();
+    let mut rng = Rng::new(0xF00D);
+    let grid = vec![
+        Scenario::decode(1, 96, &mut rng, true),
+        Scenario::decode(4, 256, &mut rng, true),
+        Scenario::prefill(2, 24, &mut rng, true),
+    ];
+    let samples = autotune::sweep(&rt, &grid,
+                                  BenchOpts { warmup: 1, iters: 2 }, false)
+        .unwrap();
+    assert_eq!(samples.len(), 3);
+    let h = autotune::fit_heuristics(&samples, 3);
+    let tuned = autotune::regret_pct(&h, &samples);
+    let default = autotune::regret_pct(
+        &Heuristics::default_tree(), &samples);
+    assert!(tuned <= default + 1e-9,
+            "tuned {tuned:.1}% worse than default {default:.1}%");
+}
