@@ -1,0 +1,16 @@
+# Build entry points for the triton-anatomy reproduction stack.
+#
+# `artifacts` regenerates the checked-in sim-profile artifact set that the
+# Rust layer serves (manifest + sim-spec executables + tiny weights). The
+# real JAX/Pallas AOT flow (`python -m compile.aot`) produces the same
+# manifest schema on a machine with a working XLA toolchain.
+
+.PHONY: artifacts test tier1
+
+artifacts:
+	python3 python/compile/gen_sim_artifacts.py
+
+tier1:
+	cd rust && cargo build --release && cargo test -q
+
+test: tier1

@@ -1,0 +1,306 @@
+"""Generate the *sim profile* artifact set for the Rust serving layer.
+
+The real AOT flow (``python -m compile.aot``) lowers Pallas kernels through
+JAX into HLO-text executables. That flow needs a working JAX/XLA toolchain
+at artifact-build time and the (non-vendored) PJRT ``xla`` crate at serve
+time. The sim profile replaces both for CI and offline development: it
+emits the same manifest schema the Rust side loads, but each "HLO" file is
+a small ``key = value`` sim-spec that the vendored ``xla`` stand-in crate
+(``rust/vendor/xla``) interprets deterministically on the CPU.
+
+The generated set is checked in under ``rust/artifacts/`` so that
+``cargo build --release && cargo test -q`` works from a fresh clone with
+no Python step. Re-run this script if the schema or the envelope grid
+changes:
+
+    python3 python/compile/gen_sim_artifacts.py
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import struct
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+OUT = os.path.normpath(os.path.join(HERE, "..", "..", "rust", "artifacts"))
+
+# ----------------------------------------------------------------- geometry
+
+TINY = {
+    "num_layers": 2,
+    "hidden_size": 64,
+    "num_q_heads": 4,
+    "num_kv_heads": 2,
+    "head_size": 16,
+    "intermediate_size": 128,
+    "vocab_size": 2048,
+    "rope_theta": 10000.0,
+    "max_model_len": 512,
+}
+
+KERNEL_GEOM = dict(TINY, num_layers=1, max_model_len=2048)
+
+BLOCK = 16  # KV page size in tokens, shared by every artifact
+
+# Model-step cache: 13 pages (12 usable + scratch page 0). Deliberately
+# small so the preemption/recompute and prefix-cache eviction paths are
+# exercised by ordinary integration workloads.
+MODEL_SLOTS = BLOCK * 13
+MODEL_MAX_SEQS = 8
+STATE_LEN = 2 * MODEL_SLOTS + MODEL_MAX_SEQS
+
+# Kernel microbench cache: large enough for the autotune sweep scenarios.
+KERNEL_SLOTS = BLOCK * 160
+
+# Relative step cost of each kernel variant in the sim (the paper's
+# ordering: naive far behind, optimized variants clustered near flash).
+COST = {"naive": 8, "qblock": 2, "parts": 1, "static": 1, "flash": 1}
+
+
+def kcfg(variant, tile_n, block_q, num_segments=4, static_programs=16,
+         use_dot=False):
+    return {
+        "variant": variant,
+        "block_size": BLOCK,
+        "tile_n": tile_n,
+        "block_q": block_q,
+        "num_segments": num_segments,
+        "static_programs": static_programs,
+        "use_dot": use_dot,
+    }
+
+
+def bucket(max_seqs, max_tokens, max_blocks, num_slots):
+    return {
+        "max_seqs": max_seqs,
+        "max_tokens": max_tokens,
+        "max_blocks": max_blocks,
+        "num_slots": num_slots,
+    }
+
+
+def tensor(name, shape):
+    return {"name": name, "shape": shape, "dtype": "f32"}
+
+
+def itensor(name, shape):
+    return {"name": name, "shape": shape, "dtype": "i32"}
+
+
+# ------------------------------------------------------------------ weights
+
+WEIGHT_SHAPES = [
+    ("embed_tokens", [16, 4]),
+    ("rope_cos", [8, 2]),
+    ("rope_sin", [8, 2]),
+    ("wq", [4, 8]),
+    ("wk", [4, 4]),
+    ("wv", [4, 4]),
+    ("wo", [8, 4]),
+    ("w_gate", [4, 8]),
+    ("w_up", [4, 8]),
+    ("w_down", [8, 4]),
+    ("norm_in", [8]),
+    ("lm_head", [4, 16]),
+]
+
+
+def gen_weights():
+    """Deterministic finite values (fixed LCG, no numpy dependency)."""
+    state = 0x2545F4914F6CDD1D
+    entries, blob, offset = [], b"", 0
+    for name, shape in WEIGHT_SHAPES:
+        n = 1
+        for s in shape:
+            n *= s
+        vals = []
+        for _ in range(n):
+            state = (state * 6364136223846793005 + 1442695040888963407) % (1 << 64)
+            vals.append(((state >> 33) % 2000 - 1000) / 500.0)
+        raw = struct.pack("<%df" % n, *vals)
+        entries.append({"name": name, "shape": shape, "offset": offset,
+                        "nbytes": len(raw)})
+        blob += raw
+        offset += len(raw)
+    return entries, blob
+
+
+# ---------------------------------------------------------------- sim specs
+
+def sim_kernel(cfg, b):
+    return {
+        "kind": "kernel",
+        "num_q_heads": KERNEL_GEOM["num_q_heads"],
+        "num_kv_heads": KERNEL_GEOM["num_kv_heads"],
+        "head_size": KERNEL_GEOM["head_size"],
+        "block_size": cfg["block_size"],
+        "max_seqs": b["max_seqs"],
+        "max_tokens": b["max_tokens"],
+        "max_blocks": b["max_blocks"],
+        "num_slots": b["num_slots"],
+        "cost_loops": COST[cfg["variant"]],
+    }
+
+
+def sim_model(cfg, b, n_params):
+    return {
+        "kind": "model",
+        "n_params": n_params,
+        "vocab": TINY["vocab_size"],
+        "block_size": cfg["block_size"],
+        "max_seqs": b["max_seqs"],
+        "max_tokens": b["max_tokens"],
+        "max_blocks": b["max_blocks"],
+        "num_slots": b["num_slots"],
+        "state_len": STATE_LEN,
+        "cost_loops": COST[cfg["variant"]],
+    }
+
+
+def write_spec(name, spec):
+    os.makedirs(os.path.join(OUT, "sim"), exist_ok=True)
+    rel = os.path.join("sim", name + ".hlo")
+    lines = ["# sim-spec artifact (see rust/vendor/xla)"]
+    lines.append("kind = %s" % spec["kind"])
+    for k, v in spec.items():
+        if k != "kind":
+            lines.append("%s = %d" % (k, v))
+    with open(os.path.join(OUT, rel), "w") as f:
+        f.write("\n".join(lines) + "\n")
+    return rel
+
+
+def model_inputs(weights, b):
+    ins = [tensor(e["name"], e["shape"]) for e in weights]
+    ins += [
+        itensor("token_ids", [b["max_tokens"]]),
+        itensor("positions", [b["max_tokens"]]),
+        tensor("state", [STATE_LEN]),
+        itensor("block_table", [b["max_seqs"], b["max_blocks"]]),
+        itensor("seq_lens", [b["max_seqs"]]),
+        itensor("ctx_lens", [b["max_seqs"]]),
+        itensor("query_start_loc", [b["max_seqs"] + 1]),
+        itensor("slot_mapping", [b["max_tokens"]]),
+        itensor("last_token_idx", [b["max_seqs"]]),
+    ]
+    return ins
+
+
+def kernel_inputs(b):
+    hd = KERNEL_GEOM["num_q_heads"] * KERNEL_GEOM["head_size"]
+    kvd = KERNEL_GEOM["num_kv_heads"] * KERNEL_GEOM["head_size"]
+    return [
+        tensor("q", [b["max_tokens"], hd]),
+        tensor("k_cache", [b["num_slots"], kvd]),
+        tensor("v_cache", [b["num_slots"], kvd]),
+        itensor("block_table", [b["max_seqs"], b["max_blocks"]]),
+        itensor("seq_lens", [b["max_seqs"]]),
+        itensor("ctx_lens", [b["max_seqs"]]),
+        itensor("query_start_loc", [b["max_seqs"] + 1]),
+    ]
+
+
+def main():
+    os.makedirs(OUT, exist_ok=True)
+    weights, blob = gen_weights()
+    with open(os.path.join(OUT, "tiny.weights.bin"), "wb") as f:
+        f.write(blob)
+
+    artifacts = []
+
+    # ---- model-step executables: (variant, bucket envelope) grid
+    mb_t32 = bucket(MODEL_MAX_SEQS, 32, 16, MODEL_SLOTS)
+    mb_t128 = bucket(MODEL_MAX_SEQS, 128, 16, MODEL_SLOTS)
+    mb_d8 = bucket(MODEL_MAX_SEQS, 8, 16, MODEL_SLOTS)  # decode envelope
+    model_grid = [
+        ("qblock", kcfg("qblock", 16, 1), [("t32", mb_t32), ("t128", mb_t128),
+                                           ("d8", mb_d8)]),
+        ("naive", kcfg("naive", 16, 1), [("t128", mb_t128)]),
+        ("static", kcfg("static", 32, 1, use_dot=True), [("t128", mb_t128),
+                                                         ("d8", mb_d8)]),
+        ("flash", kcfg("flash", 32, 1, use_dot=True), [("t128", mb_t128),
+                                                       ("d8", mb_d8)]),
+        ("parts", kcfg("parts", 32, 1, num_segments=8), [("d8", mb_d8)]),
+    ]
+    for vname, cfg, envs in model_grid:
+        for tag, b in envs:
+            name = "m_tiny_%s_%s" % (vname, tag)
+            rel = write_spec(name, sim_model(cfg, b, len(weights)))
+            artifacts.append({
+                "kind": "model",
+                "name": name,
+                "path": rel,
+                "model": "tiny",
+                "config": cfg,
+                "bucket": b,
+                "inputs": model_inputs(weights, b),
+                "outputs": [tensor("state", [STATE_LEN])],
+            })
+
+    # ---- sampled-token extractor over the flat state
+    ex_name = "x_tiny_extract"
+    ex_rel = write_spec(ex_name, {
+        "kind": "extract",
+        "tail_offset": 2 * MODEL_SLOTS,
+        "tail_len": MODEL_MAX_SEQS,
+    })
+    artifacts.append({
+        "kind": "extract",
+        "name": ex_name,
+        "path": ex_rel,
+        "model": "tiny",
+        "config": kcfg("qblock", 16, 1),
+        "bucket": mb_d8,
+        "inputs": [tensor("state", [STATE_LEN])],
+        "outputs": [tensor("tail", [MODEL_MAX_SEQS])],
+    })
+
+    # ---- kernel (attention-layer-only) executables for microbench/tune
+    kb_s = bucket(8, 64, 32, KERNEL_SLOTS)
+    kb_l = bucket(8, 128, 32, KERNEL_SLOTS)
+    kb_d = bucket(8, 8, 32, KERNEL_SLOTS)
+    kernel_grid = [
+        ("k_qblock_tn16_t64", kcfg("qblock", 16, 4), kb_s),
+        ("k_qblock_tn16_t128", kcfg("qblock", 16, 4), kb_l),
+        ("k_naive_tn16", kcfg("naive", 16, 1), kb_s),
+        ("k_parts_tn32", kcfg("parts", 32, 1, num_segments=8), kb_d),
+        ("k_static_tn32", kcfg("static", 32, 4, use_dot=True), kb_s),
+        ("k_flash_tn32", kcfg("flash", 32, 4, use_dot=True), kb_s),
+    ]
+    for name, cfg, b in kernel_grid:
+        rel = write_spec(name, sim_kernel(cfg, b))
+        hd = KERNEL_GEOM["num_q_heads"] * KERNEL_GEOM["head_size"]
+        artifacts.append({
+            "kind": "kernel",
+            "name": name,
+            "path": rel,
+            "config": cfg,
+            "bucket": b,
+            "inputs": kernel_inputs(b),
+            "outputs": [tensor("out", [b["max_tokens"], hd])],
+        })
+
+    manifest = {
+        "version": 1,
+        "profile": "sim",
+        "kernel_geom": KERNEL_GEOM,
+        "models": {
+            "tiny": {
+                "config": TINY,
+                "weights_path": "tiny.weights.bin",
+                "tensors": weights,
+            }
+        },
+        "artifacts": artifacts,
+    }
+    path = os.path.join(OUT, "manifest-sim.json")
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print("wrote %s (%d artifacts, %d weight tensors)"
+          % (path, len(artifacts), len(weights)))
+
+
+if __name__ == "__main__":
+    main()

@@ -272,6 +272,51 @@ mod tests {
         assert_eq!(f.total_new_tokens, 11);
     }
 
+    /// A prefix-cache hit admits a sequence with nonzero context: metadata
+    /// rows must cover only the uncached tail, the block table must carry
+    /// the attached pages, and slot mapping must start past the hit.
+    #[test]
+    fn cached_admission_skips_computed_positions() {
+        let ecfg = EngineConfig {
+            max_batched_tokens: 512,
+            max_num_seqs: 8,
+            watermark_blocks: 0,
+            ..Default::default()
+        };
+        let mut s = Scheduler::new(ecfg);
+        let mut kv = KvCacheManager::new(16 * 65, 16).with_prefix_caching(true);
+        let prompt: Vec<i32> = (100..148).collect(); // 48 tokens, 3 blocks
+        s.add_request(0, prompt.clone(), 1, 0);
+        let b = s.schedule(&mut kv);
+        let results: Vec<_> = b.seqs.iter().map(|x| (x.id, 7i32)).collect();
+        s.on_step_complete(&b, &results, &mut kv, 0);
+        assert!(!s.has_unfinished(), "one-token request drains in a step");
+
+        s.add_request(1, prompt, 1, 0);
+        let b = s.schedule(&mut kv);
+        assert_eq!(b.seqs[0].ctx_len, 32, "two full blocks attach");
+        let cfg = cfg_with(Variant::QBlock, 4);
+        let bucket = Bucket { max_seqs: 4, max_tokens: 32, max_blocks: 8,
+                              num_slots: 16 * 65 };
+        let md = build(&b, &cfg, &bucket, &kv).unwrap();
+        assert_eq!(md.ctx_lens[0], 32);
+        assert_eq!(md.seq_lens[0], 48);
+        // only the 16 uncached tokens occupy metadata rows
+        assert_eq!(md.positions[..16],
+                   (32..48).collect::<Vec<i32>>()[..]);
+        assert_eq!(md.token_ids[..16],
+                   (132..148).collect::<Vec<i32>>()[..]);
+        // attached pages appear in the block table; the write targets the
+        // first uncached block
+        let pages = kv.table(b.seqs[0].handle).pages().to_vec();
+        assert_eq!(md.block_table[..3],
+                   pages.iter().map(|&p| p as i32).collect::<Vec<_>>()[..]);
+        assert_eq!(md.slot_mapping[0], pages[2] as i32 * 16);
+        // padding lanes stay on the scratch page
+        assert_eq!(md.slot_mapping[16], 0);
+        assert_eq!(md.features.total_new_tokens, 16);
+    }
+
     /// Randomized: layout regions never overlap and stay inside the bucket.
     #[test]
     fn random_batches_pack_disjointly() {

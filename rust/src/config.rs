@@ -158,8 +158,14 @@ pub struct EngineConfig {
     /// Admission cap: maximum concurrently running sequences.
     pub max_num_seqs: usize,
     /// Keep this many KV pages free as headroom before admitting prefills
-    /// (prevents immediate preemption of fresh requests).
+    /// (prevents immediate preemption of fresh requests). With prefix
+    /// caching on, evictable cached pages count as free for this check.
     pub watermark_blocks: usize,
+    /// Automatic prefix caching: reuse full KV pages across requests via a
+    /// content-addressed block index (vLLM-style chain hashes). Greedy
+    /// outputs are token-identical with the knob on or off; on simply
+    /// turns shared-prefix re-prefill into a refcount bump.
+    pub enable_prefix_caching: bool,
     /// Which model's artifacts to serve (manifest key).
     pub model: String,
     /// Fallback kernel variant when the heuristics file has no opinion.
@@ -173,6 +179,7 @@ impl Default for EngineConfig {
             max_batched_tokens: 256,
             max_num_seqs: 8,
             watermark_blocks: 2,
+            enable_prefix_caching: true,
             model: "tiny".to_string(),
             default_variant: Variant::QBlock,
         }

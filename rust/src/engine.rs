@@ -109,7 +109,8 @@ impl Engine {
         let state = rt.upload(&HostTensor::F32(vec![0.0; state_len]), &[state_len])?;
         let extract = rt.executable(&extract_spec.name)?;
 
-        let kv = KvCacheManager::new(num_slots, block_size);
+        let kv = KvCacheManager::new(num_slots, block_size)
+            .with_prefix_caching(ecfg.enable_prefix_caching);
         let scheduler = Scheduler::new(ecfg.clone());
         Ok(Engine {
             rt,
@@ -264,6 +265,11 @@ impl Engine {
         self.metrics.dispatch_us.record(dispatch_us);
         self.metrics.overhead_us.record(step_us - dispatch_us);
         self.metrics.preemptions += batch.preempted.len() as u64;
+        let cache = self.kv.cache_stats();
+        self.metrics.prefix_hit_tokens = cache.hit_tokens;
+        self.metrics.prefix_lookup_tokens = cache.lookup_tokens;
+        self.metrics.prefix_evictions = cache.evictions;
+        self.metrics.prefix_cached_blocks = self.kv.cached_blocks() as u64;
         let decodes = batch
             .seqs
             .iter()
@@ -273,7 +279,7 @@ impl Engine {
         self.metrics.prompt_tokens += batch
             .seqs
             .iter()
-            .filter(|s| s.ctx_len == 0 || !s.samples)
+            .filter(|s| s.prefill)
             .map(|s| s.tokens.len() as u64)
             .sum::<u64>();
         *self

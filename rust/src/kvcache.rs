@@ -1,4 +1,5 @@
-//! Paged KV-cache manager — the PagedAttention substrate (§2.4).
+//! Paged KV-cache manager — the PagedAttention substrate (§2.4) plus the
+//! automatic prefix cache built on top of it (§7's serving-layer lever).
 //!
 //! GPU memory for keys/values is carved into fixed-size *pages* of
 //! `block_size` tokens. A sequence owns a growing list of physical pages
@@ -7,8 +8,27 @@
 //! it finishes or is preempted. Reference counting supports copy-on-write
 //! prefix sharing (fork).
 //!
+//! # Automatic prefix caching
+//!
+//! When enabled, every *full* page a sequence computes is registered in a
+//! content-addressed index keyed by the vLLM-style chain hash of its
+//! token-aligned block chain: `key(k) = H(key(k-1), tokens of block k)`.
+//! A new request whose prompt shares full pages with any live or
+//! recently-finished sequence gets those pages attached by refcount bump
+//! instead of re-prefill.
+//!
+//! Pages whose refcount drops to zero while registered are *not* returned
+//! to the free list: they park in an LRU pool of evictable pages, still
+//! addressable by the index. The allocator reclaims them lazily — newest
+//! chain links first, so a cached prefix never dangles past its parent —
+//! which means "free" capacity is `free list + evictable pool` and a cache
+//! entry costs nothing when memory is tight.
+//!
 //! Physical page 0 is reserved as the *scratch page*: padded slot-mapping
-//! lanes scatter into it, so it is never allocated to a sequence.
+//! lanes scatter into it, so it is never allocated to a sequence and never
+//! enters the index.
+
+use std::collections::{BTreeMap, HashMap};
 
 use anyhow::{bail, Result};
 
@@ -73,12 +93,31 @@ impl BlockAllocator {
     }
 
     pub fn release(&mut self, page: PageId) {
+        if self.release_detached(page) {
+            self.free.push(page);
+        }
+    }
+
+    /// Decrement without returning the page to the free list. Returns true
+    /// when the count hit zero — the caller now owns the detached page and
+    /// must either `free_detached` or `reuse_detached` it.
+    fn release_detached(&mut self, page: PageId) -> bool {
         let rc = &mut self.refcount[page as usize];
         assert!(*rc > 0, "double free of page {page}");
         *rc -= 1;
-        if *rc == 0 {
-            self.free.push(page);
-        }
+        *rc == 0
+    }
+
+    /// Return a detached (refcount-0, off-list) page to the free list.
+    fn free_detached(&mut self, page: PageId) {
+        debug_assert_eq!(self.refcount[page as usize], 0);
+        self.free.push(page);
+    }
+
+    /// Hand a detached (refcount-0, off-list) page back out as allocated.
+    fn reuse_detached(&mut self, page: PageId) {
+        debug_assert_eq!(self.refcount[page as usize], 0);
+        self.refcount[page as usize] = 1;
     }
 
     pub fn ref_count(&self, page: PageId) -> u32 {
@@ -92,6 +131,10 @@ pub struct BlockTable {
     pages: Vec<PageId>,
     /// tokens whose K/V live in the cache (context + written this step)
     len: usize,
+    /// full blocks already offered to the prefix index (commit cursor)
+    committed: usize,
+    /// chain hash through block `committed - 1` (HASH_SEED when 0)
+    chain: u64,
 }
 
 impl BlockTable {
@@ -113,11 +156,58 @@ impl BlockTable {
     }
 }
 
-/// The cache manager: allocator + all live block tables.
+/// Prefix-cache counters, exported through the engine metrics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheStats {
+    /// Prefix lookups performed at admission.
+    pub lookups: u64,
+    /// Prompt tokens covered by those lookups.
+    pub lookup_tokens: u64,
+    /// Tokens served from cached pages instead of re-prefill.
+    pub hit_tokens: u64,
+    /// Cached refcount-0 pages reclaimed by the allocator.
+    pub evictions: u64,
+}
+
+impl CacheStats {
+    /// Token hit rate over all admission lookups (0..=1).
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookup_tokens == 0 {
+            0.0
+        } else {
+            self.hit_tokens as f64 / self.lookup_tokens as f64
+        }
+    }
+}
+
+const HASH_SEED: u64 = 0xCBF2_9CE4_8422_2325;
+const HASH_MUL: u64 = 0x0000_0100_0000_01B3;
+
+/// Chain hash of one full block given the previous link (FNV-1a style).
+fn hash_block(prev: u64, tokens: &[i32]) -> u64 {
+    let mut h = prev.wrapping_mul(HASH_MUL) ^ (tokens.len() as u64);
+    for &t in tokens {
+        h = (h ^ (t as u32 as u64)).wrapping_mul(HASH_MUL);
+    }
+    h
+}
+
+/// The cache manager: allocator + all live block tables + prefix index.
 #[derive(Debug)]
 pub struct KvCacheManager {
     alloc: BlockAllocator,
     tables: Vec<Option<BlockTable>>,
+    caching: bool,
+    /// chain hash → physical page holding that full block
+    index: HashMap<u64, PageId>,
+    /// page → its registered chain hash (None while unregistered)
+    page_key: Vec<Option<u64>>,
+    /// LRU pool of refcount-0 cached pages: release tick → page
+    evictable: BTreeMap<u64, PageId>,
+    /// page → its tick in `evictable` (0 = not parked)
+    page_tick: Vec<u64>,
+    tick: u64,
+    stats: CacheStats,
 }
 
 /// Handle to one sequence's cache state.
@@ -125,18 +215,55 @@ pub type SeqHandle = usize;
 
 impl KvCacheManager {
     pub fn new(num_slots: usize, block_size: usize) -> Self {
+        let alloc = BlockAllocator::new(num_slots, block_size);
+        let num_pages = alloc.num_pages;
         KvCacheManager {
-            alloc: BlockAllocator::new(num_slots, block_size),
+            alloc,
             tables: Vec::new(),
+            caching: false,
+            index: HashMap::new(),
+            page_key: vec![None; num_pages],
+            evictable: BTreeMap::new(),
+            page_tick: vec![0; num_pages],
+            tick: 0,
+            stats: CacheStats::default(),
         }
+    }
+
+    /// Builder-style toggle for automatic prefix caching.
+    pub fn with_prefix_caching(mut self, on: bool) -> Self {
+        self.caching = on;
+        self
+    }
+
+    pub fn prefix_caching_enabled(&self) -> bool {
+        self.caching
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    /// Full blocks currently registered in the prefix index.
+    pub fn cached_blocks(&self) -> usize {
+        self.index.len()
     }
 
     pub fn block_size(&self) -> usize {
         self.alloc.block_size()
     }
 
+    /// Allocatable pages: the physical free list plus the evictable pool
+    /// (cached pages the allocator reclaims on demand). This is the number
+    /// the scheduler's watermark accounting must use — cache entries are
+    /// opportunistic and never count against admission.
     pub fn free_pages(&self) -> usize {
-        self.alloc.free_pages()
+        self.alloc.free_pages() + self.evictable.len()
+    }
+
+    /// Pages parked in the evictable LRU pool (cached, refcount 0).
+    pub fn evictable_pages(&self) -> usize {
+        self.evictable.len()
     }
 
     pub fn total_pages(&self) -> usize {
@@ -156,33 +283,215 @@ impl KvCacheManager {
         self.tables[h].as_ref().expect("freed sequence handle")
     }
 
+    /// Reference count of a physical page (test/diagnostic hook).
+    pub fn page_ref_count(&self, page: PageId) -> u32 {
+        self.alloc.ref_count(page)
+    }
+
     /// Pages that `grow` would need to fit `new_total` tokens.
     pub fn pages_needed(&self, h: SeqHandle, new_total: usize) -> usize {
         let t = self.table(h);
         cdiv(new_total, self.alloc.block_size).saturating_sub(t.pages.len())
     }
 
-    /// Ensure capacity for `new_total` tokens, allocating pages on demand.
+    /// Pages a *new* sequence with `cached` attached prefix tokens
+    /// (page-aligned, per `lookup_prefix`) needs to reach `new_total`.
+    /// Lets admission run its watermark check before registering a handle.
+    pub fn pages_needed_from(&self, cached: usize, new_total: usize) -> usize {
+        cdiv(new_total, self.alloc.block_size)
+            .saturating_sub(cached / self.alloc.block_size)
+    }
+
+    /// Full blocks already offered to the prefix index for this sequence.
+    pub fn committed_blocks(&self, h: SeqHandle) -> usize {
+        self.table(h).committed
+    }
+
+    /// Grab a page: free list first, then reclaim the LRU evictable page.
+    fn allocate_page(&mut self) -> Result<PageId> {
+        if self.alloc.free_pages() > 0 {
+            return self.alloc.allocate();
+        }
+        match self.evict_lru() {
+            Some(p) => {
+                self.alloc.reuse_detached(p);
+                Ok(p)
+            }
+            None => bail!("out of KV cache pages"),
+        }
+    }
+
+    /// Drop the least-recently-parked cached page from the index and the
+    /// evictable pool. The page comes back detached (refcount 0).
+    fn evict_lru(&mut self) -> Option<PageId> {
+        let (&t, &p) = self.evictable.iter().next()?;
+        self.evictable.remove(&t);
+        self.page_tick[p as usize] = 0;
+        if let Some(k) = self.page_key[p as usize].take() {
+            self.index.remove(&k);
+        }
+        self.stats.evictions += 1;
+        Some(p)
+    }
+
+    /// Drop one reference; a registered page parks in the evictable pool
+    /// instead of returning to the free list.
+    fn release_page(&mut self, p: PageId) {
+        if !self.alloc.release_detached(p) {
+            return;
+        }
+        if self.caching && self.page_key[p as usize].is_some() {
+            self.tick += 1;
+            self.evictable.insert(self.tick, p);
+            self.page_tick[p as usize] = self.tick;
+        } else {
+            self.alloc.free_detached(p);
+        }
+    }
+
+    /// Take a reference on a cached page, reviving it from the evictable
+    /// pool when necessary.
+    fn acquire_cached(&mut self, p: PageId) {
+        if self.alloc.ref_count(p) > 0 {
+            self.alloc.retain(p);
+            return;
+        }
+        let t = self.page_tick[p as usize];
+        debug_assert!(t != 0, "rc-0 cached page must be parked");
+        self.evictable.remove(&t);
+        self.page_tick[p as usize] = 0;
+        self.alloc.reuse_detached(p);
+    }
+
+    /// Longest cached full-block prefix of `tokens`, in tokens. Capped so
+    /// at least one token is left to compute (the model must still produce
+    /// next-token logits for the request). Read-only.
+    pub fn lookup_prefix(&self, tokens: &[i32]) -> usize {
+        if !self.caching {
+            return 0;
+        }
+        let bs = self.alloc.block_size;
+        let max_full = tokens.len().saturating_sub(1) / bs;
+        let mut chain = HASH_SEED;
+        let mut hit = 0;
+        for blk in 0..max_full {
+            chain = hash_block(chain, &tokens[blk * bs..(blk + 1) * bs]);
+            if self.index.contains_key(&chain) {
+                hit = (blk + 1) * bs;
+            } else {
+                break;
+            }
+        }
+        hit
+    }
+
+    /// Attach the cached prefix of `tokens` to freshly-registered sequence
+    /// `h` by refcount bump. Returns the number of tokens now considered
+    /// computed. The handle's table must still be empty.
+    pub fn attach_prefix(&mut self, h: SeqHandle, tokens: &[i32]) -> usize {
+        if !self.caching {
+            return 0;
+        }
+        assert!(
+            self.table(h).pages.is_empty(),
+            "attach_prefix on a grown table"
+        );
+        self.stats.lookups += 1;
+        self.stats.lookup_tokens += tokens.len() as u64;
+        let bs = self.alloc.block_size;
+        let max_full = tokens.len().saturating_sub(1) / bs;
+        let mut chain = HASH_SEED;
+        let mut matched_chain = HASH_SEED;
+        let mut pages: Vec<PageId> = Vec::new();
+        for blk in 0..max_full {
+            chain = hash_block(chain, &tokens[blk * bs..(blk + 1) * bs]);
+            match self.index.get(&chain) {
+                Some(&p) => {
+                    pages.push(p);
+                    matched_chain = chain;
+                }
+                None => break,
+            }
+        }
+        if pages.is_empty() {
+            return 0;
+        }
+        for &p in &pages {
+            self.acquire_cached(p);
+        }
+        let cached = pages.len() * bs;
+        let t = self.tables[h].as_mut().unwrap();
+        t.committed = pages.len();
+        t.chain = matched_chain;
+        t.pages = pages;
+        t.len = cached;
+        self.stats.hit_tokens += cached as u64;
+        cached
+    }
+
+    /// Register every newly-filled full block of `tokens[..computed]`
+    /// owned by `h` in the prefix index. Incremental: the table keeps a
+    /// commit cursor + running chain hash, so each block is hashed once
+    /// over the sequence's lifetime. Idempotent; called after each step.
+    pub fn commit_prefix(&mut self, h: SeqHandle, tokens: &[i32], computed: usize) {
+        if !self.caching {
+            return;
+        }
+        let bs = self.alloc.block_size;
+        let computed = computed.min(tokens.len());
+        let t = self.tables[h].as_ref().expect("freed sequence handle");
+        let full = (computed / bs).min(t.pages.len());
+        let start = t.committed.min(full);
+        if start >= full {
+            return;
+        }
+        let mut chain = if start == 0 { HASH_SEED } else { t.chain };
+        let pages: Vec<PageId> = t.pages[start..full].to_vec();
+        for (off, &p) in pages.iter().enumerate() {
+            let blk = start + off;
+            chain = hash_block(chain, &tokens[blk * bs..(blk + 1) * bs]);
+            if self.index.contains_key(&chain) {
+                // Block already published (possibly by a twin computed
+                // concurrently) — first writer wins.
+                continue;
+            }
+            if self.page_key[p as usize].is_none() {
+                self.index.insert(chain, p);
+                self.page_key[p as usize] = Some(chain);
+            }
+        }
+        let t = self.tables[h].as_mut().unwrap();
+        t.committed = full;
+        t.chain = chain;
+    }
+
+    /// Ensure capacity for `new_total` tokens, allocating pages on demand
+    /// (evicting cached pages LRU-first when the free list is empty).
     /// On failure the table is left unchanged (all-or-nothing) so the
     /// scheduler can preempt and retry.
     pub fn grow(&mut self, h: SeqHandle, new_total: usize) -> Result<()> {
         let need = self.pages_needed(h, new_total);
-        if need > self.alloc.free_pages() {
-            bail!("need {need} pages, only {} free", self.alloc.free_pages());
+        if need > self.free_pages() {
+            bail!("need {need} pages, only {} free", self.free_pages());
         }
         for _ in 0..need {
-            let p = self.alloc.allocate()?;
+            let p = self.allocate_page()?;
             self.tables[h].as_mut().unwrap().pages.push(p);
         }
         self.tables[h].as_mut().unwrap().len = new_total;
         Ok(())
     }
 
-    /// Release every page of the sequence (finish or preemption-by-recompute).
+    /// Release every page of the sequence (finish or preemption-by-
+    /// recompute). Registered pages park in the evictable pool — this
+    /// *unpins* shared blocks rather than freeing them, so a preemption
+    /// never invalidates another sequence's attached prefix.
     pub fn free(&mut self, h: SeqHandle) {
         if let Some(t) = self.tables[h].take() {
-            for p in t.pages {
-                self.alloc.release(p);
+            // Reverse order: deeper chain links get older LRU ticks and so
+            // are evicted first, keeping every cached prefix rooted.
+            for &p in t.pages.iter().rev() {
+                self.release_page(p);
             }
         }
     }
@@ -210,10 +519,10 @@ impl KvCacheManager {
         if self.alloc.ref_count(last) == 1 {
             return Ok(None);
         }
-        let fresh = self.alloc.allocate()?;
+        let fresh = self.allocate_page()?;
         let t = self.tables[h].as_mut().unwrap();
         *t.pages.last_mut().unwrap() = fresh;
-        self.alloc.release(last);
+        self.release_page(last);
         Ok(Some((last, fresh)))
     }
 
@@ -255,6 +564,41 @@ mod tests {
         let p = a.allocate().unwrap();
         a.release(p);
         a.release(p);
+    }
+
+    #[test]
+    fn free_list_reuse_is_lifo() {
+        let mut a = BlockAllocator::new(16 * 8, 16);
+        let p1 = a.allocate().unwrap();
+        let p2 = a.allocate().unwrap();
+        a.release(p1);
+        a.release(p2);
+        // most-recently-freed first
+        assert_eq!(a.allocate().unwrap(), p2);
+        assert_eq!(a.allocate().unwrap(), p1);
+    }
+
+    #[test]
+    fn refcount_never_underflows_through_fork_chains() {
+        let mut m = KvCacheManager::new(16 * 16, 16);
+        let h = m.register();
+        m.grow(h, 40).unwrap();
+        let pages = m.table(h).pages().to_vec();
+        let c1 = m.fork(h);
+        let c2 = m.fork(c1);
+        for &p in &pages {
+            assert_eq!(m.alloc.ref_count(p), 3);
+        }
+        m.free(c1);
+        m.free(h);
+        for &p in &pages {
+            assert_eq!(m.alloc.ref_count(p), 1, "single owner left");
+        }
+        m.free(c2);
+        for &p in &pages {
+            assert_eq!(m.alloc.ref_count(p), 0);
+        }
+        assert_eq!(m.free_pages(), 15);
     }
 
     #[test]
@@ -335,6 +679,164 @@ mod tests {
         let h2 = m.register();
         assert_eq!(h1, h2, "slots are recycled");
         assert_eq!(m.table(h2).len(), 0);
+    }
+
+    // ------------------------------------------------ prefix-cache tests
+
+    fn caching(pages: usize) -> KvCacheManager {
+        KvCacheManager::new(16 * (pages + 1), 16).with_prefix_caching(true)
+    }
+
+    fn toks(n: usize, salt: i32) -> Vec<i32> {
+        (0..n as i32).map(|i| i * 7 + salt).collect()
+    }
+
+    #[test]
+    fn prefix_hit_attaches_full_blocks_only() {
+        let mut m = caching(8);
+        let t = toks(48, 1);
+        let h1 = m.register();
+        m.grow(h1, 48).unwrap();
+        m.commit_prefix(h1, &t, 48);
+        let first_two = m.table(h1).pages()[..2].to_vec();
+        m.free(h1);
+
+        // 48 tokens = 3 full blocks, but the last must be recomputed so
+        // the model still produces logits: expect a 32-token hit.
+        assert_eq!(m.lookup_prefix(&t), 32);
+        let h2 = m.register();
+        let cached = m.attach_prefix(h2, &t);
+        assert_eq!(cached, 32);
+        assert_eq!(m.table(h2).pages(), &first_two[..]);
+        assert_eq!(m.table(h2).len(), 32);
+        assert_eq!(m.cache_stats().hit_tokens, 32);
+        assert!(m.cache_stats().hit_rate() > 0.0);
+        m.free(h2);
+    }
+
+    #[test]
+    fn partial_blocks_never_cached() {
+        let mut m = caching(8);
+        let t = toks(20, 3);
+        let h = m.register();
+        m.grow(h, 20).unwrap();
+        m.commit_prefix(h, &t, 20);
+        assert_eq!(m.cached_blocks(), 1, "only the full first block");
+        m.free(h);
+        assert_eq!(m.lookup_prefix(&t), 16);
+    }
+
+    #[test]
+    fn disjoint_prompts_miss() {
+        let mut m = caching(8);
+        let h = m.register();
+        m.grow(h, 32).unwrap();
+        m.commit_prefix(h, &toks(32, 5), 32);
+        m.free(h);
+        assert_eq!(m.lookup_prefix(&toks(32, 6)), 0);
+        let h2 = m.register();
+        assert_eq!(m.attach_prefix(h2, &toks(32, 6)), 0);
+        assert_eq!(m.cache_stats().hit_tokens, 0);
+    }
+
+    #[test]
+    fn shared_live_prefix_bumps_refcount() {
+        let mut m = caching(8);
+        let t = toks(64, 9);
+        let h1 = m.register();
+        m.grow(h1, 64).unwrap();
+        m.commit_prefix(h1, &t, 64);
+        let free_before = m.free_pages();
+        let h2 = m.register();
+        // h1 still live: attach must bump refcounts, not allocate
+        let cached = m.attach_prefix(h2, &t);
+        assert_eq!(cached, 48);
+        assert_eq!(m.free_pages(), free_before, "attach allocates nothing");
+        let shared = m.table(h2).pages().to_vec();
+        for &p in &shared {
+            assert_eq!(m.alloc.ref_count(p), 2);
+        }
+        m.free(h1);
+        for &p in &shared {
+            assert_eq!(m.alloc.ref_count(p), 1, "unpinned, not freed");
+        }
+        m.free(h2);
+        assert_eq!(m.free_pages(), 8);
+    }
+
+    #[test]
+    fn eviction_reclaims_lru_and_scratch_stays_reserved() {
+        let mut m = caching(4);
+        let t = toks(64, 11);
+        let h = m.register();
+        m.grow(h, 64).unwrap();
+        m.commit_prefix(h, &t, 64);
+        m.free(h);
+        assert_eq!(m.evictable_pages(), 4);
+        assert_eq!(m.free_pages(), 4);
+        // a disjoint request must be able to claim every page back
+        let h2 = m.register();
+        m.grow(h2, 64).unwrap();
+        for &p in m.table(h2).pages() {
+            assert_ne!(p, 0, "scratch page leaked out of eviction");
+        }
+        assert_eq!(m.cache_stats().evictions, 4);
+        assert_eq!(m.cached_blocks(), 0, "index pruned on eviction");
+        assert_eq!(m.lookup_prefix(&t), 0);
+        m.free(h2);
+    }
+
+    #[test]
+    fn eviction_order_keeps_prefixes_rooted() {
+        let mut m = caching(4);
+        let t = toks(64, 13); // 4 blocks fill the whole pool
+        let h = m.register();
+        m.grow(h, 64).unwrap();
+        m.commit_prefix(h, &t, 64);
+        m.free(h);
+        // Claim exactly one page: the deepest chain link must go first,
+        // so the remaining prefix is still fully usable.
+        let h2 = m.register();
+        m.grow(h2, 16).unwrap();
+        assert_eq!(m.cache_stats().evictions, 1);
+        // blocks 0..=2 survive; an 80-token probe stops at the evicted link
+        assert_eq!(m.lookup_prefix(&t), 48, "3-block prefix survives");
+        let longer = toks(80, 13);
+        assert_eq!(m.lookup_prefix(&longer), 48, "chain broken at block 3");
+        m.free(h2);
+    }
+
+    #[test]
+    fn commit_is_idempotent_and_first_writer_wins() {
+        let mut m = caching(8);
+        let t = toks(32, 17);
+        let h1 = m.register();
+        m.grow(h1, 32).unwrap();
+        m.commit_prefix(h1, &t, 32);
+        let blocks = m.cached_blocks();
+        m.commit_prefix(h1, &t, 32);
+        assert_eq!(m.cached_blocks(), blocks);
+        // a twin sequence computing the same content does not re-register
+        let h2 = m.register();
+        m.grow(h2, 32).unwrap();
+        m.commit_prefix(h2, &t, 32);
+        assert_eq!(m.cached_blocks(), blocks);
+        m.free(h1);
+        m.free(h2);
+        assert_eq!(m.free_pages(), 8);
+    }
+
+    #[test]
+    fn caching_disabled_frees_eagerly() {
+        let mut m = KvCacheManager::new(16 * 8, 16).with_prefix_caching(false);
+        let t = toks(32, 19);
+        let h = m.register();
+        m.grow(h, 32).unwrap();
+        m.commit_prefix(h, &t, 32);
+        m.free(h);
+        assert_eq!(m.evictable_pages(), 0);
+        assert_eq!(m.lookup_prefix(&t), 0);
+        assert_eq!(m.free_pages(), 7);
     }
 
     /// Randomized invariant check (hand-rolled property test): a random

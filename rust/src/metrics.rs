@@ -118,17 +118,42 @@ pub struct EngineMetrics {
     pub generated_tokens: u64,
     pub prompt_tokens: u64,
     pub preemptions: u64,
+    // ----- automatic prefix cache (mirrors kvcache::CacheStats) -----
+    /// Prompt tokens served from cached KV pages instead of re-prefill.
+    pub prefix_hit_tokens: u64,
+    /// Prompt tokens examined by admission-time cache lookups.
+    pub prefix_lookup_tokens: u64,
+    /// Cached refcount-0 pages reclaimed by the allocator under pressure.
+    pub prefix_evictions: u64,
+    /// Full blocks currently registered in the prefix index (gauge).
+    pub prefix_cached_blocks: u64,
     /// Picks per kernel variant name.
     pub variant_picks: std::collections::BTreeMap<String, u64>,
 }
 
 impl EngineMetrics {
+    /// Token hit rate of the prefix cache over all lookups (0..=1).
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.prefix_lookup_tokens == 0 {
+            0.0
+        } else {
+            self.prefix_hit_tokens as f64 / self.prefix_lookup_tokens as f64
+        }
+    }
+
     pub fn dump(&self) -> String {
         let mut s = String::new();
         let _ = writeln!(s, "engine_steps {}", self.steps);
         let _ = writeln!(s, "generated_tokens {}", self.generated_tokens);
         let _ = writeln!(s, "prompt_tokens {}", self.prompt_tokens);
         let _ = writeln!(s, "preemptions {}", self.preemptions);
+        let _ = writeln!(s, "prefix_cache_hit_tokens {}", self.prefix_hit_tokens);
+        let _ = writeln!(s, "prefix_cache_lookup_tokens {}",
+                         self.prefix_lookup_tokens);
+        let _ = writeln!(s, "prefix_cache_hit_rate {:.4}", self.prefix_hit_rate());
+        let _ = writeln!(s, "prefix_cache_evictions {}", self.prefix_evictions);
+        let _ = writeln!(s, "prefix_cache_cached_blocks {}",
+                         self.prefix_cached_blocks);
         let _ = writeln!(s, "step_us {}", self.step_us.summary());
         let _ = writeln!(s, "dispatch_us {}", self.dispatch_us.summary());
         let _ = writeln!(s, "overhead_us {}", self.overhead_us.summary());
@@ -175,5 +200,17 @@ mod tests {
         let d = m.dump();
         assert!(d.contains("engine_steps 3"));
         assert!(d.contains("variant_picks{variant=\"qblock\"} 2"));
+        assert!(d.contains("prefix_cache_hit_tokens 0"));
+    }
+
+    #[test]
+    fn prefix_hit_rate_is_guarded_and_proportional() {
+        let mut m = EngineMetrics::default();
+        assert_eq!(m.prefix_hit_rate(), 0.0, "no lookups, no rate");
+        m.prefix_lookup_tokens = 128;
+        m.prefix_hit_tokens = 32;
+        assert!((m.prefix_hit_rate() - 0.25).abs() < 1e-12);
+        let d = m.dump();
+        assert!(d.contains("prefix_cache_hit_rate 0.2500"));
     }
 }

@@ -11,7 +11,14 @@
 //!      *chunked* (chunked prefill) and continue next step.
 //!   3. **Preemption by recompute**: when the page allocator cannot grow a
 //!      decoding sequence, the most-recently-arrived running sequence is
-//!      evicted, its pages freed, and its full context re-prefilled later.
+//!      evicted, its pages *unpinned* (shared/cached blocks survive in the
+//!      prefix cache), and its full context re-prefilled later.
+//!   4. **Prefix-cache-aware admission**: when the KV manager has prefix
+//!      caching enabled, admission first attaches the prompt's cached
+//!      full-block prefix by refcount bump; `computed` starts at the hit
+//!      length and chunked prefill begins at the first uncached block.
+//!      The free-page watermark counts evictable cached pages as
+//!      reclaimable, so a warm cache never blocks admission.
 
 use std::collections::VecDeque;
 
@@ -82,6 +89,11 @@ pub struct ScheduledSeq {
     /// Does the sampled token become visible output? (false for non-final
     /// prefill chunks — their sample is discarded.)
     pub samples: bool,
+    /// Provenance: true when `tokens` come from the request's known stream
+    /// (prefill chunk — fresh, continued, or the tail after a prefix-cache
+    /// hit), false for a decode continuation feeding the last sample.
+    /// Shape alone cannot tell a one-token cache-hit tail from a decode.
+    pub prefill: bool,
 }
 
 #[derive(Debug, Default)]
@@ -115,6 +127,8 @@ pub struct SchedulerStats {
     pub steps: u64,
     pub preemptions: u64,
     pub scheduled_tokens: u64,
+    /// Prompt tokens served from the prefix cache instead of re-prefill.
+    pub cached_tokens: u64,
 }
 
 pub struct Scheduler {
@@ -214,16 +228,14 @@ impl Scheduler {
                     self.stats.preemptions += 1;
                     batch.preempted.push(v.id);
                     self.waiting.push_front(v);
-                    if victim < i {
-                        i -= 1;
-                    }
                     continue; // retry the same sequence
                 }
                 break; // nothing to evict — leave for next step
             }
 
             let r = &mut self.running[i];
-            let tokens: Vec<i32> = if r.computed < total {
+            let is_prefill = r.computed < total;
+            let tokens: Vec<i32> = if is_prefill {
                 (r.computed..r.computed + n_new).map(|j| r.token_at(j)).collect()
             } else {
                 vec![*r.output.last().or(r.prompt.last()).unwrap()]
@@ -235,39 +247,58 @@ impl Scheduler {
                 ctx_len: r.computed,
                 tokens,
                 samples,
+                prefill: is_prefill,
             });
             i += 1;
         }
 
-        // ---- phase 2: admit waiting prefills
-        while let Some(front) = self.waiting.front() {
+        // ---- phase 2: admit waiting prefills (prefix-cache aware)
+        while budget > 0 {
             if self.running.len() >= self.cfg.max_num_seqs
                 || batch.seqs.len() >= self.cfg.max_num_seqs
             {
                 break;
             }
+            let Some(front) = self.waiting.front() else {
+                break;
+            };
             let total = front.total_len();
-            let chunk = total.min(budget);
-            if chunk == 0 {
+            let all_tokens: Vec<i32> = (0..total).map(|j| front.token_at(j)).collect();
+
+            // Read-only probe first: a blocked admission must leave the
+            // cache untouched (no LRU churn, no hit-metric inflation).
+            let cached = kv.lookup_prefix(&all_tokens);
+            let chunk = (total - cached).min(budget);
+            let need = kv.pages_needed_from(cached, cached + chunk);
+            // Watermark over reclaimable pages (free list + evictable
+            // cached pages) — a warm cache never blocks admission.
+            if kv.free_pages() < need + self.cfg.watermark_blocks {
                 break;
             }
-            let pages = crate::config::cdiv(chunk, kv.block_size());
-            if kv.free_pages() < pages + self.cfg.watermark_blocks {
-                break;
-            }
-            let mut r = self.waiting.pop_front().unwrap();
+            // Attach the cached full-block prefix by refcount bump;
+            // prefill then starts at the first uncached token.
+            // `lookup_prefix`/`attach_prefix` cap the hit so at least one
+            // token remains to compute.
             let handle = kv.register();
-            kv.grow(handle, chunk).expect("watermark check guaranteed pages");
+            let attached = kv.attach_prefix(handle, &all_tokens);
+            debug_assert_eq!(attached, cached, "lookup/attach must agree");
+            kv.grow(handle, cached + chunk)
+                .expect("watermark check guaranteed pages");
+            let mut r = self.waiting.pop_front().unwrap();
             r.handle = Some(handle);
             r.state = State::Running;
-            let tokens: Vec<i32> = (0..chunk).map(|j| r.token_at(j)).collect();
+            r.computed = cached;
+            self.stats.cached_tokens += cached as u64;
+            let tokens: Vec<i32> =
+                all_tokens[cached..cached + chunk].to_vec();
             budget -= chunk;
             batch.seqs.push(ScheduledSeq {
                 id: r.id,
                 handle,
-                ctx_len: 0,
+                ctx_len: cached,
                 tokens,
-                samples: chunk == total,
+                samples: cached + chunk == total,
+                prefill: true,
             });
             self.running.push(r);
         }
@@ -278,12 +309,15 @@ impl Scheduler {
     }
 
     /// Victim for preemption: the most recently arrived running sequence
-    /// other than the one being grown (vLLM recompute policy).
+    /// that has NOT been scheduled yet this step (vLLM recompute policy).
+    /// Sequences already in the batch — everything before `protect` in
+    /// arrival order — must keep their pages: their metadata is about to
+    /// be built against the current block tables.
     fn pick_victim(&self, protect: usize) -> Option<usize> {
         self.running
             .iter()
             .enumerate()
-            .filter(|(i, _)| *i != protect)
+            .skip(protect + 1)
             .max_by_key(|(_, r)| r.arrival_seq)
             .map(|(i, _)| i)
     }
@@ -304,6 +338,17 @@ impl Scheduler {
                 .find(|r| r.id == s.id)
                 .expect("scheduled seq vanished");
             r.computed = s.ctx_len + s.tokens.len();
+            // Publish newly-filled full blocks into the prefix index so
+            // later requests (and this one after a preemption) can reuse
+            // them. The commit cursor makes this incremental: skip the
+            // token rebuild entirely on steps that fill no new block.
+            if kv.prefix_caching_enabled()
+                && r.computed / kv.block_size() > kv.committed_blocks(s.handle)
+            {
+                let known: Vec<i32> =
+                    (0..r.computed).map(|j| r.token_at(j)).collect();
+                kv.commit_prefix(s.handle, &known, r.computed);
+            }
             if !s.samples {
                 continue; // mid-prefill chunk: sample discarded
             }
@@ -503,6 +548,37 @@ mod tests {
         }
         let fin = s.take_finished();
         assert_eq!(fin.len(), 2);
+    }
+
+    #[test]
+    fn admission_attaches_cached_prefix() {
+        let cfg = EngineConfig {
+            max_batched_tokens: 64,
+            max_num_seqs: 4,
+            watermark_blocks: 0,
+            ..Default::default()
+        };
+        let mut s = Scheduler::new(cfg);
+        let mut kv = KvCacheManager::new(16 * 33, 16).with_prefix_caching(true);
+        let prompt: Vec<i32> = (0..48).collect();
+        s.add_request(1, prompt.clone(), 2, 0);
+        for _ in 0..8 {
+            let b = s.schedule(&mut kv);
+            if b.is_empty() {
+                break;
+            }
+            step_all(&mut s, &mut kv, &b);
+        }
+        assert!(!s.has_unfinished(), "first request must drain");
+        // identical prompt: two full blocks attach straight from cache and
+        // chunked prefill starts at the first uncached token
+        s.add_request(2, prompt, 2, 0);
+        let b = s.schedule(&mut kv);
+        assert_eq!(b.seqs.len(), 1);
+        assert_eq!(b.seqs[0].ctx_len, 32, "cached prefix becomes context");
+        assert_eq!(b.seqs[0].tokens.len(), 16, "only the tail is prefilled");
+        assert!(b.seqs[0].samples, "single remaining chunk samples");
+        assert_eq!(s.stats.cached_tokens, 32);
     }
 
     #[test]

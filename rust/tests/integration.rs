@@ -135,24 +135,44 @@ fn bucket_padding_is_inert() {
 }
 
 /// Preemption under extreme page pressure still completes and stays
-/// deterministic.
+/// deterministic — with the default prefix caching on (preemption unpins
+/// cached blocks; re-admission reattaches them) and with it forced off.
+/// Three 40-token prompts decoding to 80 tokens each need 15 pages of a
+/// 12-page pool, so the youngest unscheduled runner gets evicted.
 #[test]
 fn preemption_preserves_determinism() {
-    // tiny page pool via a large request load on the default cache
-    let mut e = engine_with(256, 4);
-    let p1 = vec![9; 100];
-    let p2 = vec![17; 100];
-    e.add_request(p1.clone(), 20).unwrap();
-    e.add_request(p2.clone(), 20).unwrap();
-    let mut fin = e.run_to_completion().unwrap();
-    fin.sort_by_key(|r| r.id);
-    assert_eq!(fin.len(), 2);
+    let prompts: Vec<Vec<i32>> = (0..3).map(|i| vec![5 + i; 40]).collect();
+    let run = |caching: bool| -> (Vec<Vec<i32>>, u64) {
+        let mut e = Engine::new(runtime(), EngineConfig {
+            max_batched_tokens: 256,
+            max_num_seqs: 4,
+            enable_prefix_caching: caching,
+            ..Default::default()
+        })
+        .unwrap();
+        for p in &prompts {
+            e.add_request(p.clone(), 40).unwrap();
+        }
+        let mut fin = e.run_to_completion().unwrap();
+        fin.sort_by_key(|r| r.id);
+        assert_eq!(fin.len(), 3);
+        (fin.into_iter().map(|r| r.output).collect(), e.metrics.preemptions)
+    };
 
-    let mut solo = engine_with(256, 1);
-    solo.add_request(p2, 20).unwrap();
-    let s = solo.run_to_completion().unwrap();
-    assert_eq!(fin[1].output, s[0].output,
-               "preemption/recompute must not change tokens");
+    let (on, preempted_on) = run(true);
+    let (off, preempted_off) = run(false);
+    assert!(preempted_on >= 1 && preempted_off >= 1,
+            "pool must be under pressure in both modes");
+    assert_eq!(on, off, "prefix caching changed tokens under preemption");
+
+    // every request also matches an unpressured solo run
+    for (i, p) in prompts.iter().enumerate() {
+        let mut solo = engine_with(256, 1);
+        solo.add_request(p.clone(), 40).unwrap();
+        let s = solo.run_to_completion().unwrap();
+        assert_eq!(on[i], s[0].output,
+                   "preemption/recompute must not change tokens");
+    }
 }
 
 /// Throughput accounting sanity: generated tokens equal the sum of

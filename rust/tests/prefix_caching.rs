@@ -1,0 +1,410 @@
+//! Integration + property tests for automatic prefix caching.
+//!
+//! The engine-level tests drive the full stack (scheduler → KV manager →
+//! metadata → dispatch) against the sim artifacts and pin down the three
+//! contract points of the feature:
+//!   (a) greedy outputs are token-identical with the knob on or off,
+//!   (b) the hit-rate metrics fire on shared prefixes and stay silent on
+//!       disjoint prompts,
+//!   (c) preemption under memory pressure with cached/shared blocks stays
+//!       deterministic.
+//! The property test at the bottom drives random interleaved
+//! admit/grow/fork/free/attach sequences against a reference model of
+//! page ownership and block content, with a hand-rolled shrinking loop.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use triton_anatomy::config::EngineConfig;
+use triton_anatomy::engine::Engine;
+use triton_anatomy::kvcache::{KvCacheManager, PageId, SeqHandle};
+use triton_anatomy::runtime::Runtime;
+use triton_anatomy::workload::Rng;
+
+fn engine(caching: bool, max_tokens: usize, max_seqs: usize) -> Engine {
+    let rt = Rc::new(
+        Runtime::load_dir(triton_anatomy::default_artifacts_dir()).unwrap(),
+    );
+    Engine::new(
+        rt,
+        EngineConfig {
+            max_batched_tokens: max_tokens,
+            max_num_seqs: max_seqs,
+            enable_prefix_caching: caching,
+            ..Default::default()
+        },
+    )
+    .unwrap()
+}
+
+/// (a) Two requests sharing a 40-token prompt prefix produce identical
+/// tokens with and without `enable_prefix_caching` — both when batched
+/// together and when served back-to-back (warm cache).
+#[test]
+fn caching_on_off_is_token_identical_on_shared_prefixes() {
+    let shared = Rng::new(21).tokens(40, 2048);
+    let mut pa = shared.clone();
+    pa.extend_from_slice(&[1001, 1002, 1003]);
+    let mut pb = shared;
+    pb.extend_from_slice(&[7, 8]);
+
+    let run = |caching: bool, sequential: bool| -> Vec<Vec<i32>> {
+        let mut e = engine(caching, 128, 4);
+        let mut out = Vec::new();
+        if sequential {
+            for p in [pa.clone(), pb.clone()] {
+                e.add_request(p, 6).unwrap();
+                out.push(e.run_to_completion().unwrap()[0].output.clone());
+            }
+        } else {
+            e.add_request(pa.clone(), 6).unwrap();
+            e.add_request(pb.clone(), 6).unwrap();
+            let mut fin = e.run_to_completion().unwrap();
+            fin.sort_by_key(|r| r.id);
+            out = fin.into_iter().map(|r| r.output).collect();
+        }
+        out
+    };
+
+    let off = run(false, false);
+    for (name, got) in [
+        ("on/batched", run(true, false)),
+        ("on/sequential", run(true, true)),
+        ("off/sequential", run(false, true)),
+    ] {
+        assert_eq!(got, off, "{name} diverged from caching-off output");
+    }
+}
+
+/// (b) Hit-rate metrics: nonzero on a shared-prefix workload, exactly
+/// zero on disjoint prompts.
+#[test]
+fn hit_rate_nonzero_on_shared_prefix_and_zero_on_disjoint() {
+    let mut e = engine(true, 128, 4);
+    let shared = Rng::new(5).tokens(48, 2048); // 3 full KV pages
+    e.add_request(shared.clone(), 4).unwrap();
+    e.run_to_completion().unwrap();
+    assert_eq!(e.metrics.prefix_hit_tokens, 0, "cold cache");
+    assert!(e.metrics.prefix_cached_blocks >= 3, "prompt blocks registered");
+
+    let mut p2 = shared;
+    p2.extend_from_slice(&[9, 8, 7]);
+    e.add_request(p2, 4).unwrap();
+    e.run_to_completion().unwrap();
+    assert_eq!(e.metrics.prefix_hit_tokens, 48,
+               "all three shared full blocks attach");
+    assert!(e.metrics.prefix_hit_rate() > 0.0);
+
+    let mut d = engine(true, 128, 4);
+    d.add_request(Rng::new(31).tokens(48, 2048), 4).unwrap();
+    d.run_to_completion().unwrap();
+    d.add_request(Rng::new(77).tokens(48, 2048), 4).unwrap();
+    d.run_to_completion().unwrap();
+    assert_eq!(d.metrics.prefix_hit_tokens, 0, "disjoint prompts never hit");
+    assert_eq!(d.metrics.prefix_hit_rate(), 0.0);
+    assert!(d.metrics.prefix_lookup_tokens > 0, "lookups did run");
+}
+
+/// (c) Preemption under memory pressure with cached blocks: three
+/// 40-token prompts decoding to 80 tokens each need 15 pages of the
+/// 12-page pool, so the youngest unscheduled runner is preempted,
+/// unpinned, and later re-admitted *through the prefix cache*. Outputs
+/// must match a solo run and must not depend on the caching knob.
+#[test]
+fn preemption_with_cached_blocks_preserves_determinism() {
+    let prompts: Vec<Vec<i32>> = (0..3).map(|i| vec![5 + i; 40]).collect();
+    let mut per_mode: Vec<Vec<Vec<i32>>> = Vec::new();
+    for caching in [true, false] {
+        let mut e = engine(caching, 256, 4);
+        for p in &prompts {
+            e.add_request(p.clone(), 40).unwrap();
+        }
+        let mut fin = e.run_to_completion().unwrap();
+        fin.sort_by_key(|r| r.id);
+        assert_eq!(fin.len(), 3);
+        assert!(e.metrics.preemptions >= 1,
+                "pool of 12 pages must force preemption (caching={caching})");
+        if caching {
+            assert!(e.metrics.prefix_hit_tokens > 0,
+                    "re-admission reuses the preempted sequence's blocks");
+            assert!(e.metrics.prefix_evictions > 0,
+                    "page pressure reclaims cached blocks");
+        }
+        let outs: Vec<Vec<i32>> = fin.into_iter().map(|r| r.output).collect();
+
+        for (i, p) in prompts.iter().enumerate() {
+            let mut solo = engine(caching, 256, 1);
+            solo.add_request(p.clone(), 40).unwrap();
+            let s = solo.run_to_completion().unwrap();
+            assert_eq!(outs[i], s[0].output,
+                       "preemption/recompute changed tokens (caching={caching})");
+        }
+        per_mode.push(outs);
+    }
+    assert_eq!(per_mode[0], per_mode[1],
+               "caching knob changed tokens under preemption");
+}
+
+/// Cache-thrash correctness: many distinct prompts overflow the 12-page
+/// pool so cached pages are evicted LRU-style, and every response must
+/// still match a cold fresh-engine run.
+#[test]
+fn eviction_under_pressure_keeps_outputs_correct() {
+    let mut warm = engine(true, 128, 2);
+    let prompts: Vec<Vec<i32>> =
+        (0..6).map(|i| Rng::new(100 + i).tokens(48, 2048)).collect();
+    let mut warm_outs = Vec::new();
+    for p in &prompts {
+        warm.add_request(p.clone(), 3).unwrap();
+        warm_outs.push(warm.run_to_completion().unwrap()[0].output.clone());
+    }
+    assert!(warm.metrics.prefix_evictions > 0,
+            "six 3-page prompts must overflow a 12-page pool");
+    for (i, p) in prompts.iter().enumerate() {
+        let mut cold = engine(false, 128, 2);
+        cold.add_request(p.clone(), 3).unwrap();
+        let fin = cold.run_to_completion().unwrap();
+        assert_eq!(warm_outs[i], fin[0].output, "prompt {i} diverged");
+    }
+}
+
+// =======================================================================
+// Property test: random interleavings vs. a reference ownership model
+// =======================================================================
+
+const BS: usize = 16;
+const POOL_PAGES: usize = 12;
+
+/// One scripted operation. Ops carry their own data (token streams are
+/// embedded) so scripts stay valid under shrinking-by-removal; handle
+/// indices are taken modulo the live set at execution time.
+#[derive(Debug, Clone)]
+enum Op {
+    /// Register a sequence, attach its cached prefix, grow to `len`,
+    /// commit the computed prefix.
+    Admit { stream: Vec<i32>, len: usize },
+    /// Grow live handle `idx % live` by `extra` tokens and commit.
+    Grow { idx: usize, extra: usize },
+    /// Fork live handle `idx % live` (copy-on-write page sharing).
+    Fork { idx: usize },
+    /// Free live handle `idx % live`.
+    Free { idx: usize },
+}
+
+struct LiveSeq {
+    handle: SeqHandle,
+    stream: Vec<i32>,
+    len: usize,
+}
+
+/// Execute a script, checking every invariant after every op. Returns the
+/// first violated invariant instead of panicking so the shrinking loop
+/// can minimize the script.
+fn run_script(ops: &[Op]) -> Result<(), String> {
+    let mut m =
+        KvCacheManager::new(BS * (POOL_PAGES + 1), BS).with_prefix_caching(true);
+    let capacity = m.total_pages();
+    let mut live: Vec<LiveSeq> = Vec::new();
+    // reference model: content of every *committed* page
+    let mut page_content: HashMap<PageId, Vec<i32>> = HashMap::new();
+
+    // pages granted by the last grow: any content they held is stale
+    fn granted(m: &KvCacheManager, h: SeqHandle, before: usize,
+               page_content: &mut HashMap<PageId, Vec<i32>>) {
+        for &p in &m.table(h).pages()[before..] {
+            page_content.remove(&p);
+        }
+    }
+
+    for (step, op) in ops.iter().enumerate() {
+        match op {
+            Op::Admit { stream, len } => {
+                let h = m.register();
+                let cached = m.attach_prefix(h, stream);
+                if cached % BS != 0 {
+                    return Err(format!("op {step}: hit {cached} not page-aligned"));
+                }
+                if cached >= stream.len() && !stream.is_empty() {
+                    return Err(format!(
+                        "op {step}: hit {cached} leaves nothing to compute"
+                    ));
+                }
+                // content check: every attached page must hold exactly the
+                // prompt block it claims to cache
+                for (k, &p) in m.table(h).pages().iter().enumerate() {
+                    let want = &stream[k * BS..(k + 1) * BS];
+                    match page_content.get(&p) {
+                        Some(have) if have == want => {}
+                        other => {
+                            return Err(format!(
+                                "op {step}: attached page {p} holds {other:?}, \
+                                 expected block {k} of the prompt"
+                            ));
+                        }
+                    }
+                }
+                let target = (*len).max(cached + 1).min(stream.len());
+                let before = m.table(h).pages().len();
+                if m.grow(h, target).is_err() {
+                    m.free(h); // pool exhausted: drop the admission
+                    continue;
+                }
+                granted(&m, h, before, &mut page_content);
+                m.commit_prefix(h, stream, target);
+                for k in 0..target / BS {
+                    page_content
+                        .insert(m.table(h).pages()[k],
+                                stream[k * BS..(k + 1) * BS].to_vec());
+                }
+                live.push(LiveSeq { handle: h, stream: stream.clone(), len: target });
+            }
+            Op::Grow { idx, extra } => {
+                if live.is_empty() {
+                    continue;
+                }
+                let i = idx % live.len();
+                let s = &mut live[i];
+                let target = (s.len + extra).min(s.stream.len());
+                if target == s.len {
+                    continue;
+                }
+                let before = m.table(s.handle).pages().len();
+                if m.grow(s.handle, target).is_err() {
+                    continue;
+                }
+                granted(&m, s.handle, before, &mut page_content);
+                m.commit_prefix(s.handle, &s.stream, target);
+                for k in 0..target / BS {
+                    page_content
+                        .insert(m.table(s.handle).pages()[k],
+                                s.stream[k * BS..(k + 1) * BS].to_vec());
+                }
+                s.len = target;
+            }
+            Op::Fork { idx } => {
+                if live.is_empty() {
+                    continue;
+                }
+                let i = idx % live.len();
+                let h = m.fork(live[i].handle);
+                let (stream, len) = (live[i].stream.clone(), live[i].len);
+                live.push(LiveSeq { handle: h, stream, len });
+            }
+            Op::Free { idx } => {
+                if live.is_empty() {
+                    continue;
+                }
+                let i = idx % live.len();
+                let s = live.swap_remove(i);
+                m.free(s.handle);
+            }
+        }
+
+        // ---- invariants -------------------------------------------------
+        let mut owners: HashMap<PageId, u32> = HashMap::new();
+        for s in &live {
+            for &p in m.table(s.handle).pages() {
+                if p == 0 {
+                    return Err(format!("op {step}: scratch page owned"));
+                }
+                *owners.entry(p).or_insert(0) += 1;
+            }
+        }
+        for (&p, &n) in &owners {
+            let rc = m.page_ref_count(p);
+            if rc != n {
+                return Err(format!(
+                    "op {step}: page {p} refcount {rc} != {n} owners"
+                ));
+            }
+        }
+        if m.free_pages() + owners.len() != capacity {
+            return Err(format!(
+                "op {step}: free {} + owned {} != capacity {capacity}",
+                m.free_pages(),
+                owners.len()
+            ));
+        }
+        if m.evictable_pages() > m.free_pages() {
+            return Err(format!("op {step}: evictable exceeds reclaimable"));
+        }
+    }
+
+    for s in &live {
+        m.free(s.handle);
+    }
+    if m.free_pages() != capacity {
+        return Err("leak: capacity not restored after draining".into());
+    }
+    Ok(())
+}
+
+fn gen_script(seed: u64, n_ops: usize) -> Vec<Op> {
+    let mut rng = Rng::new(seed);
+    let mut streams: Vec<Vec<i32>> = Vec::new();
+    let mut ops = Vec::with_capacity(n_ops);
+    for _ in 0..n_ops {
+        match rng.below(10) {
+            // admissions are the most interesting op: weight them heavily
+            0..=4 => {
+                let stream: Vec<i32> = if !streams.is_empty() && rng.below(2) == 0 {
+                    // shared prefix of an earlier stream + fresh tail
+                    let base = &streams[rng.below(streams.len())];
+                    let keep = rng.range(1, base.len());
+                    let mut s = base[..keep].to_vec();
+                    s.extend(rng.tokens(rng.range(1, 40), 50));
+                    s
+                } else {
+                    rng.tokens(rng.range(1, 80), 50)
+                };
+                let len = rng.range(1, stream.len());
+                streams.push(stream.clone());
+                ops.push(Op::Admit { stream, len });
+            }
+            5 | 6 => ops.push(Op::Grow {
+                idx: rng.below(8),
+                extra: rng.range(1, 24),
+            }),
+            7 => ops.push(Op::Fork { idx: rng.below(8) }),
+            _ => ops.push(Op::Free { idx: rng.below(8) }),
+        }
+    }
+    ops
+}
+
+/// Shrink a failing script by greedily removing ops while it still fails.
+fn shrink(mut ops: Vec<Op>) -> Vec<Op> {
+    loop {
+        let mut reduced = false;
+        let mut i = 0;
+        while i < ops.len() {
+            let mut candidate = ops.clone();
+            candidate.remove(i);
+            if run_script(&candidate).is_err() {
+                ops = candidate;
+                reduced = true;
+            } else {
+                i += 1;
+            }
+        }
+        if !reduced {
+            return ops;
+        }
+    }
+}
+
+#[test]
+fn random_cache_interleavings_match_reference_model() {
+    for seed in 1..=30u64 {
+        let ops = gen_script(seed, 120);
+        if let Err(e) = run_script(&ops) {
+            let min = shrink(ops);
+            panic!(
+                "seed {seed} violated an invariant: {e}\nminimal script \
+                 ({} ops):\n{:#?}",
+                min.len(),
+                min
+            );
+        }
+    }
+}
