@@ -71,8 +71,8 @@ fn main() -> Result<()> {
             // what actually ran
             let ran: Vec<&String> = engine.metrics.variant_picks.keys().collect();
             println!("{:<10} {:>8} {:>14.1} {:>12.2} {:>12}   ran={ran:?}",
-                     variant.name(), fin[0].output.len(), ms,
-                     ms / fin[0].output.len() as f64, engine.metrics.steps);
+                     variant.name(), fin[0].output().len(), ms,
+                     ms / fin[0].output().len() as f64, engine.metrics.steps);
         }
         println!();
     }

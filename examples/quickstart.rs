@@ -26,7 +26,7 @@ fn main() -> Result<()> {
 
     let r = &finished[0];
     println!("prompt : {prompt:?}");
-    println!("output : {:?}", r.output);
+    println!("output : {:?}", r.output());
     println!("steps  : {}", engine.metrics.steps);
     println!("picked : {:?}", engine.metrics.variant_picks);
     Ok(())

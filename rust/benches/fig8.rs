@@ -22,7 +22,7 @@ use triton_anatomy::workload::{Rng, Scenario};
 /// Latency of the artifact a heuristics tree picks for a scenario.
 fn policy_latency(rt: &triton_anatomy::Runtime, h: &Heuristics,
                   scn: &Scenario, seed: u64) -> Option<(String, f64)> {
-    let feats = features(scn);
+    let feats = autotune::features_of_scenario(scn);
     let choice = h.choose(&feats);
     let spec: ArtifactSpec = rt
         .manifest
@@ -37,20 +37,6 @@ fn policy_latency(rt: &triton_anatomy::Runtime, h: &Heuristics,
         })?
         .clone();
     Some((spec.name.clone(), measure(rt, &spec, scn, seed)))
-}
-
-fn features(scn: &Scenario) -> triton_anatomy::batch::BatchFeatures {
-    let qlens: Vec<usize> = scn.seqs.iter().map(|s| s.1).collect();
-    triton_anatomy::batch::BatchFeatures {
-        num_seqs: scn.seqs.len(),
-        num_decodes: scn.seqs.iter().filter(|s| s.1 == 1 && s.0 > 0).count(),
-        max_query_len: qlens.iter().copied().max().unwrap_or(0),
-        avg_query_len: qlens.iter().sum::<usize>() as f64
-            / qlens.len().max(1) as f64,
-        max_seq_len: scn.max_seq_len(),
-        total_kv_tokens: scn.total_kv_tokens(),
-        total_new_tokens: scn.total_query_tokens(),
-    }
 }
 
 fn main() {

@@ -79,7 +79,7 @@ fn main() {
             engine.add_request(prompt, n_out).unwrap();
             let fin = engine.run_to_completion().unwrap();
             let ms = t0.elapsed().as_secs_f64() * 1e3;
-            assert_eq!(fin[0].output.len(), n_out.min(
+            assert_eq!(fin[0].output().len(), n_out.min(
                 engine.model_cfg.max_model_len - prompt_len));
             cells.push(ms);
             csv.row(&[variant.name().to_string(), n_out.to_string(),

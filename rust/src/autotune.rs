@@ -55,11 +55,19 @@ impl Sample {
     }
 }
 
-fn features_of_scenario(scn: &Scenario) -> BatchFeatures {
+/// Batch features of a microbench scenario, exactly as the engine would
+/// compute them for the equivalent scheduled batch (shared with the
+/// figure benches so tuning and reporting never disagree).
+pub fn features_of_scenario(scn: &Scenario) -> BatchFeatures {
     let qlens: Vec<usize> = scn.seqs.iter().map(|s| s.1).collect();
     BatchFeatures {
         num_seqs: scn.seqs.len(),
         num_decodes: scn.seqs.iter().filter(|s| s.1 == 1 && s.0 > 0).count(),
+        num_decode_like: scn
+            .seqs
+            .iter()
+            .filter(|s| s.0 > 0 && s.1 <= crate::batch::DECODE_LIKE_MAX_QUERY)
+            .count(),
         max_query_len: qlens.iter().copied().max().unwrap_or(0),
         avg_query_len: qlens.iter().sum::<usize>() as f64
             / qlens.len().max(1) as f64,
@@ -263,6 +271,7 @@ mod tests {
             features: BatchFeatures {
                 num_seqs,
                 num_decodes: num_seqs,
+                num_decode_like: num_seqs,
                 max_query_len: 1,
                 avg_query_len: 1.0,
                 max_seq_len: max_seq,

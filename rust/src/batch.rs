@@ -16,11 +16,19 @@ use crate::config::{align_up, cdiv, Bucket, KernelConfig};
 use crate::kvcache::KvCacheManager;
 use crate::scheduler::{RequestId, ScheduledBatch};
 
+/// Rows with context whose uncached query is at most this long count as
+/// *decode-like*: a prefix-cache hit left only a short tail to compute,
+/// so the batch behaves like a decode batch for kernel/bucket selection.
+pub const DECODE_LIKE_MAX_QUERY: usize = 16;
+
 /// Scenario features consumed by the heuristics decision tree.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct BatchFeatures {
     pub num_seqs: usize,
     pub num_decodes: usize,
+    /// Rows with nonzero context and a query of at most
+    /// [`DECODE_LIKE_MAX_QUERY`] uncached tokens (supersets `num_decodes`).
+    pub num_decode_like: usize,
     pub max_query_len: usize,
     pub avg_query_len: f64,
     pub max_seq_len: usize,
@@ -40,6 +48,15 @@ impl BatchFeatures {
     pub fn is_decode_only(&self) -> bool {
         self.num_seqs > 0 && self.num_decodes == self.num_seqs
     }
+
+    /// Cache-hot batch: every row already has KV context and only a short
+    /// uncached tail to compute. Query lengths here are *uncached* new
+    /// tokens (cached prefixes were attached at admission), so this routes
+    /// warm-cache traffic toward the decode-specialized kernels and their
+    /// smaller compiled envelopes.
+    pub fn is_decode_like(&self) -> bool {
+        self.num_seqs > 0 && self.num_decode_like == self.num_seqs
+    }
 }
 
 /// Bucket-shaped host tensors for one step, in artifact operand order.
@@ -53,8 +70,9 @@ pub struct BatchMetadata {
     pub ctx_lens: Vec<i32>,
     pub query_start_loc: Vec<i32>,
     pub last_token_idx: Vec<i32>,
-    /// Request order matching rows 0..n of the metadata tensors.
-    pub order: Vec<RequestId>,
+    /// `(request, branch)` order matching rows 0..n of the metadata
+    /// tensors — one row per live branch of each scheduled group.
+    pub order: Vec<(RequestId, usize)>,
     pub features: BatchFeatures,
     pub bucket: Bucket,
 }
@@ -67,6 +85,11 @@ pub fn features_of(batch: &ScheduledBatch) -> BatchFeatures {
     BatchFeatures {
         num_seqs,
         num_decodes: batch.num_decodes(),
+        num_decode_like: batch
+            .seqs
+            .iter()
+            .filter(|s| s.ctx_len > 0 && s.tokens.len() <= DECODE_LIKE_MAX_QUERY)
+            .count(),
         max_query_len: qlens.iter().copied().max().unwrap_or(0),
         avg_query_len: if num_seqs == 0 {
             0.0
@@ -146,7 +169,7 @@ pub fn build(batch: &ScheduledBatch, cfg: &KernelConfig, bucket: &Bucket,
             md.slot_mapping[t + j] = kv.slot(s.handle, pos) as i32;
         }
         md.last_token_idx[i] = (t + s.tokens.len() - 1) as i32;
-        md.order.push(s.id);
+        md.order.push((s.id, s.branch));
         t += align_up(s.tokens.len(), align);
     }
     for i in batch.seqs.len()..=s_cap {
@@ -259,13 +282,16 @@ mod tests {
     #[test]
     fn features_mixed_batch() {
         let (mut s, mut kv, b) = setup(&[6]);
-        let results: Vec<_> = b.seqs.iter().map(|x| (x.id, 5i32)).collect();
-        s.on_step_complete(&b, &results, &mut kv, 0);
+        let results: Vec<_> =
+            b.seqs.iter().map(|x| (x.id, x.branch, 5i32)).collect();
+        s.on_step_complete(&b, &results, &mut kv, 2048, 0);
         s.add_request(99, vec![3; 10], 2, 0);
         let b2 = s.schedule(&mut kv);
         let f = features_of(&b2);
         assert_eq!(f.num_seqs, 2);
         assert_eq!(f.num_decodes, 1);
+        assert_eq!(f.num_decode_like, 1, "fresh prefill is not decode-like");
+        assert!(!f.is_decode_like());
         assert_eq!(f.max_query_len, 10);
         assert!((f.decode_share() - 0.5).abs() < 1e-9);
         assert_eq!(f.max_seq_len, 10);
@@ -288,8 +314,9 @@ mod tests {
         let prompt: Vec<i32> = (100..148).collect(); // 48 tokens, 3 blocks
         s.add_request(0, prompt.clone(), 1, 0);
         let b = s.schedule(&mut kv);
-        let results: Vec<_> = b.seqs.iter().map(|x| (x.id, 7i32)).collect();
-        s.on_step_complete(&b, &results, &mut kv, 0);
+        let results: Vec<_> =
+            b.seqs.iter().map(|x| (x.id, x.branch, 7i32)).collect();
+        s.on_step_complete(&b, &results, &mut kv, 2048, 0);
         assert!(!s.has_unfinished(), "one-token request drains in a step");
 
         s.add_request(1, prompt, 1, 0);
@@ -315,6 +342,10 @@ mod tests {
         // padding lanes stay on the scratch page
         assert_eq!(md.slot_mapping[16], 0);
         assert_eq!(md.features.total_new_tokens, 16);
+        // cache-aware bucketing: the one-block uncached tail makes this
+        // row decode-like, routing it to the decode tree / small envelopes
+        assert!(md.features.is_decode_like());
+        assert!(!md.features.is_decode_only());
     }
 
     /// Randomized: layout regions never overlap and stay inside the bucket.

@@ -148,6 +148,63 @@ impl ModelConfig {
     }
 }
 
+/// Per-request sampling configuration — the vLLM `SamplingParams`
+/// analogue carried by every [`crate::scheduler::SequenceGroup`].
+///
+/// The default (`n = 1`, `seed = 0`, `temperature = 0.0`) is *pure
+/// greedy*: the engine emits the model's raw history-hash token and the
+/// output is byte-identical to the pre-group engine. Any other setting
+/// turns on deterministic per-branch salting: branch `b` of a group maps
+/// the model's raw token through a hash of `(seed, b, temperature)`, so
+/// forked branches diverge at their first decode step while every branch
+/// stream stays a pure function of its own cached history (replay after
+/// preemption reproduces it exactly).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SamplingParams {
+    /// Parallel sampling width: branches generated per request.
+    pub n: usize,
+    /// Stream seed mixed into every branch's salt.
+    pub seed: u64,
+    /// Pseudo-randomness knob of the sim sampler; `0.0` is greedy.
+    pub temperature: f64,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams { n: 1, seed: 0, temperature: 0.0 }
+    }
+}
+
+impl SamplingParams {
+    /// Pure greedy: raw model tokens pass through unsalted, preserving
+    /// byte-identical `n = 1` behavior.
+    pub fn is_greedy(&self) -> bool {
+        self.n == 1 && self.seed == 0 && self.temperature == 0.0
+    }
+
+    /// Deterministic salt for one branch; 0 means "no salting".
+    pub fn salt_for(&self, branch: usize) -> u64 {
+        if self.is_greedy() {
+            return 0;
+        }
+        let mut h = 0x9E37_79B9_7F4A_7C15u64 ^ self.seed;
+        h = (h ^ branch as u64).wrapping_mul(0x0000_0100_0000_01B3);
+        h = (h ^ self.temperature.to_bits()).wrapping_mul(0x0000_0100_0000_01B3);
+        h | 1
+    }
+
+    /// Map the model's raw greedy token to this branch's sampled token.
+    pub fn sample(&self, raw: i32, branch: usize, vocab: usize) -> i32 {
+        let salt = self.salt_for(branch);
+        if salt == 0 {
+            return raw;
+        }
+        let mixed = ((raw as u32 as u64) ^ salt)
+            .wrapping_mul(0x2545_F491_4F6C_DD1D);
+        ((mixed >> 17) % vocab.max(1) as u64) as i32
+    }
+}
+
 /// Engine-level knobs (the vLLM-engine-args analogue).
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
@@ -218,6 +275,38 @@ mod tests {
         for v in Variant::ALL {
             assert_eq!(Variant::parse(v.name()).unwrap(), v);
         }
+    }
+
+    #[test]
+    fn greedy_sampling_is_identity() {
+        let p = SamplingParams::default();
+        assert!(p.is_greedy());
+        assert_eq!(p.salt_for(0), 0);
+        for raw in [0, 7, 2047] {
+            assert_eq!(p.sample(raw, 0, 2048), raw);
+        }
+    }
+
+    #[test]
+    fn branch_salts_differ_and_stay_in_vocab() {
+        let p = SamplingParams { n: 4, seed: 9, temperature: 0.7 };
+        assert!(!p.is_greedy());
+        let salts: Vec<u64> = (0..4).map(|b| p.salt_for(b)).collect();
+        for (i, &a) in salts.iter().enumerate() {
+            assert_ne!(a, 0);
+            for &b in &salts[i + 1..] {
+                assert_ne!(a, b, "branch salts must differ");
+            }
+        }
+        for b in 0..4 {
+            let t = p.sample(1234, b, 2048);
+            assert!((0..2048).contains(&t));
+            // deterministic: same inputs, same token
+            assert_eq!(t, p.sample(1234, b, 2048));
+        }
+        // a different seed yields a different stream
+        let q = SamplingParams { seed: 10, ..p };
+        assert_ne!(p.sample(1234, 0, 2048), q.sample(1234, 0, 2048));
     }
 
     #[test]

@@ -7,6 +7,16 @@
 //! device-resident PJRT buffer that is chained from step to step; only the
 //! small metadata tensors cross the host boundary each step, plus one tiny
 //! extract dispatch to read the sampled tokens back (see aot.py).
+//!
+//! Requests are *sequence groups*: `add_group` takes a
+//! [`SamplingParams`] with `n > 1` for parallel sampling. The scheduler
+//! forks the extra branches by refcount bump once the shared prompt has
+//! prefilled, and surfaces the copy-on-write `(src, dst)` page pairs of
+//! diverging branches; the engine mirrors each pair into the
+//! device-resident cache (a paged-attention page copy) before the step
+//! dispatch. The model always emits its raw history-hash token per row;
+//! per-branch `(seed, branch_index)` salting happens on the host side of
+//! the sample loop, so the greedy `n = 1` path stays byte-identical.
 
 use std::rc::Rc;
 use std::time::Instant;
@@ -14,13 +24,13 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::batch::{self, BatchMetadata};
-use crate::config::{EngineConfig, ModelConfig, Variant};
+use crate::config::{EngineConfig, ModelConfig, SamplingParams, Variant};
 use crate::heuristics::{Heuristics, KernelChoice};
-use crate::kvcache::KvCacheManager;
+use crate::kvcache::{KvCacheManager, PageId};
 use crate::manifest::ArtifactSpec;
 use crate::metrics::EngineMetrics;
 use crate::runtime::{Executable, HostTensor, Runtime};
-use crate::scheduler::{Request, RequestId, ScheduledBatch, Scheduler};
+use crate::scheduler::{RequestId, ScheduledBatch, Scheduler, SequenceGroup};
 
 /// Report of one engine step (for logs, benches and tests).
 #[derive(Debug, Clone)]
@@ -31,6 +41,8 @@ pub struct StepReport {
     pub new_tokens: usize,
     pub num_decodes: usize,
     pub preempted: usize,
+    /// Copy-on-write page copies applied before this dispatch.
+    pub cow_copies: usize,
     pub step_us: f64,
     pub dispatch_us: f64,
 }
@@ -47,10 +59,12 @@ pub struct Engine {
     state: xla::PjRtBuffer,
     extract: Rc<Executable>,
     step_specs: Vec<ArtifactSpec>,
+    /// Slot capacity of the compiled cache buffers (state lane stride).
+    num_slots: usize,
     started: Instant,
     pub metrics: EngineMetrics,
     next_id: RequestId,
-    finished: Vec<Request>,
+    finished: Vec<SequenceGroup>,
 }
 
 impl Engine {
@@ -124,6 +138,7 @@ impl Engine {
             state,
             extract,
             step_specs,
+            num_slots,
             started: Instant::now(),
             metrics: EngineMetrics::default(),
             next_id: 1,
@@ -143,9 +158,23 @@ impl Engine {
         self.started.elapsed().as_nanos() as u64
     }
 
-    /// Enqueue a generation request; returns its id.
+    /// Enqueue a single-branch greedy request; returns its id.
     pub fn add_request(&mut self, prompt: Vec<i32>, max_new_tokens: usize)
         -> Result<RequestId> {
+        self.add_group(prompt, max_new_tokens, SamplingParams::default())
+    }
+
+    /// Enqueue a sequence group: `sampling.n` parallel branches sharing
+    /// `prompt`, each generating up to `max_new_tokens`.
+    pub fn add_group(&mut self, prompt: Vec<i32>, max_new_tokens: usize,
+                     sampling: SamplingParams) -> Result<RequestId> {
+        if sampling.n == 0 {
+            bail!("sampling n must be at least 1");
+        }
+        if sampling.n > self.ecfg.max_num_seqs {
+            bail!("sampling n {} exceeds max_num_seqs {}",
+                  sampling.n, self.ecfg.max_num_seqs);
+        }
         for &t in &prompt {
             if t < 0 || t as usize >= self.model_cfg.vocab_size {
                 bail!("token {t} out of vocab");
@@ -157,8 +186,8 @@ impl Engine {
         }
         let id = self.next_id;
         self.next_id += 1;
-        self.scheduler.add_request(
-            id, prompt, max_new_tokens.min(limit), self.now_ns());
+        self.scheduler.add_group(
+            id, prompt, sampling, max_new_tokens.min(limit), self.now_ns());
         Ok(id)
     }
 
@@ -166,7 +195,7 @@ impl Engine {
         self.scheduler.has_unfinished()
     }
 
-    pub fn take_finished(&mut self) -> Vec<Request> {
+    pub fn take_finished(&mut self) -> Vec<SequenceGroup> {
         std::mem::take(&mut self.finished)
     }
 
@@ -174,12 +203,26 @@ impl Engine {
         self.kv.free_pages() as f64 / self.kv.total_pages() as f64
     }
 
+    /// Read-only view of the KV-cache manager (tests, diagnostics).
+    pub fn kv(&self) -> &KvCacheManager {
+        &self.kv
+    }
+
     /// Pick the artifact for this batch: heuristics choose the variant and
     /// config knobs; bucketing picks the smallest compiled envelope that
     /// fits (the paper's power-of-two graph set, §6.2).
     fn select_artifact(&self, batch: &ScheduledBatch) -> Result<ArtifactSpec> {
         let features = batch::features_of(batch);
-        let choice = self.heuristics.choose(&features);
+        let mut choice = self.heuristics.choose(&features);
+        // Cache-aware bucketing: query regions are padded to block_q, but
+        // they only contain *uncached* new tokens (cached prefixes attach
+        // at admission). Capping block_q at the longest uncached tail
+        // keeps cache-hot batches inside the smaller compiled envelopes.
+        if features.max_query_len > 0 {
+            choice.block_q = choice
+                .block_q
+                .min(features.max_query_len.next_power_of_two());
+        }
         self.select_for_choice(batch, choice)
             .or_else(|_| {
                 // fall back to the default variant if the tuned choice has
@@ -206,6 +249,30 @@ impl Engine {
             })
     }
 
+    /// Mirror the scheduler's copy-on-write splits into the device-resident
+    /// cache: for each `(src, dst)` pair, copy the page's K and V lanes so
+    /// the forked branch decodes over its real shared-prefix content. This
+    /// is the paged-attention page-copy dispatch (vLLM's `copy_blocks`);
+    /// on the sim runtime it round-trips the flat state through the host.
+    fn apply_cow_copies(&mut self, copies: &[(PageId, PageId)]) -> Result<()> {
+        if copies.is_empty() {
+            return Ok(());
+        }
+        let bs = self.kv.block_size();
+        let mut st = self.rt.download_f32(&self.state)?;
+        for &(src, dst) in copies {
+            for lane in [0, self.num_slots] {
+                for k in 0..bs {
+                    st[lane + dst as usize * bs + k] =
+                        st[lane + src as usize * bs + k];
+                }
+            }
+        }
+        let n = st.len();
+        self.state = self.rt.upload(&HostTensor::F32(st), &[n])?;
+        Ok(())
+    }
+
     fn select_for_choice(&self, batch: &ScheduledBatch, choice: KernelChoice)
         -> Result<ArtifactSpec> {
         self.step_specs
@@ -227,6 +294,9 @@ impl Engine {
     pub fn step(&mut self) -> Result<Option<StepReport>> {
         let t_step = Instant::now();
         let batch = self.scheduler.schedule(&mut self.kv);
+        // CoW splits must reach the device cache even when the batch ended
+        // up empty (the split branch may only be dispatched next step).
+        self.apply_cow_copies(&batch.cow_copies)?;
         if batch.is_empty() {
             return Ok(None);
         }
@@ -237,16 +307,30 @@ impl Engine {
         let tokens = self.dispatch(&spec, &md)?;
         let dispatch_us = t_dispatch.elapsed().as_secs_f64() * 1e6;
 
-        // pair sampled tokens with request ids (row order == md.order)
-        let results: Vec<(RequestId, i32)> = md
+        // Pair raw sampled tokens with (request, branch) rows (row order
+        // == md.order). Per-branch salting happens in the scheduler's
+        // sample accounting, where forked branches are also seeded.
+        let results: Vec<(RequestId, usize, i32)> = md
             .order
             .iter()
             .enumerate()
-            .map(|(i, &id)| (id, tokens[i]))
+            .map(|(i, &(id, branch))| (id, branch, tokens[i]))
             .collect();
         let now = self.now_ns();
-        self.scheduler.on_step_complete(&batch, &results, &mut self.kv, now);
-        self.finished.extend(self.scheduler.take_finished());
+        let forked_before = self.scheduler.stats.forked_branches;
+        self.scheduler.on_step_complete(
+            &batch, &results, &mut self.kv,
+            self.model_cfg.vocab_size, now);
+        let fork_seeds = self.scheduler.stats.forked_branches - forked_before;
+        for g in self.scheduler.take_finished() {
+            self.metrics.groups_finished += 1;
+            if let Some(f) = g.finish_ns {
+                self.metrics
+                    .group_latency_ms
+                    .record(f.saturating_sub(g.enqueue_ns) as f64 / 1e6);
+            }
+            self.finished.push(g);
+        }
 
         // bookkeeping
         let step_us = t_step.elapsed().as_secs_f64() * 1e6;
@@ -257,6 +341,7 @@ impl Engine {
             new_tokens: batch.total_new_tokens(),
             num_decodes: batch.num_decodes(),
             preempted: batch.preempted.len(),
+            cow_copies: batch.cow_copies.len(),
             step_us,
             dispatch_us,
         };
@@ -268,14 +353,23 @@ impl Engine {
         let cache = self.kv.cache_stats();
         self.metrics.prefix_hit_tokens = cache.hit_tokens;
         self.metrics.prefix_lookup_tokens = cache.lookup_tokens;
+        // refresh the eviction-age mirror only on steps that evicted
+        if cache.evictions != self.metrics.prefix_evictions {
+            self.metrics.prefix_eviction_age_steps =
+                self.kv.eviction_age().clone();
+        }
         self.metrics.prefix_evictions = cache.evictions;
         self.metrics.prefix_cached_blocks = self.kv.cached_blocks() as u64;
+        self.metrics.forked_pages = cache.forked_pages;
+        self.metrics.cow_copies = cache.cow_copies;
         let decodes = batch
             .seqs
             .iter()
             .filter(|s| s.samples)
             .count() as u64;
-        self.metrics.generated_tokens += decodes;
+        // forked branches each received a salted first token without a
+        // metadata row of their own
+        self.metrics.generated_tokens += decodes + fork_seeds;
         self.metrics.prompt_tokens += batch
             .seqs
             .iter()
@@ -336,7 +430,7 @@ impl Engine {
     }
 
     /// Drive until all requests finish; returns them in finish order.
-    pub fn run_to_completion(&mut self) -> Result<Vec<Request>> {
+    pub fn run_to_completion(&mut self) -> Result<Vec<SequenceGroup>> {
         while self.has_unfinished() {
             if self.step()?.is_none() && self.has_unfinished() {
                 bail!("scheduler made no progress with work pending");
@@ -369,12 +463,12 @@ mod tests {
         e1.add_request(prompt.clone(), 8).unwrap();
         let out1 = e1.run_to_completion().unwrap();
         assert_eq!(out1.len(), 1);
-        assert_eq!(out1[0].output.len(), 8);
+        assert_eq!(out1[0].output().len(), 8);
 
         let mut e2 = engine();
         e2.add_request(prompt, 8).unwrap();
         let out2 = e2.run_to_completion().unwrap();
-        assert_eq!(out1[0].output, out2[0].output,
+        assert_eq!(out1[0].output(), out2[0].output(),
                    "greedy decode must be deterministic");
     }
 
@@ -394,10 +488,10 @@ mod tests {
         both.add_request(p2, 5).unwrap();
         let mut fin = both.run_to_completion().unwrap();
         fin.sort_by_key(|r| r.id);
-        assert_eq!(fin[if fin[0].id == id1 { 0 } else { 1 }].output,
-                   a[0].output);
-        assert_eq!(fin[if fin[0].id == id1 { 1 } else { 0 }].output,
-                   b[0].output);
+        assert_eq!(fin[if fin[0].id == id1 { 0 } else { 1 }].output(),
+                   a[0].output());
+        assert_eq!(fin[if fin[0].id == id1 { 1 } else { 0 }].output(),
+                   b[0].output());
     }
 
     #[test]
@@ -414,5 +508,51 @@ mod tests {
         let mut e = engine();
         assert!(e.add_request(vec![-1], 2).is_err());
         assert!(e.add_request(vec![1_000_000], 2).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_group_widths() {
+        let mut e = engine();
+        let zero = SamplingParams { n: 0, ..Default::default() };
+        assert!(e.add_group(vec![1], 2, zero).is_err());
+        let wide = SamplingParams { n: 99, ..Default::default() };
+        assert!(e.add_group(vec![1], 2, wide).is_err(),
+                "n beyond max_num_seqs cannot ever be scheduled");
+    }
+
+    #[test]
+    fn default_group_matches_plain_request() {
+        let prompt = vec![9, 8, 7, 6];
+        let mut a = engine();
+        a.add_request(prompt.clone(), 6).unwrap();
+        let ra = a.run_to_completion().unwrap();
+
+        let mut b = engine();
+        b.add_group(prompt, 6, SamplingParams::default()).unwrap();
+        let rb = b.run_to_completion().unwrap();
+        assert_eq!(ra[0].output(), rb[0].output(),
+                   "n=1 greedy group must be byte-identical");
+    }
+
+    #[test]
+    fn parallel_sampling_forks_and_diverges() {
+        let mut e = engine();
+        let sampling = SamplingParams { n: 4, seed: 3, temperature: 0.8 };
+        e.add_group(vec![5; 40], 6, sampling).unwrap();
+        let fin = e.run_to_completion().unwrap();
+        assert_eq!(fin.len(), 1);
+        assert_eq!(fin[0].seqs.len(), 4);
+        for s in &fin[0].seqs {
+            assert_eq!(s.output.len(), 6);
+        }
+        let outs: Vec<&Vec<i32>> =
+            fin[0].seqs.iter().map(|s| &s.output).collect();
+        assert!(outs.iter().any(|o| *o != outs[0]),
+                "salted branches must diverge");
+        assert!(e.metrics.forked_pages > 0, "prompt pages were shared");
+        assert!(e.metrics.cow_copies > 0,
+                "divergent writes into the partial prompt page must CoW");
+        assert_eq!(e.metrics.groups_finished, 1);
+        assert_eq!(e.free_page_fraction(), 1.0, "all pages returned");
     }
 }

@@ -201,8 +201,15 @@ pub struct Heuristics {
 }
 
 impl Heuristics {
+    /// Cache-aware phase routing: strictly-decode batches and *decode-like*
+    /// batches (every row cache-hot with only a short uncached tail — see
+    /// [`BatchFeatures::is_decode_like`]) take the decode tree, so a warm
+    /// prefix cache lands traffic on the decode-specialized kernels and
+    /// their smaller compiled envelopes earlier. If the decode tree picks
+    /// a strictly-decode-only variant that cannot serve the tail, the
+    /// engine's artifact-selection fallback chain recovers.
     pub fn choose(&self, f: &BatchFeatures) -> KernelChoice {
-        if f.is_decode_only() {
+        if f.is_decode_only() || f.is_decode_like() {
             self.decode.choose(f)
         } else {
             self.prefill.choose(f)
@@ -288,6 +295,7 @@ mod tests {
         BatchFeatures {
             num_seqs,
             num_decodes,
+            num_decode_like: num_decodes,
             max_query_len: max_q,
             avg_query_len: max_q as f64,
             max_seq_len: max_seq,
@@ -316,6 +324,32 @@ mod tests {
             let c = h.choose(&feats(s, 0, q, l));
             assert_ne!(c.variant, Variant::Parts);
         }
+    }
+
+    #[test]
+    fn cache_hot_batches_route_to_decode_tree() {
+        let h = Heuristics::default_tree();
+        // mixed batch where every row is cache-hot (short uncached tails,
+        // nonzero context) but not strictly decode: decode tree applies
+        let f = BatchFeatures {
+            num_seqs: 2,
+            num_decodes: 1,
+            num_decode_like: 2,
+            max_query_len: 16,
+            avg_query_len: 8.5,
+            max_seq_len: 64,
+            total_kv_tokens: 112,
+            total_new_tokens: 17,
+        };
+        assert!(f.is_decode_like() && !f.is_decode_only());
+        let c = h.choose(&f);
+        // the decode tree's short-sequence leaf (block_q = 1), not the
+        // prefill tree's block_q = 16 leaf: cache-hot tails pack into the
+        // smaller decode-shaped envelopes
+        assert_eq!(c.block_q, 1);
+        // a cold prefill row in the batch disables the routing
+        let cold = BatchFeatures { num_decode_like: 1, ..f };
+        assert_eq!(h.choose(&cold).block_q, 16);
     }
 
     #[test]

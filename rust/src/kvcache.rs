@@ -33,6 +33,7 @@ use std::collections::{BTreeMap, HashMap};
 use anyhow::{bail, Result};
 
 use crate::config::cdiv;
+use crate::metrics::Histogram;
 
 /// Physical page id inside the device-resident cache buffers.
 pub type PageId = u32;
@@ -167,6 +168,12 @@ pub struct CacheStats {
     pub hit_tokens: u64,
     /// Cached refcount-0 pages reclaimed by the allocator.
     pub evictions: u64,
+    /// Pages handed out by the allocator (fresh or reclaimed) so far.
+    pub pages_allocated: u64,
+    /// Pages shared (refcount-bumped) by copy-on-write `fork` calls.
+    pub forked_pages: u64,
+    /// Copy-on-write page copies performed by `unshare_last`.
+    pub cow_copies: u64,
 }
 
 impl CacheStats {
@@ -207,6 +214,12 @@ pub struct KvCacheManager {
     /// page → its tick in `evictable` (0 = not parked)
     page_tick: Vec<u64>,
     tick: u64,
+    /// Scheduler step counter (see `advance_step`) for eviction ages.
+    step: u64,
+    /// page → step at which it parked refcount-0 in the evictable pool
+    park_step: Vec<u64>,
+    /// Steps between refcount-0 parking and eviction, per evicted page.
+    eviction_age: Histogram,
     stats: CacheStats,
 }
 
@@ -226,8 +239,22 @@ impl KvCacheManager {
             evictable: BTreeMap::new(),
             page_tick: vec![0; num_pages],
             tick: 0,
+            step: 0,
+            park_step: vec![0; num_pages],
+            eviction_age: Histogram::new(),
             stats: CacheStats::default(),
         }
+    }
+
+    /// Advance the step clock the eviction-age histogram is measured in.
+    /// The scheduler calls this once per `schedule`.
+    pub fn advance_step(&mut self) {
+        self.step += 1;
+    }
+
+    /// Steps each evicted page sat refcount-0 before being reclaimed.
+    pub fn eviction_age(&self) -> &Histogram {
+        &self.eviction_age
     }
 
     /// Builder-style toggle for automatic prefix caching.
@@ -310,11 +337,13 @@ impl KvCacheManager {
     /// Grab a page: free list first, then reclaim the LRU evictable page.
     fn allocate_page(&mut self) -> Result<PageId> {
         if self.alloc.free_pages() > 0 {
+            self.stats.pages_allocated += 1;
             return self.alloc.allocate();
         }
         match self.evict_lru() {
             Some(p) => {
                 self.alloc.reuse_detached(p);
+                self.stats.pages_allocated += 1;
                 Ok(p)
             }
             None => bail!("out of KV cache pages"),
@@ -330,6 +359,9 @@ impl KvCacheManager {
         if let Some(k) = self.page_key[p as usize].take() {
             self.index.remove(&k);
         }
+        let age = self.step.saturating_sub(self.park_step[p as usize]);
+        self.eviction_age.record(age as f64);
+        self.park_step[p as usize] = 0;
         self.stats.evictions += 1;
         Some(p)
     }
@@ -344,6 +376,7 @@ impl KvCacheManager {
             self.tick += 1;
             self.evictable.insert(self.tick, p);
             self.page_tick[p as usize] = self.tick;
+            self.park_step[p as usize] = self.step;
         } else {
             self.alloc.free_detached(p);
         }
@@ -360,6 +393,7 @@ impl KvCacheManager {
         debug_assert!(t != 0, "rc-0 cached page must be parked");
         self.evictable.remove(&t);
         self.page_tick[p as usize] = 0;
+        self.park_step[p as usize] = 0;
         self.alloc.reuse_detached(p);
     }
 
@@ -383,6 +417,32 @@ impl KvCacheManager {
             }
         }
         hit
+    }
+
+    /// Pages of `tokens`' cached full-block prefix that are currently
+    /// parked refcount-0 in the evictable pool. Attaching them pins pages
+    /// the admission watermark would otherwise count as reclaimable, so
+    /// admission must charge them against its headroom check. Read-only.
+    pub fn parked_prefix_pages(&self, tokens: &[i32]) -> usize {
+        if !self.caching {
+            return 0;
+        }
+        let bs = self.alloc.block_size;
+        let max_full = tokens.len().saturating_sub(1) / bs;
+        let mut chain = HASH_SEED;
+        let mut parked = 0;
+        for blk in 0..max_full {
+            chain = hash_block(chain, &tokens[blk * bs..(blk + 1) * bs]);
+            match self.index.get(&chain) {
+                Some(&p) => {
+                    if self.alloc.ref_count(p) == 0 {
+                        parked += 1;
+                    }
+                }
+                None => break,
+            }
+        }
+        parked
     }
 
     /// Attach the cached prefix of `tokens` to freshly-registered sequence
@@ -497,12 +557,14 @@ impl KvCacheManager {
     }
 
     /// Copy-on-write fork: the child shares all of the parent's pages
-    /// (prefix caching substrate; full CoW splitting is done by `unshare`).
+    /// (parallel-sampling substrate; CoW splitting is done by
+    /// `unshare_last` at the first divergent write).
     pub fn fork(&mut self, parent: SeqHandle) -> SeqHandle {
         let pt = self.table(parent).clone();
         for &p in &pt.pages {
             self.alloc.retain(p);
         }
+        self.stats.forked_pages += pt.pages.len() as u64;
         let h = self.register();
         self.tables[h] = Some(pt);
         h
@@ -523,6 +585,7 @@ impl KvCacheManager {
         let t = self.tables[h].as_mut().unwrap();
         *t.pages.last_mut().unwrap() = fresh;
         self.release_page(last);
+        self.stats.cow_copies += 1;
         Ok(Some((last, fresh)))
     }
 
@@ -837,6 +900,39 @@ mod tests {
         assert_eq!(m.evictable_pages(), 0);
         assert_eq!(m.lookup_prefix(&t), 0);
         assert_eq!(m.free_pages(), 7);
+    }
+
+    #[test]
+    fn sharing_counters_and_eviction_age_clock() {
+        let mut m = caching(8);
+        let t = toks(64, 23);
+        let h = m.register();
+        m.grow(h, 64).unwrap();
+        assert_eq!(m.cache_stats().pages_allocated, 4);
+        m.commit_prefix(h, &t, 64);
+
+        let c = m.fork(h);
+        assert_eq!(m.cache_stats().forked_pages, 4, "fork shares 4 pages");
+        let cow = m.unshare_last(c).unwrap();
+        assert!(cow.is_some());
+        assert_eq!(m.cache_stats().cow_copies, 1);
+        assert_eq!(m.cache_stats().pages_allocated, 5, "CoW allocated a page");
+
+        // park the 4 registered pages, tick the step clock, then force
+        // eviction: every evicted page reports a 3-step age
+        m.free(h);
+        m.free(c);
+        assert_eq!(m.evictable_pages(), 4);
+        for _ in 0..3 {
+            m.advance_step();
+        }
+        let h2 = m.register();
+        m.grow(h2, 16 * 8).unwrap(); // 4 free-list pages + 4 evictions
+        assert_eq!(m.cache_stats().evictions, 4);
+        assert_eq!(m.eviction_age().count(), 4);
+        assert!((m.eviction_age().mean() - 3.0).abs() < 1e-9,
+                "parked at step s, evicted at s+3");
+        m.free(h2);
     }
 
     /// Randomized invariant check (hand-rolled property test): a random

@@ -15,7 +15,7 @@ use std::rc::Rc;
 use anyhow::{bail, Context, Result};
 
 use triton_anatomy::autotune;
-use triton_anatomy::config::EngineConfig;
+use triton_anatomy::config::{EngineConfig, SamplingParams};
 use triton_anatomy::engine::Engine;
 use triton_anatomy::heuristics::Heuristics;
 use triton_anatomy::microbench::{self, BenchOpts};
@@ -78,6 +78,7 @@ USAGE: repro <command> [--artifacts DIR] [options]
 COMMANDS:
   serve        --addr 127.0.0.1:7001 --model tiny [--max-requests N]
   run          --prompt-len 16 --max-new 16 --model tiny [--heuristics F]
+               [--n 4 --sample-seed 1 --temperature 0.7]  parallel sampling
   bench-micro  --scenario decode|prefill|mixed --batch 4 --seq-len 256
                [--decode-share 0.5] [--iters 5] [--warmup 2]
   tune         --out artifacts/heuristics.json [--iters 3] [--max-seq-len 2048]
@@ -135,18 +136,27 @@ fn cmd_run(args: &Args, dir: PathBuf) -> Result<()> {
     }
     let prompt_len = args.usize_or("prompt-len", 16)?;
     let max_new = args.usize_or("max-new", 16)?;
+    let sampling = SamplingParams {
+        n: args.usize_or("n", 1)?,
+        seed: args.usize_or("sample-seed", 0)? as u64,
+        temperature: args.f64_or("temperature", 0.0)?,
+    };
     let mut rng = Rng::new(args.usize_or("seed", 7)? as u64);
     let prompt = rng.tokens(prompt_len, engine.model_cfg.vocab_size);
 
     engine.warmup()?;
     let t0 = std::time::Instant::now();
-    engine.add_request(prompt, max_new)?;
+    engine.add_group(prompt, max_new, sampling)?;
     let fin = engine.run_to_completion()?;
     let dt = t0.elapsed().as_secs_f64();
-    let r = &fin[0];
-    println!("prompt_len={prompt_len} generated={} in {:.3}s ({:.1} tok/s)",
-             r.output.len(), dt, r.output.len() as f64 / dt);
-    println!("tokens: {:?}", r.output);
+    let g = &fin[0];
+    let generated: usize = g.seqs.iter().map(|s| s.output.len()).sum();
+    println!("prompt_len={prompt_len} branches={} generated={} in {:.3}s \
+              ({:.1} tok/s)",
+             g.seqs.len(), generated, dt, generated as f64 / dt);
+    for s in &g.seqs {
+        println!("branch {}: {:?}", s.branch, s.output);
+    }
     println!("--- metrics ---\n{}", engine.metrics.dump());
     Ok(())
 }

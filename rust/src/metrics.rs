@@ -118,6 +118,15 @@ pub struct EngineMetrics {
     pub generated_tokens: u64,
     pub prompt_tokens: u64,
     pub preemptions: u64,
+    // ----- sequence groups / parallel sampling -----
+    /// Sequence groups fully finished (all branches done).
+    pub groups_finished: u64,
+    /// End-to-end latency of finished groups, ms (enqueue → last branch).
+    pub group_latency_ms: Histogram,
+    /// KV pages shared by copy-on-write forks of parallel-sampling groups.
+    pub forked_pages: u64,
+    /// Copy-on-write page copies triggered by divergent branch writes.
+    pub cow_copies: u64,
     // ----- automatic prefix cache (mirrors kvcache::CacheStats) -----
     /// Prompt tokens served from cached KV pages instead of re-prefill.
     pub prefix_hit_tokens: u64,
@@ -127,6 +136,9 @@ pub struct EngineMetrics {
     pub prefix_evictions: u64,
     /// Full blocks currently registered in the prefix index (gauge).
     pub prefix_cached_blocks: u64,
+    /// Steps a cached page sat refcount-0 before the allocator reclaimed
+    /// it (mirrors `KvCacheManager::eviction_age`).
+    pub prefix_eviction_age_steps: Histogram,
     /// Picks per kernel variant name.
     pub variant_picks: std::collections::BTreeMap<String, u64>,
 }
@@ -147,6 +159,10 @@ impl EngineMetrics {
         let _ = writeln!(s, "generated_tokens {}", self.generated_tokens);
         let _ = writeln!(s, "prompt_tokens {}", self.prompt_tokens);
         let _ = writeln!(s, "preemptions {}", self.preemptions);
+        let _ = writeln!(s, "groups_finished {}", self.groups_finished);
+        let _ = writeln!(s, "forked_pages {}", self.forked_pages);
+        let _ = writeln!(s, "cow_copies {}", self.cow_copies);
+        let _ = writeln!(s, "group_latency_ms {}", self.group_latency_ms.summary());
         let _ = writeln!(s, "prefix_cache_hit_tokens {}", self.prefix_hit_tokens);
         let _ = writeln!(s, "prefix_cache_lookup_tokens {}",
                          self.prefix_lookup_tokens);
@@ -154,6 +170,8 @@ impl EngineMetrics {
         let _ = writeln!(s, "prefix_cache_evictions {}", self.prefix_evictions);
         let _ = writeln!(s, "prefix_cache_cached_blocks {}",
                          self.prefix_cached_blocks);
+        let _ = writeln!(s, "prefix_cache_eviction_age_steps {}",
+                         self.prefix_eviction_age_steps.summary());
         let _ = writeln!(s, "step_us {}", self.step_us.summary());
         let _ = writeln!(s, "dispatch_us {}", self.dispatch_us.summary());
         let _ = writeln!(s, "overhead_us {}", self.overhead_us.summary());
@@ -201,6 +219,22 @@ mod tests {
         assert!(d.contains("engine_steps 3"));
         assert!(d.contains("variant_picks{variant=\"qblock\"} 2"));
         assert!(d.contains("prefix_cache_hit_tokens 0"));
+    }
+
+    #[test]
+    fn group_and_eviction_age_metrics_dump() {
+        let mut m = EngineMetrics::default();
+        m.groups_finished = 2;
+        m.forked_pages = 6;
+        m.cow_copies = 3;
+        m.group_latency_ms.record(12.5);
+        m.prefix_eviction_age_steps.record(4.0);
+        let d = m.dump();
+        assert!(d.contains("groups_finished 2"));
+        assert!(d.contains("forked_pages 6"));
+        assert!(d.contains("cow_copies 3"));
+        assert!(d.contains("group_latency_ms n=1"));
+        assert!(d.contains("prefix_cache_eviction_age_steps n=1"));
     }
 
     #[test]

@@ -1,40 +1,62 @@
-//! Continuous-batching scheduler — the vLLM-core analogue (Fig. 1 ①).
+//! Continuous-batching scheduler over *sequence groups* — the vLLM-core
+//! analogue (Fig. 1 ①) extended with parallel sampling (`n > 1`).
 //!
 //! Policy (vLLM V1-style, which the paper's batch-composition analysis in
 //! §7.2 presupposes):
-//!   1. **Decode first**: every running sequence gets its next token
+//!   1. **Decode first**: every running branch gets its next token
 //!      scheduled before any prefill is admitted ("vLLM is always
 //!      prioritizing decode requests", §7.2).
 //!   2. **Prefill admission** under three caps: the per-step token budget
-//!      (`max_batched_tokens`), the sequence cap (`max_num_seqs`), and a
-//!      free-page watermark. Prompts longer than the remaining budget are
-//!      *chunked* (chunked prefill) and continue next step.
-//!   3. **Preemption by recompute**: when the page allocator cannot grow a
-//!      decoding sequence, the most-recently-arrived running sequence is
-//!      evicted, its pages *unpinned* (shared/cached blocks survive in the
-//!      prefix cache), and its full context re-prefilled later.
-//!   4. **Prefix-cache-aware admission**: when the KV manager has prefix
-//!      caching enabled, admission first attaches the prompt's cached
-//!      full-block prefix by refcount bump; `computed` starts at the hit
-//!      length and chunked prefill begins at the first uncached block.
-//!      The free-page watermark counts evictable cached pages as
-//!      reclaimable, so a warm cache never blocks admission.
+//!      (`max_batched_tokens`), the sequence cap (`max_num_seqs`, counted
+//!      in *branch rows* with a group's full width reserved up front —
+//!      its shared prompt pages are only counted once), and a free-page
+//!      watermark. Prompts longer than the remaining budget are *chunked*
+//!      (chunked prefill) and continue next step.
+//!   3. **Preemption by recompute** of whole groups: when the page
+//!      allocator cannot grow a decoding branch, a running group with no
+//!      branch in the current batch is evicted, its pages *unpinned*
+//!      (shared/cached blocks survive in the prefix cache), and each of
+//!      its branches re-prefills its own full stream later. Among
+//!      eligible victims the scheduler prefers the group with the largest
+//!      fully-cached block prefix — its recompute is nearly free on
+//!      re-admission — breaking ties toward the youngest arrival (the
+//!      only criterion when prefix caching is off).
+//!   4. **Prefix-cache-aware admission**: admission first attaches the
+//!      stream's cached full-block prefix by refcount bump; `computed`
+//!      starts at the hit length and chunked prefill begins at the first
+//!      uncached block. The free-page watermark counts evictable cached
+//!      pages as reclaimable — except the parked blocks the admission
+//!      itself would pin, which are charged against the headroom — so a
+//!      warm cache never blocks admission it cannot then satisfy.
+//!
+//! # Sequence groups
+//!
+//! A request is a [`SequenceGroup`]: `sampling.n` member [`Sequence`]s
+//! (branches) sharing one prompt. Prefill runs once, on branch 0. When
+//! the prompt completes and the first token is sampled, the remaining
+//! branches are created by [`KvCacheManager::fork`] — a pure refcount
+//! bump, no page copies — each seeded with its own salted first token.
+//! A branch's first decode write into the shared partial prompt page
+//! triggers copy-on-write via `unshare_last`; the `(src, dst)` pairs are
+//! surfaced in [`ScheduledBatch::cow_copies`] so the engine can mirror
+//! the page copy into the device-resident cache before dispatch. The
+//! group finishes when all branches finish.
 
-use std::collections::VecDeque;
+use std::collections::{HashSet, VecDeque};
 
-use crate::config::EngineConfig;
-use crate::kvcache::{KvCacheManager, SeqHandle};
+use crate::config::{EngineConfig, SamplingParams};
+use crate::kvcache::{KvCacheManager, PageId, SeqHandle};
 
 pub type RequestId = u64;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FinishReason {
-    /// Generated `max_new_tokens`.
+    /// Generated `max_new_tokens` (the model length limit is enforced up
+    /// front: `Engine::add_group` clamps `max_new_tokens` to what fits).
     Length,
-    /// Hit the model's max length.
-    ModelLimit,
 }
 
+/// Lifecycle of one branch of a group.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum State {
     Waiting,
@@ -42,18 +64,53 @@ pub enum State {
     Finished(FinishReason),
 }
 
-/// One in-flight generation request.
+/// One member sequence (branch) of a [`SequenceGroup`].
 #[derive(Debug)]
-pub struct Request {
-    pub id: RequestId,
-    pub prompt: Vec<i32>,
-    pub max_new_tokens: usize,
+pub struct Sequence {
+    /// Branch index inside the group (0 is the prefill primary).
+    pub branch: usize,
     pub state: State,
     pub output: Vec<i32>,
     /// KV handle, valid while Running.
     pub handle: Option<SeqHandle>,
     /// Tokens of (prompt + output) whose KV is already computed.
     pub computed: usize,
+    pub first_token_ns: Option<u64>,
+}
+
+impl Sequence {
+    fn fresh(branch: usize) -> Self {
+        Sequence {
+            branch,
+            state: State::Waiting,
+            output: Vec::new(),
+            handle: None,
+            computed: 0,
+            first_token_ns: None,
+        }
+    }
+
+    pub fn is_finished(&self) -> bool {
+        matches!(self.state, State::Finished(_))
+    }
+}
+
+/// One in-flight request: a group of `sampling.n` branches sharing a
+/// prompt (the vLLM `SequenceGroup` analogue).
+#[derive(Debug)]
+pub struct SequenceGroup {
+    pub id: RequestId,
+    pub prompt: Vec<i32>,
+    pub sampling: SamplingParams,
+    pub max_new_tokens: usize,
+    /// Member branches; starts as just branch 0, grows to `sampling.n`
+    /// by copy-on-write fork when the prompt prefill completes.
+    pub seqs: Vec<Sequence>,
+    /// Branches 1..n exist (fork happened).
+    pub forked: bool,
+    /// Prefix-cache hit length at first admission (server observability).
+    pub cached_tokens: usize,
+    admitted: bool,
     pub arrival_seq: u64,
     // ----- telemetry -----
     pub enqueue_ns: u64,
@@ -62,25 +119,64 @@ pub struct Request {
     pub preemptions: u32,
 }
 
-impl Request {
-    /// Full token sequence so far (prompt + generated).
-    pub fn total_len(&self) -> usize {
-        self.prompt.len() + self.output.len()
+impl SequenceGroup {
+    /// Full token count of one branch so far (prompt + generated).
+    pub fn total_len(&self, branch: usize) -> usize {
+        self.prompt.len() + self.seqs[branch].output.len()
     }
 
-    fn token_at(&self, i: usize) -> i32 {
+    fn token_at(&self, branch: usize, i: usize) -> i32 {
         if i < self.prompt.len() {
             self.prompt[i]
         } else {
-            self.output[i - self.prompt.len()]
+            self.seqs[branch].output[i - self.prompt.len()]
         }
+    }
+
+    /// Full token stream of one branch (prompt + generated).
+    pub fn stream(&self, branch: usize) -> Vec<i32> {
+        let mut v = self.prompt.clone();
+        v.extend_from_slice(&self.seqs[branch].output);
+        v
+    }
+
+    /// All branches exist and are finished.
+    pub fn is_finished(&self) -> bool {
+        (self.forked || self.sampling.n == 1)
+            && self.seqs.iter().all(|s| s.is_finished())
+    }
+
+    /// Output of the primary branch — the `n = 1` / legacy view.
+    pub fn output(&self) -> &[i32] {
+        &self.seqs[0].output
+    }
+
+    /// State of the primary branch — the `n = 1` / legacy view.
+    pub fn state(&self) -> State {
+        self.seqs[0].state
+    }
+
+    /// Rows this group occupies against `max_num_seqs`: unfinished
+    /// branches plus the branches an unforked group will still create.
+    /// (Rows are reserved up front; the shared prompt *pages* are only
+    /// ever counted once — fork allocates nothing.)
+    fn reserved_rows(&self) -> usize {
+        let live = self.seqs.iter().filter(|s| !s.is_finished()).count();
+        let pending = if self.forked {
+            0
+        } else {
+            self.sampling.n - self.seqs.len()
+        };
+        live + pending
     }
 }
 
-/// What the engine must feed the model for one sequence this step.
+/// What the engine must feed the model for one branch this step.
 #[derive(Debug, Clone)]
 pub struct ScheduledSeq {
     pub id: RequestId,
+    /// Branch index inside the group.
+    pub branch: usize,
     pub handle: SeqHandle,
     /// Context length: tokens already in the KV cache.
     pub ctx_len: usize,
@@ -89,7 +185,7 @@ pub struct ScheduledSeq {
     /// Does the sampled token become visible output? (false for non-final
     /// prefill chunks — their sample is discarded.)
     pub samples: bool,
-    /// Provenance: true when `tokens` come from the request's known stream
+    /// Provenance: true when `tokens` come from the branch's known stream
     /// (prefill chunk — fresh, continued, or the tail after a prefix-cache
     /// hit), false for a decode continuation feeding the last sample.
     /// Shape alone cannot tell a one-token cache-hit tail from a decode.
@@ -100,6 +196,11 @@ pub struct ScheduledSeq {
 pub struct ScheduledBatch {
     pub seqs: Vec<ScheduledSeq>,
     pub preempted: Vec<RequestId>,
+    /// Copy-on-write `(src, dst)` page pairs from `unshare_last`: the
+    /// engine must copy each page's cache content device-side before
+    /// dispatching this step, or forked branches would decode over a
+    /// blank copy of their shared partial prompt page.
+    pub cow_copies: Vec<(PageId, PageId)>,
 }
 
 impl ScheduledBatch {
@@ -129,13 +230,15 @@ pub struct SchedulerStats {
     pub scheduled_tokens: u64,
     /// Prompt tokens served from the prefix cache instead of re-prefill.
     pub cached_tokens: u64,
+    /// Branches created by copy-on-write forks (n-1 per forked group).
+    pub forked_branches: u64,
 }
 
 pub struct Scheduler {
     cfg: EngineConfig,
-    waiting: VecDeque<Request>,
-    running: Vec<Request>,
-    finished: Vec<Request>,
+    waiting: VecDeque<SequenceGroup>,
+    running: Vec<SequenceGroup>,
+    finished: Vec<SequenceGroup>,
     next_arrival: u64,
     pub stats: SchedulerStats,
 }
@@ -152,17 +255,32 @@ impl Scheduler {
         }
     }
 
+    /// Enqueue a single-branch greedy request (the legacy entry point).
     pub fn add_request(&mut self, id: RequestId, prompt: Vec<i32>,
                        max_new_tokens: usize, now_ns: u64) {
+        self.add_group(id, prompt, SamplingParams::default(),
+                       max_new_tokens, now_ns);
+    }
+
+    /// Enqueue a sequence group of `sampling.n` parallel branches. Every
+    /// branch generates at least one token (`max_new_tokens` is clamped to
+    /// 1): sampling happens as a side effect of prefill anyway, and a
+    /// zero-token branch could otherwise finish before the group forks,
+    /// wedging an `n > 1` group with no branches left to create its twins.
+    pub fn add_group(&mut self, id: RequestId, prompt: Vec<i32>,
+                     sampling: SamplingParams, max_new_tokens: usize,
+                     now_ns: u64) {
         assert!(!prompt.is_empty(), "empty prompt");
-        let r = Request {
+        assert!(sampling.n >= 1, "group needs at least one branch");
+        let g = SequenceGroup {
             id,
             prompt,
-            max_new_tokens,
-            state: State::Waiting,
-            output: Vec::new(),
-            handle: None,
-            computed: 0,
+            sampling,
+            max_new_tokens: max_new_tokens.max(1),
+            seqs: vec![Sequence::fresh(0)],
+            forked: false,
+            cached_tokens: 0,
+            admitted: false,
             arrival_seq: self.next_arrival,
             enqueue_ns: now_ns,
             first_token_ns: None,
@@ -170,137 +288,152 @@ impl Scheduler {
             preemptions: 0,
         };
         self.next_arrival += 1;
-        self.waiting.push_back(r);
+        self.waiting.push_back(g);
     }
 
     pub fn has_unfinished(&self) -> bool {
         !self.waiting.is_empty() || !self.running.is_empty()
     }
 
+    /// Groups awaiting admission.
     pub fn num_waiting(&self) -> usize {
         self.waiting.len()
     }
 
+    /// Groups with at least one admitted branch.
     pub fn num_running(&self) -> usize {
         self.running.len()
     }
 
-    /// Drain finished requests (ownership moves to the caller).
-    pub fn take_finished(&mut self) -> Vec<Request> {
+    /// Branch rows currently in the Running state.
+    pub fn num_running_seqs(&self) -> usize {
+        self.running
+            .iter()
+            .map(|g| g.seqs.iter().filter(|s| s.state == State::Running).count())
+            .sum()
+    }
+
+    fn reserved_rows_total(&self) -> usize {
+        self.running.iter().map(|g| g.reserved_rows()).sum()
+    }
+
+    /// Drain finished groups (ownership moves to the caller).
+    pub fn take_finished(&mut self) -> Vec<SequenceGroup> {
         std::mem::take(&mut self.finished)
     }
 
     /// Build the next batch. `kv` is mutated: pages are allocated for the
-    /// scheduled work and freed for preempted sequences.
+    /// scheduled work, copy-on-write splits are performed for branches
+    /// about to write into shared pages, and preempted groups are freed.
     pub fn schedule(&mut self, kv: &mut KvCacheManager) -> ScheduledBatch {
+        kv.advance_step();
         let mut batch = ScheduledBatch::default();
         let mut budget = self.cfg.max_batched_tokens;
+        // Groups with a branch in the batch: protected from preemption —
+        // their metadata is about to be built against the current block
+        // tables (and their CoW destinations must stay owned).
+        let mut scheduled: HashSet<RequestId> = HashSet::new();
 
-        // ---- phase 1: decodes (and prefill continuations), oldest first
-        self.running.sort_by_key(|r| r.arrival_seq);
-        let mut i = 0;
-        while i < self.running.len() {
+        // ---- phase 1: continuations (decodes and prefill chunks) for
+        // running branches, oldest group first
+        self.running.sort_by_key(|g| g.arrival_seq);
+        let mut gi = 0;
+        'groups: while gi < self.running.len() {
             if budget == 0 {
                 break;
             }
-            let r = &self.running[i];
-            let handle = r.handle.expect("running without handle");
-            let total = r.total_len();
-            let (n_new, samples) = if r.computed < total {
-                // prefill (possibly chunked) continuation
-                let n = (total - r.computed).min(budget);
-                (n, r.computed + n == total)
-            } else {
-                (1, true) // decode: feed last sampled token
-            };
-            let new_total = r.computed + n_new.max(1);
-            // decode grows by the token being generated
-            let target = if r.computed >= total { total + 1 } else { new_total };
-
-            if kv.grow(handle, target).is_err() {
-                // ---- preemption by recompute: evict the youngest runner
-                if let Some(victim) = self.pick_victim(i) {
-                    let mut v = self.running.remove(victim);
-                    kv.free(v.handle.take().unwrap());
-                    v.computed = 0;
-                    v.state = State::Waiting;
-                    v.preemptions += 1;
-                    self.stats.preemptions += 1;
-                    batch.preempted.push(v.id);
-                    self.waiting.push_front(v);
-                    continue; // retry the same sequence
+            let mut bi = 0;
+            while bi < self.running[gi].seqs.len() {
+                if budget == 0 {
+                    break 'groups;
                 }
-                break; // nothing to evict — leave for next step
-            }
+                if self.running[gi].seqs[bi].state != State::Running {
+                    bi += 1;
+                    continue;
+                }
+                let g = &self.running[gi];
+                let s = &g.seqs[bi];
+                let handle = s.handle.expect("running branch without handle");
+                let total = g.total_len(bi);
+                let (n_new, samples) = if s.computed < total {
+                    // prefill (possibly chunked) continuation
+                    let n = (total - s.computed).min(budget);
+                    (n, s.computed + n == total)
+                } else {
+                    (1, true) // decode: feed last sampled token
+                };
+                let target = if s.computed >= total {
+                    total + 1 // decode grows by the token being generated
+                } else {
+                    s.computed + n_new
+                };
+                // This step writes starting at `computed`; when that lands
+                // inside the branch's partial last page, a forked branch
+                // must own the page privately first (copy-on-write).
+                let cow = if s.computed % kv.block_size() != 0 {
+                    kv.unshare_last(handle)
+                } else {
+                    Ok(None)
+                };
+                let grown = match cow {
+                    Ok(pair) => {
+                        if let Some(pair) = pair {
+                            batch.cow_copies.push(pair);
+                        }
+                        kv.grow(handle, target)
+                    }
+                    Err(e) => Err(e),
+                };
 
-            let r = &mut self.running[i];
-            let is_prefill = r.computed < total;
-            let tokens: Vec<i32> = if is_prefill {
-                (r.computed..r.computed + n_new).map(|j| r.token_at(j)).collect()
-            } else {
-                vec![*r.output.last().or(r.prompt.last()).unwrap()]
-            };
-            budget -= tokens.len().min(budget);
-            batch.seqs.push(ScheduledSeq {
-                id: r.id,
-                handle: r.handle.unwrap(),
-                ctx_len: r.computed,
-                tokens,
-                samples,
-                prefill: is_prefill,
-            });
-            i += 1;
+                if grown.is_err() {
+                    // ---- preemption by recompute of a whole group
+                    let current = self.running[gi].id;
+                    match self.pick_victim(kv, current, &scheduled) {
+                        Some(j) => {
+                            self.preempt(j, kv, &mut batch);
+                            if j < gi {
+                                gi -= 1;
+                            }
+                            continue; // retry the same branch
+                        }
+                        None => break 'groups, // nothing to evict
+                    }
+                }
+
+                let g = &self.running[gi];
+                let s = &g.seqs[bi];
+                let is_prefill = s.computed < total;
+                let tokens: Vec<i32> = if is_prefill {
+                    (s.computed..s.computed + n_new)
+                        .map(|k| g.token_at(bi, k))
+                        .collect()
+                } else {
+                    vec![*s.output.last().or(g.prompt.last()).unwrap()]
+                };
+                budget -= tokens.len().min(budget);
+                batch.seqs.push(ScheduledSeq {
+                    id: g.id,
+                    branch: bi,
+                    handle,
+                    ctx_len: s.computed,
+                    tokens,
+                    samples,
+                    prefill: is_prefill,
+                });
+                scheduled.insert(g.id);
+                bi += 1;
+            }
+            gi += 1;
         }
 
-        // ---- phase 2: admit waiting prefills (prefix-cache aware)
-        while budget > 0 {
-            if self.running.len() >= self.cfg.max_num_seqs
-                || batch.seqs.len() >= self.cfg.max_num_seqs
-            {
+        // ---- phase 2: admissions (prefix-cache aware), one branch at a
+        // time. Waiting branches of already-running groups (a partially
+        // re-admitted preemption victim) resume first, then whole groups
+        // from the queue in FCFS order.
+        while budget > 0 && batch.seqs.len() < self.cfg.max_num_seqs {
+            if !self.admit_one(kv, &mut batch, &mut budget) {
                 break;
             }
-            let Some(front) = self.waiting.front() else {
-                break;
-            };
-            let total = front.total_len();
-            let all_tokens: Vec<i32> = (0..total).map(|j| front.token_at(j)).collect();
-
-            // Read-only probe first: a blocked admission must leave the
-            // cache untouched (no LRU churn, no hit-metric inflation).
-            let cached = kv.lookup_prefix(&all_tokens);
-            let chunk = (total - cached).min(budget);
-            let need = kv.pages_needed_from(cached, cached + chunk);
-            // Watermark over reclaimable pages (free list + evictable
-            // cached pages) — a warm cache never blocks admission.
-            if kv.free_pages() < need + self.cfg.watermark_blocks {
-                break;
-            }
-            // Attach the cached full-block prefix by refcount bump;
-            // prefill then starts at the first uncached token.
-            // `lookup_prefix`/`attach_prefix` cap the hit so at least one
-            // token remains to compute.
-            let handle = kv.register();
-            let attached = kv.attach_prefix(handle, &all_tokens);
-            debug_assert_eq!(attached, cached, "lookup/attach must agree");
-            kv.grow(handle, cached + chunk)
-                .expect("watermark check guaranteed pages");
-            let mut r = self.waiting.pop_front().unwrap();
-            r.handle = Some(handle);
-            r.state = State::Running;
-            r.computed = cached;
-            self.stats.cached_tokens += cached as u64;
-            let tokens: Vec<i32> =
-                all_tokens[cached..cached + chunk].to_vec();
-            budget -= chunk;
-            batch.seqs.push(ScheduledSeq {
-                id: r.id,
-                handle,
-                ctx_len: cached,
-                tokens,
-                samples: cached + chunk == total,
-                prefill: true,
-            });
-            self.running.push(r);
         }
 
         self.stats.steps += 1;
@@ -308,97 +441,279 @@ impl Scheduler {
         batch
     }
 
-    /// Victim for preemption: the most recently arrived running sequence
-    /// that has NOT been scheduled yet this step (vLLM recompute policy).
-    /// Sequences already in the batch — everything before `protect` in
-    /// arrival order — must keep their pages: their metadata is about to
-    /// be built against the current block tables.
-    fn pick_victim(&self, protect: usize) -> Option<usize> {
+    /// Admit one waiting branch; returns false when nothing is admissible
+    /// (queue empty, sequence cap reached, or watermark blocked).
+    fn admit_one(&mut self, kv: &mut KvCacheManager,
+                 batch: &mut ScheduledBatch, budget: &mut usize) -> bool {
+        // (a) oldest running group with a branch awaiting re-admission
+        let mut target: Option<(bool, usize)> = None; // (from_queue, branch)
+        let mut gi = 0;
+        for (i, g) in self.running.iter().enumerate() {
+            if let Some(b) = g.seqs.iter().position(|s| s.state == State::Waiting)
+            {
+                target = Some((false, b));
+                gi = i;
+                break;
+            }
+        }
+        // (b) the front of the waiting queue (FCFS, no starvation)
+        if target.is_none() {
+            let Some(g) = self.waiting.front() else {
+                return false;
+            };
+            // A group must fit its full branch count under the sequence
+            // cap: rows are reserved up front so a later fork can never
+            // oversubscribe the compiled envelope.
+            if self.reserved_rows_total() + g.reserved_rows()
+                > self.cfg.max_num_seqs
+            {
+                return false;
+            }
+            match g.seqs.iter().position(|s| s.state == State::Waiting) {
+                Some(b) => target = Some((true, b)),
+                None => return false,
+            }
+        }
+        let Some((from_queue, bi)) = target else {
+            return false;
+        };
+        let g = if from_queue {
+            self.waiting.front().unwrap()
+        } else {
+            &self.running[gi]
+        };
+        let stream = g.stream(bi);
+        let total = stream.len();
+
+        // Read-only probe first: a blocked admission must leave the cache
+        // untouched (no LRU churn, no hit-metric inflation).
+        let cached = kv.lookup_prefix(&stream);
+        let chunk = (total - cached).min(*budget);
+        let need = kv.pages_needed_from(cached, cached + chunk);
+        // Watermark over reclaimable pages (free list + evictable cached
+        // pages). Parked cached blocks this admission would *pin* stop
+        // being reclaimable the moment they attach, so they are charged
+        // against the headroom up front — otherwise a large parked prefix
+        // could pass the check and then leave grow without pages.
+        let parked = kv.parked_prefix_pages(&stream);
+        if kv.free_pages() < parked + need + self.cfg.watermark_blocks {
+            return false;
+        }
+        // Attach the cached full-block prefix by refcount bump; prefill
+        // then starts at the first uncached token. `lookup_prefix` /
+        // `attach_prefix` cap the hit so at least one token remains.
+        let handle = kv.register();
+        let attached = kv.attach_prefix(handle, &stream);
+        debug_assert_eq!(attached, cached, "lookup/attach must agree");
+        if kv.grow(handle, cached + chunk).is_err() {
+            // Defensive: unreachable while the parked-page charge above is
+            // exact, but a graceful back-out (the blocks re-park, still
+            // cached) beats a panic if that accounting ever drifts.
+            kv.free(handle);
+            return false;
+        }
+        let tokens: Vec<i32> = stream[cached..cached + chunk].to_vec();
+        *budget -= chunk;
+        self.stats.cached_tokens += cached as u64;
+
+        let g = if from_queue {
+            let g = self.waiting.pop_front().unwrap();
+            self.running.push(g);
+            self.running.last_mut().unwrap()
+        } else {
+            &mut self.running[gi]
+        };
+        if !g.admitted {
+            g.admitted = true;
+            g.cached_tokens = cached;
+        }
+        let s = &mut g.seqs[bi];
+        s.state = State::Running;
+        s.handle = Some(handle);
+        s.computed = cached;
+        batch.seqs.push(ScheduledSeq {
+            id: g.id,
+            branch: bi,
+            handle,
+            ctx_len: cached,
+            tokens,
+            samples: cached + chunk == total,
+            prefill: true,
+        });
+        true
+    }
+
+    /// Victim for preemption-by-recompute: a running group with no branch
+    /// scheduled this step, excluding `current`. Prefers the group whose
+    /// branches have the largest fully-cached block prefix (recompute
+    /// nearly free on re-admission), tie-broken toward the youngest
+    /// arrival — the legacy vLLM recompute policy, and the only criterion
+    /// when prefix caching is off (all scores are then 0).
+    fn pick_victim(&self, kv: &KvCacheManager, current: RequestId,
+                   scheduled: &HashSet<RequestId>) -> Option<usize> {
         self.running
             .iter()
             .enumerate()
-            .skip(protect + 1)
-            .max_by_key(|(_, r)| r.arrival_seq)
+            .filter(|(_, g)| {
+                // only groups with a Running branch hold pages; evicting a
+                // fully-waiting resumption shell would free nothing
+                g.id != current
+                    && !scheduled.contains(&g.id)
+                    && g.seqs.iter().any(|s| s.state == State::Running)
+            })
+            .max_by_key(|(_, g)| (self.cached_prefix(kv, g), g.arrival_seq))
             .map(|(i, _)| i)
     }
 
-    /// Record the model's sampled tokens for a completed step.
-    /// `results` pairs each scheduled seq id with its next token.
+    /// Smallest cached full-block prefix across the group's running
+    /// branches — the worst-case recompute saving if it were evicted.
+    /// Reads each branch's commit cursor (blocks attached from or offered
+    /// to the prefix index) instead of re-hashing token streams: O(1) per
+    /// branch, and 0 for every branch when prefix caching is off.
+    fn cached_prefix(&self, kv: &KvCacheManager, g: &SequenceGroup) -> usize {
+        g.seqs
+            .iter()
+            .filter(|s| s.state == State::Running)
+            .map(|s| {
+                let h = s.handle.expect("running branch without handle");
+                kv.committed_blocks(h) * kv.block_size()
+            })
+            .min()
+            .unwrap_or(0)
+    }
+
+    /// Evict a whole group: free every branch's pages (unpinning shared /
+    /// cached blocks) and requeue it for recompute. Each branch later
+    /// re-prefills its *own* full stream — divergent branches cannot share
+    /// a fork after their outputs differ, though their common prompt
+    /// blocks still reattach through the prefix cache.
+    fn preempt(&mut self, j: usize, kv: &mut KvCacheManager,
+               batch: &mut ScheduledBatch) {
+        let mut g = self.running.remove(j);
+        for s in &mut g.seqs {
+            if let Some(h) = s.handle.take() {
+                kv.free(h);
+            }
+            if s.state == State::Running {
+                s.state = State::Waiting;
+                s.computed = 0;
+            }
+        }
+        g.preemptions += 1;
+        self.stats.preemptions += 1;
+        batch.preempted.push(g.id);
+        self.waiting.push_front(g);
+    }
+
+    /// Record the model's *raw* sampled tokens for a completed step.
+    /// `results` pairs each scheduled `(group, branch)` with the raw
+    /// history-hash token; per-branch salting over `(seed, branch_index)`
+    /// happens here (`SamplingParams::sample`, bounded by `vocab`), so the
+    /// greedy `n = 1` path passes tokens through untouched. When branch
+    /// 0's prompt prefill completes, the remaining branches are created by
+    /// copy-on-write fork, each seeded with its own salted first token.
     pub fn on_step_complete(
         &mut self,
         batch: &ScheduledBatch,
-        results: &[(RequestId, i32)],
+        results: &[(RequestId, usize, i32)],
         kv: &mut KvCacheManager,
+        vocab: usize,
         now_ns: u64,
     ) {
         for s in &batch.seqs {
-            let r = self
+            let g = self
                 .running
                 .iter_mut()
-                .find(|r| r.id == s.id)
-                .expect("scheduled seq vanished");
-            r.computed = s.ctx_len + s.tokens.len();
+                .find(|g| g.id == s.id)
+                .expect("scheduled group vanished");
+            g.seqs[s.branch].computed = s.ctx_len + s.tokens.len();
+            let computed = g.seqs[s.branch].computed;
             // Publish newly-filled full blocks into the prefix index so
-            // later requests (and this one after a preemption) can reuse
+            // later requests (and this group after a preemption) can reuse
             // them. The commit cursor makes this incremental: skip the
             // token rebuild entirely on steps that fill no new block.
             if kv.prefix_caching_enabled()
-                && r.computed / kv.block_size() > kv.committed_blocks(s.handle)
+                && computed / kv.block_size() > kv.committed_blocks(s.handle)
             {
                 let known: Vec<i32> =
-                    (0..r.computed).map(|j| r.token_at(j)).collect();
-                kv.commit_prefix(s.handle, &known, r.computed);
+                    (0..computed).map(|j| g.token_at(s.branch, j)).collect();
+                kv.commit_prefix(s.handle, &known, computed);
             }
             if !s.samples {
                 continue; // mid-prefill chunk: sample discarded
             }
-            let tok = results
+            let raw = results
                 .iter()
-                .find(|(id, _)| *id == s.id)
-                .map(|(_, t)| *t)
-                .expect("missing sample for sequence");
+                .find(|(id, b, _)| *id == s.id && *b == s.branch)
+                .map(|(_, _, t)| *t)
+                .expect("missing sample for scheduled branch");
+            let tok = g.sampling.sample(raw, s.branch, vocab);
             // re-prefill after preemption replays already-known outputs
-            if r.computed >= r.prompt.len() + r.output.len() {
-                r.output.push(tok);
-                if r.first_token_ns.is_none() {
-                    r.first_token_ns = Some(now_ns);
+            if computed >= g.total_len(s.branch) {
+                g.seqs[s.branch].output.push(tok);
+                if g.seqs[s.branch].first_token_ns.is_none() {
+                    g.seqs[s.branch].first_token_ns = Some(now_ns);
+                }
+                if g.first_token_ns.is_none() {
+                    g.first_token_ns = Some(now_ns);
+                }
+                // Prompt prefill just completed for an unforked group:
+                // create branches 1..n, sharing every prompt page by
+                // refcount bump (no allocation — admission already counted
+                // the shared pages once).
+                if !g.forked && g.sampling.n > 1 && s.branch == 0
+                    && g.seqs[0].output.len() == 1
+                {
+                    let parent = g.seqs[0].handle.expect("fork without handle");
+                    let computed0 = g.seqs[0].computed;
+                    for b in 1..g.sampling.n {
+                        let h = kv.fork(parent);
+                        let first = g.sampling.sample(raw, b, vocab);
+                        g.seqs.push(Sequence {
+                            branch: b,
+                            state: State::Running,
+                            output: vec![first],
+                            handle: Some(h),
+                            computed: computed0,
+                            first_token_ns: Some(now_ns),
+                        });
+                        self.stats.forked_branches += 1;
+                    }
+                    g.forked = true;
                 }
             }
-            let done_len = r.output.len() >= r.max_new_tokens;
-            let done_model = false; // model limit enforced by engine
-            if done_len || done_model {
-                r.state = State::Finished(if done_len {
-                    FinishReason::Length
-                } else {
-                    FinishReason::ModelLimit
-                });
-                r.finish_ns = Some(now_ns);
+        }
+        // finish branches that hit their length budget
+        for g in &mut self.running {
+            for s in &mut g.seqs {
+                if s.state == State::Running
+                    && s.output.len() >= g.max_new_tokens
+                {
+                    s.state = State::Finished(FinishReason::Length);
+                }
             }
         }
-        // retire finished sequences and release their pages
+        // release finished branches' pages; retire fully-finished groups
         let mut j = 0;
         while j < self.running.len() {
-            if matches!(self.running[j].state, State::Finished(_)) {
-                let mut r = self.running.remove(j);
-                kv.free(r.handle.take().unwrap());
-                self.finished.push(r);
+            for s in &mut self.running[j].seqs {
+                if !s.is_finished() {
+                    continue;
+                }
+                if let Some(h) = s.handle.take() {
+                    kv.free(h);
+                }
+            }
+            if self.running[j].is_finished() {
+                let mut g = self.running.remove(j);
+                g.finish_ns = Some(now_ns);
+                self.finished.push(g);
             } else {
                 j += 1;
             }
         }
     }
 
-    /// Force-finish a sequence that hit the model length limit.
-    pub fn finish_at_model_limit(&mut self, id: RequestId,
-                                 kv: &mut KvCacheManager, now_ns: u64) {
-        if let Some(pos) = self.running.iter().position(|r| r.id == id) {
-            let mut r = self.running.remove(pos);
-            kv.free(r.handle.take().unwrap());
-            r.state = State::Finished(FinishReason::ModelLimit);
-            r.finish_ns = Some(now_ns);
-            self.finished.push(r);
-        }
-    }
 }
 
 #[cfg(test)]
@@ -418,8 +733,19 @@ mod tests {
 
     fn step_all(s: &mut Scheduler, kv: &mut KvCacheManager,
                 batch: &ScheduledBatch) {
-        let results: Vec<_> = batch.seqs.iter().map(|x| (x.id, 7i32)).collect();
-        s.on_step_complete(batch, &results, kv, 0);
+        let results: Vec<_> =
+            batch.seqs.iter().map(|x| (x.id, x.branch, 7i32)).collect();
+        s.on_step_complete(batch, &results, kv, 2048, 0);
+    }
+
+    fn drain(s: &mut Scheduler, kv: &mut KvCacheManager, max_steps: usize) {
+        for _ in 0..max_steps {
+            let b = s.schedule(kv);
+            if b.is_empty() && !s.has_unfinished() {
+                break;
+            }
+            step_all(s, kv, &b);
+        }
     }
 
     #[test]
@@ -443,8 +769,8 @@ mod tests {
         assert!(!s.has_unfinished());
         let fin = s.take_finished();
         assert_eq!(fin.len(), 1);
-        assert_eq!(fin[0].output.len(), 3);
-        assert_eq!(fin[0].state, State::Finished(FinishReason::Length));
+        assert_eq!(fin[0].output().len(), 3);
+        assert_eq!(fin[0].state(), State::Finished(FinishReason::Length));
         assert_eq!(kv.free_pages(), 32);
     }
 
@@ -519,18 +845,12 @@ mod tests {
         assert_eq!(s.num_waiting(), 1);
         step_all(&mut s, &mut kv, &b);
         // the preempted request eventually finishes
-        for _ in 0..60 {
-            let b = s.schedule(&mut kv);
-            if b.is_empty() && !s.has_unfinished() {
-                break;
-            }
-            step_all(&mut s, &mut kv, &b);
-        }
+        drain(&mut s, &mut kv, 60);
         let fin = s.take_finished();
         assert_eq!(fin.len(), 2);
         let r2 = fin.iter().find(|r| r.id == 2).unwrap();
         assert!(r2.preemptions >= 1);
-        assert_eq!(r2.output.len(), 8);
+        assert_eq!(r2.output().len(), 8);
     }
 
     #[test]
@@ -539,13 +859,7 @@ mod tests {
         s.add_request(1, vec![1; 4], 2, 0);
         s.add_request(2, vec![2; 4], 2, 0);
         // run to completion; request 2 must finish after 1 admits
-        for _ in 0..20 {
-            let b = s.schedule(&mut kv);
-            if b.is_empty() {
-                break;
-            }
-            step_all(&mut s, &mut kv, &b);
-        }
+        drain(&mut s, &mut kv, 20);
         let fin = s.take_finished();
         assert_eq!(fin.len(), 2);
     }
@@ -562,13 +876,7 @@ mod tests {
         let mut kv = KvCacheManager::new(16 * 33, 16).with_prefix_caching(true);
         let prompt: Vec<i32> = (0..48).collect();
         s.add_request(1, prompt.clone(), 2, 0);
-        for _ in 0..8 {
-            let b = s.schedule(&mut kv);
-            if b.is_empty() {
-                break;
-            }
-            step_all(&mut s, &mut kv, &b);
-        }
+        drain(&mut s, &mut kv, 8);
         assert!(!s.has_unfinished(), "first request must drain");
         // identical prompt: two full blocks attach straight from cache and
         // chunked prefill starts at the first uncached token
@@ -579,6 +887,8 @@ mod tests {
         assert_eq!(b.seqs[0].tokens.len(), 16, "only the tail is prefilled");
         assert!(b.seqs[0].samples, "single remaining chunk samples");
         assert_eq!(s.stats.cached_tokens, 32);
+        let fin = s.take_finished();
+        assert_eq!(fin[0].cached_tokens, 0, "cold first admission");
     }
 
     #[test]
@@ -592,5 +902,194 @@ mod tests {
         assert_eq!(b.num_decodes(), 1);
         assert!(!b.is_decode_only());
         assert_eq!(b.total_new_tokens(), 7);
+    }
+
+    // ------------------------------------------------ sequence groups
+
+    fn sampled(n: usize) -> SamplingParams {
+        SamplingParams { n, seed: 1, temperature: 0.5 }
+    }
+
+    #[test]
+    fn group_forks_after_prefill_and_shares_prompt_pages() {
+        let (mut s, mut kv) = mk(64, 8, 32);
+        s.add_group(1, (0..48).collect(), sampled(4), 4, 0);
+        let b = s.schedule(&mut kv);
+        assert_eq!(b.seqs.len(), 1, "prefill runs once per group");
+        assert_eq!(b.seqs[0].tokens.len(), 48);
+        let handle = b.seqs[0].handle;
+        step_all(&mut s, &mut kv, &b);
+
+        // fork happened: 4 branches share the 3 full prompt pages
+        assert_eq!(s.num_running_seqs(), 4);
+        let pages = kv.table(handle).pages().to_vec();
+        assert_eq!(pages.len(), 3);
+        for &p in &pages {
+            assert_eq!(kv.page_ref_count(p), 4, "prompt pages shared 4-way");
+        }
+        assert_eq!(kv.cache_stats().forked_pages, 9, "3 forks x 3 pages");
+        assert_eq!(s.stats.forked_branches, 3);
+
+        // first decode step: one row per branch; the prompt ends on a page
+        // boundary, so branches grow fresh private pages — no CoW copies
+        let b2 = s.schedule(&mut kv);
+        assert_eq!(b2.seqs.len(), 4);
+        assert!(b2.cow_copies.is_empty());
+        let branches: Vec<usize> = b2.seqs.iter().map(|x| x.branch).collect();
+        assert_eq!(branches, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn group_cow_splits_partial_prompt_page() {
+        let (mut s, mut kv) = mk(64, 8, 32);
+        // 40-token prompt: 2 full pages + 1 partial page shared 4-way
+        s.add_group(1, (0..40).collect(), sampled(4), 4, 0);
+        let b = s.schedule(&mut kv);
+        step_all(&mut s, &mut kv, &b);
+        assert_eq!(s.num_running_seqs(), 4);
+
+        let b2 = s.schedule(&mut kv);
+        assert_eq!(b2.seqs.len(), 4);
+        // three branches must split off a private copy of the partial
+        // page before writing; the last writer keeps the original
+        assert_eq!(b2.cow_copies.len(), 3);
+        assert_eq!(kv.cache_stats().cow_copies, 3);
+        // full prompt pages stay shared 4-way until the branches diverge
+        // past them (they never do — only the tail is written)
+        for s_ in &b2.seqs {
+            let pages = kv.table(s_.handle).pages();
+            assert_eq!(kv.page_ref_count(pages[0]), 4);
+            assert_eq!(kv.page_ref_count(pages[1]), 4);
+            assert_eq!(kv.page_ref_count(*pages.last().unwrap()), 1,
+                       "divergent tail page is private");
+        }
+        step_all(&mut s, &mut kv, &b2);
+        drain(&mut s, &mut kv, 20);
+        let fin = s.take_finished();
+        assert_eq!(fin.len(), 1);
+        assert!(fin[0].is_finished());
+        assert_eq!(fin[0].seqs.len(), 4);
+        for seq in &fin[0].seqs {
+            assert_eq!(seq.output.len(), 4);
+        }
+        assert_eq!(kv.free_pages(), 32, "all pages returned");
+    }
+
+    #[test]
+    fn group_branch_outputs_diverge_deterministically() {
+        let run = || {
+            let (mut s, mut kv) = mk(64, 8, 32);
+            s.add_group(1, (0..20).collect(), sampled(3), 5, 0);
+            drain(&mut s, &mut kv, 30);
+            let fin = s.take_finished();
+            assert_eq!(fin.len(), 1);
+            fin[0].seqs.iter().map(|q| q.output.clone()).collect::<Vec<_>>()
+        };
+        let a = run();
+        assert_eq!(a.len(), 3);
+        // salted branches diverge at their very first token
+        assert!(a.iter().any(|o| o != &a[0]), "branches must diverge");
+        assert_eq!(a, run(), "group sampling is deterministic");
+    }
+
+    #[test]
+    fn group_reserves_rows_against_seq_cap() {
+        // cap 4: a n=3 group + a n=2 group cannot both be admitted
+        let (mut s, mut kv) = mk(256, 4, 64);
+        s.add_group(1, vec![1; 8], sampled(3), 2, 0);
+        s.add_group(2, vec![2; 8], sampled(2), 2, 0);
+        let b = s.schedule(&mut kv);
+        assert_eq!(b.seqs.len(), 1, "only the first group admits");
+        assert_eq!(s.num_running(), 1);
+        drain(&mut s, &mut kv, 30);
+        assert_eq!(s.take_finished().len(), 2, "second group follows");
+    }
+
+    #[test]
+    fn zero_max_new_tokens_yields_one_token_per_branch() {
+        // budget 16 forces chunked prefill of the 20-token prompt; a
+        // zero-token request must still sample once per branch instead of
+        // finishing branch 0 mid-prefill and wedging the unforked group
+        let (mut s, mut kv) = mk(16, 8, 32);
+        s.add_group(1, (0..20).collect(), sampled(2), 0, 0);
+        drain(&mut s, &mut kv, 20);
+        assert!(!s.has_unfinished(), "zero-token group must not wedge");
+        let fin = s.take_finished();
+        assert_eq!(fin[0].seqs.len(), 2);
+        for q in &fin[0].seqs {
+            assert_eq!(q.output.len(), 1);
+        }
+        assert_eq!(kv.free_pages(), 32);
+    }
+
+    #[test]
+    fn admission_charges_parked_cached_blocks_against_the_watermark() {
+        let cfg = EngineConfig {
+            max_batched_tokens: 256,
+            max_num_seqs: 8,
+            watermark_blocks: 2,
+            ..Default::default()
+        };
+        let mut s = Scheduler::new(cfg);
+        // 6 usable pages
+        let mut kv = KvCacheManager::new(16 * 7, 16).with_prefix_caching(true);
+        let prompt: Vec<i32> = (0..48).collect();
+        s.add_request(1, prompt.clone(), 1, 0);
+        drain(&mut s, &mut kv, 6);
+        assert!(!s.has_unfinished());
+        assert_eq!(kv.evictable_pages(), 3, "three committed blocks park");
+
+        // a second runner pins two of the three remaining free-list pages
+        s.add_request(2, vec![9; 30], 2, 0);
+        let b = s.schedule(&mut kv);
+        assert_eq!(b.seqs.len(), 1);
+        step_all(&mut s, &mut kv, &b);
+
+        // free_pages is now 4 (1 free + 3 parked). A 64-token stream with
+        // a fully-cached 48-token prefix would pin all 3 parked blocks, so
+        // the watermark must charge them (3 parked + 1 new + 2 watermark >
+        // 4) and block WITHOUT attaching: no hit-metric inflation, no LRU
+        // churn, no panic from a post-attach grow failure.
+        let mut long = prompt;
+        long.extend(100..116);
+        s.add_group(3, long, SamplingParams::default(), 1, 0);
+        let hits_before = kv.cache_stats().hit_tokens;
+        let b = s.schedule(&mut kv);
+        assert!(b.seqs.iter().all(|x| x.id != 3), "admission must block");
+        assert_eq!(s.num_waiting(), 1);
+        assert_eq!(kv.cache_stats().hit_tokens, hits_before,
+                   "blocked admission must not inflate hit metrics");
+        assert_eq!(kv.evictable_pages(), 3, "parked blocks untouched");
+        step_all(&mut s, &mut kv, &b);
+        // the runner finishes and frees its pages; the cached admission
+        // now fits with its watermark headroom intact
+        drain(&mut s, &mut kv, 30);
+        assert!(!s.has_unfinished(), "request 3 admits after pages free");
+        assert_eq!(s.take_finished().len(), 3);
+        assert_eq!(kv.cache_stats().hit_tokens, hits_before + 48,
+                   "the successful admission attaches the prefix once");
+    }
+
+    #[test]
+    fn group_preemption_readmits_branches_per_stream() {
+        // 8 usable pages, two n=2 groups decoding to 52 tokens (4 pages
+        // per branch): when the older group's branches cross the 48-token
+        // page boundary the pool is dry, so the younger group is evicted
+        // whole and later re-prefills each divergent branch separately.
+        let (mut s, mut kv) = mk(256, 8, 8);
+        s.add_group(1, vec![1; 32], sampled(2), 20, 0);
+        s.add_group(2, vec![2; 32], sampled(2), 20, 0);
+        drain(&mut s, &mut kv, 200);
+        assert!(!s.has_unfinished(), "both groups must drain");
+        let fin = s.take_finished();
+        assert_eq!(fin.len(), 2);
+        assert!(s.stats.preemptions >= 1, "pool of 8 pages must preempt");
+        for g in &fin {
+            assert_eq!(g.seqs.len(), 2);
+            for seq in &g.seqs {
+                assert_eq!(seq.output.len(), 20);
+            }
+        }
+        assert_eq!(kv.free_pages(), 8);
     }
 }

@@ -5,10 +5,16 @@
 //! engine loop interleaves request intake with `step()` — continuous
 //! batching means new requests join the running batch at the next step.
 //!
-//! Protocol (one JSON object per line):
-//!   → {"prompt": [1,2,3], "max_new_tokens": 8}
-//!   ← {"event":"token","id":1,"token":42,"index":0}
-//!   ← {"event":"done","id":1,"tokens":[42,...],"ttft_ms":1.2,"total_ms":9.9}
+//! Protocol (one JSON object per line). `n`, `seed` and `temperature`
+//! are optional (parallel sampling); every branch streams its own token
+//! and `done` events carrying a `branch` field, so `n = 1` clients see
+//! exactly one `done` per request. `cached_tokens` reports the prompt's
+//! prefix-cache hit length at admission.
+//!   → {"prompt": [1,2,3], "max_new_tokens": 8, "n": 2, "seed": 7,
+//!      "temperature": 0.8}
+//!   ← {"event":"token","id":1,"branch":0,"token":42,"index":0}
+//!   ← {"event":"done","id":1,"branch":0,"tokens":[42,...],
+//!      "ttft_ms":1.2,"total_ms":9.9,"cached_tokens":32}
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
@@ -19,7 +25,7 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use crate::config::EngineConfig;
+use crate::config::{EngineConfig, SamplingParams};
 use crate::engine::Engine;
 use crate::json::{self, num, obj, Value};
 use crate::runtime::Runtime;
@@ -29,31 +35,43 @@ use crate::scheduler::RequestId;
 struct Incoming {
     prompt: Vec<i32>,
     max_new_tokens: usize,
+    sampling: SamplingParams,
     reply: Sender<Outgoing>,
 }
 
 /// Events streamed back to the connection writer.
 enum Outgoing {
-    Token { id: RequestId, token: i32, index: usize },
-    Done { id: RequestId, tokens: Vec<i32>, ttft_ms: f64, total_ms: f64 },
+    Token { id: RequestId, branch: usize, token: i32, index: usize },
+    Done {
+        id: RequestId,
+        branch: usize,
+        tokens: Vec<i32>,
+        ttft_ms: f64,
+        total_ms: f64,
+        cached_tokens: usize,
+    },
     Error(String),
 }
 
 fn event_json(ev: &Outgoing) -> String {
     match ev {
-        Outgoing::Token { id, token, index } => obj(vec![
+        Outgoing::Token { id, branch, token, index } => obj(vec![
             ("event", json::s("token")),
             ("id", num(*id as f64)),
+            ("branch", num(*branch as f64)),
             ("token", num(*token as f64)),
             ("index", num(*index as f64)),
         ])
         .to_string(),
-        Outgoing::Done { id, tokens, ttft_ms, total_ms } => obj(vec![
+        Outgoing::Done { id, branch, tokens, ttft_ms, total_ms,
+                         cached_tokens } => obj(vec![
             ("event", json::s("done")),
             ("id", num(*id as f64)),
+            ("branch", num(*branch as f64)),
             ("tokens", Value::Arr(tokens.iter().map(|t| num(*t as f64)).collect())),
             ("ttft_ms", num(*ttft_ms)),
             ("total_ms", num(*total_ms)),
+            ("cached_tokens", num(*cached_tokens as f64)),
         ])
         .to_string(),
         Outgoing::Error(msg) => obj(vec![
@@ -109,9 +127,9 @@ fn handle_connection(stream: TcpStream, tx: Sender<Incoming>) -> Result<()> {
             continue;
         }
         match parse_request(&line) {
-            Ok((prompt, max_new)) => {
+            Ok((prompt, max_new, sampling)) => {
                 tx.send(Incoming { prompt, max_new_tokens: max_new,
-                                   reply: reply_tx.clone() })
+                                   sampling, reply: reply_tx.clone() })
                     .context("engine gone")?;
             }
             Err(e) => {
@@ -125,7 +143,7 @@ fn handle_connection(stream: TcpStream, tx: Sender<Incoming>) -> Result<()> {
     Ok(())
 }
 
-fn parse_request(line: &str) -> Result<(Vec<i32>, usize)> {
+fn parse_request(line: &str) -> Result<(Vec<i32>, usize, SamplingParams)> {
     let v = json::parse(line)?;
     let prompt: Vec<i32> = v
         .req("prompt")?
@@ -135,7 +153,14 @@ fn parse_request(line: &str) -> Result<(Vec<i32>, usize)> {
         .collect::<Result<_>>()?;
     let max_new = v.get("max_new_tokens").map(|x| x.as_usize())
         .transpose()?.unwrap_or(16);
-    Ok((prompt, max_new))
+    let sampling = SamplingParams {
+        n: v.get("n").map(|x| x.as_usize()).transpose()?.unwrap_or(1),
+        seed: v.get("seed").map(|x| x.as_i64()).transpose()?
+            .unwrap_or(0) as u64,
+        temperature: v.get("temperature").map(|x| x.as_f64()).transpose()?
+            .unwrap_or(0.0),
+    };
+    Ok((prompt, max_new, sampling))
 }
 
 /// The engine thread: intake + step loop.
@@ -166,7 +191,7 @@ fn engine_loop(artifacts_dir: std::path::PathBuf, ecfg: EngineConfig,
                 }
             };
             let Some(m) = msg else { break };
-            match engine.add_request(m.prompt, m.max_new_tokens) {
+            match engine.add_group(m.prompt, m.max_new_tokens, m.sampling) {
                 Ok(id) => {
                     inflight.insert(id, (m.reply, 0, engine.now_ns()));
                 }
@@ -187,21 +212,31 @@ fn engine_loop(artifacts_dir: std::path::PathBuf, ecfg: EngineConfig,
 
         engine.step()?;
 
-        // stream any newly finished requests
-        for r in engine.take_finished() {
-            if let Some((reply, _, enq)) = inflight.remove(&r.id) {
-                for (i, &t) in r.output.iter().enumerate() {
-                    let _ = reply.send(Outgoing::Token {
-                        id: r.id, token: t, index: i });
+        // stream any newly finished groups: every branch gets its own
+        // token stream and done event (branch field distinguishes them)
+        for g in engine.take_finished() {
+            if let Some((reply, _, enq)) = inflight.remove(&g.id) {
+                let total_ms = g.finish_ns
+                    .map(|t| (t.saturating_sub(enq)) as f64 / 1e6)
+                    .unwrap_or(0.0);
+                for s in &g.seqs {
+                    for (i, &t) in s.output.iter().enumerate() {
+                        let _ = reply.send(Outgoing::Token {
+                            id: g.id, branch: s.branch, token: t, index: i });
+                    }
+                    let ttft_ms = s.first_token_ns
+                        .or(g.first_token_ns)
+                        .map(|t| (t.saturating_sub(enq)) as f64 / 1e6)
+                        .unwrap_or(0.0);
+                    let _ = reply.send(Outgoing::Done {
+                        id: g.id,
+                        branch: s.branch,
+                        tokens: s.output.clone(),
+                        ttft_ms,
+                        total_ms,
+                        cached_tokens: g.cached_tokens,
+                    });
                 }
-                let ttft_ms = r.first_token_ns
-                    .map(|t| (t.saturating_sub(enq)) as f64 / 1e6)
-                    .unwrap_or(0.0);
-                let total_ms = r.finish_ns
-                    .map(|t| (t.saturating_sub(enq)) as f64 / 1e6)
-                    .unwrap_or(0.0);
-                let _ = reply.send(Outgoing::Done {
-                    id: r.id, tokens: r.output.clone(), ttft_ms, total_ms });
                 completed += 1;
             }
         }
@@ -217,8 +252,12 @@ pub struct Client {
 #[derive(Debug, Clone)]
 pub struct Completion {
     pub tokens: Vec<i32>,
+    /// Which branch of the group this completion belongs to.
+    pub branch: usize,
     pub ttft_ms: f64,
     pub total_ms: f64,
+    /// Prompt tokens served from the prefix cache at admission.
+    pub cached_tokens: usize,
 }
 
 impl Client {
@@ -232,9 +271,19 @@ impl Client {
     }
 
     pub fn submit(&mut self, prompt: &[i32], max_new_tokens: usize) -> Result<()> {
+        self.submit_sampled(prompt, max_new_tokens,
+                            &SamplingParams::default())
+    }
+
+    /// Submit a parallel-sampling request (`n` branches).
+    pub fn submit_sampled(&mut self, prompt: &[i32], max_new_tokens: usize,
+                          sampling: &SamplingParams) -> Result<()> {
         let req = obj(vec![
             ("prompt", Value::Arr(prompt.iter().map(|t| num(*t as f64)).collect())),
             ("max_new_tokens", num(max_new_tokens as f64)),
+            ("n", num(sampling.n as f64)),
+            ("seed", num(sampling.seed as f64)),
+            ("temperature", num(sampling.temperature)),
         ]);
         writeln!(self.writer, "{req}")?;
         self.writer.flush()?;
@@ -256,8 +305,12 @@ impl Client {
                         .collect::<Result<_>>()?;
                     return Ok(Completion {
                         tokens,
+                        branch: v.get("branch").map(|x| x.as_usize())
+                            .transpose()?.unwrap_or(0),
                         ttft_ms: v.req("ttft_ms")?.as_f64()?,
                         total_ms: v.req("total_ms")?.as_f64()?,
+                        cached_tokens: v.get("cached_tokens")
+                            .map(|x| x.as_usize()).transpose()?.unwrap_or(0),
                     });
                 }
                 "error" => anyhow::bail!("server error: {}",
@@ -272,6 +325,19 @@ impl Client {
         self.submit(prompt, max_new_tokens)?;
         self.wait_done()
     }
+
+    /// Submit an `n`-branch group and collect all branch completions.
+    pub fn generate_group(&mut self, prompt: &[i32], max_new_tokens: usize,
+                          sampling: &SamplingParams)
+        -> Result<Vec<Completion>> {
+        self.submit_sampled(prompt, max_new_tokens, sampling)?;
+        let mut out = Vec::with_capacity(sampling.n);
+        for _ in 0..sampling.n {
+            out.push(self.wait_done()?);
+        }
+        out.sort_by_key(|c| c.branch);
+        Ok(out)
+    }
 }
 
 #[cfg(test)]
@@ -280,21 +346,34 @@ mod tests {
 
     #[test]
     fn request_parsing() {
-        let (p, n) = parse_request(r#"{"prompt": [1, 2, 3], "max_new_tokens": 4}"#).unwrap();
+        let (p, n, s) =
+            parse_request(r#"{"prompt": [1, 2, 3], "max_new_tokens": 4}"#)
+                .unwrap();
         assert_eq!(p, vec![1, 2, 3]);
         assert_eq!(n, 4);
-        let (_, n) = parse_request(r#"{"prompt": [5]}"#).unwrap();
+        assert!(s.is_greedy(), "sampling defaults to greedy n=1");
+        let (_, n, _) = parse_request(r#"{"prompt": [5]}"#).unwrap();
         assert_eq!(n, 16, "default max_new_tokens");
         assert!(parse_request(r#"{"max_new_tokens": 4}"#).is_err());
+        let (_, _, s) = parse_request(
+            r#"{"prompt": [5], "n": 3, "seed": 11, "temperature": 0.5}"#,
+        )
+        .unwrap();
+        assert_eq!(s.n, 3);
+        assert_eq!(s.seed, 11);
+        assert!((s.temperature - 0.5).abs() < 1e-12);
     }
 
     #[test]
     fn event_serialization_roundtrips() {
         let ev = Outgoing::Done {
-            id: 3, tokens: vec![7, 8], ttft_ms: 1.5, total_ms: 2.5 };
+            id: 3, branch: 1, tokens: vec![7, 8],
+            ttft_ms: 1.5, total_ms: 2.5, cached_tokens: 32 };
         let v = json::parse(&event_json(&ev)).unwrap();
         assert_eq!(v.str_field("event").unwrap(), "done");
         assert_eq!(v.req("tokens").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(v.req("branch").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(v.req("cached_tokens").unwrap().as_usize().unwrap(), 32);
     }
 
     /// Full loop: spawn a server bound to an ephemeral port, run two
@@ -318,9 +397,43 @@ mod tests {
         let mut c = Client::connect(&bound).unwrap();
         let a = c.generate(&[5, 9, 13], 4).unwrap();
         assert_eq!(a.tokens.len(), 4);
+        assert_eq!(a.branch, 0);
         assert!(a.total_ms >= a.ttft_ms);
         let b = c.generate(&[5, 9, 13], 4).unwrap();
         assert_eq!(a.tokens, b.tokens, "same prompt, same greedy tokens");
+        // warm cache: the repeat submission reports its prefix hit... the
+        // 3-token prompt spans no full block, so the hit length is 0 but
+        // the field must be present and sane
+        assert_eq!(b.cached_tokens, 0);
+        handle.join().unwrap().unwrap();
+    }
+
+    /// Parallel sampling over the wire: one n=2 submission yields two
+    /// branch completions that diverge, plus per-branch token events.
+    #[test]
+    fn end_to_end_parallel_sampling() {
+        let dir = crate::default_artifacts_dir();
+        let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+        let port = probe.local_addr().unwrap().port();
+        drop(probe);
+        let bound = format!("127.0.0.1:{port}");
+        let server_addr = bound.clone();
+        let handle = std::thread::spawn(move || {
+            serve(dir, EngineConfig::default(), &server_addr, Some(1))
+        });
+        std::thread::sleep(Duration::from_millis(300));
+
+        let mut c = Client::connect(&bound).unwrap();
+        let sampling = SamplingParams { n: 2, seed: 5, temperature: 0.9 };
+        let prompt: Vec<i32> = (0..40).collect();
+        let done = c.generate_group(&prompt, 5, &sampling).unwrap();
+        assert_eq!(done.len(), 2);
+        assert_eq!(done[0].branch, 0);
+        assert_eq!(done[1].branch, 1);
+        assert_eq!(done[0].tokens.len(), 5);
+        assert_eq!(done[1].tokens.len(), 5);
+        assert_ne!(done[0].tokens, done[1].tokens,
+                   "salted branches must diverge");
         handle.join().unwrap().unwrap();
     }
 }

@@ -1,9 +1,13 @@
 //! Synthetic workload generators for the microbenchmarks and end-to-end
 //! runs — the paper's micro-benchmark framework simulates "varying context
 //! lengths, prompt lengths, and batch sizes" (§5.2) rather than the
-//! fixed-size batches that flatter some kernels.
+//! fixed-size batches that flatter some kernels. Includes a best-of-n
+//! parallel-sampling generator (shared system prefix + `n > 1` groups),
+//! the batch shape that exercises copy-on-write KV forking.
 //!
 //! Deterministic xorshift RNG so every bench run is reproducible.
+
+use crate::config::SamplingParams;
 
 /// Small deterministic RNG (xorshift64*).
 #[derive(Debug, Clone)]
@@ -189,6 +193,52 @@ impl ArrivalProcess {
     }
 }
 
+/// One request of a parallel-sampling workload.
+#[derive(Debug, Clone)]
+pub struct GroupRequest {
+    pub prompt: Vec<i32>,
+    pub sampling: SamplingParams,
+    pub max_new_tokens: usize,
+}
+
+/// Best-of-n workload: every request shares a common system-prompt prefix
+/// (prefix-cache and CoW-fork fodder) followed by a unique user tail, and
+/// asks for `n` parallel branches — the §7-style serving scenario that
+/// block-level KV sharing exists for.
+#[derive(Debug, Clone)]
+pub struct BestOfN {
+    /// Parallel sampling width per request.
+    pub n: usize,
+    /// Shared system-prompt prefix length (tokens).
+    pub shared_prefix: usize,
+    /// Unique per-request tail length (tokens).
+    pub tail: usize,
+    pub max_new_tokens: usize,
+    pub vocab: usize,
+}
+
+impl BestOfN {
+    /// Generate `count` requests; deterministic for a given RNG seed.
+    pub fn requests(&self, count: usize, rng: &mut Rng) -> Vec<GroupRequest> {
+        let prefix = rng.tokens(self.shared_prefix, self.vocab);
+        (0..count)
+            .map(|i| {
+                let mut prompt = prefix.clone();
+                prompt.extend(rng.tokens(self.tail.max(1), self.vocab));
+                GroupRequest {
+                    prompt,
+                    sampling: SamplingParams {
+                        n: self.n,
+                        seed: i as u64 + 1,
+                        temperature: 0.7,
+                    },
+                    max_new_tokens: self.max_new_tokens,
+                }
+            })
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -247,6 +297,33 @@ mod tests {
             assert!(w[0].at_s <= w[1].at_s);
         }
         assert!(ev.iter().all(|e| e.prompt_len >= 4 && e.prompt_len <= 64));
+    }
+
+    #[test]
+    fn best_of_n_requests_share_prefix_and_diverge() {
+        let w = BestOfN {
+            n: 4,
+            shared_prefix: 32,
+            tail: 8,
+            max_new_tokens: 6,
+            vocab: 2048,
+        };
+        let mut rng = Rng::new(5);
+        let reqs = w.requests(6, &mut rng);
+        assert_eq!(reqs.len(), 6);
+        for r in &reqs {
+            assert_eq!(r.prompt.len(), 40);
+            assert_eq!(r.prompt[..32], reqs[0].prompt[..32],
+                       "system prefix is shared");
+            assert_eq!(r.sampling.n, 4);
+            assert!(!r.sampling.is_greedy());
+        }
+        assert_ne!(reqs[0].prompt[32..], reqs[1].prompt[32..],
+                   "user tails are unique");
+        assert_ne!(reqs[0].sampling.seed, reqs[1].sampling.seed);
+        // deterministic for a fixed seed
+        let again = w.requests(6, &mut Rng::new(5));
+        assert_eq!(reqs[3].prompt, again[3].prompt);
     }
 
     #[test]

@@ -41,7 +41,7 @@ fn all_variants_generate_identical_tokens() {
         e.heuristics = pinned(variant, 1);
         e.add_request(prompt.clone(), 6).unwrap();
         let fin = e.run_to_completion().unwrap();
-        let toks = fin[0].output.clone();
+        let toks = fin[0].output().to_vec();
         match &reference {
             None => reference = Some(toks),
             Some(r) => assert_eq!(&toks, r, "variant {variant:?} diverged"),
@@ -61,7 +61,7 @@ fn chunked_prefill_is_equivalent() {
     let mut chunked = engine_with(16, 4); // forces 3 prefill chunks
     chunked.add_request(prompt, 4).unwrap();
     let b = chunked.run_to_completion().unwrap();
-    assert_eq!(a[0].output, b[0].output);
+    assert_eq!(a[0].output(), b[0].output());
     assert!(chunked.metrics.steps > unchunked.metrics.steps);
 }
 
@@ -86,7 +86,7 @@ fn saturated_engine_drains_correctly() {
     let mut solo = engine_with(64, 4);
     solo.add_request(prompts[2].clone(), 3 + 2 % 4).unwrap();
     let s = solo.run_to_completion().unwrap();
-    assert_eq!(fin[2].output, s[0].output);
+    assert_eq!(fin[2].output(), s[0].output());
 }
 
 /// The engine's heuristic dispatch must route decode-only batches and
@@ -156,7 +156,8 @@ fn preemption_preserves_determinism() {
         let mut fin = e.run_to_completion().unwrap();
         fin.sort_by_key(|r| r.id);
         assert_eq!(fin.len(), 3);
-        (fin.into_iter().map(|r| r.output).collect(), e.metrics.preemptions)
+        (fin.into_iter().map(|r| r.output().to_vec()).collect(),
+         e.metrics.preemptions)
     };
 
     let (on, preempted_on) = run(true);
@@ -170,7 +171,7 @@ fn preemption_preserves_determinism() {
         let mut solo = engine_with(256, 1);
         solo.add_request(p.clone(), 40).unwrap();
         let s = solo.run_to_completion().unwrap();
-        assert_eq!(on[i], s[0].output,
+        assert_eq!(on[i], s[0].output(),
                    "preemption/recompute must not change tokens");
     }
 }
@@ -183,7 +184,7 @@ fn metrics_token_accounting() {
     e.add_request(vec![3; 8], 5).unwrap();
     e.add_request(vec![4; 12], 7).unwrap();
     let fin = e.run_to_completion().unwrap();
-    let out_total: usize = fin.iter().map(|r| r.output.len()).sum();
+    let out_total: usize = fin.iter().map(|r| r.output().len()).sum();
     assert_eq!(out_total, 12);
     assert_eq!(e.metrics.generated_tokens as usize, out_total);
 }

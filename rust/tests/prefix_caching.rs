@@ -9,8 +9,10 @@
 //!   (c) preemption under memory pressure with cached/shared blocks stays
 //!       deterministic.
 //! The property test at the bottom drives random interleaved
-//! admit/grow/fork/free/attach sequences against a reference model of
-//! page ownership and block content, with a hand-rolled shrinking loop.
+//! admit/grow/fork/diverge/free/attach sequences — including parallel-
+//! sampling-style divergent forks with copy-on-write page splits —
+//! against a reference model of page ownership and block content, with a
+//! hand-rolled shrinking loop.
 
 use std::collections::HashMap;
 use std::rc::Rc;
@@ -54,14 +56,14 @@ fn caching_on_off_is_token_identical_on_shared_prefixes() {
         if sequential {
             for p in [pa.clone(), pb.clone()] {
                 e.add_request(p, 6).unwrap();
-                out.push(e.run_to_completion().unwrap()[0].output.clone());
+                out.push(e.run_to_completion().unwrap()[0].output().to_vec());
             }
         } else {
             e.add_request(pa.clone(), 6).unwrap();
             e.add_request(pb.clone(), 6).unwrap();
             let mut fin = e.run_to_completion().unwrap();
             fin.sort_by_key(|r| r.id);
-            out = fin.into_iter().map(|r| r.output).collect();
+            out = fin.into_iter().map(|r| r.output().to_vec()).collect();
         }
         out
     };
@@ -130,13 +132,14 @@ fn preemption_with_cached_blocks_preserves_determinism() {
             assert!(e.metrics.prefix_evictions > 0,
                     "page pressure reclaims cached blocks");
         }
-        let outs: Vec<Vec<i32>> = fin.into_iter().map(|r| r.output).collect();
+        let outs: Vec<Vec<i32>> =
+            fin.into_iter().map(|r| r.output().to_vec()).collect();
 
         for (i, p) in prompts.iter().enumerate() {
             let mut solo = engine(caching, 256, 1);
             solo.add_request(p.clone(), 40).unwrap();
             let s = solo.run_to_completion().unwrap();
-            assert_eq!(outs[i], s[0].output,
+            assert_eq!(outs[i], s[0].output(),
                        "preemption/recompute changed tokens (caching={caching})");
         }
         per_mode.push(outs);
@@ -156,7 +159,7 @@ fn eviction_under_pressure_keeps_outputs_correct() {
     let mut warm_outs = Vec::new();
     for p in &prompts {
         warm.add_request(p.clone(), 3).unwrap();
-        warm_outs.push(warm.run_to_completion().unwrap()[0].output.clone());
+        warm_outs.push(warm.run_to_completion().unwrap()[0].output().to_vec());
     }
     assert!(warm.metrics.prefix_evictions > 0,
             "six 3-page prompts must overflow a 12-page pool");
@@ -164,7 +167,7 @@ fn eviction_under_pressure_keeps_outputs_correct() {
         let mut cold = engine(false, 128, 2);
         cold.add_request(p.clone(), 3).unwrap();
         let fin = cold.run_to_completion().unwrap();
-        assert_eq!(warm_outs[i], fin[0].output, "prompt {i} diverged");
+        assert_eq!(warm_outs[i], fin[0].output(), "prompt {i} diverged");
     }
 }
 
@@ -184,10 +187,17 @@ enum Op {
     /// commit the computed prefix.
     Admit { stream: Vec<i32>, len: usize },
     /// Grow live handle `idx % live` by `extra` tokens and commit.
+    /// Writes into a shared partial page split it first (copy-on-write),
+    /// exactly like the scheduler's decode path.
     Grow { idx: usize, extra: usize },
-    /// Fork live handle `idx % live` (copy-on-write page sharing).
+    /// Fork live handle `idx % live` (copy-on-write page sharing): an
+    /// identical twin, as parallel sampling creates at prefill completion.
     Fork { idx: usize },
-    /// Free live handle `idx % live`.
+    /// Fork live handle `idx % live` into a *divergent* branch whose
+    /// future tokens (`tail`) differ from the parent's — growth past the
+    /// fork point must CoW-split the shared partial page.
+    Diverge { idx: usize, tail: Vec<i32> },
+    /// Free live handle `idx % live` (finish / whole-group preemption).
     Free { idx: usize },
 }
 
@@ -214,6 +224,26 @@ fn run_script(ops: &[Op]) -> Result<(), String> {
         for &p in &m.table(h).pages()[before..] {
             page_content.remove(&p);
         }
+    }
+
+    // The scheduler's write rule: growing from an unaligned length writes
+    // into the partial last page, so a shared page is CoW-split first.
+    // Returns false when the pool is exhausted mid-split.
+    fn grow_with_cow(m: &mut KvCacheManager, h: SeqHandle, cur_len: usize,
+                     target: usize,
+                     page_content: &mut HashMap<PageId, Vec<i32>>) -> bool {
+        if cur_len % BS != 0 {
+            match m.unshare_last(h) {
+                // the split page was partial, hence never committed: the
+                // copy holds no tracked full-block content
+                Ok(Some((_src, dst))) => {
+                    page_content.remove(&dst);
+                }
+                Ok(None) => {}
+                Err(_) => return false,
+            }
+        }
+        m.grow(h, target).is_ok()
     }
 
     for (step, op) in ops.iter().enumerate() {
@@ -245,7 +275,8 @@ fn run_script(ops: &[Op]) -> Result<(), String> {
                 }
                 let target = (*len).max(cached + 1).min(stream.len());
                 let before = m.table(h).pages().len();
-                if m.grow(h, target).is_err() {
+                if !grow_with_cow(&mut m, h, cached, target, &mut page_content)
+                {
                     m.free(h); // pool exhausted: drop the admission
                     continue;
                 }
@@ -263,20 +294,25 @@ fn run_script(ops: &[Op]) -> Result<(), String> {
                     continue;
                 }
                 let i = idx % live.len();
+                let (handle, len, target) = {
+                    let s = &live[i];
+                    (s.handle, s.len, (s.len + extra).min(s.stream.len()))
+                };
+                if target == len {
+                    continue;
+                }
+                let before = m.table(handle).pages().len();
+                if !grow_with_cow(&mut m, handle, len, target,
+                                  &mut page_content)
+                {
+                    continue;
+                }
+                granted(&m, handle, before, &mut page_content);
                 let s = &mut live[i];
-                let target = (s.len + extra).min(s.stream.len());
-                if target == s.len {
-                    continue;
-                }
-                let before = m.table(s.handle).pages().len();
-                if m.grow(s.handle, target).is_err() {
-                    continue;
-                }
-                granted(&m, s.handle, before, &mut page_content);
-                m.commit_prefix(s.handle, &s.stream, target);
+                m.commit_prefix(handle, &s.stream, target);
                 for k in 0..target / BS {
                     page_content
-                        .insert(m.table(s.handle).pages()[k],
+                        .insert(m.table(handle).pages()[k],
                                 s.stream[k * BS..(k + 1) * BS].to_vec());
                 }
                 s.len = target;
@@ -288,6 +324,17 @@ fn run_script(ops: &[Op]) -> Result<(), String> {
                 let i = idx % live.len();
                 let h = m.fork(live[i].handle);
                 let (stream, len) = (live[i].stream.clone(), live[i].len);
+                live.push(LiveSeq { handle: h, stream, len });
+            }
+            Op::Diverge { idx, tail } => {
+                if live.is_empty() {
+                    continue;
+                }
+                let i = idx % live.len();
+                let h = m.fork(live[i].handle);
+                let len = live[i].len;
+                let mut stream = live[i].stream[..len].to_vec();
+                stream.extend_from_slice(tail);
                 live.push(LiveSeq { handle: h, stream, len });
             }
             Op::Free { idx } => {
@@ -366,6 +413,10 @@ fn gen_script(seed: u64, n_ops: usize) -> Vec<Op> {
                 extra: rng.range(1, 24),
             }),
             7 => ops.push(Op::Fork { idx: rng.below(8) }),
+            8 => ops.push(Op::Diverge {
+                idx: rng.below(8),
+                tail: rng.tokens(rng.range(1, 40), 50),
+            }),
             _ => ops.push(Op::Free { idx: rng.below(8) }),
         }
     }

@@ -1,0 +1,208 @@
+//! Integration tests for sequence groups / parallel sampling (n > 1).
+//!
+//! Pins the contract points of the feature:
+//!   (a) an `n = 1` greedy group is byte-identical to a plain request
+//!       (and to the pre-group engine, via the unchanged determinism
+//!       suite),
+//!   (b) an `n = 4` group shares all full prompt pages by refcount until
+//!       the first divergent decode write, so total page allocations stay
+//!       well under 4x the `n = 1` count,
+//!   (c) parallel-sampling groups stay deterministic under continuous
+//!       batching and preemption-by-recompute — every branch matches an
+//!       unpressured solo run of the same group.
+
+use std::rc::Rc;
+
+use triton_anatomy::config::{EngineConfig, SamplingParams};
+use triton_anatomy::engine::Engine;
+use triton_anatomy::runtime::Runtime;
+use triton_anatomy::workload::{BestOfN, Rng};
+
+fn engine(max_tokens: usize, max_seqs: usize) -> Engine {
+    let rt = Rc::new(
+        Runtime::load_dir(triton_anatomy::default_artifacts_dir()).unwrap(),
+    );
+    Engine::new(
+        rt,
+        EngineConfig {
+            max_batched_tokens: max_tokens,
+            max_num_seqs: max_seqs,
+            ..Default::default()
+        },
+    )
+    .unwrap()
+}
+
+/// (a) `n = 1` with default sampling is the legacy greedy path, token for
+/// token, with and without prefix caching.
+#[test]
+fn n1_group_is_byte_identical_to_plain_request() {
+    let prompt = Rng::new(3).tokens(24, 2048);
+    let mut plain = engine(128, 4);
+    plain.add_request(prompt.clone(), 7).unwrap();
+    let a = plain.run_to_completion().unwrap();
+
+    let mut grouped = engine(128, 4);
+    grouped
+        .add_group(prompt.clone(), 7, SamplingParams::default())
+        .unwrap();
+    let b = grouped.run_to_completion().unwrap();
+    assert_eq!(a[0].output(), b[0].output());
+    assert_eq!(b[0].seqs.len(), 1, "no branches were forked");
+    assert_eq!(grouped.metrics.forked_pages, 0);
+    assert_eq!(grouped.metrics.cow_copies, 0);
+}
+
+/// (b) An n = 4 group over a shared 40-token prompt: prefill runs once,
+/// all full prompt pages are shared 4-way until the first divergent
+/// decode write CoW-splits the partial page, and total page allocations
+/// stay strictly below 4x the n = 1 run.
+#[test]
+fn n4_shares_prompt_pages_until_divergence() {
+    let prompt: Vec<i32> = (100..140).collect(); // 2 full pages + 8 tokens
+    let sampling = SamplingParams { n: 4, seed: 2, temperature: 0.6 };
+
+    let mut solo = engine(128, 4);
+    solo.add_request(prompt.clone(), 8).unwrap();
+    solo.run_to_completion().unwrap();
+    let solo_pages = solo.kv().cache_stats().pages_allocated;
+    assert_eq!(solo_pages, 3, "n=1 run allocates the 3 prompt pages");
+
+    let mut e = engine(128, 4);
+    e.add_group(prompt, 8, sampling).unwrap();
+    // step 1: the shared prompt prefills once, then the group forks
+    let r1 = e.step().unwrap().unwrap();
+    assert_eq!(r1.num_seqs, 1, "prefill runs once per group");
+    assert_eq!(r1.cow_copies, 0);
+    let rc4 = |e: &Engine| {
+        (1..=e.kv().total_pages() as u32)
+            .filter(|&p| e.kv().page_ref_count(p) == 4)
+            .count()
+    };
+    assert_eq!(rc4(&e), 3, "all prompt pages shared 4-way after the fork");
+
+    // step 2: four decode rows diverge; the partial prompt page splits
+    // copy-on-write (3 copies — the last writer keeps the original)
+    let r2 = e.step().unwrap().unwrap();
+    assert_eq!(r2.num_seqs, 4);
+    assert_eq!(r2.cow_copies, 3);
+    assert_eq!(rc4(&e), 2, "full prompt pages stay shared after the split");
+
+    let fin = e.run_to_completion().unwrap();
+    assert_eq!(fin.len(), 1);
+    assert_eq!(fin[0].seqs.len(), 4);
+    for s in &fin[0].seqs {
+        assert_eq!(s.output.len(), 8);
+    }
+    let group_pages = e.kv().cache_stats().pages_allocated;
+    assert!(group_pages < 4 * solo_pages,
+            "CoW sharing: {group_pages} pages allocated vs 4x{solo_pages}");
+    assert_eq!(e.metrics.forked_pages, 9, "3 forks x 3 prompt pages");
+    assert_eq!(e.metrics.cow_copies, 3);
+    assert_eq!(e.free_page_fraction(), 1.0);
+}
+
+/// (c) Two n = 2 groups under page pressure: the pool forces whole-group
+/// preemption, branches re-prefill their own divergent streams, and every
+/// branch still matches an unpressured solo run of its group.
+#[test]
+fn group_preemption_preserves_branch_determinism() {
+    let prompts: Vec<Vec<i32>> = (0..2).map(|i| vec![9 + i; 32]).collect();
+    let sampling = |i: u64| SamplingParams { n: 2, seed: 40 + i, temperature: 0.8 };
+
+    let mut e = engine(256, 8);
+    for (i, p) in prompts.iter().enumerate() {
+        e.add_group(p.clone(), 36, sampling(i as u64)).unwrap();
+    }
+    let mut fin = e.run_to_completion().unwrap();
+    fin.sort_by_key(|g| g.id);
+    assert_eq!(fin.len(), 2);
+    assert!(e.metrics.preemptions >= 1,
+            "12-page pool must preempt (4 branches x 5 pages needed)");
+
+    for (i, p) in prompts.iter().enumerate() {
+        let mut solo = engine(256, 8);
+        solo.add_group(p.clone(), 36, sampling(i as u64)).unwrap();
+        let s = solo.run_to_completion().unwrap();
+        for b in 0..2 {
+            assert_eq!(fin[i].seqs[b].output, s[0].seqs[b].output,
+                       "group {i} branch {b} diverged under preemption");
+        }
+    }
+}
+
+/// Randomized end-to-end property: mixed-width groups under continuous
+/// batching (with whatever preemption the pool forces) always match solo
+/// runs, branch for branch, and always return every page.
+#[test]
+fn random_group_mixes_match_solo_runs() {
+    for seed in 1..=5u64 {
+        let mut rng = Rng::new(seed);
+        let specs: Vec<(Vec<i32>, SamplingParams, usize)> = (0..3u64)
+            .map(|i| {
+                let prompt = rng.tokens(rng.range(8, 40), 2048);
+                let sampling = SamplingParams {
+                    n: rng.range(1, 3),
+                    seed: seed * 100 + i,
+                    temperature: 0.5,
+                };
+                (prompt, sampling, rng.range(4, 8))
+            })
+            .collect();
+
+        let mut e = engine(128, 8);
+        for (p, sp, mx) in &specs {
+            e.add_group(p.clone(), *mx, *sp).unwrap();
+        }
+        let mut fin = e.run_to_completion().unwrap();
+        fin.sort_by_key(|g| g.id);
+        assert_eq!(fin.len(), 3);
+        assert_eq!(e.free_page_fraction(), 1.0, "seed {seed}: pages leaked");
+
+        for (i, (p, sp, mx)) in specs.iter().enumerate() {
+            let mut solo = engine(128, 8);
+            solo.add_group(p.clone(), *mx, *sp).unwrap();
+            let s = solo.run_to_completion().unwrap();
+            assert_eq!(fin[i].seqs.len(), s[0].seqs.len());
+            for b in 0..s[0].seqs.len() {
+                assert_eq!(fin[i].seqs[b].output, s[0].seqs[b].output,
+                           "seed {seed}, group {i}, branch {b} diverged");
+            }
+        }
+    }
+}
+
+/// The best-of-n workload generator drives the full stack: shared system
+/// prefixes hit the prefix cache across groups, branches fork and CoW,
+/// and the whole mix drains deterministically.
+#[test]
+fn best_of_n_workload_exercises_sharing() {
+    let w = BestOfN {
+        n: 2,
+        shared_prefix: 32,
+        tail: 4,
+        max_new_tokens: 4,
+        vocab: 2048,
+    };
+    let reqs = w.requests(3, &mut Rng::new(11));
+    // back-to-back submissions: later groups find the shared 32-token
+    // system prefix already committed in the prefix cache
+    let mut e = engine(128, 8);
+    let mut fin = Vec::new();
+    for r in &reqs {
+        e.add_group(r.prompt.clone(), r.max_new_tokens, r.sampling)
+            .unwrap();
+        fin.extend(e.run_to_completion().unwrap());
+    }
+    assert_eq!(fin.len(), 3);
+    for g in &fin {
+        assert_eq!(g.seqs.len(), 2);
+    }
+    assert!(e.metrics.forked_pages > 0, "groups forked");
+    assert_eq!(fin[0].cached_tokens, 0, "first group runs cold");
+    assert!(fin[1].cached_tokens >= 32 && fin[2].cached_tokens >= 32,
+            "later groups reuse the shared system prefix from the cache");
+    assert!(e.metrics.prefix_hit_tokens >= 64);
+    assert_eq!(e.metrics.groups_finished, 3);
+    assert_eq!(e.free_page_fraction(), 1.0);
+}
