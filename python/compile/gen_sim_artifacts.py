@@ -53,6 +53,11 @@ STATE_LEN = 2 * MODEL_SLOTS + MODEL_MAX_SEQS
 # Kernel microbench cache: large enough for the autotune sweep scenarios.
 KERNEL_SLOTS = BLOCK * 160
 
+# Capacity of the batched copy-on-write page-copy dispatch (copy_blocks):
+# one (src, dst) pair per diverging branch per step, so 2x the row cap is
+# comfortable headroom. The engine chunks if a step ever exceeds it.
+MAX_COPY_PAIRS = 2 * MODEL_MAX_SEQS
+
 # Relative step cost of each kernel variant in the sim (the paper's
 # ordering: naive far behind, optimized variants clustered near flash).
 COST = {"naive": 8, "qblock": 2, "parts": 1, "static": 1, "flash": 1}
@@ -254,6 +259,29 @@ def main():
         "bucket": mb_d8,
         "inputs": [tensor("state", [STATE_LEN])],
         "outputs": [tensor("tail", [MODEL_MAX_SEQS])],
+    })
+
+    # ---- batched CoW page-copy dispatch (vLLM copy_blocks analogue)
+    cp_name = "c_tiny_copy_blocks"
+    cp_rel = write_spec(cp_name, {
+        "kind": "copy_blocks",
+        "block_size": BLOCK,
+        "num_slots": MODEL_SLOTS,
+        "max_pairs": MAX_COPY_PAIRS,
+        "state_len": STATE_LEN,
+    })
+    artifacts.append({
+        "kind": "copy_blocks",
+        "name": cp_name,
+        "path": cp_rel,
+        "model": "tiny",
+        "config": kcfg("qblock", 16, 1),
+        "bucket": mb_d8,
+        "inputs": [
+            tensor("state", [STATE_LEN]),
+            itensor("copy_pairs", [MAX_COPY_PAIRS, 2]),
+        ],
+        "outputs": [tensor("state", [STATE_LEN])],
     })
 
     # ---- kernel (attention-layer-only) executables for microbench/tune

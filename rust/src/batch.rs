@@ -9,6 +9,12 @@
 //!
 //! It also extracts the *batch features* (decode count, query-length
 //! statistics) that drive the kernel-selection heuristics (§5, Listing 2).
+//!
+//! Rows are one per scheduled branch, keyed by stable `(request, branch)`
+//! ids. Under beam search the row count of a group *fluctuates step to
+//! step* — hypotheses fork and retire per decode step — so consecutive
+//! steps of the same request set can land in different bucket envelopes;
+//! the heuristics re-run per step over whatever rows the scheduler built.
 
 use anyhow::{bail, Result};
 
@@ -70,8 +76,10 @@ pub struct BatchMetadata {
     pub ctx_lens: Vec<i32>,
     pub query_start_loc: Vec<i32>,
     pub last_token_idx: Vec<i32>,
-    /// `(request, branch)` order matching rows 0..n of the metadata
-    /// tensors — one row per live branch of each scheduled group.
+    /// `(request, branch id)` order matching rows 0..n of the metadata
+    /// tensors — one row per scheduled branch of each group. Branch ids
+    /// are stable across beam fork/retire; positions in a group's `seqs`
+    /// vector are not.
     pub order: Vec<(RequestId, usize)>,
     pub features: BatchFeatures,
     pub bucket: Bucket,
@@ -182,6 +190,7 @@ pub fn build(batch: &ScheduledBatch, cfg: &KernelConfig, bucket: &Bucket,
 mod tests {
     use super::*;
     use crate::config::{EngineConfig, Variant};
+    use crate::output::step_all_for_tests as step_all;
     use crate::scheduler::Scheduler;
 
     fn cfg_with(variant: Variant, block_q: usize) -> KernelConfig {
@@ -282,9 +291,7 @@ mod tests {
     #[test]
     fn features_mixed_batch() {
         let (mut s, mut kv, b) = setup(&[6]);
-        let results: Vec<_> =
-            b.seqs.iter().map(|x| (x.id, x.branch, 5i32)).collect();
-        s.on_step_complete(&b, &results, &mut kv, 2048, 0);
+        step_all(&mut s, &mut kv, &b, 5);
         s.add_request(99, vec![3; 10], 2, 0);
         let b2 = s.schedule(&mut kv);
         let f = features_of(&b2);
@@ -314,9 +321,7 @@ mod tests {
         let prompt: Vec<i32> = (100..148).collect(); // 48 tokens, 3 blocks
         s.add_request(0, prompt.clone(), 1, 0);
         let b = s.schedule(&mut kv);
-        let results: Vec<_> =
-            b.seqs.iter().map(|x| (x.id, x.branch, 7i32)).collect();
-        s.on_step_complete(&b, &results, &mut kv, 2048, 0);
+        step_all(&mut s, &mut kv, &b, 7);
         assert!(!s.has_unfinished(), "one-token request drains in a step");
 
         s.add_request(1, prompt, 1, 0);

@@ -148,38 +148,89 @@ impl ModelConfig {
     }
 }
 
+/// Decode strategy of a sequence group (see [`SamplingParams`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SamplingMode {
+    /// `n` independent branches forked once at prefill completion, each
+    /// decoding its own salted ancestral stream (`n = 1` is greedy).
+    Parallel,
+    /// Beam search: keep the `beam_width` highest-scoring hypotheses,
+    /// forking and retiring branches *per decode step*. `length_penalty`
+    /// is the GNMT-style exponent applied to the final hypothesis
+    /// ranking (`score = cum_logprob / len^length_penalty`).
+    Beam { beam_width: usize, length_penalty: f64 },
+}
+
 /// Per-request sampling configuration — the vLLM `SamplingParams`
 /// analogue carried by every [`crate::scheduler::SequenceGroup`].
 ///
-/// The default (`n = 1`, `seed = 0`, `temperature = 0.0`) is *pure
-/// greedy*: the engine emits the model's raw history-hash token and the
-/// output is byte-identical to the pre-group engine. Any other setting
-/// turns on deterministic per-branch salting: branch `b` of a group maps
-/// the model's raw token through a hash of `(seed, b, temperature)`, so
-/// forked branches diverge at their first decode step while every branch
-/// stream stays a pure function of its own cached history (replay after
-/// preemption reproduces it exactly).
+/// The default (`Parallel`, `n = 1`, `seed = 0`, `temperature = 0.0`) is
+/// *pure greedy*: the engine emits the model's raw history-hash token and
+/// the output is byte-identical to the pre-group engine. Any other
+/// parallel setting turns on deterministic per-branch salting: branch `b`
+/// of a group maps the model's raw token through a hash of
+/// `(seed, b, temperature)`, so forked branches diverge at their first
+/// decode step while every branch stream stays a pure function of its own
+/// cached history (replay after preemption reproduces it exactly).
+///
+/// `Beam` mode instead expands every live hypothesis into
+/// [`SamplingParams::beam_candidates`] scored continuations each step and
+/// keeps the global top `beam_width` by cumulative logprob proxy.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SamplingParams {
-    /// Parallel sampling width: branches generated per request.
+    /// Parallel sampling width: branches generated per request
+    /// (ignored in `Beam` mode — `beam_width` governs there).
     pub n: usize,
-    /// Stream seed mixed into every branch's salt.
+    /// Stream seed mixed into every branch's salt / beam candidate hash.
     pub seed: u64,
     /// Pseudo-randomness knob of the sim sampler; `0.0` is greedy.
     pub temperature: f64,
+    /// Decode strategy; defaults to `Parallel`.
+    pub mode: SamplingMode,
 }
 
 impl Default for SamplingParams {
     fn default() -> Self {
-        SamplingParams { n: 1, seed: 0, temperature: 0.0 }
+        SamplingParams {
+            n: 1,
+            seed: 0,
+            temperature: 0.0,
+            mode: SamplingMode::Parallel,
+        }
     }
 }
 
 impl SamplingParams {
+    /// Beam-search params: `beam_width` hypotheses, deterministic in
+    /// `seed`, ranked with `length_penalty` at completion.
+    pub fn beam(beam_width: usize, length_penalty: f64, seed: u64) -> Self {
+        SamplingParams {
+            n: beam_width,
+            seed,
+            temperature: 0.0,
+            mode: SamplingMode::Beam { beam_width, length_penalty },
+        }
+    }
+
+    /// Branch rows this request can occupy at full width.
+    pub fn width(&self) -> usize {
+        match self.mode {
+            SamplingMode::Parallel => self.n,
+            SamplingMode::Beam { beam_width, .. } => beam_width,
+        }
+    }
+
+    pub fn is_beam(&self) -> bool {
+        matches!(self.mode, SamplingMode::Beam { .. })
+    }
+
     /// Pure greedy: raw model tokens pass through unsalted, preserving
     /// byte-identical `n = 1` behavior.
     pub fn is_greedy(&self) -> bool {
-        self.n == 1 && self.seed == 0 && self.temperature == 0.0
+        matches!(self.mode, SamplingMode::Parallel)
+            && self.n == 1
+            && self.seed == 0
+            && self.temperature == 0.0
     }
 
     /// Deterministic salt for one branch; 0 means "no salting".
@@ -202,6 +253,42 @@ impl SamplingParams {
         let mixed = ((raw as u32 as u64) ^ salt)
             .wrapping_mul(0x2545_F491_4F6C_DD1D);
         ((mixed >> 17) % vocab.max(1) as u64) as i32
+    }
+
+    /// Beam expansion: derive exactly `beam_width.min(vocab)` *distinct*
+    /// deterministic `(token, logprob)` continuation candidates from the
+    /// model's raw history-hash token. The logprob is a proxy drawn from
+    /// the same hash (the sim has no real distribution), strictly
+    /// deterministic in `(raw, seed, candidate index)` so beam runs
+    /// replay exactly under batching and preemption. Hash collisions are
+    /// resolved by linear probing — distinctness matters: a shrunken
+    /// expansion could otherwise finish a group with fewer than
+    /// `beam_width` hypotheses, breaking the protocol's done-event count.
+    /// Empty in non-beam modes.
+    pub fn beam_candidates(&self, raw: i32, vocab: usize) -> Vec<(i32, f64)> {
+        let SamplingMode::Beam { beam_width, .. } = self.mode else {
+            return Vec::new();
+        };
+        let width = beam_width.min(vocab.max(1));
+        let mut out: Vec<(i32, f64)> = Vec::with_capacity(width);
+        for j in 0..width {
+            let mut h = (raw as u32 as u64)
+                ^ self.seed.rotate_left(17)
+                ^ 0xA076_1D64_78BD_642F;
+            h = (h ^ j as u64).wrapping_mul(0x0000_0100_0000_01B3);
+            h ^= h >> 29;
+            h = h.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            h ^= h >> 32;
+            let mut token = (h % vocab.max(1) as u64) as i32;
+            while out.iter().any(|&(t, _)| t == token) {
+                token = (token + 1) % vocab.max(1) as i32;
+            }
+            // pseudo-probability in (0, 1]; small index penalty keeps the
+            // expansion mildly ordered without flattening the hash signal
+            let u = (((h >> 11) | 1) as f64) / (1u64 << 53) as f64;
+            out.push((token, u.ln() - 0.02 * j as f64));
+        }
+        out
     }
 }
 
@@ -289,7 +376,9 @@ mod tests {
 
     #[test]
     fn branch_salts_differ_and_stay_in_vocab() {
-        let p = SamplingParams { n: 4, seed: 9, temperature: 0.7 };
+        let p = SamplingParams {
+            n: 4, seed: 9, temperature: 0.7, ..Default::default()
+        };
         assert!(!p.is_greedy());
         let salts: Vec<u64> = (0..4).map(|b| p.salt_for(b)).collect();
         for (i, &a) in salts.iter().enumerate() {
@@ -307,6 +396,48 @@ mod tests {
         // a different seed yields a different stream
         let q = SamplingParams { seed: 10, ..p };
         assert_ne!(p.sample(1234, 0, 2048), q.sample(1234, 0, 2048));
+    }
+
+    #[test]
+    fn beam_params_and_width() {
+        let p = SamplingParams::beam(3, 1.0, 9);
+        assert!(p.is_beam());
+        assert!(!p.is_greedy());
+        assert_eq!(p.width(), 3);
+        let q = SamplingParams { n: 4, ..Default::default() };
+        assert!(!q.is_beam());
+        assert_eq!(q.width(), 4);
+        assert_eq!(SamplingParams::default().width(), 1);
+    }
+
+    #[test]
+    fn beam_candidates_are_deterministic_distinct_and_full_width() {
+        let p = SamplingParams::beam(4, 1.0, 9);
+        let a = p.beam_candidates(123, 2048);
+        assert_eq!(a.len(), 4, "always exactly beam_width candidates");
+        for &(t, lp) in &a {
+            assert!((0..2048).contains(&t));
+            assert!(lp <= 0.0 && lp.is_finite());
+        }
+        // deterministic: same inputs, same candidate list
+        assert_eq!(a, p.beam_candidates(123, 2048));
+        // no duplicate tokens within one expansion
+        for (i, &(t, _)) in a.iter().enumerate() {
+            assert!(!a[i + 1..].iter().any(|&(u, _)| u == t));
+        }
+        // a different raw token or seed yields a different expansion
+        assert_ne!(a, p.beam_candidates(124, 2048));
+        let q = SamplingParams::beam(4, 1.0, 10);
+        assert_ne!(a, q.beam_candidates(123, 2048));
+        // a vocab smaller than the width caps the expansion but stays
+        // distinct (linear probing must terminate)
+        let tiny = SamplingParams::beam(4, 1.0, 9).beam_candidates(1, 3);
+        assert_eq!(tiny.len(), 3);
+        for (i, &(t, _)) in tiny.iter().enumerate() {
+            assert!(!tiny[i + 1..].iter().any(|&(u, _)| u == t));
+        }
+        // non-beam modes expand to nothing
+        assert!(SamplingParams::default().beam_candidates(5, 2048).is_empty());
     }
 
     #[test]

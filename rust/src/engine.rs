@@ -9,14 +9,23 @@
 //! extract dispatch to read the sampled tokens back (see aot.py).
 //!
 //! Requests are *sequence groups*: `add_group` takes a
-//! [`SamplingParams`] with `n > 1` for parallel sampling. The scheduler
-//! forks the extra branches by refcount bump once the shared prompt has
-//! prefilled, and surfaces the copy-on-write `(src, dst)` page pairs of
-//! diverging branches; the engine mirrors each pair into the
-//! device-resident cache (a paged-attention page copy) before the step
-//! dispatch. The model always emits its raw history-hash token per row;
-//! per-branch `(seed, branch_index)` salting happens on the host side of
-//! the sample loop, so the greedy `n = 1` path stays byte-identical.
+//! [`SamplingParams`] with `n > 1` for parallel sampling or
+//! `SamplingMode::Beam` for beam search. The scheduler forks parallel
+//! branches by refcount bump once the shared prompt has prefilled, and
+//! surfaces the copy-on-write `(src, dst)` page pairs of diverging
+//! branches; the engine mirrors each pair into the device-resident cache
+//! (a `copy_blocks`-style batched page-copy dispatch when the artifact
+//! set ships one, a host round-trip otherwise) before the step dispatch.
+//!
+//! Since the step-output refactor, `step()` extracts a
+//! [`crate::output::StepOutputs`]: each metadata row's raw history-hash
+//! sample is paired with its `(group, branch)` identity plus a
+//! logprob-proxy score, and handed to the [`OutputProcessor`] — which
+//! owns salting, stop conditions, parallel forking, per-step beam
+//! expansion/retirement and group retirement — before the processed
+//! outputs (per-step token events included) come back in the
+//! [`StepReport`]. The greedy `n = 1` path stays byte-identical through
+//! the pipeline.
 
 use std::rc::Rc;
 use std::time::Instant;
@@ -29,6 +38,7 @@ use crate::heuristics::{Heuristics, KernelChoice};
 use crate::kvcache::{KvCacheManager, PageId};
 use crate::manifest::ArtifactSpec;
 use crate::metrics::EngineMetrics;
+use crate::output::{self, OutputProcessor, SampleOutput, StepOutputs};
 use crate::runtime::{Executable, HostTensor, Runtime};
 use crate::scheduler::{RequestId, ScheduledBatch, Scheduler, SequenceGroup};
 
@@ -43,6 +53,9 @@ pub struct StepReport {
     pub preempted: usize,
     /// Copy-on-write page copies applied before this dispatch.
     pub cow_copies: usize,
+    /// What the step surfaced: raw samples, per-step token events, finish
+    /// signals, beam fork/prune counts (see [`StepOutputs`]).
+    pub outputs: StepOutputs,
     pub step_us: f64,
     pub dispatch_us: f64,
 }
@@ -58,9 +71,14 @@ pub struct Engine {
     weights: Vec<xla::PjRtBuffer>,
     state: xla::PjRtBuffer,
     extract: Rc<Executable>,
+    /// Compiled `copy_blocks` page-copy executable, when the artifact set
+    /// ships one (the sim profile does); `None` falls back to applying
+    /// CoW pairs through a host round-trip of the flat state.
+    copy_exe: Option<Rc<Executable>>,
     step_specs: Vec<ArtifactSpec>,
     /// Slot capacity of the compiled cache buffers (state lane stride).
     num_slots: usize,
+    out_proc: OutputProcessor,
     started: Instant,
     pub metrics: EngineMetrics,
     next_id: RequestId,
@@ -122,10 +140,17 @@ impl Engine {
         let state_len = extract_spec.inputs[0].elements();
         let state = rt.upload(&HostTensor::F32(vec![0.0; state_len]), &[state_len])?;
         let extract = rt.executable(&extract_spec.name)?;
+        let copy_name =
+            rt.copy_blocks_artifact(&model_name).map(|s| s.name.clone());
+        let copy_exe = match copy_name {
+            Some(name) => Some(rt.executable(&name)?),
+            None => None,
+        };
 
         let kv = KvCacheManager::new(num_slots, block_size)
             .with_prefix_caching(ecfg.enable_prefix_caching);
         let scheduler = Scheduler::new(ecfg.clone());
+        let out_proc = OutputProcessor::new(model_cfg.vocab_size);
         Ok(Engine {
             rt,
             model_name,
@@ -137,8 +162,10 @@ impl Engine {
             weights,
             state,
             extract,
+            copy_exe,
             step_specs,
             num_slots,
+            out_proc,
             started: Instant::now(),
             metrics: EngineMetrics::default(),
             next_id: 1,
@@ -164,16 +191,22 @@ impl Engine {
         self.add_group(prompt, max_new_tokens, SamplingParams::default())
     }
 
-    /// Enqueue a sequence group: `sampling.n` parallel branches sharing
-    /// `prompt`, each generating up to `max_new_tokens`.
+    /// Enqueue a sequence group: `sampling.width()` branches sharing
+    /// `prompt` (parallel branches or beam hypotheses), each generating
+    /// up to `max_new_tokens`.
     pub fn add_group(&mut self, prompt: Vec<i32>, max_new_tokens: usize,
                      sampling: SamplingParams) -> Result<RequestId> {
-        if sampling.n == 0 {
-            bail!("sampling n must be at least 1");
+        if sampling.width() == 0 {
+            bail!("sampling width must be at least 1");
         }
-        if sampling.n > self.ecfg.max_num_seqs {
-            bail!("sampling n {} exceeds max_num_seqs {}",
-                  sampling.n, self.ecfg.max_num_seqs);
+        if sampling.width() > self.ecfg.max_num_seqs {
+            bail!("sampling width {} exceeds max_num_seqs {}",
+                  sampling.width(), self.ecfg.max_num_seqs);
+        }
+        if sampling.width() > self.model_cfg.vocab_size {
+            // beam expansion needs `width` distinct candidate tokens
+            bail!("sampling width {} exceeds vocab {}",
+                  sampling.width(), self.model_cfg.vocab_size);
         }
         for &t in &prompt {
             if t < 0 || t as usize >= self.model_cfg.vocab_size {
@@ -252,10 +285,29 @@ impl Engine {
     /// Mirror the scheduler's copy-on-write splits into the device-resident
     /// cache: for each `(src, dst)` pair, copy the page's K and V lanes so
     /// the forked branch decodes over its real shared-prefix content. This
-    /// is the paged-attention page-copy dispatch (vLLM's `copy_blocks`);
-    /// on the sim runtime it round-trips the flat state through the host.
+    /// is the paged-attention page-copy dispatch (vLLM's `copy_blocks`):
+    /// all pairs of a step go out as one fixed-capacity pair tensor to the
+    /// compiled `copy_blocks` executable, which scatters device-side —
+    /// the flat state never crosses the host boundary. Artifact sets
+    /// without the executable fall back to a host round-trip.
     fn apply_cow_copies(&mut self, copies: &[(PageId, PageId)]) -> Result<()> {
         if copies.is_empty() {
+            return Ok(());
+        }
+        self.metrics.cow_pairs_per_step.record(copies.len() as f64);
+        if let Some(exe) = self.copy_exe.clone() {
+            let max_pairs = exe.spec.inputs[1].elements() / 2;
+            for chunk in copies.chunks(max_pairs.max(1)) {
+                // padding pairs are (0, 0): the scratch page, skipped
+                let mut pairs = vec![0i32; max_pairs * 2];
+                for (i, &(src, dst)) in chunk.iter().enumerate() {
+                    pairs[2 * i] = src as i32;
+                    pairs[2 * i + 1] = dst as i32;
+                }
+                let buf = self.rt.upload_for(&exe, 1,
+                                             &HostTensor::I32(pairs))?;
+                self.state = self.rt.execute(&exe, &[&self.state, &buf])?;
+            }
             return Ok(());
         }
         let bs = self.kv.block_size();
@@ -307,21 +359,32 @@ impl Engine {
         let tokens = self.dispatch(&spec, &md)?;
         let dispatch_us = t_dispatch.elapsed().as_secs_f64() * 1e6;
 
-        // Pair raw sampled tokens with (request, branch) rows (row order
-        // == md.order). Per-branch salting happens in the scheduler's
-        // sample accounting, where forked branches are also seeded.
-        let results: Vec<(RequestId, usize, i32)> = md
+        // Extract the step outputs: pair each raw sampled token with its
+        // (request, branch) row (row order == md.order) and a
+        // logprob-proxy score, then hand them to the output processor —
+        // which owns salting, stop conditions, forking (parallel and
+        // per-step beam expansion) and group retirement.
+        let samples: Vec<SampleOutput> = md
             .order
             .iter()
             .enumerate()
-            .map(|(i, &(id, branch))| (id, branch, tokens[i]))
+            .map(|(i, &(id, branch))| SampleOutput {
+                id,
+                branch,
+                raw: tokens[i],
+                logprob: output::logprob_proxy(tokens[i],
+                                               self.model_cfg.vocab_size),
+            })
             .collect();
         let now = self.now_ns();
-        let forked_before = self.scheduler.stats.forked_branches;
-        self.scheduler.on_step_complete(
-            &batch, &results, &mut self.kv,
-            self.model_cfg.vocab_size, now);
-        let fork_seeds = self.scheduler.stats.forked_branches - forked_before;
+        let outputs = self.out_proc.process(
+            &mut self.scheduler, &batch, samples, &mut self.kv,
+            &mut self.metrics, now);
+        self.metrics.token_events += outputs.tokens.len() as u64;
+        // Exact throughput accounting: the processor reports how many
+        // tokens actually became output this step (forked branches'
+        // seed tokens included, beam-pruned samples excluded).
+        self.metrics.generated_tokens += outputs.appended as u64;
         for g in self.scheduler.take_finished() {
             self.metrics.groups_finished += 1;
             if let Some(f) = g.finish_ns {
@@ -342,6 +405,7 @@ impl Engine {
             num_decodes: batch.num_decodes(),
             preempted: batch.preempted.len(),
             cow_copies: batch.cow_copies.len(),
+            outputs,
             step_us,
             dispatch_us,
         };
@@ -362,14 +426,6 @@ impl Engine {
         self.metrics.prefix_cached_blocks = self.kv.cached_blocks() as u64;
         self.metrics.forked_pages = cache.forked_pages;
         self.metrics.cow_copies = cache.cow_copies;
-        let decodes = batch
-            .seqs
-            .iter()
-            .filter(|s| s.samples)
-            .count() as u64;
-        // forked branches each received a salted first token without a
-        // metadata row of their own
-        self.metrics.generated_tokens += decodes + fork_seeds;
         self.metrics.prompt_tokens += batch
             .seqs
             .iter()
@@ -537,7 +593,9 @@ mod tests {
     #[test]
     fn parallel_sampling_forks_and_diverges() {
         let mut e = engine();
-        let sampling = SamplingParams { n: 4, seed: 3, temperature: 0.8 };
+        let sampling = SamplingParams {
+            n: 4, seed: 3, temperature: 0.8, ..Default::default()
+        };
         e.add_group(vec![5; 40], 6, sampling).unwrap();
         let fin = e.run_to_completion().unwrap();
         assert_eq!(fin.len(), 1);
@@ -552,7 +610,85 @@ mod tests {
         assert!(e.metrics.forked_pages > 0, "prompt pages were shared");
         assert!(e.metrics.cow_copies > 0,
                 "divergent writes into the partial prompt page must CoW");
+        // CoW pairs went through the batched copy_blocks dispatch and
+        // were recorded per step
+        assert!(e.metrics.cow_pairs_per_step.count() >= 1);
+        assert!(e.metrics.cow_pairs_per_step.max() >= 1.0);
         assert_eq!(e.metrics.groups_finished, 1);
         assert_eq!(e.free_page_fraction(), 1.0, "all pages returned");
+    }
+
+    #[test]
+    fn step_outputs_stream_tokens_incrementally() {
+        let mut e = engine();
+        e.add_request(vec![7, 8, 9], 4).unwrap();
+        let mut streamed: Vec<(usize, i32)> = Vec::new();
+        let mut last_pos: Option<usize> = None;
+        while e.has_unfinished() {
+            let report = e.step().unwrap().unwrap();
+            // every step surfaces at most one new token for this n=1
+            // request, strictly monotone in position
+            for t in &report.outputs.tokens {
+                assert_eq!(t.id, 1);
+                assert_eq!(t.branch, 0);
+                assert_eq!(t.position, last_pos.map_or(0, |p| p + 1));
+                last_pos = Some(t.position);
+                streamed.push((t.position, t.token));
+            }
+            for s in &report.outputs.samples {
+                assert!(s.logprob <= 1e-12 && s.logprob.is_finite());
+            }
+        }
+        let fin = e.take_finished();
+        let out: Vec<(usize, i32)> = fin[0]
+            .output()
+            .iter()
+            .enumerate()
+            .map(|(i, &t)| (i, t))
+            .collect();
+        assert_eq!(streamed, out,
+                   "per-step events reconstruct the final output exactly");
+        assert_eq!(e.metrics.token_events, 4);
+    }
+
+    #[test]
+    fn beam_search_generates_ranked_hypotheses() {
+        let mut e = engine();
+        let sampling = SamplingParams::beam(3, 1.0, 11);
+        e.add_group(vec![9; 24], 5, sampling).unwrap();
+        let fin = e.run_to_completion().unwrap();
+        assert_eq!(fin.len(), 1);
+        let g = &fin[0];
+        assert_eq!(g.seqs.len(), 3, "beam_width hypotheses survive");
+        for s in &g.seqs {
+            assert_eq!(s.output.len(), 5);
+            assert!(s.cum_logprob < 0.0, "scores accumulate");
+        }
+        let scores: Vec<f64> =
+            g.seqs.iter().map(|s| g.final_score(s)).collect();
+        assert!(scores.windows(2).all(|w| w[0] >= w[1]),
+                "hypotheses come back best-first");
+        // hypotheses are distinct streams
+        let outs: Vec<&Vec<i32>> = g.seqs.iter().map(|s| &s.output).collect();
+        assert!(outs.iter().any(|o| *o != outs[0]));
+        assert!(e.metrics.beam_forks > 0, "mid-stream forks happened");
+        assert!(e.metrics.beam_prunes > 0, "losing hypotheses retired");
+        assert_eq!(e.free_page_fraction(), 1.0, "all pages returned");
+    }
+
+    #[test]
+    fn beam_search_is_deterministic() {
+        let run = || {
+            let mut e = engine();
+            e.add_group(vec![3; 20], 4, SamplingParams::beam(2, 0.5, 21))
+                .unwrap();
+            let fin = e.run_to_completion().unwrap();
+            fin[0]
+                .seqs
+                .iter()
+                .map(|s| (s.output.clone(), s.cum_logprob))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
     }
 }

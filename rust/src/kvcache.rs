@@ -556,9 +556,21 @@ impl KvCacheManager {
         }
     }
 
-    /// Copy-on-write fork: the child shares all of the parent's pages
-    /// (parallel-sampling substrate; CoW splitting is done by
-    /// `unshare_last` at the first divergent write).
+    /// Release like [`KvCacheManager::free`] but report how many page
+    /// references the sequence held — the page-reclamation accounting for
+    /// beam-search branch retirement (a pruned hypothesis gives back its
+    /// whole table; shared references unpin rather than free).
+    pub fn free_counting(&mut self, h: SeqHandle) -> usize {
+        let held = self.tables[h].as_ref().map_or(0, |t| t.pages.len());
+        self.free(h);
+        held
+    }
+
+    /// Copy-on-write fork: the child shares all of the parent's pages —
+    /// the shared prompt at prefill completion (parallel sampling) or the
+    /// full decoded stream of a live hypothesis (beam search forks
+    /// mid-stream, arbitrarily deep past the prompt tail). CoW splitting
+    /// is done by `unshare_last` at the first divergent write.
     pub fn fork(&mut self, parent: SeqHandle) -> SeqHandle {
         let pt = self.table(parent).clone();
         for &p in &pt.pages {
@@ -731,6 +743,36 @@ mod tests {
         m.free(h);
         m.free(c);
         assert_eq!(m.free_pages(), 7);
+    }
+
+    #[test]
+    fn mid_stream_fork_shares_deep_decode_pages() {
+        let mut m = KvCacheManager::new(16 * 16, 16);
+        let h = m.register();
+        m.grow(h, 100).unwrap(); // 7 pages: far deeper than any prompt tail
+        let pages = m.table(h).pages().to_vec();
+        assert_eq!(pages.len(), 7);
+        let free_before = m.free_pages();
+        let c = m.fork(h);
+        assert_eq!(m.free_pages(), free_before,
+                   "mid-stream fork allocates nothing");
+        for &p in &pages {
+            assert_eq!(m.page_ref_count(p), 2);
+        }
+        // the divergent write lands mid-page (100 % 16 != 0): only the
+        // deep tail page CoW-splits, every full page stays shared
+        let (src, dst) = m.unshare_last(c).unwrap()
+            .expect("shared tail must split");
+        assert_eq!(src, *pages.last().unwrap());
+        assert_ne!(dst, src);
+        for &p in &pages[..6] {
+            assert_eq!(m.page_ref_count(p), 2, "full pages stay shared");
+        }
+        assert_eq!(m.page_ref_count(src), 1, "parent keeps the original");
+        // retiring the fork reclaims exactly its table's references
+        assert_eq!(m.free_counting(c), 7);
+        assert_eq!(m.free_counting(h), 7);
+        assert_eq!(m.free_pages(), 15, "all pages returned");
     }
 
     #[test]

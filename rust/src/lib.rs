@@ -18,27 +18,76 @@
 //! Python never runs on the request path: `make artifacts` is the only
 //! Python step, after which the `repro` binary is self-contained.
 //!
+//! ## Step-level output pipeline
+//!
+//! One `Engine::step()` no longer applies sampled tokens as an internal
+//! side effect: it *extracts* a [`output::StepOutputs`] — per-`(group,
+//! branch)` raw samples with logprob-proxy scores — and hands it to the
+//! [`output::OutputProcessor`], the single owner of everything that
+//! happens after the model sampled: salting, stop-condition checks,
+//! parallel forking at prefill completion, per-step beam
+//! expansion/retirement, page release and group retirement. The
+//! processed outputs ride back on the `StepReport`, carrying per-step
+//! [`output::TokenEvent`]s the server forwards to clients as they
+//! happen. The scheduler builds batches, admits and preempts — it never
+//! touches samples.
+//!
 //! ## Sequence groups & parallel sampling
 //!
 //! A request is a [`scheduler::SequenceGroup`]: [`config::SamplingParams`]
 //! carries `n`, `seed` and `temperature`, and `n > 1` asks for parallel
 //! (best-of-n) sampling. The shared prompt prefills **once**, on branch
-//! 0; when its first token samples, the scheduler creates branches
-//! `1..n` with [`kvcache::KvCacheManager::fork`] — a refcount bump over
-//! every prompt page, no copies, and admission counts the shared pages
-//! once. Each branch receives a deterministic first token salted with
-//! `(seed, branch_index)` over the sim runtime's history-hash sample, so
-//! the greedy `n = 1` path stays byte-identical to a plain request.
+//! 0; when its first token samples, the output processor creates
+//! branches `1..n` with [`kvcache::KvCacheManager::fork`] — a refcount
+//! bump over every prompt page, no copies, and admission counts the
+//! shared pages once. Each branch receives a deterministic first token
+//! salted with `(seed, branch_index)` over the sim runtime's
+//! history-hash sample, so the greedy `n = 1` path stays byte-identical
+//! to a plain request.
 //!
 //! Branches diverge at their first decode write: writing into the shared
 //! partial prompt page triggers copy-on-write (`unshare_last`), and the
 //! engine mirrors each `(src, dst)` page pair into the device-resident
-//! cache before the step dispatch. Preemption evicts whole groups and
-//! re-prefills each divergent branch from its own stream (common prompt
-//! blocks still reattach through the prefix cache); a group finishes when
-//! all branches finish. The server protocol grows `n`/`seed`/
-//! `temperature` on submit plus per-branch `token`/`done` events with a
-//! `branch` field and the request's `cached_tokens` prefix-hit length.
+//! cache before the step dispatch — all pairs of a step batched into one
+//! compiled `copy_blocks` dispatch (fixed-capacity pair tensor,
+//! device-side scatter; host round-trip only as a fallback for artifact
+//! sets without it). Preemption evicts whole groups and re-prefills each
+//! divergent branch from its own stream (common prompt blocks still
+//! reattach through the prefix cache), charging victims a group-aware
+//! recompute cost: an n-branch group forfeits n divergent tails, so the
+//! cheapest recompute is evicted first. A group finishes when all
+//! branches finish.
+//!
+//! ## Beam search
+//!
+//! [`config::SamplingMode::Beam`]` { beam_width, length_penalty }` keeps
+//! the `beam_width` highest-scoring hypotheses instead of independent
+//! branches. Each step, every live hypothesis's raw sample expands into
+//! scored candidate continuations
+//! ([`config::SamplingParams::beam_candidates`], deterministic in
+//! `(raw, seed, index)`); the global top `beam_width` by cumulative
+//! logprob proxy survive. A hypothesis winning several slots **forks
+//! mid-stream** — a refcount bump over its entire decoded stream, pages
+//! far deeper than the prompt tail, CoW-split at the next divergent
+//! write — and one winning none is **retired**, its pages reclaimed
+//! immediately. Scheduler rows therefore fluctuate step to step inside
+//! the admission-time `beam_width` reservation. Finished hypotheses come
+//! back ranked by `cum_logprob / len^length_penalty`, best first.
+//!
+//! ## Streaming wire protocol
+//!
+//! The TCP front-end ([`server`]) speaks JSON lines. Submit carries
+//! `prompt`, `max_new_tokens`, and optionally `n`/`seed`/`temperature`
+//! (parallel) or `beam_width`/`length_penalty` (beam). Responses are
+//! `token` events — `{event, id, branch, token, position}` — and one
+//! `done` per branch with the full token list, `ttft_ms`, `total_ms`,
+//! `cached_tokens` and the hypothesis `score`. Guarantees: `token`
+//! events stream incrementally per engine step; every `token` of a
+//! branch precedes that branch's `done`; per `(id, branch)`, `position`
+//! (0-based generated-output index) is strictly increasing, and replay
+//! after preemption never re-emits. Beam groups emit their `token`
+//! events at completion (histories are unstable until then), branches
+//! ranked best-first.
 //!
 //! ## Automatic prefix caching
 //!
@@ -83,16 +132,18 @@ pub mod kvcache;
 pub mod manifest;
 pub mod metrics;
 pub mod microbench;
+pub mod output;
 pub mod runtime;
 pub mod scheduler;
 pub mod server;
 pub mod workload;
 
 pub use config::{Bucket, EngineConfig, KernelConfig, ModelConfig,
-                 SamplingParams, Variant};
+                 SamplingMode, SamplingParams, Variant};
 pub use engine::{Engine, StepReport};
 pub use heuristics::{Heuristics, KernelChoice};
 pub use manifest::Manifest;
+pub use output::{OutputProcessor, SampleOutput, StepOutputs, TokenEvent};
 pub use runtime::Runtime;
 pub use scheduler::{Sequence, SequenceGroup};
 

@@ -79,6 +79,7 @@ COMMANDS:
   serve        --addr 127.0.0.1:7001 --model tiny [--max-requests N]
   run          --prompt-len 16 --max-new 16 --model tiny [--heuristics F]
                [--n 4 --sample-seed 1 --temperature 0.7]  parallel sampling
+               [--beam-width 3 --length-penalty 1.0]      beam search
   bench-micro  --scenario decode|prefill|mixed --batch 4 --seq-len 256
                [--decode-share 0.5] [--iters 5] [--warmup 2]
   tune         --out artifacts/heuristics.json [--iters 3] [--max-seq-len 2048]
@@ -136,10 +137,20 @@ fn cmd_run(args: &Args, dir: PathBuf) -> Result<()> {
     }
     let prompt_len = args.usize_or("prompt-len", 16)?;
     let max_new = args.usize_or("max-new", 16)?;
-    let sampling = SamplingParams {
-        n: args.usize_or("n", 1)?,
-        seed: args.usize_or("sample-seed", 0)? as u64,
-        temperature: args.f64_or("temperature", 0.0)?,
+    let beam_width = args.usize_or("beam-width", 0)?;
+    let sampling = if beam_width > 0 {
+        SamplingParams::beam(
+            beam_width,
+            args.f64_or("length-penalty", 1.0)?,
+            args.usize_or("sample-seed", 0)? as u64,
+        )
+    } else {
+        SamplingParams {
+            n: args.usize_or("n", 1)?,
+            seed: args.usize_or("sample-seed", 0)? as u64,
+            temperature: args.f64_or("temperature", 0.0)?,
+            ..Default::default()
+        }
     };
     let mut rng = Rng::new(args.usize_or("seed", 7)? as u64);
     let prompt = rng.tokens(prompt_len, engine.model_cfg.vocab_size);
@@ -155,7 +166,12 @@ fn cmd_run(args: &Args, dir: PathBuf) -> Result<()> {
               ({:.1} tok/s)",
              g.seqs.len(), generated, dt, generated as f64 / dt);
     for s in &g.seqs {
-        println!("branch {}: {:?}", s.branch, s.output);
+        if sampling.is_beam() {
+            println!("branch {} (score {:.4}): {:?}",
+                     s.branch, g.final_score(s), s.output);
+        } else {
+            println!("branch {}: {:?}", s.branch, s.output);
+        }
     }
     println!("--- metrics ---\n{}", engine.metrics.dump());
     Ok(())

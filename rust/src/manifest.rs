@@ -62,6 +62,10 @@ pub enum ArtifactKind {
     Model,
     /// Sampled-token extractor over the flat state (see aot.py).
     Extract,
+    /// Batched copy-on-write page-copy executable (vLLM `copy_blocks`
+    /// analogue): applies a fixed-capacity `(src, dst)` pair tensor to
+    /// the flat state device-side, one dispatch per step.
+    CopyBlocks,
 }
 
 /// One compiled HLO module + everything needed to call it.
@@ -165,6 +169,7 @@ impl Manifest {
                 "kernel" => ArtifactKind::Kernel,
                 "model" => ArtifactKind::Model,
                 "extract" => ArtifactKind::Extract,
+                "copy_blocks" => ArtifactKind::CopyBlocks,
                 other => bail!("unknown artifact kind '{other}'"),
             };
             let model = match a.get("model") {

@@ -127,6 +127,22 @@ pub struct EngineMetrics {
     pub forked_pages: u64,
     /// Copy-on-write page copies triggered by divergent branch writes.
     pub cow_copies: u64,
+    /// CoW `(src, dst)` pairs applied per step that had any — the batched
+    /// `copy_blocks` dispatch size distribution.
+    pub cow_pairs_per_step: Histogram,
+    // ----- step-output pipeline / streaming -----
+    /// Token events emitted through the step-output pipeline.
+    pub token_events: u64,
+    /// Latency between consecutive tokens of one branch, ms (the
+    /// streamed-token cadence clients observe).
+    pub inter_token_ms: Histogram,
+    // ----- beam search -----
+    /// Beam hypotheses forked mid-stream (winners claiming extra slots).
+    pub beam_forks: u64,
+    /// Beam hypotheses retired by cumulative score (losing branches).
+    pub beam_prunes: u64,
+    /// KV page references reclaimed by beam retirement.
+    pub beam_pruned_pages: u64,
     // ----- automatic prefix cache (mirrors kvcache::CacheStats) -----
     /// Prompt tokens served from cached KV pages instead of re-prefill.
     pub prefix_hit_tokens: u64,
@@ -162,7 +178,14 @@ impl EngineMetrics {
         let _ = writeln!(s, "groups_finished {}", self.groups_finished);
         let _ = writeln!(s, "forked_pages {}", self.forked_pages);
         let _ = writeln!(s, "cow_copies {}", self.cow_copies);
+        let _ = writeln!(s, "cow_pairs_per_step {}",
+                         self.cow_pairs_per_step.summary());
         let _ = writeln!(s, "group_latency_ms {}", self.group_latency_ms.summary());
+        let _ = writeln!(s, "token_events {}", self.token_events);
+        let _ = writeln!(s, "inter_token_ms {}", self.inter_token_ms.summary());
+        let _ = writeln!(s, "beam_forks {}", self.beam_forks);
+        let _ = writeln!(s, "beam_prunes {}", self.beam_prunes);
+        let _ = writeln!(s, "beam_pruned_pages {}", self.beam_pruned_pages);
         let _ = writeln!(s, "prefix_cache_hit_tokens {}", self.prefix_hit_tokens);
         let _ = writeln!(s, "prefix_cache_lookup_tokens {}",
                          self.prefix_lookup_tokens);
@@ -235,6 +258,24 @@ mod tests {
         assert!(d.contains("cow_copies 3"));
         assert!(d.contains("group_latency_ms n=1"));
         assert!(d.contains("prefix_cache_eviction_age_steps n=1"));
+    }
+
+    #[test]
+    fn beam_and_streaming_metrics_dump() {
+        let mut m = EngineMetrics::default();
+        m.beam_forks = 4;
+        m.beam_prunes = 3;
+        m.beam_pruned_pages = 7;
+        m.token_events = 9;
+        m.inter_token_ms.record(1.5);
+        m.cow_pairs_per_step.record(3.0);
+        let d = m.dump();
+        assert!(d.contains("beam_forks 4"));
+        assert!(d.contains("beam_prunes 3"));
+        assert!(d.contains("beam_pruned_pages 7"));
+        assert!(d.contains("token_events 9"));
+        assert!(d.contains("inter_token_ms n=1"));
+        assert!(d.contains("cow_pairs_per_step n=1"));
     }
 
     #[test]

@@ -1,0 +1,482 @@
+//! Step-level output pipeline: the values one engine step produced and
+//! the [`OutputProcessor`] that applies them to the sequence groups.
+//!
+//! Before this module existed, `Engine::step()` applied sampled tokens
+//! inside the scheduler and results were only visible via
+//! `take_finished()` after a whole group completed. The pipeline splits
+//! that into three stages:
+//!
+//!  1. **Extraction** (engine): pair each metadata row's raw model sample
+//!     with its `(group, branch)` identity and a logprob-proxy score —
+//!     a [`SampleOutput`] per sampled row.
+//!  2. **Processing** ([`OutputProcessor::process`]): salt/apply tokens,
+//!     run stop-condition checks, fork parallel-sampling branches at
+//!     prefill completion, run per-step beam expansion (fork winners,
+//!     retire losers, reclaim pages), release finished branches' pages
+//!     and retire finished groups.
+//!  3. **Emission**: every *newly visible* token becomes a
+//!     [`TokenEvent`] in the returned [`StepOutputs`], which the server
+//!     forwards to clients immediately — true incremental streaming,
+//!     per engine step, not at group completion.
+//!
+//! Parallel-mode groups stream a `TokenEvent` the step each token is
+//! accepted; replay after preemption re-derives known tokens without
+//! re-emitting them, so per-branch positions are strictly monotone.
+//! Beam-mode groups emit their hypotheses' events only at group
+//! completion — fork/retire rewrites hypothesis histories mid-flight, so
+//! a mid-stream event could belong to a hypothesis that later vanishes.
+//!
+//! # Beam search
+//!
+//! Every live hypothesis's raw sample is parked as a
+//! [`crate::scheduler::PendingSample`] until all of the group's live
+//! branches have sampled (they may straddle steps under chunked replay
+//! after preemption — the scheduler skips parked branches, and the parked
+//! value is a pure function of the branch's history, so no work is
+//! lost). Expansion then scores `beam_width` candidate continuations per
+//! hypothesis ([`crate::config::SamplingParams::beam_candidates`]),
+//! selects the global top `beam_width` by cumulative logprob proxy
+//! (ties: lower branch id, then lower candidate index), and maps the
+//! selection back onto the branches: the best candidate of a surviving
+//! branch continues it in place, extra winners fork mid-stream via
+//! [`KvCacheManager::fork`] (a refcount bump over the *entire decoded
+//! stream*, CoW-split at the next divergent write), and a branch with no
+//! winning candidate is retired with its pages reclaimed. On group
+//! completion the hypotheses are ranked by the length-penalized score
+//! ([`crate::scheduler::SequenceGroup::final_score`]), best first.
+
+use crate::config::SamplingMode;
+use crate::kvcache::KvCacheManager;
+use crate::metrics::EngineMetrics;
+use crate::scheduler::{FinishReason, PendingSample, RequestId,
+                       ScheduledBatch, Scheduler, SchedulerStats, Sequence,
+                       SequenceGroup, State};
+
+/// Logprob-proxy score of a raw history-hash sample: the sim model has no
+/// real distribution, so the proxy maps the token id into `(0, 1]` and
+/// takes its log — deterministic, strictly negative except for the last
+/// token id, and comparable across steps.
+pub fn logprob_proxy(raw: i32, vocab: usize) -> f64 {
+    ((raw as u32 as f64 + 1.0) / vocab.max(1) as f64).ln()
+}
+
+/// One sampled row of a step: the model's raw token for `(group,
+/// branch)` plus its logprob proxy, before salting/beam selection.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SampleOutput {
+    pub id: RequestId,
+    pub branch: usize,
+    /// Raw history-hash token emitted by the model for this row.
+    pub raw: i32,
+    /// Logprob proxy of `raw` (see [`logprob_proxy`]).
+    pub logprob: f64,
+}
+
+/// A token that became *visible output* this step: appended to branch
+/// `branch` of group `id` at `position` within that branch's output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TokenEvent {
+    pub id: RequestId,
+    pub branch: usize,
+    pub token: i32,
+    /// Index within the branch's generated output (0-based).
+    pub position: usize,
+}
+
+/// Everything one engine step surfaced: the raw per-row samples, the
+/// token events that became visible, and branch finish signals.
+#[derive(Debug, Clone, Default)]
+pub struct StepOutputs {
+    /// Raw model samples, one per sampled metadata row (row order).
+    pub samples: Vec<SampleOutput>,
+    /// Newly visible tokens, in application order. Per `(id, branch)`
+    /// the positions are strictly increasing — across the whole request
+    /// lifetime, not just within one step.
+    pub tokens: Vec<TokenEvent>,
+    /// Branches that hit a stop condition this step.
+    pub finished: Vec<(RequestId, usize)>,
+    /// Tokens that became visible output this step — exact throughput
+    /// accounting (fork seed tokens included, samples discarded by
+    /// replay or beam retirement excluded).
+    pub appended: usize,
+    /// Beam hypotheses forked mid-stream this step.
+    pub beam_forks: usize,
+    /// Beam hypotheses retired (pruned) this step.
+    pub beam_prunes: usize,
+}
+
+/// Owns everything that happens to a sequence group after the model
+/// sampled: stop conditions, token application, parallel forking, beam
+/// expansion/retirement, page release and group retirement, plus
+/// per-step event emission. The scheduler builds batches; this applies
+/// their results.
+pub struct OutputProcessor {
+    vocab: usize,
+}
+
+impl OutputProcessor {
+    pub fn new(vocab: usize) -> Self {
+        OutputProcessor { vocab }
+    }
+
+    /// Apply one completed step. `samples` pairs each sampled `(group,
+    /// branch)` row with the model's raw history-hash token; per-branch
+    /// salting over `(seed, branch)` happens here
+    /// (`SamplingParams::sample`, bounded by the vocab), so the greedy
+    /// `n = 1` path passes tokens through untouched and stays
+    /// byte-identical to the pre-pipeline engine.
+    pub fn process(
+        &self,
+        sched: &mut Scheduler,
+        batch: &ScheduledBatch,
+        samples: Vec<SampleOutput>,
+        kv: &mut KvCacheManager,
+        metrics: &mut EngineMetrics,
+        now_ns: u64,
+    ) -> StepOutputs {
+        let mut out = StepOutputs { samples, ..Default::default() };
+
+        // ---- stage 1: per-row application --------------------------------
+        for s in &batch.seqs {
+            let g = sched
+                .running
+                .iter_mut()
+                .find(|g| g.id == s.id)
+                .expect("scheduled group vanished");
+            let pos = g.seq_index(s.branch).expect("scheduled branch vanished");
+            g.seqs[pos].computed = s.ctx_len + s.tokens.len();
+            let computed = g.seqs[pos].computed;
+            // Publish newly-filled full blocks into the prefix index so
+            // later requests (and this group after a preemption) can
+            // reuse them. The commit cursor makes this incremental: skip
+            // the token rebuild entirely on steps that fill no new block.
+            if kv.prefix_caching_enabled()
+                && computed / kv.block_size() > kv.committed_blocks(s.handle)
+            {
+                let known: Vec<i32> =
+                    (0..computed).map(|j| g.token_at(s.branch, j)).collect();
+                kv.commit_prefix(s.handle, &known, computed);
+            }
+            if !s.samples {
+                continue; // mid-prefill chunk: sample discarded
+            }
+            let sample = out
+                .samples
+                .iter()
+                .find(|r| r.id == s.id && r.branch == s.branch)
+                .copied()
+                .expect("missing sample for scheduled branch");
+            // re-prefill after preemption replays already-known outputs
+            if computed < g.total_len(s.branch) {
+                continue;
+            }
+            if g.sampling.is_beam() {
+                // park the sample until every sibling hypothesis has one
+                g.seqs[pos].pending = Some(PendingSample {
+                    raw: sample.raw,
+                    logprob: sample.logprob,
+                });
+                continue;
+            }
+            let tok = g.sampling.sample(sample.raw, s.branch, self.vocab);
+            apply_token(g, pos, tok, now_ns, metrics, &mut out, true);
+            // Prompt prefill just completed for an unforked group: create
+            // branches 1..n, sharing every prompt page by refcount bump
+            // (no allocation — admission already counted the shared pages
+            // once).
+            if !g.forked && g.sampling.n > 1 && s.branch == 0
+                && g.seqs[pos].output.len() == 1
+            {
+                let parent = g.seqs[pos].handle.expect("fork without handle");
+                let computed0 = g.seqs[pos].computed;
+                for b in 1..g.sampling.n {
+                    let h = kv.fork(parent);
+                    let first = g.sampling.sample(sample.raw, b, self.vocab);
+                    g.seqs.push(Sequence {
+                        branch: b,
+                        state: State::Running,
+                        output: vec![first],
+                        handle: Some(h),
+                        computed: computed0,
+                        cum_logprob: 0.0,
+                        pending: None,
+                        first_token_ns: Some(now_ns),
+                        last_token_ns: Some(now_ns),
+                    });
+                    g.next_branch = b + 1;
+                    sched.stats.forked_branches += 1;
+                    out.appended += 1;
+                    out.tokens.push(TokenEvent {
+                        id: g.id,
+                        branch: b,
+                        token: first,
+                        position: 0,
+                    });
+                }
+                g.forked = true;
+            }
+        }
+
+        // ---- stage 2: beam expansion (fork winners, retire losers) -------
+        for g in sched.running.iter_mut() {
+            if g.sampling.is_beam() {
+                self.expand_beam(g, kv, &mut sched.stats, metrics,
+                                 &mut out, now_ns);
+            }
+        }
+
+        // ---- stage 3: stop conditions ------------------------------------
+        for g in &mut sched.running {
+            for s in &mut g.seqs {
+                if !s.is_finished() && s.output.len() >= g.max_new_tokens {
+                    s.state = State::Finished(FinishReason::Length);
+                    out.finished.push((g.id, s.branch));
+                }
+            }
+        }
+
+        // ---- stage 4: release pages, retire finished groups --------------
+        let mut j = 0;
+        while j < sched.running.len() {
+            for s in &mut sched.running[j].seqs {
+                if !s.is_finished() {
+                    continue;
+                }
+                if let Some(h) = s.handle.take() {
+                    kv.free(h);
+                }
+            }
+            if sched.running[j].is_finished() {
+                let mut g = sched.running.remove(j);
+                g.finish_ns = Some(now_ns);
+                if g.sampling.is_beam() {
+                    // Rank hypotheses best-first by the length-penalized
+                    // score, then emit their token streams — beam tokens
+                    // only become stable (hence streamable) now.
+                    let mut tagged: Vec<(f64, Sequence)> =
+                        std::mem::take(&mut g.seqs)
+                            .into_iter()
+                            .map(|s| (g.final_score(&s), s))
+                            .collect();
+                    tagged.sort_by(|a, b| {
+                        b.0.total_cmp(&a.0).then(a.1.branch.cmp(&b.1.branch))
+                    });
+                    g.seqs = tagged.into_iter().map(|(_, s)| s).collect();
+                    for s in &g.seqs {
+                        for (i, &t) in s.output.iter().enumerate() {
+                            out.tokens.push(TokenEvent {
+                                id: g.id,
+                                branch: s.branch,
+                                token: t,
+                                position: i,
+                            });
+                        }
+                    }
+                }
+                sched.finished.push(g);
+            } else {
+                j += 1;
+            }
+        }
+        out
+    }
+
+    /// Group-wide beam expansion. No-op until every live hypothesis has a
+    /// parked sample (branches mid-replay after a preemption sync up over
+    /// the following steps).
+    fn expand_beam(
+        &self,
+        g: &mut SequenceGroup,
+        kv: &mut KvCacheManager,
+        stats: &mut SchedulerStats,
+        metrics: &mut EngineMetrics,
+        out: &mut StepOutputs,
+        now_ns: u64,
+    ) {
+        let SamplingMode::Beam { beam_width, .. } = g.sampling.mode else {
+            return;
+        };
+        let live: Vec<usize> = (0..g.seqs.len())
+            .filter(|&i| !g.seqs[i].is_finished())
+            .collect();
+        if live.is_empty()
+            || live.iter().any(|&i| g.seqs[i].pending.is_none())
+        {
+            return;
+        }
+
+        // Candidate pool across every live hypothesis. Selection order is
+        // total: score desc, then branch id asc, then candidate index asc
+        // — fully deterministic, so beam runs replay exactly under
+        // batching and preemption.
+        struct Cand {
+            cum: f64,
+            branch: usize,
+            ci: usize,
+            token: i32,
+        }
+        let mut cands: Vec<Cand> = Vec::new();
+        for &i in &live {
+            let s = &g.seqs[i];
+            let raw = s.pending.expect("checked above").raw;
+            let expansion = g.sampling.beam_candidates(raw, self.vocab);
+            for (ci, (token, lp)) in expansion.into_iter().enumerate() {
+                cands.push(Cand {
+                    cum: s.cum_logprob + lp,
+                    branch: s.branch,
+                    ci,
+                    token,
+                });
+            }
+        }
+        cands.sort_by(|a, b| {
+            b.cum
+                .total_cmp(&a.cum)
+                .then(a.branch.cmp(&b.branch))
+                .then(a.ci.cmp(&b.ci))
+        });
+        cands.truncate(beam_width);
+
+        // Map winners back onto branches, in position order: the best
+        // winner of a branch continues it in place, extras fork, a branch
+        // with no winner is retired.
+        let mut children: Vec<Sequence> = Vec::new();
+        let mut retired: Vec<usize> = Vec::new();
+        for &i in &live {
+            let branch = g.seqs[i].branch;
+            let mine: Vec<(i32, f64)> = cands
+                .iter()
+                .filter(|c| c.branch == branch)
+                .map(|c| (c.token, c.cum))
+                .collect();
+            if mine.is_empty() {
+                retired.push(i);
+                continue;
+            }
+            let base = g.seqs[i].output.clone();
+            {
+                let s = &mut g.seqs[i];
+                s.pending = None;
+                s.cum_logprob = mine[0].1;
+            }
+            // beam tokens do not stream mid-flight (histories are
+            // unstable until the group completes), hence no event
+            apply_token(g, i, mine[0].0, now_ns, metrics, out, false);
+            for &(token, cum) in &mine[1..] {
+                // Mid-stream fork: the child shares the parent's entire
+                // decoded stream by refcount bump. A preempted parent has
+                // no handle — its child starts as a Waiting shell and
+                // re-prefills its own stream, like any recompute victim.
+                let (handle, computed, state) = match g.seqs[i].handle {
+                    Some(h) => (Some(kv.fork(h)), g.seqs[i].computed,
+                                State::Running),
+                    None => (None, 0, State::Waiting),
+                };
+                let mut output = base.clone();
+                output.push(token);
+                children.push(Sequence {
+                    branch: g.next_branch,
+                    state,
+                    output,
+                    handle,
+                    computed,
+                    cum_logprob: cum,
+                    pending: None,
+                    first_token_ns: Some(now_ns),
+                    last_token_ns: Some(now_ns),
+                });
+                g.next_branch += 1;
+                stats.forked_branches += 1;
+                metrics.beam_forks += 1;
+                out.beam_forks += 1;
+                out.appended += 1;
+            }
+        }
+        for &i in retired.iter().rev() {
+            let mut s = g.seqs.remove(i);
+            if let Some(h) = s.handle.take() {
+                metrics.beam_pruned_pages += kv.free_counting(h) as u64;
+            }
+            metrics.beam_prunes += 1;
+            out.beam_prunes += 1;
+        }
+        g.seqs.extend(children);
+        g.forked = true;
+    }
+}
+
+/// Append an accepted token to a branch: output push, timestamps,
+/// inter-token latency, append accounting, and — when `stream` is set —
+/// an immediate [`TokenEvent`].
+fn apply_token(
+    g: &mut SequenceGroup,
+    pos: usize,
+    token: i32,
+    now_ns: u64,
+    metrics: &mut EngineMetrics,
+    out: &mut StepOutputs,
+    stream: bool,
+) {
+    let id = g.id;
+    let s = &mut g.seqs[pos];
+    s.output.push(token);
+    out.appended += 1;
+    if let Some(prev) = s.last_token_ns {
+        metrics
+            .inter_token_ms
+            .record(now_ns.saturating_sub(prev) as f64 / 1e6);
+    }
+    s.last_token_ns = Some(now_ns);
+    if s.first_token_ns.is_none() {
+        s.first_token_ns = Some(now_ns);
+    }
+    if stream {
+        out.tokens.push(TokenEvent {
+            id,
+            branch: s.branch,
+            token,
+            position: s.output.len() - 1,
+        });
+    }
+    if g.first_token_ns.is_none() {
+        g.first_token_ns = Some(now_ns);
+    }
+}
+
+/// Test-only step application shared by the scheduler/batch unit suites:
+/// feed a fixed raw sample to every row of a batch through the processor
+/// (the old `on_step_complete` unit harness, post-refactor).
+#[cfg(test)]
+pub(crate) fn step_all_for_tests(
+    sched: &mut Scheduler,
+    kv: &mut KvCacheManager,
+    batch: &ScheduledBatch,
+    raw: i32,
+) {
+    let samples: Vec<SampleOutput> = batch
+        .seqs
+        .iter()
+        .map(|x| SampleOutput { id: x.id, branch: x.branch, raw,
+                                logprob: 0.0 })
+        .collect();
+    let mut metrics = EngineMetrics::default();
+    OutputProcessor::new(2048)
+        .process(sched, batch, samples, kv, &mut metrics, 0);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn logprob_proxy_is_monotone_and_nonpositive() {
+        let v = 2048;
+        let lo = logprob_proxy(0, v);
+        let hi = logprob_proxy(2047, v);
+        assert!(lo < hi, "smaller token ids are less probable");
+        assert!(hi <= 1e-12);
+        assert!(lo.is_finite());
+        // deterministic
+        assert_eq!(logprob_proxy(77, v), logprob_proxy(77, v));
+    }
+}

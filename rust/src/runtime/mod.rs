@@ -241,6 +241,17 @@ impl Runtime {
                 && a.model.as_deref() == Some(model))
             .with_context(|| format!("no extract artifact for model '{model}'"))
     }
+
+    /// Batched page-copy executable for the model, when the artifact set
+    /// ships one — optional: the engine falls back to a host round-trip
+    /// for older profiles without it.
+    pub fn copy_blocks_artifact(&self, model: &str) -> Option<&ArtifactSpec> {
+        self.manifest
+            .artifacts
+            .iter()
+            .find(|a| a.kind == ArtifactKind::CopyBlocks
+                && a.model.as_deref() == Some(model))
+    }
 }
 
 #[cfg(test)]

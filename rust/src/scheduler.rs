@@ -16,11 +16,13 @@
 //!      allocator cannot grow a decoding branch, a running group with no
 //!      branch in the current batch is evicted, its pages *unpinned*
 //!      (shared/cached blocks survive in the prefix cache), and each of
-//!      its branches re-prefills its own full stream later. Among
-//!      eligible victims the scheduler prefers the group with the largest
-//!      fully-cached block prefix — its recompute is nearly free on
-//!      re-admission — breaking ties toward the youngest arrival (the
-//!      only criterion when prefix caching is off).
+//!      its branches re-prefills its own full stream later. Victims are
+//!      chosen by a *group-aware recompute cost*: the KV tokens the
+//!      eviction actually discards, summed over every live branch (an
+//!      n-branch group forfeits n divergent tails, so it is charged n×)
+//!      minus what the prefix cache would hand back on re-admission.
+//!      The cheapest victim goes first, ties broken toward the youngest
+//!      arrival (the only criterion when everything else is equal).
 //!   4. **Prefix-cache-aware admission**: admission first attaches the
 //!      stream's cached full-block prefix by refcount bump; `computed`
 //!      starts at the hit length and chunked prefill begins at the first
@@ -31,16 +33,32 @@
 //!
 //! # Sequence groups
 //!
-//! A request is a [`SequenceGroup`]: `sampling.n` member [`Sequence`]s
-//! (branches) sharing one prompt. Prefill runs once, on branch 0. When
-//! the prompt completes and the first token is sampled, the remaining
-//! branches are created by [`KvCacheManager::fork`] — a pure refcount
-//! bump, no page copies — each seeded with its own salted first token.
-//! A branch's first decode write into the shared partial prompt page
-//! triggers copy-on-write via `unshare_last`; the `(src, dst)` pairs are
-//! surfaced in [`ScheduledBatch::cow_copies`] so the engine can mirror
-//! the page copy into the device-resident cache before dispatch. The
-//! group finishes when all branches finish.
+//! A request is a [`SequenceGroup`]: up to `sampling.width()` member
+//! [`Sequence`]s (branches) sharing one prompt. Prefill runs once, on
+//! branch 0. In `Parallel` mode, when the prompt completes and the first
+//! token is sampled, the remaining branches are created by
+//! [`KvCacheManager::fork`] — a pure refcount bump, no page copies —
+//! each seeded with its own salted first token. In `Beam` mode the
+//! [`crate::output::OutputProcessor`] forks and retires branches *every
+//! step*: a hypothesis whose candidates win several beam slots forks
+//! mid-stream (sharing arbitrarily deep decode pages), one that wins
+//! none is retired and its pages reclaimed.
+//!
+//! A branch's first decode write into a shared partial page triggers
+//! copy-on-write via `unshare_last`; the `(src, dst)` pairs are surfaced
+//! in [`ScheduledBatch::cow_copies`] so the engine can mirror the page
+//! copy into the device-resident cache before dispatch. The group
+//! finishes when all branches finish.
+//!
+//! Branch *identity* is the `Sequence::branch` id, assigned monotonically
+//! per group and stable across fork/retire — metadata rows, server
+//! events and test assertions key on `(request, branch)` pairs, not on
+//! positions in the `seqs` vector (beam retirement removes elements).
+//!
+//! Since the step-output refactor, applying sampled tokens to groups
+//! (including forking, stop conditions and retirement) lives in
+//! [`crate::output::OutputProcessor::process`]; this module only builds
+//! batches, admits, and preempts.
 
 use std::collections::{HashSet, VecDeque};
 
@@ -64,10 +82,26 @@ pub enum State {
     Finished(FinishReason),
 }
 
+/// A sampled-but-unapplied model output parked on a beam branch while its
+/// sibling hypotheses catch up (beam expansion is a per-step global
+/// selection, so every live branch must have sampled before any token is
+/// committed). Pure function of the branch's cached history — it
+/// survives preemption and replays to the same value.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PendingSample {
+    /// The model's raw history-hash token for this branch.
+    pub raw: i32,
+    /// Logprob proxy of the raw sample (observability only; beam scoring
+    /// re-derives per-candidate scores from `raw`).
+    pub logprob: f64,
+}
+
 /// One member sequence (branch) of a [`SequenceGroup`].
 #[derive(Debug)]
 pub struct Sequence {
-    /// Branch index inside the group (0 is the prefill primary).
+    /// Stable branch id inside the group (0 is the prefill primary; beam
+    /// forks keep allocating fresh ids, so ids are monotone but — after
+    /// retirement — not necessarily dense).
     pub branch: usize,
     pub state: State,
     pub output: Vec<i32>,
@@ -75,7 +109,14 @@ pub struct Sequence {
     pub handle: Option<SeqHandle>,
     /// Tokens of (prompt + output) whose KV is already computed.
     pub computed: usize,
+    /// Cumulative logprob-proxy score of the hypothesis (beam mode).
+    pub cum_logprob: f64,
+    /// Beam-mode sample awaiting group-wide expansion (see
+    /// [`PendingSample`]); always `None` in parallel mode.
+    pub pending: Option<PendingSample>,
     pub first_token_ns: Option<u64>,
+    /// When this branch last appended a token (inter-token latency).
+    pub last_token_ns: Option<u64>,
 }
 
 impl Sequence {
@@ -86,7 +127,10 @@ impl Sequence {
             output: Vec::new(),
             handle: None,
             computed: 0,
+            cum_logprob: 0.0,
+            pending: None,
             first_token_ns: None,
+            last_token_ns: None,
         }
     }
 
@@ -103,14 +147,18 @@ pub struct SequenceGroup {
     pub prompt: Vec<i32>,
     pub sampling: SamplingParams,
     pub max_new_tokens: usize,
-    /// Member branches; starts as just branch 0, grows to `sampling.n`
-    /// by copy-on-write fork when the prompt prefill completes.
+    /// Member branches; starts as just branch 0, grows to
+    /// `sampling.width()` by copy-on-write fork — once at prefill
+    /// completion (parallel mode) or per-step (beam mode, which also
+    /// retires branches, so elements come and go).
     pub seqs: Vec<Sequence>,
-    /// Branches 1..n exist (fork happened).
+    /// Branches past the primary exist (first fork happened).
     pub forked: bool,
+    /// Next branch id to assign (monotone; never reused inside a group).
+    pub(crate) next_branch: usize,
     /// Prefix-cache hit length at first admission (server observability).
     pub cached_tokens: usize,
-    admitted: bool,
+    pub(crate) admitted: bool,
     pub arrival_seq: u64,
     // ----- telemetry -----
     pub enqueue_ns: u64,
@@ -120,33 +168,46 @@ pub struct SequenceGroup {
 }
 
 impl SequenceGroup {
-    /// Full token count of one branch so far (prompt + generated).
-    pub fn total_len(&self, branch: usize) -> usize {
-        self.prompt.len() + self.seqs[branch].output.len()
+    /// Position of branch id `branch` in `seqs` (beam retirement makes
+    /// ids sparse, so positions must be looked up, never assumed).
+    pub fn seq_index(&self, branch: usize) -> Option<usize> {
+        self.seqs.iter().position(|s| s.branch == branch)
     }
 
-    fn token_at(&self, branch: usize, i: usize) -> i32 {
+    /// Branch by id; panics if it was retired.
+    pub fn seq(&self, branch: usize) -> &Sequence {
+        &self.seqs[self.seq_index(branch).expect("unknown branch id")]
+    }
+
+    /// Full token count of one branch so far (prompt + generated).
+    pub fn total_len(&self, branch: usize) -> usize {
+        self.prompt.len() + self.seq(branch).output.len()
+    }
+
+    pub(crate) fn token_at(&self, branch: usize, i: usize) -> i32 {
         if i < self.prompt.len() {
             self.prompt[i]
         } else {
-            self.seqs[branch].output[i - self.prompt.len()]
+            self.seq(branch).output[i - self.prompt.len()]
         }
     }
 
     /// Full token stream of one branch (prompt + generated).
     pub fn stream(&self, branch: usize) -> Vec<i32> {
         let mut v = self.prompt.clone();
-        v.extend_from_slice(&self.seqs[branch].output);
+        v.extend_from_slice(&self.seq(branch).output);
         v
     }
 
     /// All branches exist and are finished.
     pub fn is_finished(&self) -> bool {
-        (self.forked || self.sampling.n == 1)
+        (self.forked || self.sampling.width() == 1)
             && self.seqs.iter().all(|s| s.is_finished())
     }
 
-    /// Output of the primary branch — the `n = 1` / legacy view.
+    /// Output of the primary branch — the `n = 1` / legacy view. (For a
+    /// finished beam group, `seqs` is sorted best-first, so this is the
+    /// top hypothesis.)
     pub fn output(&self) -> &[i32] {
         &self.seqs[0].output
     }
@@ -156,16 +217,31 @@ impl SequenceGroup {
         self.seqs[0].state
     }
 
+    /// Length-penalized ranking score of one hypothesis (beam mode):
+    /// `cum_logprob / len^length_penalty`, the GNMT convention. Zero in
+    /// parallel mode (no scores are tracked there).
+    pub fn final_score(&self, seq: &Sequence) -> f64 {
+        match self.sampling.mode {
+            crate::config::SamplingMode::Beam { length_penalty, .. } => {
+                let len = seq.output.len().max(1) as f64;
+                seq.cum_logprob / len.powf(length_penalty)
+            }
+            crate::config::SamplingMode::Parallel => 0.0,
+        }
+    }
+
     /// Rows this group occupies against `max_num_seqs`: unfinished
     /// branches plus the branches an unforked group will still create.
     /// (Rows are reserved up front; the shared prompt *pages* are only
-    /// ever counted once — fork allocates nothing.)
-    fn reserved_rows(&self) -> usize {
+    /// ever counted once — fork allocates nothing.) For beam groups the
+    /// live count fluctuates step to step as hypotheses fork and retire,
+    /// but never exceeds the admission-time `width()` reservation.
+    pub(crate) fn reserved_rows(&self) -> usize {
         let live = self.seqs.iter().filter(|s| !s.is_finished()).count();
         let pending = if self.forked {
             0
         } else {
-            self.sampling.n - self.seqs.len()
+            self.sampling.width().saturating_sub(self.seqs.len())
         };
         live + pending
     }
@@ -175,7 +251,7 @@ impl SequenceGroup {
 #[derive(Debug, Clone)]
 pub struct ScheduledSeq {
     pub id: RequestId,
-    /// Branch index inside the group.
+    /// Stable branch id inside the group (see [`Sequence::branch`]).
     pub branch: usize,
     pub handle: SeqHandle,
     /// Context length: tokens already in the KV cache.
@@ -237,8 +313,11 @@ pub struct SchedulerStats {
 pub struct Scheduler {
     cfg: EngineConfig,
     waiting: VecDeque<SequenceGroup>,
-    running: Vec<SequenceGroup>,
-    finished: Vec<SequenceGroup>,
+    /// Groups with at least one admitted branch. `pub(crate)` so the
+    /// [`crate::output::OutputProcessor`] (the only other writer) can
+    /// apply step results without a parallel accessor surface.
+    pub(crate) running: Vec<SequenceGroup>,
+    pub(crate) finished: Vec<SequenceGroup>,
     next_arrival: u64,
     pub stats: SchedulerStats,
 }
@@ -271,7 +350,7 @@ impl Scheduler {
                      sampling: SamplingParams, max_new_tokens: usize,
                      now_ns: u64) {
         assert!(!prompt.is_empty(), "empty prompt");
-        assert!(sampling.n >= 1, "group needs at least one branch");
+        assert!(sampling.width() >= 1, "group needs at least one branch");
         let g = SequenceGroup {
             id,
             prompt,
@@ -279,6 +358,7 @@ impl Scheduler {
             max_new_tokens: max_new_tokens.max(1),
             seqs: vec![Sequence::fresh(0)],
             forked: false,
+            next_branch: 1,
             cached_tokens: 0,
             admitted: false,
             arrival_seq: self.next_arrival,
@@ -354,7 +434,14 @@ impl Scheduler {
                 let g = &self.running[gi];
                 let s = &g.seqs[bi];
                 let handle = s.handle.expect("running branch without handle");
-                let total = g.total_len(bi);
+                let total = g.prompt.len() + s.output.len();
+                // Beam branch fully computed with a parked sample: it is
+                // waiting for sibling hypotheses to sync before the
+                // group-wide expansion — nothing to feed this step.
+                if s.pending.is_some() && s.computed >= total {
+                    bi += 1;
+                    continue;
+                }
                 let (n_new, samples) = if s.computed < total {
                     // prefill (possibly chunked) continuation
                     let n = (total - s.computed).min(budget);
@@ -402,10 +489,11 @@ impl Scheduler {
 
                 let g = &self.running[gi];
                 let s = &g.seqs[bi];
+                let branch = s.branch;
                 let is_prefill = s.computed < total;
                 let tokens: Vec<i32> = if is_prefill {
                     (s.computed..s.computed + n_new)
-                        .map(|k| g.token_at(bi, k))
+                        .map(|k| g.token_at(branch, k))
                         .collect()
                 } else {
                     vec![*s.output.last().or(g.prompt.last()).unwrap()]
@@ -413,7 +501,7 @@ impl Scheduler {
                 budget -= tokens.len().min(budget);
                 batch.seqs.push(ScheduledSeq {
                     id: g.id,
-                    branch: bi,
+                    branch,
                     handle,
                     ctx_len: s.computed,
                     tokens,
@@ -482,7 +570,8 @@ impl Scheduler {
         } else {
             &self.running[gi]
         };
-        let stream = g.stream(bi);
+        let branch = g.seqs[bi].branch;
+        let stream = g.stream(branch);
         let total = stream.len();
 
         // Read-only probe first: a blocked admission must leave the cache
@@ -533,7 +622,7 @@ impl Scheduler {
         s.computed = cached;
         batch.seqs.push(ScheduledSeq {
             id: g.id,
-            branch: bi,
+            branch,
             handle,
             ctx_len: cached,
             tokens,
@@ -544,11 +633,12 @@ impl Scheduler {
     }
 
     /// Victim for preemption-by-recompute: a running group with no branch
-    /// scheduled this step, excluding `current`. Prefers the group whose
-    /// branches have the largest fully-cached block prefix (recompute
-    /// nearly free on re-admission), tie-broken toward the youngest
-    /// arrival — the legacy vLLM recompute policy, and the only criterion
-    /// when prefix caching is off (all scores are then 0).
+    /// scheduled this step, excluding `current`. Picks the group with the
+    /// *cheapest group-aware recompute cost* (see
+    /// [`Scheduler::recompute_cost`]) — evicting an n-branch group
+    /// discards n divergent tails, so wide groups are charged their full
+    /// width — tie-broken toward the youngest arrival (the legacy vLLM
+    /// recompute policy, and the only criterion when costs are equal).
     fn pick_victim(&self, kv: &KvCacheManager, current: RequestId,
                    scheduled: &HashSet<RequestId>) -> Option<usize> {
         self.running
@@ -561,25 +651,29 @@ impl Scheduler {
                     && !scheduled.contains(&g.id)
                     && g.seqs.iter().any(|s| s.state == State::Running)
             })
-            .max_by_key(|(_, g)| (self.cached_prefix(kv, g), g.arrival_seq))
+            .min_by_key(|(_, g)| {
+                (self.recompute_cost(kv, g), std::cmp::Reverse(g.arrival_seq))
+            })
             .map(|(i, _)| i)
     }
 
-    /// Smallest cached full-block prefix across the group's running
-    /// branches — the worst-case recompute saving if it were evicted.
-    /// Reads each branch's commit cursor (blocks attached from or offered
-    /// to the prefix index) instead of re-hashing token streams: O(1) per
-    /// branch, and 0 for every branch when prefix caching is off.
-    fn cached_prefix(&self, kv: &KvCacheManager, g: &SequenceGroup) -> usize {
+    /// Group-aware preemption cost: the KV tokens an eviction actually
+    /// throws away, summed over every *running* branch (an n-branch group
+    /// forfeits n divergent tails), minus each branch's fully-cached
+    /// block prefix — those blocks survive in the prefix cache and
+    /// reattach for free on re-admission. Reads each branch's commit
+    /// cursor instead of re-hashing token streams: O(1) per branch, and
+    /// the cached discount is 0 when prefix caching is off.
+    fn recompute_cost(&self, kv: &KvCacheManager, g: &SequenceGroup) -> usize {
         g.seqs
             .iter()
             .filter(|s| s.state == State::Running)
             .map(|s| {
                 let h = s.handle.expect("running branch without handle");
-                kv.committed_blocks(h) * kv.block_size()
+                s.computed
+                    .saturating_sub(kv.committed_blocks(h) * kv.block_size())
             })
-            .min()
-            .unwrap_or(0)
+            .sum()
     }
 
     /// Evict a whole group: free every branch's pages (unpinning shared /
@@ -605,120 +699,12 @@ impl Scheduler {
         self.waiting.push_front(g);
     }
 
-    /// Record the model's *raw* sampled tokens for a completed step.
-    /// `results` pairs each scheduled `(group, branch)` with the raw
-    /// history-hash token; per-branch salting over `(seed, branch_index)`
-    /// happens here (`SamplingParams::sample`, bounded by `vocab`), so the
-    /// greedy `n = 1` path passes tokens through untouched. When branch
-    /// 0's prompt prefill completes, the remaining branches are created by
-    /// copy-on-write fork, each seeded with its own salted first token.
-    pub fn on_step_complete(
-        &mut self,
-        batch: &ScheduledBatch,
-        results: &[(RequestId, usize, i32)],
-        kv: &mut KvCacheManager,
-        vocab: usize,
-        now_ns: u64,
-    ) {
-        for s in &batch.seqs {
-            let g = self
-                .running
-                .iter_mut()
-                .find(|g| g.id == s.id)
-                .expect("scheduled group vanished");
-            g.seqs[s.branch].computed = s.ctx_len + s.tokens.len();
-            let computed = g.seqs[s.branch].computed;
-            // Publish newly-filled full blocks into the prefix index so
-            // later requests (and this group after a preemption) can reuse
-            // them. The commit cursor makes this incremental: skip the
-            // token rebuild entirely on steps that fill no new block.
-            if kv.prefix_caching_enabled()
-                && computed / kv.block_size() > kv.committed_blocks(s.handle)
-            {
-                let known: Vec<i32> =
-                    (0..computed).map(|j| g.token_at(s.branch, j)).collect();
-                kv.commit_prefix(s.handle, &known, computed);
-            }
-            if !s.samples {
-                continue; // mid-prefill chunk: sample discarded
-            }
-            let raw = results
-                .iter()
-                .find(|(id, b, _)| *id == s.id && *b == s.branch)
-                .map(|(_, _, t)| *t)
-                .expect("missing sample for scheduled branch");
-            let tok = g.sampling.sample(raw, s.branch, vocab);
-            // re-prefill after preemption replays already-known outputs
-            if computed >= g.total_len(s.branch) {
-                g.seqs[s.branch].output.push(tok);
-                if g.seqs[s.branch].first_token_ns.is_none() {
-                    g.seqs[s.branch].first_token_ns = Some(now_ns);
-                }
-                if g.first_token_ns.is_none() {
-                    g.first_token_ns = Some(now_ns);
-                }
-                // Prompt prefill just completed for an unforked group:
-                // create branches 1..n, sharing every prompt page by
-                // refcount bump (no allocation — admission already counted
-                // the shared pages once).
-                if !g.forked && g.sampling.n > 1 && s.branch == 0
-                    && g.seqs[0].output.len() == 1
-                {
-                    let parent = g.seqs[0].handle.expect("fork without handle");
-                    let computed0 = g.seqs[0].computed;
-                    for b in 1..g.sampling.n {
-                        let h = kv.fork(parent);
-                        let first = g.sampling.sample(raw, b, vocab);
-                        g.seqs.push(Sequence {
-                            branch: b,
-                            state: State::Running,
-                            output: vec![first],
-                            handle: Some(h),
-                            computed: computed0,
-                            first_token_ns: Some(now_ns),
-                        });
-                        self.stats.forked_branches += 1;
-                    }
-                    g.forked = true;
-                }
-            }
-        }
-        // finish branches that hit their length budget
-        for g in &mut self.running {
-            for s in &mut g.seqs {
-                if s.state == State::Running
-                    && s.output.len() >= g.max_new_tokens
-                {
-                    s.state = State::Finished(FinishReason::Length);
-                }
-            }
-        }
-        // release finished branches' pages; retire fully-finished groups
-        let mut j = 0;
-        while j < self.running.len() {
-            for s in &mut self.running[j].seqs {
-                if !s.is_finished() {
-                    continue;
-                }
-                if let Some(h) = s.handle.take() {
-                    kv.free(h);
-                }
-            }
-            if self.running[j].is_finished() {
-                let mut g = self.running.remove(j);
-                g.finish_ns = Some(now_ns);
-                self.finished.push(g);
-            } else {
-                j += 1;
-            }
-        }
-    }
-
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::output::step_all_for_tests;
 
     fn mk(max_tokens: usize, max_seqs: usize, pages: usize)
         -> (Scheduler, KvCacheManager) {
@@ -733,9 +719,7 @@ mod tests {
 
     fn step_all(s: &mut Scheduler, kv: &mut KvCacheManager,
                 batch: &ScheduledBatch) {
-        let results: Vec<_> =
-            batch.seqs.iter().map(|x| (x.id, x.branch, 7i32)).collect();
-        s.on_step_complete(batch, &results, kv, 2048, 0);
+        step_all_for_tests(s, kv, batch, 7);
     }
 
     fn drain(s: &mut Scheduler, kv: &mut KvCacheManager, max_steps: usize) {
@@ -907,7 +891,7 @@ mod tests {
     // ------------------------------------------------ sequence groups
 
     fn sampled(n: usize) -> SamplingParams {
-        SamplingParams { n, seed: 1, temperature: 0.5 }
+        SamplingParams { n, seed: 1, temperature: 0.5, ..Default::default() }
     }
 
     #[test]
@@ -1068,6 +1052,59 @@ mod tests {
         assert_eq!(s.take_finished().len(), 3);
         assert_eq!(kv.cache_stats().hit_tokens, hits_before + 48,
                    "the successful admission attaches the prefix once");
+    }
+
+    #[test]
+    fn preemption_charges_live_branch_count() {
+        // A (oldest, grows first), B (n=1), C (n=2, youngest). The old
+        // policy tie-broke toward the youngest group (C); the group-aware
+        // cost model charges C its two divergent 24-token tails (48 KV
+        // tokens) against B's single 16-token stream, so B — the cheaper
+        // recompute — is evicted despite being older.
+        let (mut s, mut kv) = mk(64, 8, 4);
+        s.add_request(1, vec![1; 16], 8, 0); // A: 1 page
+        s.add_request(2, vec![2; 16], 8, 0); // B: 1 page
+        s.add_group(3, vec![3; 24], sampled(2), 8, 0); // C: 2 shared pages
+        let b = s.schedule(&mut kv);
+        assert_eq!(b.seqs.len(), 3, "all three prefill in one step");
+        step_all(&mut s, &mut kv, &b); // C forks its second branch
+        assert_eq!(s.num_running_seqs(), 4);
+
+        // the pool (4 pages) is full; A's next token needs a fresh page
+        let b = s.schedule(&mut kv);
+        assert_eq!(b.preempted, vec![2],
+                   "cheapest recompute (B), not the youngest group (C)");
+        step_all(&mut s, &mut kv, &b);
+        drain(&mut s, &mut kv, 200);
+        assert!(!s.has_unfinished());
+        assert_eq!(s.take_finished().len(), 3);
+        assert_eq!(kv.free_pages(), 4);
+    }
+
+    #[test]
+    fn beam_group_expands_forks_and_prunes_per_step() {
+        let (mut s, mut kv) = mk(64, 8, 32);
+        s.add_group(1, (0..20).collect(), SamplingParams::beam(3, 1.0, 5),
+                    4, 0);
+        let b = s.schedule(&mut kv);
+        assert_eq!(b.seqs.len(), 1, "prefill runs once per group");
+        step_all(&mut s, &mut kv, &b); // first expansion: 1 → 3 hypotheses
+        assert_eq!(s.num_running_seqs(), 3);
+        let b = s.schedule(&mut kv);
+        assert_eq!(b.seqs.len(), 3, "one row per live hypothesis");
+        drain(&mut s, &mut kv, 40);
+        assert!(!s.has_unfinished(), "beam group must drain");
+        let fin = s.take_finished();
+        assert_eq!(fin.len(), 1);
+        assert_eq!(fin[0].seqs.len(), 3, "beam_width hypotheses survive");
+        for q in &fin[0].seqs {
+            assert_eq!(q.output.len(), 4);
+        }
+        let scores: Vec<f64> =
+            fin[0].seqs.iter().map(|q| fin[0].final_score(q)).collect();
+        assert!(scores.windows(2).all(|w| w[0] >= w[1]),
+                "hypotheses ranked best-first");
+        assert_eq!(kv.free_pages(), 32, "retired hypotheses returned pages");
     }
 
     #[test]

@@ -6,15 +6,36 @@
 //! batching means new requests join the running batch at the next step.
 //!
 //! Protocol (one JSON object per line). `n`, `seed` and `temperature`
-//! are optional (parallel sampling); every branch streams its own token
-//! and `done` events carrying a `branch` field, so `n = 1` clients see
-//! exactly one `done` per request. `cached_tokens` reports the prompt's
-//! prefix-cache hit length at admission.
+//! are optional (parallel sampling), as are `beam_width` and
+//! `length_penalty` (beam search; `beam_width` takes precedence over
+//! `n`). `cached_tokens` reports the prompt's prefix-cache hit length at
+//! admission; `score` is the hypothesis's length-penalized cumulative
+//! logprob proxy (0 outside beam mode).
 //!   → {"prompt": [1,2,3], "max_new_tokens": 8, "n": 2, "seed": 7,
 //!      "temperature": 0.8}
-//!   ← {"event":"token","id":1,"branch":0,"token":42,"index":0}
+//!   → {"prompt": [1,2,3], "max_new_tokens": 8, "beam_width": 3,
+//!      "length_penalty": 1.0, "seed": 7}
+//!   ← {"event":"token","id":1,"branch":0,"token":42,"position":0}
 //!   ← {"event":"done","id":1,"branch":0,"tokens":[42,...],
-//!      "ttft_ms":1.2,"total_ms":9.9,"cached_tokens":32}
+//!      "ttft_ms":1.2,"total_ms":9.9,"cached_tokens":32,"score":0}
+//!
+//! # Event-ordering guarantees
+//!
+//! `token` events stream *incrementally, per engine step* — not at group
+//! completion — straight from the step-output pipeline
+//! ([`crate::output::StepOutputs`]):
+//!
+//! * every `token` event of a branch precedes that branch's `done`;
+//! * per `(id, branch)`, `position` is strictly increasing (replay after
+//!   preemption never re-emits — positions are generated-output indexes,
+//!   0-based);
+//! * `done` carries the branch's full `tokens` for cross-checking.
+//!
+//! Beam requests are the one exception to incrementality: fork/retire
+//! rewrites hypothesis histories mid-flight, so their `token` events are
+//! emitted when the group completes (still all before any `done`, with
+//! branches ranked best-first by `score`, and exactly `beam_width` `done`
+//! events).
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
@@ -41,7 +62,7 @@ struct Incoming {
 
 /// Events streamed back to the connection writer.
 enum Outgoing {
-    Token { id: RequestId, branch: usize, token: i32, index: usize },
+    Token { id: RequestId, branch: usize, token: i32, position: usize },
     Done {
         id: RequestId,
         branch: usize,
@@ -49,22 +70,23 @@ enum Outgoing {
         ttft_ms: f64,
         total_ms: f64,
         cached_tokens: usize,
+        score: f64,
     },
     Error(String),
 }
 
 fn event_json(ev: &Outgoing) -> String {
     match ev {
-        Outgoing::Token { id, branch, token, index } => obj(vec![
+        Outgoing::Token { id, branch, token, position } => obj(vec![
             ("event", json::s("token")),
             ("id", num(*id as f64)),
             ("branch", num(*branch as f64)),
             ("token", num(*token as f64)),
-            ("index", num(*index as f64)),
+            ("position", num(*position as f64)),
         ])
         .to_string(),
         Outgoing::Done { id, branch, tokens, ttft_ms, total_ms,
-                         cached_tokens } => obj(vec![
+                         cached_tokens, score } => obj(vec![
             ("event", json::s("done")),
             ("id", num(*id as f64)),
             ("branch", num(*branch as f64)),
@@ -72,6 +94,7 @@ fn event_json(ev: &Outgoing) -> String {
             ("ttft_ms", num(*ttft_ms)),
             ("total_ms", num(*total_ms)),
             ("cached_tokens", num(*cached_tokens as f64)),
+            ("score", num(*score)),
         ])
         .to_string(),
         Outgoing::Error(msg) => obj(vec![
@@ -153,12 +176,22 @@ fn parse_request(line: &str) -> Result<(Vec<i32>, usize, SamplingParams)> {
         .collect::<Result<_>>()?;
     let max_new = v.get("max_new_tokens").map(|x| x.as_usize())
         .transpose()?.unwrap_or(16);
-    let sampling = SamplingParams {
-        n: v.get("n").map(|x| x.as_usize()).transpose()?.unwrap_or(1),
-        seed: v.get("seed").map(|x| x.as_i64()).transpose()?
-            .unwrap_or(0) as u64,
-        temperature: v.get("temperature").map(|x| x.as_f64()).transpose()?
-            .unwrap_or(0.0),
+    let seed = v.get("seed").map(|x| x.as_i64()).transpose()?
+        .unwrap_or(0) as u64;
+    let beam_width = v.get("beam_width").map(|x| x.as_usize())
+        .transpose()?.unwrap_or(0);
+    let sampling = if beam_width > 0 {
+        let length_penalty = v.get("length_penalty").map(|x| x.as_f64())
+            .transpose()?.unwrap_or(1.0);
+        SamplingParams::beam(beam_width, length_penalty, seed)
+    } else {
+        SamplingParams {
+            n: v.get("n").map(|x| x.as_usize()).transpose()?.unwrap_or(1),
+            seed,
+            temperature: v.get("temperature").map(|x| x.as_f64())
+                .transpose()?.unwrap_or(0.0),
+            ..Default::default()
+        }
     };
     Ok((prompt, max_new, sampling))
 }
@@ -171,7 +204,7 @@ fn engine_loop(artifacts_dir: std::path::PathBuf, ecfg: EngineConfig,
     let n = engine.warmup()?;
     eprintln!("[server] warmed up {n} executables for '{}'", engine.model_name);
 
-    let mut inflight: HashMap<RequestId, (Sender<Outgoing>, usize, u64)> =
+    let mut inflight: HashMap<RequestId, (Sender<Outgoing>, u64)> =
         HashMap::new();
     let mut completed = 0usize;
 
@@ -193,7 +226,7 @@ fn engine_loop(artifacts_dir: std::path::PathBuf, ecfg: EngineConfig,
             let Some(m) = msg else { break };
             match engine.add_group(m.prompt, m.max_new_tokens, m.sampling) {
                 Ok(id) => {
-                    inflight.insert(id, (m.reply, 0, engine.now_ns()));
+                    inflight.insert(id, (m.reply, engine.now_ns()));
                 }
                 Err(e) => {
                     let _ = m.reply.send(Outgoing::Error(format!("{e:#}")));
@@ -210,20 +243,30 @@ fn engine_loop(artifacts_dir: std::path::PathBuf, ecfg: EngineConfig,
             continue;
         }
 
-        engine.step()?;
+        // stream this step's token events immediately — true incremental
+        // streaming, straight from the step-output pipeline
+        if let Some(report) = engine.step()? {
+            for t in &report.outputs.tokens {
+                if let Some((reply, _)) = inflight.get(&t.id) {
+                    let _ = reply.send(Outgoing::Token {
+                        id: t.id,
+                        branch: t.branch,
+                        token: t.token,
+                        position: t.position,
+                    });
+                }
+            }
+        }
 
-        // stream any newly finished groups: every branch gets its own
-        // token stream and done event (branch field distinguishes them)
+        // newly finished groups: one done event per branch (tokens were
+        // already streamed above; done carries the full list for
+        // cross-checking plus latency/score observability)
         for g in engine.take_finished() {
-            if let Some((reply, _, enq)) = inflight.remove(&g.id) {
+            if let Some((reply, enq)) = inflight.remove(&g.id) {
                 let total_ms = g.finish_ns
                     .map(|t| (t.saturating_sub(enq)) as f64 / 1e6)
                     .unwrap_or(0.0);
                 for s in &g.seqs {
-                    for (i, &t) in s.output.iter().enumerate() {
-                        let _ = reply.send(Outgoing::Token {
-                            id: g.id, branch: s.branch, token: t, index: i });
-                    }
                     let ttft_ms = s.first_token_ns
                         .or(g.first_token_ns)
                         .map(|t| (t.saturating_sub(enq)) as f64 / 1e6)
@@ -235,6 +278,7 @@ fn engine_loop(artifacts_dir: std::path::PathBuf, ecfg: EngineConfig,
                         ttft_ms,
                         total_ms,
                         cached_tokens: g.cached_tokens,
+                        score: g.final_score(s),
                     });
                 }
                 completed += 1;
@@ -258,6 +302,8 @@ pub struct Completion {
     pub total_ms: f64,
     /// Prompt tokens served from the prefix cache at admission.
     pub cached_tokens: usize,
+    /// Length-penalized hypothesis score (beam mode; 0 otherwise).
+    pub score: f64,
 }
 
 impl Client {
@@ -275,16 +321,23 @@ impl Client {
                             &SamplingParams::default())
     }
 
-    /// Submit a parallel-sampling request (`n` branches).
+    /// Submit a parallel-sampling (`n` branches) or beam request.
     pub fn submit_sampled(&mut self, prompt: &[i32], max_new_tokens: usize,
                           sampling: &SamplingParams) -> Result<()> {
-        let req = obj(vec![
+        let mut fields = vec![
             ("prompt", Value::Arr(prompt.iter().map(|t| num(*t as f64)).collect())),
             ("max_new_tokens", num(max_new_tokens as f64)),
             ("n", num(sampling.n as f64)),
             ("seed", num(sampling.seed as f64)),
             ("temperature", num(sampling.temperature)),
-        ]);
+        ];
+        if let crate::config::SamplingMode::Beam { beam_width, length_penalty } =
+            sampling.mode
+        {
+            fields.push(("beam_width", num(beam_width as f64)));
+            fields.push(("length_penalty", num(length_penalty)));
+        }
+        let req = obj(fields);
         writeln!(self.writer, "{req}")?;
         self.writer.flush()?;
         Ok(())
@@ -311,6 +364,8 @@ impl Client {
                         total_ms: v.req("total_ms")?.as_f64()?,
                         cached_tokens: v.get("cached_tokens")
                             .map(|x| x.as_usize()).transpose()?.unwrap_or(0),
+                        score: v.get("score").map(|x| x.as_f64())
+                            .transpose()?.unwrap_or(0.0),
                     });
                 }
                 "error" => anyhow::bail!("server error: {}",
@@ -326,16 +381,25 @@ impl Client {
         self.wait_done()
     }
 
-    /// Submit an `n`-branch group and collect all branch completions.
+    /// Submit a group (parallel branches or beam hypotheses) and collect
+    /// all `sampling.width()` branch completions — parallel branches
+    /// ordered by branch id, beam hypotheses best-first by score (beam
+    /// branch ids are arbitrary fork ids; the ranking is the contract).
     pub fn generate_group(&mut self, prompt: &[i32], max_new_tokens: usize,
                           sampling: &SamplingParams)
         -> Result<Vec<Completion>> {
         self.submit_sampled(prompt, max_new_tokens, sampling)?;
-        let mut out = Vec::with_capacity(sampling.n);
-        for _ in 0..sampling.n {
+        let mut out = Vec::with_capacity(sampling.width());
+        for _ in 0..sampling.width() {
             out.push(self.wait_done()?);
         }
-        out.sort_by_key(|c| c.branch);
+        if sampling.is_beam() {
+            out.sort_by(|a, b| {
+                b.score.total_cmp(&a.score).then(a.branch.cmp(&b.branch))
+            });
+        } else {
+            out.sort_by_key(|c| c.branch);
+        }
         Ok(out)
     }
 }
@@ -362,18 +426,36 @@ mod tests {
         assert_eq!(s.n, 3);
         assert_eq!(s.seed, 11);
         assert!((s.temperature - 0.5).abs() < 1e-12);
+        // beam_width switches the request into beam mode
+        let (_, _, s) = parse_request(
+            r#"{"prompt": [5], "beam_width": 3, "length_penalty": 0.7,
+                "seed": 4}"#,
+        )
+        .unwrap();
+        assert!(s.is_beam());
+        assert_eq!(s.width(), 3);
+        assert_eq!(s.seed, 4);
+        assert_eq!(s.mode,
+                   crate::config::SamplingMode::Beam {
+                       beam_width: 3, length_penalty: 0.7 });
     }
 
     #[test]
     fn event_serialization_roundtrips() {
         let ev = Outgoing::Done {
             id: 3, branch: 1, tokens: vec![7, 8],
-            ttft_ms: 1.5, total_ms: 2.5, cached_tokens: 32 };
+            ttft_ms: 1.5, total_ms: 2.5, cached_tokens: 32, score: -1.25 };
         let v = json::parse(&event_json(&ev)).unwrap();
         assert_eq!(v.str_field("event").unwrap(), "done");
         assert_eq!(v.req("tokens").unwrap().as_arr().unwrap().len(), 2);
         assert_eq!(v.req("branch").unwrap().as_usize().unwrap(), 1);
         assert_eq!(v.req("cached_tokens").unwrap().as_usize().unwrap(), 32);
+        assert!((v.req("score").unwrap().as_f64().unwrap() + 1.25).abs()
+                < 1e-12);
+        let tok = Outgoing::Token { id: 3, branch: 0, token: 42, position: 5 };
+        let v = json::parse(&event_json(&tok)).unwrap();
+        assert_eq!(v.str_field("event").unwrap(), "token");
+        assert_eq!(v.req("position").unwrap().as_usize().unwrap(), 5);
     }
 
     /// Full loop: spawn a server bound to an ephemeral port, run two
@@ -424,7 +506,9 @@ mod tests {
         std::thread::sleep(Duration::from_millis(300));
 
         let mut c = Client::connect(&bound).unwrap();
-        let sampling = SamplingParams { n: 2, seed: 5, temperature: 0.9 };
+        let sampling = SamplingParams {
+            n: 2, seed: 5, temperature: 0.9, ..Default::default()
+        };
         let prompt: Vec<i32> = (0..40).collect();
         let done = c.generate_group(&prompt, 5, &sampling).unwrap();
         assert_eq!(done.len(), 2);
@@ -434,6 +518,111 @@ mod tests {
         assert_eq!(done[1].tokens.len(), 5);
         assert_ne!(done[0].tokens, done[1].tokens,
                    "salted branches must diverge");
+        handle.join().unwrap().unwrap();
+    }
+
+    /// Raw-socket check of the streaming wire contract: token events
+    /// arrive incrementally (positions nondecreasing across the whole
+    /// stream — completion-time emission would restart at 0 per branch),
+    /// strictly before `done`, strictly monotone per branch, and
+    /// reconstruct exactly the `done` token lists.
+    #[test]
+    fn streaming_event_order_invariants() {
+        let dir = crate::default_artifacts_dir();
+        let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+        let port = probe.local_addr().unwrap().port();
+        drop(probe);
+        let bound = format!("127.0.0.1:{port}");
+        let server_addr = bound.clone();
+        let handle = std::thread::spawn(move || {
+            serve(dir, EngineConfig::default(), &server_addr, Some(1))
+        });
+        std::thread::sleep(Duration::from_millis(300));
+
+        let stream = TcpStream::connect(&bound).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+        let req = concat!(r#"{"prompt": [3, 1, 4, 1, 5], "#,
+                          r#""max_new_tokens": 4, "n": 2, "seed": 9, "#,
+                          r#""temperature": 0.6}"#);
+        writeln!(writer, "{req}").unwrap();
+        writer.flush().unwrap();
+
+        let mut tokens: Vec<(usize, usize, i32)> = Vec::new(); // branch, pos, tok
+        let mut done: HashMap<usize, Vec<i32>> = HashMap::new();
+        let mut last_global_pos = 0usize;
+        while done.len() < 2 {
+            let mut line = String::new();
+            assert!(reader.read_line(&mut line).unwrap() > 0, "server closed");
+            let v = json::parse(line.trim()).unwrap();
+            match v.str_field("event").unwrap().as_str() {
+                "token" => {
+                    let b = v.req("branch").unwrap().as_usize().unwrap();
+                    let p = v.req("position").unwrap().as_usize().unwrap();
+                    let t = v.req("token").unwrap().as_i64().unwrap() as i32;
+                    assert!(!done.contains_key(&b),
+                            "token after done for branch {b}");
+                    assert!(p >= last_global_pos,
+                            "positions regressed: incremental streaming \
+                             emits per step, not per finished branch");
+                    last_global_pos = p;
+                    tokens.push((b, p, t));
+                }
+                "done" => {
+                    let b = v.req("branch").unwrap().as_usize().unwrap();
+                    let toks: Vec<i32> = v.req("tokens").unwrap().as_arr()
+                        .unwrap().iter()
+                        .map(|x| x.as_i64().unwrap() as i32).collect();
+                    done.insert(b, toks);
+                }
+                other => panic!("unexpected event {other}"),
+            }
+        }
+        for b in 0..2 {
+            let branch: Vec<(usize, i32)> = tokens.iter()
+                .filter(|(bb, _, _)| *bb == b)
+                .map(|&(_, p, t)| (p, t))
+                .collect();
+            // strictly monotone positions from 0
+            for (i, &(p, _)) in branch.iter().enumerate() {
+                assert_eq!(p, i, "branch {b} position gap");
+            }
+            let rebuilt: Vec<i32> = branch.iter().map(|&(_, t)| t).collect();
+            assert_eq!(&rebuilt, done.get(&b).unwrap(),
+                       "branch {b} stream must reconstruct the done list");
+        }
+        handle.join().unwrap().unwrap();
+    }
+
+    /// Beam search over the wire: `beam_width` ranked completions, every
+    /// token event before any done, scores nonincreasing.
+    #[test]
+    fn end_to_end_beam_search() {
+        let dir = crate::default_artifacts_dir();
+        let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+        let port = probe.local_addr().unwrap().port();
+        drop(probe);
+        let bound = format!("127.0.0.1:{port}");
+        let server_addr = bound.clone();
+        let handle = std::thread::spawn(move || {
+            serve(dir, EngineConfig::default(), &server_addr, Some(1))
+        });
+        std::thread::sleep(Duration::from_millis(300));
+
+        let mut c = Client::connect(&bound).unwrap();
+        let sampling = SamplingParams::beam(3, 1.0, 7);
+        let prompt: Vec<i32> = (10..30).collect();
+        let done = c.generate_group(&prompt, 4, &sampling).unwrap();
+        assert_eq!(done.len(), 3, "beam_width completions");
+        for d in &done {
+            assert_eq!(d.tokens.len(), 4);
+            assert!(d.score < 0.0, "length-penalized logprob proxy");
+        }
+        // generate_group hands beam hypotheses back ranked best-first
+        assert!(done.windows(2).all(|w| w[0].score >= w[1].score),
+                "beam completions must come ranked by score");
+        assert!(done.iter().any(|d| d.tokens != done[0].tokens),
+                "hypotheses must diverge");
         handle.join().unwrap().unwrap();
     }
 }

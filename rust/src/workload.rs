@@ -2,8 +2,11 @@
 //! runs — the paper's micro-benchmark framework simulates "varying context
 //! lengths, prompt lengths, and batch sizes" (§5.2) rather than the
 //! fixed-size batches that flatter some kernels. Includes a best-of-n
-//! parallel-sampling generator (shared system prefix + `n > 1` groups),
-//! the batch shape that exercises copy-on-write KV forking.
+//! parallel-sampling generator (shared system prefix + `n > 1` groups)
+//! and a beam-search generator — the batch shapes that exercise
+//! copy-on-write KV forking, at prefill completion and mid-stream
+//! respectively. Beam batches are the ragged, step-varying-branch-count
+//! workload that autotuned kernel configurations must survive.
 //!
 //! Deterministic xorshift RNG so every bench run is reproducible.
 
@@ -231,7 +234,45 @@ impl BestOfN {
                         n: self.n,
                         seed: i as u64 + 1,
                         temperature: 0.7,
+                        ..Default::default()
                     },
+                    max_new_tokens: self.max_new_tokens,
+                }
+            })
+            .collect()
+    }
+}
+
+/// Beam-search workload: shared system prefix + unique user tails, each
+/// request asking for `beam_width` hypotheses — the decode scenario that
+/// stresses mid-stream `fork`/`unshare_last` on pages far deeper than the
+/// prompt tail, plus per-step branch retirement.
+#[derive(Debug, Clone)]
+pub struct BeamSearchLoad {
+    /// Hypotheses maintained per request.
+    pub beam_width: usize,
+    /// GNMT-style exponent for final hypothesis ranking.
+    pub length_penalty: f64,
+    /// Shared system-prompt prefix length (tokens).
+    pub shared_prefix: usize,
+    /// Unique per-request tail length (tokens).
+    pub tail: usize,
+    pub max_new_tokens: usize,
+    pub vocab: usize,
+}
+
+impl BeamSearchLoad {
+    /// Generate `count` beam requests; deterministic for a given RNG seed.
+    pub fn requests(&self, count: usize, rng: &mut Rng) -> Vec<GroupRequest> {
+        let prefix = rng.tokens(self.shared_prefix, self.vocab);
+        (0..count)
+            .map(|i| {
+                let mut prompt = prefix.clone();
+                prompt.extend(rng.tokens(self.tail.max(1), self.vocab));
+                GroupRequest {
+                    prompt,
+                    sampling: SamplingParams::beam(
+                        self.beam_width, self.length_penalty, i as u64 + 1),
                     max_new_tokens: self.max_new_tokens,
                 }
             })
@@ -324,6 +365,33 @@ mod tests {
         // deterministic for a fixed seed
         let again = w.requests(6, &mut Rng::new(5));
         assert_eq!(reqs[3].prompt, again[3].prompt);
+    }
+
+    #[test]
+    fn beam_requests_share_prefix_and_carry_beam_mode() {
+        let w = BeamSearchLoad {
+            beam_width: 3,
+            length_penalty: 1.0,
+            shared_prefix: 32,
+            tail: 8,
+            max_new_tokens: 6,
+            vocab: 2048,
+        };
+        let mut rng = Rng::new(9);
+        let reqs = w.requests(4, &mut rng);
+        assert_eq!(reqs.len(), 4);
+        for r in &reqs {
+            assert_eq!(r.prompt.len(), 40);
+            assert_eq!(r.prompt[..32], reqs[0].prompt[..32],
+                       "system prefix is shared");
+            assert!(r.sampling.is_beam());
+            assert_eq!(r.sampling.width(), 3);
+        }
+        assert_ne!(reqs[0].prompt[32..], reqs[1].prompt[32..],
+                   "user tails are unique");
+        assert_ne!(reqs[0].sampling.seed, reqs[1].sampling.seed);
+        assert_eq!(reqs[2].prompt, w.requests(4, &mut Rng::new(9))[2].prompt,
+                   "deterministic for a fixed seed");
     }
 
     #[test]

@@ -1,0 +1,313 @@
+//! Integration tests for beam search on top of the step-output pipeline.
+//!
+//! Contract points:
+//!   (a) the engine's incremental fork/prune beam search matches an
+//!       *exhaustive-scoring reference oracle* that re-derives every
+//!       candidate continuation per depth from fresh solo engine runs
+//!       (no scheduler, no KV forking, no CoW — just histories and
+//!       scores),
+//!   (b) mid-stream forks share pages far deeper than the prompt tail by
+//!       refcount (with CoW splits on divergence) and retirement
+//!       reclaims pages immediately,
+//!   (c) beam groups stay deterministic under continuous batching with
+//!       parallel-sampling neighbors and under preemption — every
+//!       hypothesis matches an unpressured solo run.
+
+use std::rc::Rc;
+
+use triton_anatomy::config::{EngineConfig, SamplingParams};
+use triton_anatomy::engine::Engine;
+use triton_anatomy::runtime::Runtime;
+use triton_anatomy::workload::{BeamSearchLoad, Rng};
+
+fn engine_on(rt: &Rc<Runtime>, max_tokens: usize, max_seqs: usize) -> Engine {
+    Engine::new(
+        rt.clone(),
+        EngineConfig {
+            max_batched_tokens: max_tokens,
+            max_num_seqs: max_seqs,
+            ..Default::default()
+        },
+    )
+    .unwrap()
+}
+
+fn engine(max_tokens: usize, max_seqs: usize) -> Engine {
+    let rt = Rc::new(
+        Runtime::load_dir(triton_anatomy::default_artifacts_dir()).unwrap(),
+    );
+    engine_on(&rt, max_tokens, max_seqs)
+}
+
+/// The model's raw next token for an arbitrary history, via a fresh
+/// greedy engine over a shared runtime (greedy passes raw tokens through
+/// unsalted; the runtime is reused so the oracle's many probes don't
+/// re-parse the artifact set from disk each time).
+fn raw_next(rt: &Rc<Runtime>, history: &[i32]) -> i32 {
+    let mut e = engine_on(rt, 256, 2);
+    e.add_request(history.to_vec(), 1).unwrap();
+    e.run_to_completion().unwrap()[0].output()[0]
+}
+
+/// (a) Exhaustive-scoring oracle: plain beam search over candidate
+/// histories, scoring every continuation of every live hypothesis per
+/// depth and keeping the global top `beam_width` — same candidate
+/// function and tie-breaks as the engine, but none of its machinery.
+#[test]
+fn beam_matches_exhaustive_scoring_oracle() {
+    let rt = Rc::new(
+        Runtime::load_dir(triton_anatomy::default_artifacts_dir()).unwrap(),
+    );
+    for (width, penalty, seed) in [(2usize, 0.0f64, 7u64), (3, 1.0, 11)] {
+        let prompt: Vec<i32> = (50..58).collect();
+        let depth = 3usize;
+        let sampling = SamplingParams::beam(width, penalty, seed);
+
+        // engine run
+        let mut e = engine_on(&rt, 128, 8);
+        e.add_group(prompt.clone(), depth, sampling).unwrap();
+        let fin = e.run_to_completion().unwrap();
+        let g = &fin[0];
+        assert_eq!(g.seqs.len(), width);
+        let engine_hyps: Vec<(Vec<i32>, f64)> = g
+            .seqs
+            .iter()
+            .map(|s| (s.output.clone(), s.cum_logprob))
+            .collect();
+
+        // oracle run
+        #[derive(Clone)]
+        struct Hyp {
+            id: usize,
+            tokens: Vec<i32>,
+            cum: f64,
+        }
+        let mut hyps = vec![Hyp { id: 0, tokens: Vec::new(), cum: 0.0 }];
+        let mut next_id = 1usize;
+        for _ in 0..depth {
+            // exhaustive scoring: every candidate of every hypothesis
+            let mut cands: Vec<(f64, usize, usize, i32)> = Vec::new();
+            for h in &hyps {
+                let mut hist = prompt.clone();
+                hist.extend_from_slice(&h.tokens);
+                let raw = raw_next(&rt, &hist);
+                for (ci, (tok, lp)) in
+                    sampling.beam_candidates(raw, 2048).into_iter().enumerate()
+                {
+                    cands.push((h.cum + lp, h.id, ci, tok));
+                }
+            }
+            cands.sort_by(|a, b| {
+                b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2))
+            });
+            cands.truncate(width);
+            // same application discipline as the engine: the best winner
+            // of a hypothesis continues it in place, extras append as
+            // fresh hypotheses (in parent order), losers drop
+            let mut survivors: Vec<Hyp> = Vec::new();
+            let mut children: Vec<Hyp> = Vec::new();
+            for h in &hyps {
+                let mine: Vec<&(f64, usize, usize, i32)> =
+                    cands.iter().filter(|c| c.1 == h.id).collect();
+                if mine.is_empty() {
+                    continue; // pruned
+                }
+                let mut kept = h.clone();
+                kept.tokens.push(mine[0].3);
+                kept.cum = mine[0].0;
+                survivors.push(kept);
+                for c in &mine[1..] {
+                    let mut child = h.clone();
+                    child.id = next_id;
+                    next_id += 1;
+                    child.tokens.push(c.3);
+                    child.cum = c.0;
+                    children.push(child);
+                }
+            }
+            survivors.extend(children);
+            hyps = survivors;
+        }
+        // rank like the engine: length-penalized score desc, id asc
+        hyps.sort_by(|a, b| {
+            let sa = a.cum / (a.tokens.len().max(1) as f64).powf(penalty);
+            let sb = b.cum / (b.tokens.len().max(1) as f64).powf(penalty);
+            sb.total_cmp(&sa).then(a.id.cmp(&b.id))
+        });
+        assert_eq!(hyps.len(), width);
+
+        for (i, (toks, cum)) in engine_hyps.iter().enumerate() {
+            assert_eq!(toks, &hyps[i].tokens,
+                       "width {width} seed {seed}: hypothesis {i} tokens \
+                        diverged from the oracle");
+            assert!((cum - hyps[i].cum).abs() < 1e-9,
+                    "width {width} seed {seed}: hypothesis {i} score \
+                     {cum} != oracle {}", hyps[i].cum);
+        }
+    }
+}
+
+/// (b) Mid-stream fork refcounts and retirement reclamation: a beam over
+/// a page-aligned prompt forks hypotheses that share *decode* pages far
+/// past the prompt tail, CoW-splits them on divergence, and pruned
+/// hypotheses return their pages immediately.
+#[test]
+fn mid_stream_forks_share_deep_pages_and_reclaim_on_prune() {
+    let prompt: Vec<i32> = (300..316).collect(); // exactly one full page
+    let mut e = engine(128, 4);
+    e.add_group(prompt, 20, SamplingParams::beam(2, 1.0, 3)).unwrap();
+
+    // step 1: prompt prefill + first expansion (1 → 2 hypotheses); both
+    // share the single prompt page
+    let r1 = e.step().unwrap().unwrap();
+    assert_eq!(r1.num_seqs, 1, "prefill runs once per beam group");
+    assert!(r1.outputs.beam_forks >= 1, "first expansion forks");
+    let shared_pages = |e: &Engine| {
+        (1..=e.kv().total_pages() as u32)
+            .filter(|&p| e.kv().page_ref_count(p) >= 2)
+            .count()
+    };
+    assert_eq!(shared_pages(&e), 1, "prompt page shared after expansion");
+
+    // drive to completion, tracking that deep sharing happened
+    let mut max_shared = 0usize;
+    while e.has_unfinished() {
+        e.step().unwrap();
+        max_shared = max_shared.max(shared_pages(&e));
+    }
+    let fin = e.take_finished();
+    assert_eq!(fin[0].seqs.len(), 2);
+    for s in &fin[0].seqs {
+        assert_eq!(s.output.len(), 20, "hypotheses decode in lockstep");
+    }
+    assert!(max_shared >= 2,
+            "mid-stream forks must share decode pages beyond the prompt \
+             page (saw at most {max_shared} shared)");
+    assert!(e.metrics.beam_forks > 1, "forks continued past the first");
+    assert!(e.metrics.beam_prunes > 0, "losing hypotheses were retired");
+    assert!(e.metrics.beam_pruned_pages > 0,
+            "retirement reclaimed page references");
+    assert!(e.metrics.cow_copies > 0,
+            "divergent writes into shared decode pages must CoW");
+    assert_eq!(e.free_page_fraction(), 1.0, "all pages returned");
+}
+
+/// (c) Beam + parallel neighbors under continuous batching and page
+/// pressure: every group still matches its unpressured solo run.
+#[test]
+fn random_beam_mixes_match_solo_runs() {
+    for seed in 1..=4u64 {
+        let mut rng = Rng::new(seed);
+        let specs: Vec<(Vec<i32>, SamplingParams, usize)> = (0..3u64)
+            .map(|i| {
+                let prompt = rng.tokens(rng.range(8, 40), 2048);
+                let sampling = if rng.below(2) == 0 {
+                    SamplingParams::beam(rng.range(1, 3), 1.0,
+                                         seed * 100 + i)
+                } else {
+                    SamplingParams {
+                        n: rng.range(1, 3),
+                        seed: seed * 100 + i,
+                        temperature: 0.5,
+                        ..Default::default()
+                    }
+                };
+                (prompt, sampling, rng.range(4, 8))
+            })
+            .collect();
+
+        let mut e = engine(128, 8);
+        for (p, sp, mx) in &specs {
+            e.add_group(p.clone(), *mx, *sp).unwrap();
+        }
+        let mut fin = e.run_to_completion().unwrap();
+        fin.sort_by_key(|g| g.id);
+        assert_eq!(fin.len(), 3);
+        assert_eq!(e.free_page_fraction(), 1.0, "seed {seed}: pages leaked");
+
+        for (i, (p, sp, mx)) in specs.iter().enumerate() {
+            let mut solo = engine(128, 8);
+            solo.add_group(p.clone(), *mx, *sp).unwrap();
+            let s = solo.run_to_completion().unwrap();
+            assert_eq!(fin[i].seqs.len(), s[0].seqs.len(),
+                       "seed {seed}, group {i}: branch count diverged");
+            for b in 0..s[0].seqs.len() {
+                assert_eq!(fin[i].seqs[b].output, s[0].seqs[b].output,
+                           "seed {seed}, group {i}, branch {b} diverged");
+                assert_eq!(fin[i].seqs[b].branch, s[0].seqs[b].branch,
+                           "seed {seed}, group {i}: branch ids diverged");
+            }
+        }
+    }
+}
+
+/// Beam groups survive preemption-by-recompute. Beams are deliberately
+/// page-cheap — forked hypotheses share their *entire* decoded history,
+/// only the divergent tail page is private — so it takes three
+/// concurrent beam groups to pressure the 12-page pool into whole-group
+/// eviction and divergent per-hypothesis re-prefill. Outputs and scores
+/// must still match solo runs.
+#[test]
+fn beam_preemption_preserves_determinism() {
+    let prompts: Vec<Vec<i32>> = (0..3).map(|i| vec![40 + i; 32]).collect();
+    let mut e = engine(256, 8);
+    for (i, p) in prompts.iter().enumerate() {
+        e.add_group(p.clone(), 24, SamplingParams::beam(2, 1.0, 60 + i as u64))
+            .unwrap();
+    }
+    let mut fin = e.run_to_completion().unwrap();
+    fin.sort_by_key(|g| g.id);
+    assert_eq!(fin.len(), 3);
+    assert!(e.metrics.preemptions >= 1,
+            "three beam groups must overflow the 12-page pool");
+
+    for (i, p) in prompts.iter().enumerate() {
+        let mut solo = engine(256, 8);
+        solo.add_group(p.clone(), 24,
+                       SamplingParams::beam(2, 1.0, 60 + i as u64))
+            .unwrap();
+        let s = solo.run_to_completion().unwrap();
+        for b in 0..2 {
+            assert_eq!(fin[i].seqs[b].output, s[0].seqs[b].output,
+                       "group {i} hypothesis {b} diverged under preemption");
+            assert!((fin[i].seqs[b].cum_logprob - s[0].seqs[b].cum_logprob)
+                        .abs() < 1e-9,
+                    "group {i} hypothesis {b} score diverged");
+        }
+    }
+}
+
+/// The beam workload generator drives the full stack: shared system
+/// prefixes hit the prefix cache across beam groups, hypotheses fork and
+/// retire, and the whole mix drains deterministically.
+#[test]
+fn beam_workload_exercises_sharing() {
+    let w = BeamSearchLoad {
+        beam_width: 2,
+        length_penalty: 1.0,
+        shared_prefix: 32,
+        tail: 4,
+        max_new_tokens: 4,
+        vocab: 2048,
+    };
+    let reqs = w.requests(3, &mut Rng::new(13));
+    let mut e = engine(128, 8);
+    let mut fin = Vec::new();
+    for r in &reqs {
+        e.add_group(r.prompt.clone(), r.max_new_tokens, r.sampling).unwrap();
+        fin.extend(e.run_to_completion().unwrap());
+    }
+    assert_eq!(fin.len(), 3);
+    for g in &fin {
+        assert_eq!(g.seqs.len(), 2);
+        let scores: Vec<f64> =
+            g.seqs.iter().map(|s| g.final_score(s)).collect();
+        assert!(scores.windows(2).all(|x| x[0] >= x[1]),
+                "hypotheses ranked best-first");
+    }
+    assert!(e.metrics.beam_forks > 0);
+    assert_eq!(fin[0].cached_tokens, 0, "first group runs cold");
+    assert!(fin[1].cached_tokens >= 32 && fin[2].cached_tokens >= 32,
+            "later beams reuse the shared system prefix from the cache");
+    assert_eq!(e.free_page_fraction(), 1.0);
+}

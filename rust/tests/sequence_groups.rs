@@ -60,7 +60,9 @@ fn n1_group_is_byte_identical_to_plain_request() {
 #[test]
 fn n4_shares_prompt_pages_until_divergence() {
     let prompt: Vec<i32> = (100..140).collect(); // 2 full pages + 8 tokens
-    let sampling = SamplingParams { n: 4, seed: 2, temperature: 0.6 };
+    let sampling = SamplingParams {
+        n: 4, seed: 2, temperature: 0.6, ..Default::default()
+    };
 
     let mut solo = engine(128, 4);
     solo.add_request(prompt.clone(), 8).unwrap();
@@ -108,7 +110,9 @@ fn n4_shares_prompt_pages_until_divergence() {
 #[test]
 fn group_preemption_preserves_branch_determinism() {
     let prompts: Vec<Vec<i32>> = (0..2).map(|i| vec![9 + i; 32]).collect();
-    let sampling = |i: u64| SamplingParams { n: 2, seed: 40 + i, temperature: 0.8 };
+    let sampling = |i: u64| SamplingParams {
+        n: 2, seed: 40 + i, temperature: 0.8, ..Default::default()
+    };
 
     let mut e = engine(256, 8);
     for (i, p) in prompts.iter().enumerate() {
@@ -145,6 +149,7 @@ fn random_group_mixes_match_solo_runs() {
                     n: rng.range(1, 3),
                     seed: seed * 100 + i,
                     temperature: 0.5,
+                    ..Default::default()
                 };
                 (prompt, sampling, rng.range(4, 8))
             })

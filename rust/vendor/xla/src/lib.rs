@@ -22,6 +22,10 @@
 //!   preemption-with-recompute and prefix-cache page sharing — exactly the
 //!   invariants the integration suite checks.
 //! * `kind = extract` — slice the sampled-token tail out of the state.
+//! * `kind = copy_blocks` — apply a fixed-capacity tensor of `(src, dst)`
+//!   page pairs to the flat state (both cache lanes), the batched
+//!   copy-on-write page-copy dispatch (vLLM's `copy_blocks` analogue).
+//!   Padding pairs are `(0, 0)` — the scratch page — and are skipped.
 //!
 //! Determinism is total: no RNG, no threads, no floating-point reductions
 //! whose order varies.
@@ -139,6 +143,7 @@ enum SimKind {
     Kernel,
     Model,
     Extract,
+    CopyBlocks,
 }
 
 /// Parsed sim-spec artifact (the stand-in for an HLO module).
@@ -176,6 +181,7 @@ impl HloModuleProto {
                     "kernel" => SimKind::Kernel,
                     "model" => SimKind::Model,
                     "extract" => SimKind::Extract,
+                    "copy_blocks" => SimKind::CopyBlocks,
                     other => return err(format!("unknown sim kind '{other}'")),
                 });
             } else {
@@ -254,6 +260,9 @@ impl PjRtClient {
                 "max_blocks", "num_slots", "state_len",
             ],
             SimKind::Extract => &["tail_offset", "tail_len"],
+            SimKind::CopyBlocks => &[
+                "block_size", "num_slots", "max_pairs", "state_len",
+            ],
         };
         for k in required {
             s.get(k)?;
@@ -278,6 +287,7 @@ impl PjRtLoadedExecutable {
             SimKind::Kernel => run_kernel(&self.spec, args)?,
             SimKind::Model => run_model(&self.spec, args)?,
             SimKind::Extract => run_extract(&self.spec, args)?,
+            SimKind::CopyBlocks => run_copy_blocks(&self.spec, args)?,
         };
         Ok(vec![vec![out]])
     }
@@ -459,6 +469,48 @@ fn run_model(spec: &HloModuleProto, args: &[&PjRtBuffer])
     Ok(PjRtBuffer { data: Data::F32(st), dims: vec![state_len] })
 }
 
+/// Apply a batch of `(src, dst)` page copies to the flat state, both
+/// cache lanes (token-id lane and position lane), in pair order.
+///
+/// Operands: state (`f32[state_len]`), pairs (`i32[max_pairs, 2]`).
+/// A `(0, 0)` pair is padding (page 0 is the scratch page and is never
+/// a copy source or destination); out-of-range pages are an error.
+fn run_copy_blocks(spec: &HloModuleProto, args: &[&PjRtBuffer])
+    -> Result<PjRtBuffer, Error> {
+    let bs = spec.get("block_size")?;
+    let num_slots = spec.get("num_slots")?;
+    let max_pairs = spec.get("max_pairs")?;
+    let state_len = spec.get("state_len")?;
+    let state_in = operand(args, 0)?.f32s()?;
+    let pairs = operand(args, 1)?.i32s()?;
+    if state_in.len() != state_len {
+        return err("state operand has the wrong length");
+    }
+    if pairs.len() != 2 * max_pairs {
+        return err("pair tensor does not match max_pairs");
+    }
+    let num_pages = num_slots / bs;
+    let mut st = state_in.to_vec();
+    for p in 0..max_pairs {
+        let (src, dst) = (pairs[2 * p], pairs[2 * p + 1]);
+        if src == 0 && dst == 0 {
+            continue; // padding lane
+        }
+        if src < 0 || dst < 0
+            || src as usize >= num_pages || dst as usize >= num_pages
+        {
+            return err(format!("copy pair ({src}, {dst}) outside the cache"));
+        }
+        let (src, dst) = (src as usize, dst as usize);
+        for lane in [0, num_slots] {
+            for k in 0..bs {
+                st[lane + dst * bs + k] = st[lane + src * bs + k];
+            }
+        }
+    }
+    Ok(PjRtBuffer { data: Data::F32(st), dims: vec![state_len] })
+}
+
 /// Slice the sampled-token tail out of the flat state.
 fn run_extract(spec: &HloModuleProto, args: &[&PjRtBuffer])
     -> Result<PjRtBuffer, Error> {
@@ -572,6 +624,37 @@ mod tests {
         assert_ne!(a[64], c[64], "different history, different sample");
         let tok = a[64];
         assert!((0.0..97.0).contains(&tok));
+    }
+
+    #[test]
+    fn copy_blocks_applies_pairs_and_skips_padding() {
+        // 4 pages of 4 slots; state = 2 lanes of 16 + a 2-wide tail
+        let spec = HloModuleProto::from_text(
+            "kind = copy_blocks\nblock_size = 4\nnum_slots = 16\n\
+             max_pairs = 3\nstate_len = 34\n",
+        )
+        .unwrap();
+        let exe = PjRtClient::cpu()
+            .unwrap()
+            .compile(&XlaComputation::from_proto(&spec))
+            .unwrap();
+        let mut state: Vec<f32> = (0..34).map(|x| x as f32).collect();
+        let buf = buf_f32(state.clone());
+        // copy page 1 → page 3 on both lanes; two padding pairs
+        let pairs = buf_i32(vec![1, 3, 0, 0, 0, 0]);
+        let out = exe.execute_b(&[&buf, &pairs]).unwrap().remove(0).remove(0);
+        let got = out.to_literal_sync().unwrap().to_vec::<f32>().unwrap();
+        for k in 0..4 {
+            state[12 + k] = state[4 + k]; // K lane
+            state[16 + 12 + k] = state[16 + 4 + k]; // V lane
+        }
+        assert_eq!(got, state, "only the addressed page moved, both lanes");
+        // out-of-range pages are rejected
+        let bad = buf_i32(vec![1, 9, 0, 0, 0, 0]);
+        assert!(exe.execute_b(&[&buf, &bad]).is_err());
+        // wrong pair-tensor capacity is rejected
+        let short = buf_i32(vec![1, 3]);
+        assert!(exe.execute_b(&[&buf, &short]).is_err());
     }
 
     #[test]
