@@ -1,0 +1,87 @@
+#!/usr/bin/env python3
+"""Offline markdown link checker for the docs tree.
+
+Usage: python3 python/check_doc_links.py [DIR ...]
+
+Scans every ``*.md`` under the given directories (default: ``docs`` plus
+the repository-root markdown files) for inline links and validates that
+
+* relative links resolve to an existing file or directory (anchors are
+  stripped; pure-anchor links are checked against the same file's
+  headings),
+* absolute ``http(s)`` links are merely recorded, never fetched — CI is
+  offline by design.
+
+Exits non-zero listing every broken link. No dependencies beyond the
+standard library.
+"""
+import os
+import re
+import sys
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING = re.compile(r"^#+\s+(.*)$", re.MULTILINE)
+
+
+def slugify(heading):
+    """GitHub-style anchor slug (good enough for our own docs)."""
+    slug = heading.strip().lower()
+    slug = re.sub(r"[^\w\- ]", "", slug)
+    return slug.replace(" ", "-")
+
+
+def check_file(path):
+    broken = []
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    anchors = {slugify(h) for h in HEADING.findall(text)}
+    for target in LINK.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        base, _, anchor = target.partition("#")
+        if not base:
+            if anchor and anchor not in anchors:
+                broken.append((target, "missing heading anchor"))
+            continue
+        resolved = os.path.normpath(
+            os.path.join(os.path.dirname(path), base))
+        if not os.path.exists(resolved):
+            broken.append((target, f"no such file: {resolved}"))
+    return broken
+
+
+def main(argv):
+    roots = argv or ["docs"] + [
+        f for f in os.listdir(".") if f.endswith(".md")]
+    files = []
+    missing_roots = 0
+    for root in roots:
+        if os.path.isfile(root):
+            files.append(root)
+            continue
+        if not os.path.isdir(root):
+            # fail closed: a renamed/deleted explicit root must not turn
+            # the guard into a silent no-op
+            print(f"check_doc_links: no such file or directory: {root}",
+                  file=sys.stderr)
+            missing_roots += 1
+            continue
+        for dirpath, _, names in os.walk(root):
+            files.extend(os.path.join(dirpath, n) for n in names
+                         if n.endswith(".md"))
+    if not files:
+        print("check_doc_links: no markdown files found", file=sys.stderr)
+        return 1
+    failures = missing_roots
+    for path in sorted(files):
+        for target, why in check_file(path):
+            print(f"{path}: broken link '{target}' ({why})",
+                  file=sys.stderr)
+            failures += 1
+    print(f"check_doc_links: {len(files)} files, {failures} broken links"
+          + (f", {missing_roots} missing roots" if missing_roots else ""))
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -176,7 +176,20 @@ pub enum SamplingMode {
 /// `Beam` mode instead expands every live hypothesis into
 /// [`SamplingParams::beam_candidates`] scored continuations each step and
 /// keeps the global top `beam_width` by cumulative logprob proxy.
-#[derive(Debug, Clone, Copy, PartialEq)]
+///
+/// # Stop conditions
+///
+/// `stop_token_ids` and `stop_sequences` terminate a branch the step its
+/// *generated output* ends in one of them ([`SamplingParams::hit_stop`]);
+/// the branch finishes with
+/// [`crate::scheduler::FinishReason::Stop`] and the matched tokens stay
+/// in the output. The check runs over generated tokens only, so a stop
+/// sequence inside the prompt never terminates, and a multi-token stop
+/// sequence matches even when its tokens arrived in different steps. In
+/// beam mode a stopping candidate becomes a *finished hypothesis* in the
+/// group's pool instead of a live branch (see
+/// [`crate::output::OutputProcessor`]).
+#[derive(Debug, Clone, PartialEq)]
 pub struct SamplingParams {
     /// Parallel sampling width: branches generated per request
     /// (ignored in `Beam` mode — `beam_width` governs there).
@@ -187,6 +200,12 @@ pub struct SamplingParams {
     pub temperature: f64,
     /// Decode strategy; defaults to `Parallel`.
     pub mode: SamplingMode,
+    /// Token ids that terminate a branch when generated (the EOS-token
+    /// analogue; empty = never).
+    pub stop_token_ids: Vec<i32>,
+    /// Token sequences that terminate a branch once its generated output
+    /// ends with one (multi-token stop strings; empty entries ignored).
+    pub stop_sequences: Vec<Vec<i32>>,
 }
 
 impl Default for SamplingParams {
@@ -196,6 +215,8 @@ impl Default for SamplingParams {
             seed: 0,
             temperature: 0.0,
             mode: SamplingMode::Parallel,
+            stop_token_ids: Vec::new(),
+            stop_sequences: Vec::new(),
         }
     }
 }
@@ -209,7 +230,53 @@ impl SamplingParams {
             seed,
             temperature: 0.0,
             mode: SamplingMode::Beam { beam_width, length_penalty },
+            stop_token_ids: Vec::new(),
+            stop_sequences: Vec::new(),
         }
+    }
+
+    /// Builder: terminate branches on any of these generated token ids.
+    pub fn with_stop_tokens(mut self, ids: Vec<i32>) -> Self {
+        self.stop_token_ids = ids;
+        self
+    }
+
+    /// Builder: terminate branches whose generated output ends with any
+    /// of these token sequences.
+    pub fn with_stop_sequences(mut self, seqs: Vec<Vec<i32>>) -> Self {
+        self.stop_sequences = seqs;
+        self
+    }
+
+    /// Does `output` (the *generated* tokens of one branch) end in a stop
+    /// condition? Generated output only: a stop sequence inside the
+    /// prompt never matches (stop-in-prompt is ignored by construction),
+    /// and a multi-token stop sequence matches even when its tokens
+    /// arrived in different engine steps — the suffix check runs over the
+    /// whole output, not the current step's tokens.
+    pub fn hit_stop(&self, output: &[i32]) -> bool {
+        let Some(&last) = output.last() else {
+            return false;
+        };
+        if self.stop_token_ids.contains(&last) {
+            return true;
+        }
+        self.stop_sequences
+            .iter()
+            .any(|s| !s.is_empty() && output.ends_with(s))
+    }
+
+    /// [`SamplingParams::hit_stop`] for `output` extended by one more
+    /// token, without materializing the extension — the beam expansion
+    /// runs this once per candidate, so it must not allocate.
+    pub fn hit_stop_with(&self, output: &[i32], next: i32) -> bool {
+        if self.stop_token_ids.contains(&next) {
+            return true;
+        }
+        self.stop_sequences.iter().any(|s| match s.split_last() {
+            Some((&last, head)) => last == next && output.ends_with(head),
+            None => false,
+        })
     }
 
     /// Branch rows this request can occupy at full width.
@@ -394,8 +461,45 @@ mod tests {
             assert_eq!(t, p.sample(1234, b, 2048));
         }
         // a different seed yields a different stream
-        let q = SamplingParams { seed: 10, ..p };
+        let q = SamplingParams { seed: 10, ..p.clone() };
         assert_ne!(p.sample(1234, 0, 2048), q.sample(1234, 0, 2048));
+    }
+
+    #[test]
+    fn hit_stop_matches_generated_suffix_only() {
+        let p = SamplingParams::default()
+            .with_stop_tokens(vec![7])
+            .with_stop_sequences(vec![vec![1, 2, 3], vec![]]);
+        assert!(!p.hit_stop(&[]), "empty output never stops");
+        assert!(p.hit_stop(&[9, 7]), "stop token id terminates");
+        assert!(!p.hit_stop(&[7, 9]), "only the LAST token is checked");
+        assert!(p.hit_stop(&[5, 1, 2, 3]), "multi-token suffix matches");
+        assert!(!p.hit_stop(&[1, 2, 3, 4]), "mid-stream sequence ignored");
+        assert!(!p.hit_stop(&[2, 3]), "partial sequence does not match");
+        // an empty stop sequence never matches (guarded)
+        let q = SamplingParams::default().with_stop_sequences(vec![vec![]]);
+        assert!(!q.hit_stop(&[1]));
+        // default params have no stop conditions
+        assert!(!SamplingParams::default().hit_stop(&[0, 1, 2]));
+    }
+
+    #[test]
+    fn hit_stop_with_matches_materialized_extension() {
+        // the allocation-free candidate check must agree with hit_stop
+        // over the extended output, for every (output, next) combination
+        let p = SamplingParams::default()
+            .with_stop_tokens(vec![7])
+            .with_stop_sequences(vec![vec![1, 2, 3], vec![9], vec![]]);
+        let outputs: [&[i32]; 5] =
+            [&[], &[1], &[1, 2], &[5, 1, 2], &[2, 3, 1]];
+        for output in outputs {
+            for next in [1, 2, 3, 7, 9, 42] {
+                let mut ext = output.to_vec();
+                ext.push(next);
+                assert_eq!(p.hit_stop_with(output, next), p.hit_stop(&ext),
+                           "mismatch for {output:?} + {next}");
+            }
+        }
     }
 
     #[test]

@@ -346,6 +346,10 @@ impl Engine {
     pub fn step(&mut self) -> Result<Option<StepReport>> {
         let t_step = Instant::now();
         let batch = self.scheduler.schedule(&mut self.kv);
+        // Mirror before any early return: the self-preemption count is
+        // exactly the diagnostic for a schedule call that came back
+        // empty (a post-mortem dump must see the final failing call).
+        self.metrics.self_preemptions = self.scheduler.stats.self_preemptions;
         // CoW splits must reach the device cache even when the batch ended
         // up empty (the split branch may only be dispatched next step).
         self.apply_cow_copies(&batch.cow_copies)?;
@@ -674,6 +678,30 @@ mod tests {
         assert!(e.metrics.beam_forks > 0, "mid-stream forks happened");
         assert!(e.metrics.beam_prunes > 0, "losing hypotheses retired");
         assert_eq!(e.free_page_fraction(), 1.0, "all pages returned");
+    }
+
+    #[test]
+    fn stop_token_truncates_greedy_output() {
+        // probe: learn the greedy stream, then stop on its third token
+        let prompt: Vec<i32> = (60..80).collect();
+        let mut probe = engine();
+        probe.add_request(prompt.clone(), 8).unwrap();
+        let reference = probe.run_to_completion().unwrap()[0].output().to_vec();
+        let stop = reference[2];
+        let cut = reference.iter().position(|&t| t == stop).unwrap() + 1;
+
+        let mut e = engine();
+        let sampling = SamplingParams::default().with_stop_tokens(vec![stop]);
+        e.add_group(prompt, 8, sampling).unwrap();
+        let fin = e.run_to_completion().unwrap();
+        let s = &fin[0].seqs[0];
+        assert_eq!(s.output, reference[..cut],
+                   "output truncates at the first stop-token occurrence");
+        assert!(s.output.len() < reference.len());
+        assert_eq!(s.finish_reason(),
+                   Some(crate::scheduler::FinishReason::Stop));
+        assert_eq!(e.metrics.stop_finishes, 1);
+        assert_eq!(e.free_page_fraction(), 1.0);
     }
 
     #[test]

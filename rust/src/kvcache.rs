@@ -315,6 +315,13 @@ impl KvCacheManager {
         self.alloc.ref_count(page)
     }
 
+    /// Page references a live sequence currently holds — what
+    /// [`KvCacheManager::free_counting`] would report on retirement.
+    /// Drives the beam early-termination reclamation assertions.
+    pub fn held_pages(&self, h: SeqHandle) -> usize {
+        self.table(h).pages.len()
+    }
+
     /// Pages that `grow` would need to fit `new_total` tokens.
     pub fn pages_needed(&self, h: SeqHandle, new_total: usize) -> usize {
         let t = self.table(h);

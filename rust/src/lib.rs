@@ -18,6 +18,82 @@
 //! Python never runs on the request path: `make artifacts` is the only
 //! Python step, after which the `repro` binary is self-contained.
 //!
+//! Narrative documentation lives in the repository's `docs/` tree:
+//! `docs/ARCHITECTURE.md` walks a request through scheduler → kvcache →
+//! batch → engine → output pipeline, `docs/WIRE_PROTOCOL.md` is the
+//! field-by-field TCP protocol reference, and `docs/ARTIFACTS.md`
+//! explains the sim-vs-real-AOT artifact split.
+//!
+//! ## Quickstart
+//!
+//! Load the artifacts, build an engine, generate greedily:
+//!
+//! ```
+//! # fn main() -> anyhow::Result<()> {
+//! use std::rc::Rc;
+//! use triton_anatomy::{Engine, EngineConfig, Runtime};
+//!
+//! let rt = Rc::new(Runtime::load_dir(triton_anatomy::default_artifacts_dir())?);
+//! let mut engine = Engine::new(rt, EngineConfig::default())?;
+//! engine.add_request(vec![11, 542, 7, 1023], 8)?;
+//! let finished = engine.run_to_completion()?;
+//! assert_eq!(finished[0].output().len(), 8);
+//! # Ok(()) }
+//! ```
+//!
+//! A beam request with a stop token terminates early once the finished
+//! pool's cutoff triggers, hypotheses ranked best-first:
+//!
+//! ```
+//! # fn main() -> anyhow::Result<()> {
+//! use std::rc::Rc;
+//! use triton_anatomy::{Engine, EngineConfig, Runtime, SamplingParams};
+//!
+//! let rt = Rc::new(Runtime::load_dir(triton_anatomy::default_artifacts_dir())?);
+//! let mut engine = Engine::new(rt, EngineConfig::default())?;
+//! let sampling = SamplingParams::beam(2, 1.0, 7)
+//!     .with_stop_tokens((0..2048).step_by(5).collect());
+//! engine.add_group((10..30).collect(), 64, sampling)?;
+//! let group = engine.run_to_completion()?.remove(0);
+//! assert_eq!(group.seqs.len(), 2, "beam_width ranked hypotheses");
+//! assert!(group.final_score(&group.seqs[0])
+//!         >= group.final_score(&group.seqs[1]));
+//! # Ok(()) }
+//! ```
+//!
+//! Over TCP, [`server::Client::generate_group`] collects one completion
+//! per branch (`finish_reason` distinguishes `"stop"` from `"length"`):
+//!
+//! ```
+//! # fn main() -> anyhow::Result<()> {
+//! use std::net::TcpListener;
+//! use triton_anatomy::server::{serve, Client};
+//! use triton_anatomy::{EngineConfig, SamplingParams};
+//!
+//! // ephemeral port; the server exits after one request
+//! let probe = TcpListener::bind("127.0.0.1:0")?;
+//! let addr = format!("127.0.0.1:{}", probe.local_addr()?.port());
+//! drop(probe);
+//! let (dir, bound) = (triton_anatomy::default_artifacts_dir(), addr.clone());
+//! let server = std::thread::spawn(move || {
+//!     serve(dir, EngineConfig::default(), &bound, Some(1))
+//! });
+//! // retry until the server thread has bound the port
+//! let mut client = (0..100)
+//!     .find_map(|_| {
+//!         std::thread::sleep(std::time::Duration::from_millis(50));
+//!         Client::connect(&addr).ok()
+//!     })
+//!     .expect("server did not come up");
+//! let sampling = SamplingParams { n: 2, seed: 7, temperature: 0.8,
+//!                                 ..Default::default() };
+//! let done = client.generate_group(&[1, 2, 3, 4], 6, &sampling)?;
+//! assert_eq!(done.len(), 2, "one completion per branch");
+//! assert!(done.iter().all(|c| c.finish_reason == "length"));
+//! server.join().unwrap()?;
+//! # Ok(()) }
+//! ```
+//!
 //! ## Step-level output pipeline
 //!
 //! One `Engine::step()` no longer applies sampled tokens as an internal
@@ -74,14 +150,38 @@
 //! the admission-time `beam_width` reservation. Finished hypotheses come
 //! back ranked by `cum_logprob / len^length_penalty`, best first.
 //!
+//! ## Generation lifecycle & termination
+//!
+//! [`config::SamplingParams`] carries `stop_token_ids` and
+//! `stop_sequences`; a branch finishes with
+//! [`scheduler::FinishReason::Stop`] the step its *generated* output
+//! ends in one (suffix check over the whole output — multi-token stop
+//! strings match across step boundaries, stops inside the prompt are
+//! ignored), or with [`scheduler::FinishReason::Length`] at
+//! `max_new_tokens`. Beam groups keep a **finished-hypothesis pool**: a
+//! stopping expansion candidate becomes a pageless finished hypothesis,
+//! and once the pool holds `beam_width` hypotheses whose worst score
+//! beats every live hypothesis's optimistic bound
+//! ([`scheduler::SequenceGroup::best_attainable`]), the group
+//! **early-terminates** — live branches retire in one step with their
+//! pages reclaimed immediately, so `length_penalty` bites mid-flight
+//! instead of only at final ranking. Under extreme memory pressure a
+//! beam branch parked on a pending sample **self-preempts** (frees its
+//! pages and re-prefills later; the parked sample is a pure function of
+//! its history), so a single over-wide group degrades to recompute
+//! instead of wedging the engine.
+//!
 //! ## Streaming wire protocol
 //!
-//! The TCP front-end ([`server`]) speaks JSON lines. Submit carries
-//! `prompt`, `max_new_tokens`, and optionally `n`/`seed`/`temperature`
-//! (parallel) or `beam_width`/`length_penalty` (beam). Responses are
-//! `token` events — `{event, id, branch, token, position}` — and one
-//! `done` per branch with the full token list, `ttft_ms`, `total_ms`,
-//! `cached_tokens` and the hypothesis `score`. Guarantees: `token`
+//! The TCP front-end ([`server`]) speaks JSON lines (field-by-field
+//! reference: `docs/WIRE_PROTOCOL.md`). Submit carries `prompt`,
+//! `max_new_tokens`, and optionally `n`/`seed`/`temperature` (parallel)
+//! or `beam_width`/`length_penalty` (beam), plus
+//! `stop_token_ids`/`stop_sequences`. Responses are `token` events —
+//! `{event, id, branch, token, position, logprob}` — and one `done` per
+//! branch with the full token list, `ttft_ms`, `total_ms`,
+//! `cached_tokens`, the hypothesis `score` and its `finish_reason`
+//! (`"length"` or `"stop"`). Guarantees: `token`
 //! events stream incrementally per engine step; every `token` of a
 //! branch precedes that branch's `done`; per `(id, branch)`, `position`
 //! (0-based generated-output index) is strictly increasing, and replay
@@ -145,7 +245,7 @@ pub use heuristics::{Heuristics, KernelChoice};
 pub use manifest::Manifest;
 pub use output::{OutputProcessor, SampleOutput, StepOutputs, TokenEvent};
 pub use runtime::Runtime;
-pub use scheduler::{Sequence, SequenceGroup};
+pub use scheduler::{FinishReason, Sequence, SequenceGroup};
 
 /// Default artifacts directory (next to Cargo.toml).
 pub fn default_artifacts_dir() -> std::path::PathBuf {

@@ -80,6 +80,7 @@ COMMANDS:
   run          --prompt-len 16 --max-new 16 --model tiny [--heuristics F]
                [--n 4 --sample-seed 1 --temperature 0.7]  parallel sampling
                [--beam-width 3 --length-penalty 1.0]      beam search
+               [--stop 5,9] [--stop-seq \"1,2;7,8\"]        stop conditions
   bench-micro  --scenario decode|prefill|mixed --batch 4 --seq-len 256
                [--decode-share 0.5] [--iters 5] [--warmup 2]
   tune         --out artifacts/heuristics.json [--iters 3] [--max-seq-len 2048]
@@ -138,6 +139,24 @@ fn cmd_run(args: &Args, dir: PathBuf) -> Result<()> {
     let prompt_len = args.usize_or("prompt-len", 16)?;
     let max_new = args.usize_or("max-new", 16)?;
     let beam_width = args.usize_or("beam-width", 0)?;
+    // --stop 5,9            stop token ids
+    // --stop-seq "1,2;7,8"  stop sequences (';' between sequences —
+    //                       quote it, ';' is a shell separator)
+    let stop_tokens: Vec<i32> = match args.get("stop") {
+        Some(v) => v.split(',').filter(|s| !s.is_empty())
+            .map(|s| s.trim().parse().with_context(|| format!("--stop {s}")))
+            .collect::<Result<_>>()?,
+        None => Vec::new(),
+    };
+    let stop_seqs: Vec<Vec<i32>> = match args.get("stop-seq") {
+        Some(v) => v.split(';').filter(|s| !s.is_empty())
+            .map(|seq| seq.split(',').filter(|s| !s.is_empty())
+                .map(|s| s.trim().parse()
+                     .with_context(|| format!("--stop-seq {s}")))
+                .collect::<Result<_>>())
+            .collect::<Result<_>>()?,
+        None => Vec::new(),
+    };
     let sampling = if beam_width > 0 {
         SamplingParams::beam(
             beam_width,
@@ -151,13 +170,15 @@ fn cmd_run(args: &Args, dir: PathBuf) -> Result<()> {
             temperature: args.f64_or("temperature", 0.0)?,
             ..Default::default()
         }
-    };
+    }
+    .with_stop_tokens(stop_tokens)
+    .with_stop_sequences(stop_seqs);
     let mut rng = Rng::new(args.usize_or("seed", 7)? as u64);
     let prompt = rng.tokens(prompt_len, engine.model_cfg.vocab_size);
 
     engine.warmup()?;
     let t0 = std::time::Instant::now();
-    engine.add_group(prompt, max_new, sampling)?;
+    engine.add_group(prompt, max_new, sampling.clone())?;
     let fin = engine.run_to_completion()?;
     let dt = t0.elapsed().as_secs_f64();
     let g = &fin[0];
@@ -166,11 +187,12 @@ fn cmd_run(args: &Args, dir: PathBuf) -> Result<()> {
               ({:.1} tok/s)",
              g.seqs.len(), generated, dt, generated as f64 / dt);
     for s in &g.seqs {
+        let reason = s.finish_reason().map_or("?", |r| r.as_str());
         if sampling.is_beam() {
-            println!("branch {} (score {:.4}): {:?}",
-                     s.branch, g.final_score(s), s.output);
+            println!("branch {} (score {:.4}, {}): {:?}",
+                     s.branch, g.final_score(s), reason, s.output);
         } else {
-            println!("branch {}: {:?}", s.branch, s.output);
+            println!("branch {} ({}): {:?}", s.branch, reason, s.output);
         }
     }
     println!("--- metrics ---\n{}", engine.metrics.dump());

@@ -136,6 +136,9 @@ pub struct EngineMetrics {
     /// Latency between consecutive tokens of one branch, ms (the
     /// streamed-token cadence clients observe).
     pub inter_token_ms: Histogram,
+    // ----- termination -----
+    /// Branches finished by a stop token / stop sequence (vs length).
+    pub stop_finishes: u64,
     // ----- beam search -----
     /// Beam hypotheses forked mid-stream (winners claiming extra slots).
     pub beam_forks: u64,
@@ -143,6 +146,14 @@ pub struct EngineMetrics {
     pub beam_prunes: u64,
     /// KV page references reclaimed by beam retirement.
     pub beam_pruned_pages: u64,
+    /// Hypotheses that entered a beam group's finished pool by stopping.
+    pub beam_finished_hyps: u64,
+    /// Beam groups cut off early ("best live cannot beat worst
+    /// finished"), reclaiming every live hypothesis's pages at once.
+    pub beam_early_terminations: u64,
+    /// Parked beam branches self-preempted under extreme memory pressure
+    /// (mirror of `SchedulerStats::self_preemptions`).
+    pub self_preemptions: u64,
     // ----- automatic prefix cache (mirrors kvcache::CacheStats) -----
     /// Prompt tokens served from cached KV pages instead of re-prefill.
     pub prefix_hit_tokens: u64,
@@ -183,9 +194,14 @@ impl EngineMetrics {
         let _ = writeln!(s, "group_latency_ms {}", self.group_latency_ms.summary());
         let _ = writeln!(s, "token_events {}", self.token_events);
         let _ = writeln!(s, "inter_token_ms {}", self.inter_token_ms.summary());
+        let _ = writeln!(s, "stop_finishes {}", self.stop_finishes);
         let _ = writeln!(s, "beam_forks {}", self.beam_forks);
         let _ = writeln!(s, "beam_prunes {}", self.beam_prunes);
         let _ = writeln!(s, "beam_pruned_pages {}", self.beam_pruned_pages);
+        let _ = writeln!(s, "beam_finished_hyps {}", self.beam_finished_hyps);
+        let _ = writeln!(s, "beam_early_terminations {}",
+                         self.beam_early_terminations);
+        let _ = writeln!(s, "self_preemptions {}", self.self_preemptions);
         let _ = writeln!(s, "prefix_cache_hit_tokens {}", self.prefix_hit_tokens);
         let _ = writeln!(s, "prefix_cache_lookup_tokens {}",
                          self.prefix_lookup_tokens);
@@ -276,6 +292,20 @@ mod tests {
         assert!(d.contains("token_events 9"));
         assert!(d.contains("inter_token_ms n=1"));
         assert!(d.contains("cow_pairs_per_step n=1"));
+    }
+
+    #[test]
+    fn termination_metrics_dump() {
+        let mut m = EngineMetrics::default();
+        m.stop_finishes = 5;
+        m.beam_finished_hyps = 4;
+        m.beam_early_terminations = 1;
+        m.self_preemptions = 2;
+        let d = m.dump();
+        assert!(d.contains("stop_finishes 5"));
+        assert!(d.contains("beam_finished_hyps 4"));
+        assert!(d.contains("beam_early_terminations 1"));
+        assert!(d.contains("self_preemptions 2"));
     }
 
     #[test]

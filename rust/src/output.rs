@@ -45,6 +45,29 @@
 //! completion the hypotheses are ranked by the length-penalized score
 //! ([`crate::scheduler::SequenceGroup::final_score`]), best first.
 
+//!
+//! # Termination
+//!
+//! The processor is the single owner of *why* a branch stops. Stage 3
+//! checks every live branch after token application: a generated output
+//! that hits a stop condition
+//! ([`crate::config::SamplingParams::hit_stop`]) finishes with
+//! [`FinishReason::Stop`] (the matched tokens stay in the output);
+//! reaching `max_new_tokens` finishes with [`FinishReason::Length`].
+//! Stop takes precedence when both trigger on the same token.
+//!
+//! Beam groups terminate through a *finished-hypothesis pool*: an
+//! expansion candidate that hits a stop condition becomes a finished
+//! hypothesis immediately — pageless, since its text is final — instead
+//! of occupying a live slot, and the pool keeps the `beam_width` best by
+//! length-penalized score. Once the pool is full and its worst score
+//! beats the most optimistic attainable score of every live hypothesis
+//! ([`SequenceGroup::best_attainable`] — the vLLM-style "best live
+//! cannot beat worst finished" cutoff), the live branches are retired in
+//! one step, their pages reclaimed immediately, and the group finishes
+//! early. At completion the hypotheses are ranked best-first and
+//! truncated to exactly `beam_width`.
+
 use crate::config::SamplingMode;
 use crate::kvcache::KvCacheManager;
 use crate::metrics::EngineMetrics;
@@ -74,13 +97,17 @@ pub struct SampleOutput {
 
 /// A token that became *visible output* this step: appended to branch
 /// `branch` of group `id` at `position` within that branch's output.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TokenEvent {
     pub id: RequestId,
     pub branch: usize,
     pub token: i32,
     /// Index within the branch's generated output (0-based).
     pub position: usize,
+    /// Logprob proxy of this token (parallel mode: the applied token's
+    /// proxy; beam mode: the candidate score the hypothesis was selected
+    /// with) — lets clients rank partial streams.
+    pub logprob: f64,
 }
 
 /// Everything one engine step surfaced: the raw per-row samples, the
@@ -93,8 +120,10 @@ pub struct StepOutputs {
     /// the positions are strictly increasing — across the whole request
     /// lifetime, not just within one step.
     pub tokens: Vec<TokenEvent>,
-    /// Branches that hit a stop condition this step.
-    pub finished: Vec<(RequestId, usize)>,
+    /// Branches that finished this step, with why (`Length` or `Stop`).
+    /// Beam-mode entries include pool hypotheses born finished from a
+    /// stopping candidate.
+    pub finished: Vec<(RequestId, usize, FinishReason)>,
     /// Tokens that became visible output this step — exact throughput
     /// accounting (fork seed tokens included, samples discarded by
     /// replay or beam retirement excluded).
@@ -179,7 +208,8 @@ impl OutputProcessor {
                 continue;
             }
             let tok = g.sampling.sample(sample.raw, s.branch, self.vocab);
-            apply_token(g, pos, tok, now_ns, metrics, &mut out, true);
+            let lp = logprob_proxy(tok, self.vocab);
+            apply_token(g, pos, tok, lp, now_ns, metrics, &mut out, true);
             // Prompt prefill just completed for an unforked group: create
             // branches 1..n, sharing every prompt page by refcount bump
             // (no allocation — admission already counted the shared pages
@@ -192,10 +222,12 @@ impl OutputProcessor {
                 for b in 1..g.sampling.n {
                     let h = kv.fork(parent);
                     let first = g.sampling.sample(sample.raw, b, self.vocab);
+                    let first_lp = logprob_proxy(first, self.vocab);
                     g.seqs.push(Sequence {
                         branch: b,
                         state: State::Running,
                         output: vec![first],
+                        logprobs: vec![first_lp],
                         handle: Some(h),
                         computed: computed0,
                         cum_logprob: 0.0,
@@ -211,6 +243,7 @@ impl OutputProcessor {
                         branch: b,
                         token: first,
                         position: 0,
+                        logprob: first_lp,
                     });
                 }
                 g.forked = true;
@@ -226,11 +259,22 @@ impl OutputProcessor {
         }
 
         // ---- stage 3: stop conditions ------------------------------------
+        // Stop beats length when both trigger on the same token. Live
+        // beam branches never end with a stop by construction (stopping
+        // candidates enter the finished pool instead), so the stop check
+        // is effectively the parallel-mode path.
         for g in &mut sched.running {
             for s in &mut g.seqs {
-                if !s.is_finished() && s.output.len() >= g.max_new_tokens {
+                if s.is_finished() {
+                    continue;
+                }
+                if g.sampling.hit_stop(&s.output) {
+                    s.state = State::Finished(FinishReason::Stop);
+                    metrics.stop_finishes += 1;
+                    out.finished.push((g.id, s.branch, FinishReason::Stop));
+                } else if s.output.len() >= g.max_new_tokens {
                     s.state = State::Finished(FinishReason::Length);
-                    out.finished.push((g.id, s.branch));
+                    out.finished.push((g.id, s.branch, FinishReason::Length));
                 }
             }
         }
@@ -251,8 +295,11 @@ impl OutputProcessor {
                 g.finish_ns = Some(now_ns);
                 if g.sampling.is_beam() {
                     // Rank hypotheses best-first by the length-penalized
-                    // score, then emit their token streams — beam tokens
-                    // only become stable (hence streamable) now.
+                    // score and truncate to exactly beam_width — stops
+                    // can leave pool + length-finished hypotheses above
+                    // the width — then emit their token streams; beam
+                    // tokens only become stable (hence streamable) now.
+                    let width = g.sampling.width();
                     let mut tagged: Vec<(f64, Sequence)> =
                         std::mem::take(&mut g.seqs)
                             .into_iter()
@@ -261,6 +308,7 @@ impl OutputProcessor {
                     tagged.sort_by(|a, b| {
                         b.0.total_cmp(&a.0).then(a.1.branch.cmp(&b.1.branch))
                     });
+                    tagged.truncate(width);
                     g.seqs = tagged.into_iter().map(|(_, s)| s).collect();
                     for s in &g.seqs {
                         for (i, &t) in s.output.iter().enumerate() {
@@ -269,6 +317,7 @@ impl OutputProcessor {
                                 branch: s.branch,
                                 token: t,
                                 position: i,
+                                logprob: s.logprobs[i],
                             });
                         }
                     }
@@ -279,6 +328,27 @@ impl OutputProcessor {
             }
         }
         out
+    }
+
+    /// Retire live hypotheses (descending-sorted removal is required —
+    /// `indices` must be ascending positions into `g.seqs`), reclaiming
+    /// their pages immediately.
+    fn retire_live(
+        &self,
+        g: &mut SequenceGroup,
+        kv: &mut KvCacheManager,
+        metrics: &mut EngineMetrics,
+        out: &mut StepOutputs,
+        indices: &[usize],
+    ) {
+        for &i in indices.iter().rev() {
+            let mut s = g.seqs.remove(i);
+            if let Some(h) = s.handle.take() {
+                metrics.beam_pruned_pages += kv.free_counting(h) as u64;
+            }
+            metrics.beam_prunes += 1;
+            out.beam_prunes += 1;
+        }
     }
 
     /// Group-wide beam expansion. No-op until every live hypothesis has a
@@ -305,28 +375,90 @@ impl OutputProcessor {
             return;
         }
 
+        // Early-termination cutoff: once the finished pool holds
+        // beam_width hypotheses whose worst score beats the most
+        // optimistic attainable score of every live hypothesis, no live
+        // branch can ever place — retire them all (reclaiming their
+        // pages this step) and let the group finish now.
+        let mut fin_scores: Vec<f64> = g
+            .seqs
+            .iter()
+            .filter(|s| s.is_finished())
+            .map(|s| g.final_score(s))
+            .collect();
+        fin_scores.sort_by(|a, b| b.total_cmp(a));
+        if fin_scores.len() >= beam_width {
+            let worst = fin_scores[beam_width - 1];
+            let best_live = live
+                .iter()
+                .map(|&i| g.best_attainable(&g.seqs[i]))
+                .fold(f64::NEG_INFINITY, f64::max);
+            if best_live <= worst {
+                self.retire_live(g, kv, metrics, out, &live);
+                metrics.beam_early_terminations += 1;
+                g.forked = true;
+                return;
+            }
+        }
+
         // Candidate pool across every live hypothesis. Selection order is
         // total: score desc, then branch id asc, then candidate index asc
         // — fully deterministic, so beam runs replay exactly under
-        // batching and preemption.
+        // batching and preemption. A candidate that completes a stop
+        // condition becomes a *finished hypothesis* immediately (pageless
+        // — its text is final, it needs no KV); the rest compete for the
+        // beam_width live slots.
         struct Cand {
             cum: f64,
+            lp: f64,
             branch: usize,
             ci: usize,
             token: i32,
         }
         let mut cands: Vec<Cand> = Vec::new();
+        let mut pool_new: Vec<Sequence> = Vec::new();
+        // Branch ids at or past this mark are pool hypotheses born this
+        // step; their metrics/events are deferred until after the
+        // width-trim so a candidate discarded within the same step never
+        // counts as visible output.
+        let pool_start = g.next_branch;
         for &i in &live {
             let s = &g.seqs[i];
             let raw = s.pending.expect("checked above").raw;
             let expansion = g.sampling.beam_candidates(raw, self.vocab);
+            let mut stopped: Vec<(i32, f64)> = Vec::new();
             for (ci, (token, lp)) in expansion.into_iter().enumerate() {
-                cands.push(Cand {
-                    cum: s.cum_logprob + lp,
-                    branch: s.branch,
-                    ci,
-                    token,
+                if g.sampling.hit_stop_with(&s.output, token) {
+                    stopped.push((token, lp));
+                } else {
+                    cands.push(Cand {
+                        cum: s.cum_logprob + lp,
+                        lp,
+                        branch: s.branch,
+                        ci,
+                        token,
+                    });
+                }
+            }
+            for (token, lp) in stopped {
+                let mut output = g.seqs[i].output.clone();
+                output.push(token);
+                let mut logprobs = g.seqs[i].logprobs.clone();
+                logprobs.push(lp);
+                let cum = g.seqs[i].cum_logprob + lp;
+                pool_new.push(Sequence {
+                    branch: g.next_branch,
+                    state: State::Finished(FinishReason::Stop),
+                    output,
+                    logprobs,
+                    handle: None,
+                    computed: 0,
+                    cum_logprob: cum,
+                    pending: None,
+                    first_token_ns: Some(now_ns),
+                    last_token_ns: Some(now_ns),
                 });
+                g.next_branch += 1;
             }
         }
         cands.sort_by(|a, b| {
@@ -344,16 +476,17 @@ impl OutputProcessor {
         let mut retired: Vec<usize> = Vec::new();
         for &i in &live {
             let branch = g.seqs[i].branch;
-            let mine: Vec<(i32, f64)> = cands
+            let mine: Vec<(i32, f64, f64)> = cands
                 .iter()
                 .filter(|c| c.branch == branch)
-                .map(|c| (c.token, c.cum))
+                .map(|c| (c.token, c.cum, c.lp))
                 .collect();
             if mine.is_empty() {
                 retired.push(i);
                 continue;
             }
             let base = g.seqs[i].output.clone();
+            let base_lps = g.seqs[i].logprobs.clone();
             {
                 let s = &mut g.seqs[i];
                 s.pending = None;
@@ -361,8 +494,9 @@ impl OutputProcessor {
             }
             // beam tokens do not stream mid-flight (histories are
             // unstable until the group completes), hence no event
-            apply_token(g, i, mine[0].0, now_ns, metrics, out, false);
-            for &(token, cum) in &mine[1..] {
+            apply_token(g, i, mine[0].0, mine[0].2, now_ns, metrics, out,
+                        false);
+            for &(token, cum, lp) in &mine[1..] {
                 // Mid-stream fork: the child shares the parent's entire
                 // decoded stream by refcount bump. A preempted parent has
                 // no handle — its child starts as a Waiting shell and
@@ -374,10 +508,13 @@ impl OutputProcessor {
                 };
                 let mut output = base.clone();
                 output.push(token);
+                let mut logprobs = base_lps.clone();
+                logprobs.push(lp);
                 children.push(Sequence {
                     branch: g.next_branch,
                     state,
                     output,
+                    logprobs,
                     handle,
                     computed,
                     cum_logprob: cum,
@@ -392,26 +529,57 @@ impl OutputProcessor {
                 out.appended += 1;
             }
         }
-        for &i in retired.iter().rev() {
-            let mut s = g.seqs.remove(i);
-            if let Some(h) = s.handle.take() {
-                metrics.beam_pruned_pages += kv.free_counting(h) as u64;
-            }
-            metrics.beam_prunes += 1;
-            out.beam_prunes += 1;
-        }
+        self.retire_live(g, kv, metrics, out, &retired);
         g.seqs.extend(children);
+        g.seqs.extend(pool_new);
+
+        // Trim the finished pool to the beam_width best hypotheses (they
+        // hold no pages; ranking uses the length-penalized final score,
+        // ties toward the lower branch id).
+        let fins: Vec<usize> = (0..g.seqs.len())
+            .filter(|&i| g.seqs[i].is_finished())
+            .collect();
+        if fins.len() > beam_width {
+            let mut order = fins;
+            order.sort_by(|&a, &b| {
+                g.final_score(&g.seqs[b])
+                    .total_cmp(&g.final_score(&g.seqs[a]))
+                    .then(g.seqs[a].branch.cmp(&g.seqs[b].branch))
+            });
+            let mut drop: Vec<usize> = order.split_off(beam_width);
+            drop.sort_unstable();
+            for &i in drop.iter().rev() {
+                let mut s = g.seqs.remove(i);
+                if let Some(h) = s.handle.take() {
+                    kv.free(h); // defensive; pool entries are pageless
+                }
+            }
+        }
+        // Account the pool hypotheses that *survived* the trim (children
+        // carry ids past `pool_start` too, but are never finished): only
+        // now did their final token become visible output.
+        for s in &g.seqs {
+            if s.is_finished() && s.branch >= pool_start {
+                out.finished.push((g.id, s.branch, FinishReason::Stop));
+                metrics.beam_finished_hyps += 1;
+                metrics.stop_finishes += 1;
+                out.appended += 1;
+            }
+        }
         g.forked = true;
+        g.self_preempts = 0;
     }
 }
 
-/// Append an accepted token to a branch: output push, timestamps,
-/// inter-token latency, append accounting, and — when `stream` is set —
-/// an immediate [`TokenEvent`].
+/// Append an accepted token to a branch: output + logprob push,
+/// timestamps, inter-token latency, append accounting, and — when
+/// `stream` is set — an immediate [`TokenEvent`] carrying the logprob.
+#[allow(clippy::too_many_arguments)]
 fn apply_token(
     g: &mut SequenceGroup,
     pos: usize,
     token: i32,
+    lp: f64,
     now_ns: u64,
     metrics: &mut EngineMetrics,
     out: &mut StepOutputs,
@@ -420,6 +588,7 @@ fn apply_token(
     let id = g.id;
     let s = &mut g.seqs[pos];
     s.output.push(token);
+    s.logprobs.push(lp);
     out.appended += 1;
     if let Some(prev) = s.last_token_ns {
         metrics
@@ -436,6 +605,7 @@ fn apply_token(
             branch: s.branch,
             token,
             position: s.output.len() - 1,
+            logprob: lp,
         });
     }
     if g.first_token_ns.is_none() {

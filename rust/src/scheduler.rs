@@ -72,6 +72,21 @@ pub enum FinishReason {
     /// Generated `max_new_tokens` (the model length limit is enforced up
     /// front: `Engine::add_group` clamps `max_new_tokens` to what fits).
     Length,
+    /// Generated output hit a stop condition
+    /// ([`crate::config::SamplingParams::hit_stop`]): a stop token id or
+    /// a stop sequence suffix. The matched tokens stay in the output.
+    Stop,
+}
+
+impl FinishReason {
+    /// Wire-protocol name of the reason (the `finish_reason` field of
+    /// the server's `done` event).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FinishReason::Length => "length",
+            FinishReason::Stop => "stop",
+        }
+    }
 }
 
 /// Lifecycle of one branch of a group.
@@ -105,6 +120,11 @@ pub struct Sequence {
     pub branch: usize,
     pub state: State,
     pub output: Vec<i32>,
+    /// Per-token logprob proxies, aligned index-for-index with `output`
+    /// (parallel mode: the proxy of the applied token; beam mode: the
+    /// candidate score the hypothesis was selected with). Streamed on
+    /// every `token` event.
+    pub logprobs: Vec<f64>,
     /// KV handle, valid while Running.
     pub handle: Option<SeqHandle>,
     /// Tokens of (prompt + output) whose KV is already computed.
@@ -125,6 +145,7 @@ impl Sequence {
             branch,
             state: State::Waiting,
             output: Vec::new(),
+            logprobs: Vec::new(),
             handle: None,
             computed: 0,
             cum_logprob: 0.0,
@@ -136,6 +157,14 @@ impl Sequence {
 
     pub fn is_finished(&self) -> bool {
         matches!(self.state, State::Finished(_))
+    }
+
+    /// Why the branch finished; `None` while it is still live.
+    pub fn finish_reason(&self) -> Option<FinishReason> {
+        match self.state {
+            State::Finished(r) => Some(r),
+            _ => None,
+        }
     }
 }
 
@@ -159,6 +188,10 @@ pub struct SequenceGroup {
     /// Prefix-cache hit length at first admission (server observability).
     pub cached_tokens: usize,
     pub(crate) admitted: bool,
+    /// Parked-branch self-preemptions since the last beam expansion (the
+    /// livelock guard for a pool that can never fit the group — see
+    /// `Scheduler::self_preempt_parked`); reset on expansion progress.
+    pub(crate) self_preempts: u32,
     pub arrival_seq: u64,
     // ----- telemetry -----
     pub enqueue_ns: u64,
@@ -224,6 +257,28 @@ impl SequenceGroup {
         match self.sampling.mode {
             crate::config::SamplingMode::Beam { length_penalty, .. } => {
                 let len = seq.output.len().max(1) as f64;
+                seq.cum_logprob / len.powf(length_penalty)
+            }
+            crate::config::SamplingMode::Parallel => 0.0,
+        }
+    }
+
+    /// Most optimistic final score a *live* beam hypothesis can still
+    /// reach. Candidate logprobs are strictly negative, so `cum_logprob`
+    /// only decreases; for a positive length penalty the bound assumes
+    /// the cumulative score survives unchanged to `max_new_tokens` (the
+    /// largest divisor helps a negative numerator), otherwise the current
+    /// length is already optimal. This drives the early-termination
+    /// cutoff: once the finished pool's worst score beats every live
+    /// hypothesis's bound, the group can never improve and terminates.
+    pub fn best_attainable(&self, seq: &Sequence) -> f64 {
+        match self.sampling.mode {
+            crate::config::SamplingMode::Beam { length_penalty, .. } => {
+                let len = if length_penalty > 0.0 {
+                    self.max_new_tokens.max(1) as f64
+                } else {
+                    seq.output.len().max(1) as f64
+                };
                 seq.cum_logprob / len.powf(length_penalty)
             }
             crate::config::SamplingMode::Parallel => 0.0,
@@ -308,6 +363,9 @@ pub struct SchedulerStats {
     pub cached_tokens: u64,
     /// Branches created by copy-on-write forks (n-1 per forked group).
     pub forked_branches: u64,
+    /// Parked beam branches that self-preempted under extreme memory
+    /// pressure (see [`Scheduler::schedule`]'s retry loop).
+    pub self_preemptions: u64,
 }
 
 pub struct Scheduler {
@@ -361,6 +419,7 @@ impl Scheduler {
             next_branch: 1,
             cached_tokens: 0,
             admitted: false,
+            self_preempts: 0,
             arrival_seq: self.next_arrival,
             enqueue_ns: now_ns,
             first_token_ns: None,
@@ -405,9 +464,38 @@ impl Scheduler {
     /// Build the next batch. `kv` is mutated: pages are allocated for the
     /// scheduled work, copy-on-write splits are performed for branches
     /// about to write into shared pages, and preempted groups are freed.
+    ///
+    /// When a pass ends *empty* with work pending, a beam branch parked
+    /// on a [`PendingSample`] may be pinning the pool while a sibling
+    /// needs pages (a blocked re-admission, or a `grow` with no victim
+    /// left). One parked branch self-preempts — its sample is a pure
+    /// function of its history and replays after re-prefill — and the
+    /// pass runs again with the freed pages, so single-group OOM
+    /// degrades to recompute instead of wedging the engine.
     pub fn schedule(&mut self, kv: &mut KvCacheManager) -> ScheduledBatch {
         kv.advance_step();
         let mut batch = ScheduledBatch::default();
+        loop {
+            self.schedule_pass(kv, &mut batch);
+            if !batch.is_empty() || !self.has_unfinished()
+                || !self.self_preempt_parked(kv)
+            {
+                break;
+            }
+        }
+        self.stats.steps += 1;
+        self.stats.scheduled_tokens += batch.total_new_tokens() as u64;
+        batch
+    }
+
+    /// One scheduling pass: continuations (phase 1) then admissions
+    /// (phase 2). Appends to `batch`; the retry loop in
+    /// [`Scheduler::schedule`] may run it more than once, but only while
+    /// `batch` is still empty, so rows are never duplicated (CoW pairs
+    /// and preemptions recorded by a failed pass are kept — their page
+    /// effects already happened).
+    fn schedule_pass(&mut self, kv: &mut KvCacheManager,
+                     batch: &mut ScheduledBatch) {
         let mut budget = self.cfg.max_batched_tokens;
         // Groups with a branch in the batch: protected from preemption —
         // their metadata is about to be built against the current block
@@ -477,7 +565,7 @@ impl Scheduler {
                     let current = self.running[gi].id;
                     match self.pick_victim(kv, current, &scheduled) {
                         Some(j) => {
-                            self.preempt(j, kv, &mut batch);
+                            self.preempt(j, kv, batch);
                             if j < gi {
                                 gi -= 1;
                             }
@@ -519,14 +607,50 @@ impl Scheduler {
         // re-admitted preemption victim) resume first, then whole groups
         // from the queue in FCFS order.
         while budget > 0 && batch.seqs.len() < self.cfg.max_num_seqs {
-            if !self.admit_one(kv, &mut batch, &mut budget) {
+            if !self.admit_one(kv, batch, &mut budget) {
                 break;
             }
         }
+    }
 
-        self.stats.steps += 1;
-        self.stats.scheduled_tokens += batch.total_new_tokens() as u64;
-        batch
+    /// Parked-branch self-preemptions allowed per group between beam
+    /// expansions. A pool that can never hold the group's live set would
+    /// otherwise livelock through preempt → re-prefill → park cycles;
+    /// past the cap the scheduler stops intervening and the engine
+    /// surfaces the pool-too-small condition as "no progress".
+    const MAX_SELF_PREEMPTS: u32 = 8;
+
+    /// Free one parked beam branch's pages (state back to `Waiting`, KV
+    /// handle released, `computed` reset) so a blocked sibling can make
+    /// progress. The parked [`PendingSample`] is kept: it is a pure
+    /// function of the branch's unchanged history, so the group-wide
+    /// expansion can still run while this branch re-prefills later.
+    /// Returns false when no eligible branch exists.
+    fn self_preempt_parked(&mut self, kv: &mut KvCacheManager) -> bool {
+        for g in self.running.iter_mut() {
+            if g.self_preempts >= Self::MAX_SELF_PREEMPTS {
+                continue;
+            }
+            let plen = g.prompt.len();
+            let parked = g.seqs.iter_mut().find(|s| {
+                s.state == State::Running
+                    && s.pending.is_some()
+                    && s.handle.is_some()
+                    && s.computed >= plen + s.output.len()
+            });
+            if let Some(s) = parked {
+                if let Some(h) = s.handle.take() {
+                    kv.free(h);
+                }
+                s.state = State::Waiting;
+                s.computed = 0;
+                g.self_preempts += 1;
+                g.preemptions += 1;
+                self.stats.self_preemptions += 1;
+                return true;
+            }
+        }
+        false
     }
 
     /// Admit one waiting branch; returns false when nothing is admissible

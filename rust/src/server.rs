@@ -5,19 +5,26 @@
 //! engine loop interleaves request intake with `step()` — continuous
 //! batching means new requests join the running batch at the next step.
 //!
-//! Protocol (one JSON object per line). `n`, `seed` and `temperature`
-//! are optional (parallel sampling), as are `beam_width` and
+//! Protocol (one JSON object per line; the field-by-field reference
+//! lives in `docs/WIRE_PROTOCOL.md`). `n`, `seed` and `temperature` are
+//! optional (parallel sampling), as are `beam_width` and
 //! `length_penalty` (beam search; `beam_width` takes precedence over
-//! `n`). `cached_tokens` reports the prompt's prefix-cache hit length at
+//! `n`) and the stop conditions `stop_token_ids` / `stop_sequences`
+//! (arrays; a branch finishes the step its generated output ends in
+//! one). `cached_tokens` reports the prompt's prefix-cache hit length at
 //! admission; `score` is the hypothesis's length-penalized cumulative
-//! logprob proxy (0 outside beam mode).
+//! logprob proxy (0 outside beam mode); every `token` event carries the
+//! token's `logprob` proxy, and `done` carries the branch's
+//! `finish_reason` ("length" or "stop").
 //!   → {"prompt": [1,2,3], "max_new_tokens": 8, "n": 2, "seed": 7,
-//!      "temperature": 0.8}
+//!      "temperature": 0.8, "stop_token_ids": [42]}
 //!   → {"prompt": [1,2,3], "max_new_tokens": 8, "beam_width": 3,
-//!      "length_penalty": 1.0, "seed": 7}
-//!   ← {"event":"token","id":1,"branch":0,"token":42,"position":0}
+//!      "length_penalty": 1.0, "seed": 7, "stop_sequences": [[4, 5]]}
+//!   ← {"event":"token","id":1,"branch":0,"token":42,"position":0,
+//!      "logprob":-3.9}
 //!   ← {"event":"done","id":1,"branch":0,"tokens":[42,...],
-//!      "ttft_ms":1.2,"total_ms":9.9,"cached_tokens":32,"score":0}
+//!      "ttft_ms":1.2,"total_ms":9.9,"cached_tokens":32,"score":0,
+//!      "finish_reason":"stop"}
 //!
 //! # Event-ordering guarantees
 //!
@@ -62,7 +69,13 @@ struct Incoming {
 
 /// Events streamed back to the connection writer.
 enum Outgoing {
-    Token { id: RequestId, branch: usize, token: i32, position: usize },
+    Token {
+        id: RequestId,
+        branch: usize,
+        token: i32,
+        position: usize,
+        logprob: f64,
+    },
     Done {
         id: RequestId,
         branch: usize,
@@ -71,22 +84,24 @@ enum Outgoing {
         total_ms: f64,
         cached_tokens: usize,
         score: f64,
+        finish_reason: &'static str,
     },
     Error(String),
 }
 
 fn event_json(ev: &Outgoing) -> String {
     match ev {
-        Outgoing::Token { id, branch, token, position } => obj(vec![
+        Outgoing::Token { id, branch, token, position, logprob } => obj(vec![
             ("event", json::s("token")),
             ("id", num(*id as f64)),
             ("branch", num(*branch as f64)),
             ("token", num(*token as f64)),
             ("position", num(*position as f64)),
+            ("logprob", num(*logprob)),
         ])
         .to_string(),
         Outgoing::Done { id, branch, tokens, ttft_ms, total_ms,
-                         cached_tokens, score } => obj(vec![
+                         cached_tokens, score, finish_reason } => obj(vec![
             ("event", json::s("done")),
             ("id", num(*id as f64)),
             ("branch", num(*branch as f64)),
@@ -95,6 +110,7 @@ fn event_json(ev: &Outgoing) -> String {
             ("total_ms", num(*total_ms)),
             ("cached_tokens", num(*cached_tokens as f64)),
             ("score", num(*score)),
+            ("finish_reason", json::s(finish_reason)),
         ])
         .to_string(),
         Outgoing::Error(msg) => obj(vec![
@@ -180,6 +196,20 @@ fn parse_request(line: &str) -> Result<(Vec<i32>, usize, SamplingParams)> {
         .unwrap_or(0) as u64;
     let beam_width = v.get("beam_width").map(|x| x.as_usize())
         .transpose()?.unwrap_or(0);
+    let stop_token_ids: Vec<i32> = match v.get("stop_token_ids") {
+        Some(x) => x.as_arr()?.iter()
+            .map(|t| Ok(t.as_i64()? as i32))
+            .collect::<Result<_>>()?,
+        None => Vec::new(),
+    };
+    let stop_sequences: Vec<Vec<i32>> = match v.get("stop_sequences") {
+        Some(x) => x.as_arr()?.iter()
+            .map(|s| s.as_arr()?.iter()
+                .map(|t| Ok(t.as_i64()? as i32))
+                .collect::<Result<_>>())
+            .collect::<Result<_>>()?,
+        None => Vec::new(),
+    };
     let sampling = if beam_width > 0 {
         let length_penalty = v.get("length_penalty").map(|x| x.as_f64())
             .transpose()?.unwrap_or(1.0);
@@ -192,7 +222,9 @@ fn parse_request(line: &str) -> Result<(Vec<i32>, usize, SamplingParams)> {
                 .transpose()?.unwrap_or(0.0),
             ..Default::default()
         }
-    };
+    }
+    .with_stop_tokens(stop_token_ids)
+    .with_stop_sequences(stop_sequences);
     Ok((prompt, max_new, sampling))
 }
 
@@ -253,6 +285,7 @@ fn engine_loop(artifacts_dir: std::path::PathBuf, ecfg: EngineConfig,
                         branch: t.branch,
                         token: t.token,
                         position: t.position,
+                        logprob: t.logprob,
                     });
                 }
             }
@@ -279,6 +312,9 @@ fn engine_loop(artifacts_dir: std::path::PathBuf, ecfg: EngineConfig,
                         total_ms,
                         cached_tokens: g.cached_tokens,
                         score: g.final_score(s),
+                        finish_reason: s
+                            .finish_reason()
+                            .map_or("length", |r| r.as_str()),
                     });
                 }
                 completed += 1;
@@ -304,6 +340,8 @@ pub struct Completion {
     pub cached_tokens: usize,
     /// Length-penalized hypothesis score (beam mode; 0 otherwise).
     pub score: f64,
+    /// Why the branch finished: "length" or "stop".
+    pub finish_reason: String,
 }
 
 impl Client {
@@ -337,6 +375,18 @@ impl Client {
             fields.push(("beam_width", num(beam_width as f64)));
             fields.push(("length_penalty", num(length_penalty)));
         }
+        if !sampling.stop_token_ids.is_empty() {
+            fields.push(("stop_token_ids", Value::Arr(
+                sampling.stop_token_ids.iter()
+                    .map(|t| num(*t as f64)).collect())));
+        }
+        if !sampling.stop_sequences.is_empty() {
+            fields.push(("stop_sequences", Value::Arr(
+                sampling.stop_sequences.iter()
+                    .map(|s| Value::Arr(
+                        s.iter().map(|t| num(*t as f64)).collect()))
+                    .collect())));
+        }
         let req = obj(fields);
         writeln!(self.writer, "{req}")?;
         self.writer.flush()?;
@@ -366,6 +416,10 @@ impl Client {
                             .map(|x| x.as_usize()).transpose()?.unwrap_or(0),
                         score: v.get("score").map(|x| x.as_f64())
                             .transpose()?.unwrap_or(0.0),
+                        finish_reason: v.get("finish_reason")
+                            .map(|x| x.as_str().map(|s| s.to_string()))
+                            .transpose()?
+                            .unwrap_or_else(|| "length".to_string()),
                     });
                 }
                 "error" => anyhow::bail!("server error: {}",
@@ -438,13 +492,31 @@ mod tests {
         assert_eq!(s.mode,
                    crate::config::SamplingMode::Beam {
                        beam_width: 3, length_penalty: 0.7 });
+        // stop conditions ride along on both parallel and beam requests
+        let (_, _, s) = parse_request(
+            r#"{"prompt": [5], "stop_token_ids": [7, 9],
+                "stop_sequences": [[1, 2], [3]]}"#,
+        )
+        .unwrap();
+        assert_eq!(s.stop_token_ids, vec![7, 9]);
+        assert_eq!(s.stop_sequences, vec![vec![1, 2], vec![3]]);
+        let (_, _, s) = parse_request(
+            r#"{"prompt": [5], "beam_width": 2, "stop_token_ids": [4]}"#,
+        )
+        .unwrap();
+        assert!(s.is_beam());
+        assert_eq!(s.stop_token_ids, vec![4]);
+        assert!(parse_request(
+            r#"{"prompt": [5], "stop_sequences": [7]}"#).is_err(),
+            "stop_sequences entries must be arrays");
     }
 
     #[test]
     fn event_serialization_roundtrips() {
         let ev = Outgoing::Done {
             id: 3, branch: 1, tokens: vec![7, 8],
-            ttft_ms: 1.5, total_ms: 2.5, cached_tokens: 32, score: -1.25 };
+            ttft_ms: 1.5, total_ms: 2.5, cached_tokens: 32, score: -1.25,
+            finish_reason: "stop" };
         let v = json::parse(&event_json(&ev)).unwrap();
         assert_eq!(v.str_field("event").unwrap(), "done");
         assert_eq!(v.req("tokens").unwrap().as_arr().unwrap().len(), 2);
@@ -452,10 +524,14 @@ mod tests {
         assert_eq!(v.req("cached_tokens").unwrap().as_usize().unwrap(), 32);
         assert!((v.req("score").unwrap().as_f64().unwrap() + 1.25).abs()
                 < 1e-12);
-        let tok = Outgoing::Token { id: 3, branch: 0, token: 42, position: 5 };
+        assert_eq!(v.str_field("finish_reason").unwrap(), "stop");
+        let tok = Outgoing::Token { id: 3, branch: 0, token: 42, position: 5,
+                                    logprob: -3.25 };
         let v = json::parse(&event_json(&tok)).unwrap();
         assert_eq!(v.str_field("event").unwrap(), "token");
         assert_eq!(v.req("position").unwrap().as_usize().unwrap(), 5);
+        assert!((v.req("logprob").unwrap().as_f64().unwrap() + 3.25).abs()
+                < 1e-12);
     }
 
     /// Full loop: spawn a server bound to an ephemeral port, run two
@@ -480,6 +556,7 @@ mod tests {
         let a = c.generate(&[5, 9, 13], 4).unwrap();
         assert_eq!(a.tokens.len(), 4);
         assert_eq!(a.branch, 0);
+        assert_eq!(a.finish_reason, "length");
         assert!(a.total_ms >= a.ttft_ms);
         let b = c.generate(&[5, 9, 13], 4).unwrap();
         assert_eq!(a.tokens, b.tokens, "same prompt, same greedy tokens");
@@ -560,6 +637,9 @@ mod tests {
                     let b = v.req("branch").unwrap().as_usize().unwrap();
                     let p = v.req("position").unwrap().as_usize().unwrap();
                     let t = v.req("token").unwrap().as_i64().unwrap() as i32;
+                    let lp = v.req("logprob").unwrap().as_f64().unwrap();
+                    assert!(lp <= 1e-12 && lp.is_finite(),
+                            "every token event carries a sane logprob");
                     assert!(!done.contains_key(&b),
                             "token after done for branch {b}");
                     assert!(p >= last_global_pos,

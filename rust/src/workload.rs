@@ -218,6 +218,10 @@ pub struct BestOfN {
     pub tail: usize,
     pub max_new_tokens: usize,
     pub vocab: usize,
+    /// Stop token ids attached to every request (empty = run to length);
+    /// branches finishing early is the realistic mix termination-aware
+    /// scheduling must survive.
+    pub stop_token_ids: Vec<i32>,
 }
 
 impl BestOfN {
@@ -235,7 +239,8 @@ impl BestOfN {
                         seed: i as u64 + 1,
                         temperature: 0.7,
                         ..Default::default()
-                    },
+                    }
+                    .with_stop_tokens(self.stop_token_ids.clone()),
                     max_new_tokens: self.max_new_tokens,
                 }
             })
@@ -259,6 +264,11 @@ pub struct BeamSearchLoad {
     pub tail: usize,
     pub max_new_tokens: usize,
     pub vocab: usize,
+    /// Stop token ids attached to every request (empty = run to length).
+    /// With stops, hypotheses enter the finished pool at different
+    /// depths and groups early-terminate — the ragged decode shape the
+    /// termination subsystem exists for.
+    pub stop_token_ids: Vec<i32>,
 }
 
 impl BeamSearchLoad {
@@ -272,7 +282,8 @@ impl BeamSearchLoad {
                 GroupRequest {
                     prompt,
                     sampling: SamplingParams::beam(
-                        self.beam_width, self.length_penalty, i as u64 + 1),
+                        self.beam_width, self.length_penalty, i as u64 + 1)
+                        .with_stop_tokens(self.stop_token_ids.clone()),
                     max_new_tokens: self.max_new_tokens,
                 }
             })
@@ -348,6 +359,7 @@ mod tests {
             tail: 8,
             max_new_tokens: 6,
             vocab: 2048,
+            stop_token_ids: vec![17],
         };
         let mut rng = Rng::new(5);
         let reqs = w.requests(6, &mut rng);
@@ -358,6 +370,8 @@ mod tests {
                        "system prefix is shared");
             assert_eq!(r.sampling.n, 4);
             assert!(!r.sampling.is_greedy());
+            assert_eq!(r.sampling.stop_token_ids, vec![17],
+                       "stop ids ride along on every request");
         }
         assert_ne!(reqs[0].prompt[32..], reqs[1].prompt[32..],
                    "user tails are unique");
@@ -376,6 +390,7 @@ mod tests {
             tail: 8,
             max_new_tokens: 6,
             vocab: 2048,
+            stop_token_ids: Vec::new(),
         };
         let mut rng = Rng::new(9);
         let reqs = w.requests(4, &mut rng);

@@ -65,7 +65,7 @@ fn beam_matches_exhaustive_scoring_oracle() {
 
         // engine run
         let mut e = engine_on(&rt, 128, 8);
-        e.add_group(prompt.clone(), depth, sampling).unwrap();
+        e.add_group(prompt.clone(), depth, sampling.clone()).unwrap();
         let fin = e.run_to_completion().unwrap();
         let g = &fin[0];
         assert_eq!(g.seqs.len(), width);
@@ -218,7 +218,7 @@ fn random_beam_mixes_match_solo_runs() {
 
         let mut e = engine(128, 8);
         for (p, sp, mx) in &specs {
-            e.add_group(p.clone(), *mx, *sp).unwrap();
+            e.add_group(p.clone(), *mx, sp.clone()).unwrap();
         }
         let mut fin = e.run_to_completion().unwrap();
         fin.sort_by_key(|g| g.id);
@@ -227,7 +227,7 @@ fn random_beam_mixes_match_solo_runs() {
 
         for (i, (p, sp, mx)) in specs.iter().enumerate() {
             let mut solo = engine(128, 8);
-            solo.add_group(p.clone(), *mx, *sp).unwrap();
+            solo.add_group(p.clone(), *mx, sp.clone()).unwrap();
             let s = solo.run_to_completion().unwrap();
             assert_eq!(fin[i].seqs.len(), s[0].seqs.len(),
                        "seed {seed}, group {i}: branch count diverged");
@@ -289,12 +289,14 @@ fn beam_workload_exercises_sharing() {
         tail: 4,
         max_new_tokens: 4,
         vocab: 2048,
+        stop_token_ids: Vec::new(),
     };
     let reqs = w.requests(3, &mut Rng::new(13));
     let mut e = engine(128, 8);
     let mut fin = Vec::new();
     for r in &reqs {
-        e.add_group(r.prompt.clone(), r.max_new_tokens, r.sampling).unwrap();
+        e.add_group(r.prompt.clone(), r.max_new_tokens, r.sampling.clone())
+            .unwrap();
         fin.extend(e.run_to_completion().unwrap());
     }
     assert_eq!(fin.len(), 3);

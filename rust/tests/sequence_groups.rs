@@ -157,7 +157,7 @@ fn random_group_mixes_match_solo_runs() {
 
         let mut e = engine(128, 8);
         for (p, sp, mx) in &specs {
-            e.add_group(p.clone(), *mx, *sp).unwrap();
+            e.add_group(p.clone(), *mx, sp.clone()).unwrap();
         }
         let mut fin = e.run_to_completion().unwrap();
         fin.sort_by_key(|g| g.id);
@@ -166,7 +166,7 @@ fn random_group_mixes_match_solo_runs() {
 
         for (i, (p, sp, mx)) in specs.iter().enumerate() {
             let mut solo = engine(128, 8);
-            solo.add_group(p.clone(), *mx, *sp).unwrap();
+            solo.add_group(p.clone(), *mx, sp.clone()).unwrap();
             let s = solo.run_to_completion().unwrap();
             assert_eq!(fin[i].seqs.len(), s[0].seqs.len());
             for b in 0..s[0].seqs.len() {
@@ -188,6 +188,7 @@ fn best_of_n_workload_exercises_sharing() {
         tail: 4,
         max_new_tokens: 4,
         vocab: 2048,
+        stop_token_ids: Vec::new(),
     };
     let reqs = w.requests(3, &mut Rng::new(11));
     // back-to-back submissions: later groups find the shared 32-token
@@ -195,7 +196,7 @@ fn best_of_n_workload_exercises_sharing() {
     let mut e = engine(128, 8);
     let mut fin = Vec::new();
     for r in &reqs {
-        e.add_group(r.prompt.clone(), r.max_new_tokens, r.sampling)
+        e.add_group(r.prompt.clone(), r.max_new_tokens, r.sampling.clone())
             .unwrap();
         fin.extend(e.run_to_completion().unwrap());
     }

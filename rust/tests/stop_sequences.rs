@@ -1,0 +1,493 @@
+//! Integration tests for the generation-lifecycle subsystem: stop
+//! tokens / stop sequences, `finish_reason` propagation, the beam
+//! finished-hypothesis pool with the early-termination cutoff, and
+//! scheduler self-preemption of parked beam branches.
+//!
+//! Contract points:
+//!   (a) stop conditions check the *generated* suffix only: a multi-token
+//!       stop sequence matches across step boundaries, a stop inside the
+//!       prompt never terminates, and outputs truncate at the first hit
+//!       with `FinishReason::Stop` (vs `Length`), per branch of a group;
+//!   (b) a beam group with stop conditions terminates *before*
+//!       `max_new_tokens` once the finished pool's worst score beats
+//!       every live hypothesis's attainable bound, reclaims the live
+//!       branches' pages that same step, and its surviving hypotheses
+//!       match an exhaustive-scoring oracle that replays the pool +
+//!       cutoff semantics with no engine machinery;
+//!   (c) the wire protocol carries per-token `logprob` on every `token`
+//!       event and `finish_reason` on every `done`;
+//!   (d) a beam branch parked on a pending sample self-preempts under
+//!       extreme memory pressure instead of wedging the engine, while a
+//!       pool that can never fit the group still fails gracefully.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::rc::Rc;
+
+use triton_anatomy::config::{EngineConfig, SamplingParams};
+use triton_anatomy::engine::Engine;
+use triton_anatomy::json;
+use triton_anatomy::runtime::Runtime;
+use triton_anatomy::scheduler::FinishReason;
+use triton_anatomy::server::serve;
+
+fn engine_on(rt: &Rc<Runtime>, max_tokens: usize, max_seqs: usize) -> Engine {
+    Engine::new(
+        rt.clone(),
+        EngineConfig {
+            max_batched_tokens: max_tokens,
+            max_num_seqs: max_seqs,
+            ..Default::default()
+        },
+    )
+    .unwrap()
+}
+
+fn engine(max_tokens: usize, max_seqs: usize) -> Engine {
+    let rt = Rc::new(
+        Runtime::load_dir(triton_anatomy::default_artifacts_dir()).unwrap(),
+    );
+    engine_on(&rt, max_tokens, max_seqs)
+}
+
+/// Greedy reference stream for a prompt (stop tests probe it first, then
+/// pick stop tokens/sequences from the known continuation).
+fn greedy_ref(prompt: &[i32], max_new: usize) -> Vec<i32> {
+    let mut e = engine(128, 4);
+    e.add_request(prompt.to_vec(), max_new).unwrap();
+    e.run_to_completion().unwrap()[0].output().to_vec()
+}
+
+/// (a) A multi-token stop sequence whose tokens arrive in *different
+/// engine steps* (greedy decode emits one token per step) still matches:
+/// the suffix check runs over the whole generated output.
+#[test]
+fn stop_sequence_straddles_step_boundaries() {
+    let prompt: Vec<i32> = (60..80).collect();
+    let reference = greedy_ref(&prompt, 8);
+    let stop_seq = reference[1..4].to_vec(); // generated steps 2..4
+
+    let mut e = engine(128, 4);
+    let sampling =
+        SamplingParams::default().with_stop_sequences(vec![stop_seq]);
+    e.add_group(prompt, 8, sampling).unwrap();
+    let fin = e.run_to_completion().unwrap();
+    let s = &fin[0].seqs[0];
+    assert_eq!(s.output, reference[..4],
+               "stops right after the sequence completes, tokens kept");
+    assert_eq!(s.finish_reason(), Some(FinishReason::Stop));
+    assert_eq!(e.metrics.stop_finishes, 1);
+    assert_eq!(e.free_page_fraction(), 1.0);
+}
+
+/// (a) Stop conditions never look at the prompt: a stop sequence (and a
+/// stop token id) lifted straight from the prompt must not terminate.
+#[test]
+fn stop_in_prompt_is_ignored() {
+    let prompt: Vec<i32> = (60..80).collect();
+    let reference = greedy_ref(&prompt, 6);
+    assert!(!reference.contains(&prompt[0]),
+            "calibration: the greedy stream must not emit the probe");
+
+    let mut e = engine(128, 4);
+    let sampling = SamplingParams::default()
+        .with_stop_tokens(vec![prompt[0]])
+        .with_stop_sequences(vec![prompt[1..4].to_vec()]);
+    e.add_group(prompt, 6, sampling).unwrap();
+    let fin = e.run_to_completion().unwrap();
+    let s = &fin[0].seqs[0];
+    assert_eq!(s.output, reference, "generation is unaffected");
+    assert_eq!(s.finish_reason(), Some(FinishReason::Length));
+    assert_eq!(e.metrics.stop_finishes, 0);
+}
+
+/// (a) `finish_reason` is per *branch*: in an n=2 group one branch stops
+/// early while its sibling runs to the length limit, and the stopped
+/// branch's pages come back while the sibling still decodes.
+#[test]
+fn mixed_finish_reasons_across_parallel_branches() {
+    let prompt: Vec<i32> = (60..80).collect();
+    let sampling = || SamplingParams {
+        n: 2, seed: 5, temperature: 0.7, ..Default::default()
+    };
+    let mut probe = engine(128, 8);
+    probe.add_group(prompt.clone(), 8, sampling()).unwrap();
+    let fin = probe.run_to_completion().unwrap();
+    let ref0 = fin[0].seq(0).output.clone();
+    let ref1 = fin[0].seq(1).output.clone();
+    let stop = *ref1[..3]
+        .iter()
+        .find(|t| !ref0.contains(t))
+        .expect("calibration: branch 1 must diverge early");
+    let cut = ref1.iter().position(|&t| t == stop).unwrap() + 1;
+
+    let mut e = engine(128, 8);
+    e.add_group(prompt, 8, sampling().with_stop_tokens(vec![stop]))
+        .unwrap();
+    let fin = e.run_to_completion().unwrap();
+    let g = &fin[0];
+    assert_eq!(g.seq(1).output, ref1[..cut], "stopped branch truncated");
+    assert_eq!(g.seq(1).finish_reason(), Some(FinishReason::Stop));
+    assert_eq!(g.seq(0).output, ref0, "sibling decodes to the limit");
+    assert_eq!(g.seq(0).finish_reason(), Some(FinishReason::Length));
+    assert_eq!(e.metrics.stop_finishes, 1);
+    assert_eq!(e.free_page_fraction(), 1.0);
+}
+
+/// (a) A stop on branch 0's very first token must not wedge the group:
+/// the parallel fork happens before stop checks, so the siblings are
+/// created and keep decoding.
+#[test]
+fn first_token_stop_still_forks_the_group() {
+    let prompt: Vec<i32> = (7..27).collect();
+    let sampling = || SamplingParams {
+        n: 2, seed: 3, temperature: 0.5, ..Default::default()
+    };
+    let mut probe = engine(128, 8);
+    probe.add_group(prompt.clone(), 4, sampling()).unwrap();
+    let fin = probe.run_to_completion().unwrap();
+    let stop = fin[0].seq(0).output[0];
+    let ref1 = fin[0].seq(1).output.clone();
+    assert!(!ref1.contains(&stop), "calibration: branch 1 must survive");
+
+    let mut e = engine(128, 8);
+    e.add_group(prompt, 4, sampling().with_stop_tokens(vec![stop]))
+        .unwrap();
+    let fin = e.run_to_completion().unwrap();
+    let g = &fin[0];
+    assert_eq!(g.seqs.len(), 2, "the group still forked to full width");
+    assert_eq!(g.seq(0).output, vec![stop]);
+    assert_eq!(g.seq(0).finish_reason(), Some(FinishReason::Stop));
+    assert_eq!(g.seq(1).output, ref1);
+    assert_eq!(g.seq(1).finish_reason(), Some(FinishReason::Length));
+}
+
+/// (b) Beam + stop tokens: the finished pool fills, the "best live
+/// cannot beat worst finished" cutoff fires well before
+/// `max_new_tokens`, the retired live branches' pages are reclaimed *at
+/// that step*, and the run is deterministic.
+#[test]
+fn beam_early_termination_reclaims_pages_at_the_cutoff_step() {
+    let stops: Vec<i32> = (0..2048).step_by(5).collect();
+    let run = || {
+        let mut e = engine(128, 8);
+        e.add_group(
+            (10..30).collect(),
+            64,
+            SamplingParams::beam(2, 0.0, 7).with_stop_tokens(stops.clone()),
+        )
+        .unwrap();
+        let mut cutoff_step_free: Option<f64> = None;
+        let mut steps = 0usize;
+        while e.has_unfinished() {
+            e.step().unwrap();
+            steps += 1;
+            if e.metrics.beam_early_terminations == 1
+                && cutoff_step_free.is_none()
+            {
+                cutoff_step_free = Some(e.free_page_fraction());
+            }
+            assert!(steps < 200, "runaway");
+        }
+        let fin = e.take_finished();
+        (fin, cutoff_step_free, e)
+    };
+    let (fin, cutoff_step_free, e) = run();
+    let g = &fin[0];
+    assert_eq!(e.metrics.beam_early_terminations, 1, "cutoff fired");
+    assert!(e.metrics.beam_finished_hyps >= 2, "pool filled by stops");
+    assert_eq!(g.seqs.len(), 2, "exactly beam_width hypotheses survive");
+    for s in &g.seqs {
+        assert!(s.output.len() < 64,
+                "terminated before max_new_tokens (len {})", s.output.len());
+        assert_eq!(s.finish_reason(), Some(FinishReason::Stop));
+        assert!(stops.contains(s.output.last().unwrap()),
+                "hypotheses end with a stop token");
+        assert_eq!(s.logprobs.len(), s.output.len());
+        let sum: f64 = s.logprobs.iter().sum();
+        assert!((sum - s.cum_logprob).abs() < 1e-9,
+                "per-token logprobs sum to the cumulative score");
+    }
+    assert!(g.final_score(&g.seqs[0]) >= g.final_score(&g.seqs[1]),
+            "ranked best-first");
+    assert_eq!(cutoff_step_free, Some(1.0),
+               "live branches' pages reclaimed the step the cutoff fired");
+    let (fin2, _, _) = run();
+    let key = |g: &triton_anatomy::SequenceGroup| {
+        g.seqs.iter()
+            .map(|s| (s.output.clone(), s.cum_logprob))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(key(&fin[0]), key(&fin2[0]),
+               "early termination is deterministic");
+}
+
+/// The model's raw next token for an arbitrary history, via a fresh
+/// greedy engine over a shared runtime (greedy passes raw tokens through
+/// unsalted) — the oracle's probe.
+fn raw_next(rt: &Rc<Runtime>, history: &[i32]) -> i32 {
+    let mut e = engine_on(rt, 256, 2);
+    e.add_request(history.to_vec(), 1).unwrap();
+    e.run_to_completion().unwrap()[0].output()[0]
+}
+
+/// (b) Exhaustive-scoring oracle with stop semantics: plain beam search
+/// over candidate histories maintaining a finished pool (stop candidates
+/// enter it pageless, capped at the width's best) and the same
+/// early-termination cutoff — none of the engine's machinery. The
+/// engine's early-terminated groups must select the same hypotheses
+/// with the same scores and reasons.
+#[test]
+fn early_terminated_beams_match_exhaustive_oracle() {
+    let rt = Rc::new(
+        Runtime::load_dir(triton_anatomy::default_artifacts_dir()).unwrap(),
+    );
+    let configs: Vec<(usize, f64, u64, Vec<i32>)> = vec![
+        (2, 0.0, 7, (0..2048).step_by(5).collect()),
+        (3, 1.0, 11, (0..2048).step_by(3).collect()),
+        (2, 1.0, 5, (0..1024).collect()),
+    ];
+    for (width, penalty, seed, stops) in configs {
+        let prompt: Vec<i32> = (50..58).collect();
+        let max_new = 12usize;
+        let sampling = SamplingParams::beam(width, penalty, seed)
+            .with_stop_tokens(stops.clone());
+
+        // engine run
+        let mut e = engine_on(&rt, 128, 8);
+        e.add_group(prompt.clone(), max_new, sampling.clone()).unwrap();
+        let fin = e.run_to_completion().unwrap();
+        let engine_hyps: Vec<(Vec<i32>, f64, Option<FinishReason>)> = fin[0]
+            .seqs
+            .iter()
+            .map(|s| (s.output.clone(), s.cum_logprob, s.finish_reason()))
+            .collect();
+
+        // oracle run
+        #[derive(Clone)]
+        struct Hyp {
+            id: usize,
+            tokens: Vec<i32>,
+            cum: f64,
+            reason: FinishReason,
+        }
+        let score = |h: &Hyp| {
+            h.cum / (h.tokens.len().max(1) as f64).powf(penalty)
+        };
+        let attainable = |h: &Hyp| {
+            let len = if penalty > 0.0 { max_new } else { h.tokens.len().max(1) };
+            h.cum / (len as f64).powf(penalty)
+        };
+        let mut live = vec![Hyp {
+            id: 0, tokens: Vec::new(), cum: 0.0, reason: FinishReason::Length,
+        }];
+        let mut pool: Vec<Hyp> = Vec::new();
+        let mut next_id = 1usize;
+        for _ in 0..max_new {
+            if live.is_empty() {
+                break;
+            }
+            if pool.len() >= width {
+                let mut ps: Vec<f64> = pool.iter().map(&score).collect();
+                ps.sort_by(|a, b| b.total_cmp(a));
+                let worst = ps[width - 1];
+                let best_live = live
+                    .iter()
+                    .map(&attainable)
+                    .fold(f64::NEG_INFINITY, f64::max);
+                if best_live <= worst {
+                    live.clear();
+                    break;
+                }
+            }
+            let mut cands: Vec<(f64, usize, usize, i32)> = Vec::new();
+            let mut pool_new: Vec<Hyp> = Vec::new();
+            for h in &live {
+                let mut hist = prompt.clone();
+                hist.extend_from_slice(&h.tokens);
+                let raw = raw_next(&rt, &hist);
+                for (ci, (tok, lp)) in
+                    sampling.beam_candidates(raw, 2048).into_iter().enumerate()
+                {
+                    let mut ext = h.tokens.clone();
+                    ext.push(tok);
+                    if sampling.hit_stop(&ext) {
+                        pool_new.push(Hyp {
+                            id: next_id,
+                            tokens: ext,
+                            cum: h.cum + lp,
+                            reason: FinishReason::Stop,
+                        });
+                        next_id += 1;
+                    } else {
+                        cands.push((h.cum + lp, h.id, ci, tok));
+                    }
+                }
+            }
+            cands.sort_by(|a, b| {
+                b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2))
+            });
+            cands.truncate(width);
+            let mut survivors: Vec<Hyp> = Vec::new();
+            let mut children: Vec<Hyp> = Vec::new();
+            for h in &live {
+                let mine: Vec<&(f64, usize, usize, i32)> =
+                    cands.iter().filter(|c| c.1 == h.id).collect();
+                if mine.is_empty() {
+                    continue; // pruned
+                }
+                let mut kept = h.clone();
+                kept.tokens.push(mine[0].3);
+                kept.cum = mine[0].0;
+                survivors.push(kept);
+                for c in &mine[1..] {
+                    let mut child = h.clone();
+                    child.id = next_id;
+                    next_id += 1;
+                    child.tokens.push(c.3);
+                    child.cum = c.0;
+                    children.push(child);
+                }
+            }
+            survivors.extend(children);
+            live = survivors;
+            pool.extend(pool_new);
+            if pool.len() > width {
+                pool.sort_by(|a, b| {
+                    score(b).total_cmp(&score(a)).then(a.id.cmp(&b.id))
+                });
+                pool.truncate(width);
+            }
+            // length stop for survivors that just hit the limit
+            let (done, still): (Vec<Hyp>, Vec<Hyp>) =
+                live.into_iter().partition(|h| h.tokens.len() >= max_new);
+            live = still;
+            pool.extend(done);
+        }
+        pool.extend(live);
+        pool.sort_by(|a, b| {
+            score(b).total_cmp(&score(a)).then(a.id.cmp(&b.id))
+        });
+        pool.truncate(width);
+
+        assert_eq!(engine_hyps.len(), pool.len(),
+                   "width {width}: hypothesis count");
+        for (i, (toks, cum, reason)) in engine_hyps.iter().enumerate() {
+            assert_eq!(toks, &pool[i].tokens,
+                       "width {width} seed {seed}: hypothesis {i} tokens \
+                        diverged from the oracle");
+            assert!((cum - pool[i].cum).abs() < 1e-9,
+                    "width {width} seed {seed}: hypothesis {i} score");
+            assert_eq!(*reason, Some(pool[i].reason),
+                       "width {width} seed {seed}: hypothesis {i} reason");
+        }
+    }
+}
+
+/// (d) A parked beam branch self-preempts under extreme memory pressure:
+/// a single full-width group whose streams outgrow the 12-page pool
+/// drains (deterministically) instead of wedging the engine, and the
+/// self-preemption is observable in the metrics.
+#[test]
+fn parked_beam_branch_self_preempts_under_pressure() {
+    let run = || {
+        let mut e = engine(128, 8);
+        e.add_group(vec![35; 96], 48, SamplingParams::beam(3, 1.0, 5))
+            .unwrap();
+        let fin = e.run_to_completion().expect(
+            "self-preemption must keep the engine progressing");
+        let key: Vec<(Vec<i32>, f64)> = fin[0]
+            .seqs
+            .iter()
+            .map(|s| (s.output.clone(), s.cum_logprob))
+            .collect();
+        (key, e)
+    };
+    let (a, e) = run();
+    assert!(e.metrics.self_preemptions >= 1,
+            "the pool is too small for the full-width group mid-flight");
+    assert_eq!(e.free_page_fraction(), 1.0, "all pages returned");
+    assert_eq!(a.len(), 3, "full beam width survives");
+    for (output, _) in &a {
+        assert_eq!(output.len(), 48, "hypotheses decode to the limit");
+    }
+    let (b, _) = run();
+    assert_eq!(a, b, "self-preemption replay is deterministic");
+}
+
+/// (d) A pool that can never hold the group at full width still fails
+/// gracefully ("no progress") instead of livelocking through endless
+/// self-preemption — the per-group cap.
+#[test]
+fn infeasible_beam_group_still_fails_gracefully() {
+    let mut e = engine(128, 8);
+    e.add_group(vec![63; 128], 48, SamplingParams::beam(4, 1.0, 9))
+        .unwrap();
+    assert!(e.run_to_completion().is_err(),
+            "a group that can never fit must surface the OOM");
+}
+
+/// (c) Wire protocol: stop fields parse over the socket, every `token`
+/// event carries a `logprob`, and `done` reports `finish_reason: stop`
+/// with the truncated token list.
+#[test]
+fn wire_protocol_carries_logprobs_and_finish_reason() {
+    // probe the greedy stream engine-side to pick a stop token
+    let reference = greedy_ref(&[5, 9, 13], 6);
+    let stop = reference[2];
+    let cut = reference.iter().position(|&t| t == stop).unwrap() + 1;
+
+    let dir = triton_anatomy::default_artifacts_dir();
+    let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+    let port = probe.local_addr().unwrap().port();
+    drop(probe);
+    let bound = format!("127.0.0.1:{port}");
+    let server_addr = bound.clone();
+    let handle = std::thread::spawn(move || {
+        serve(dir, EngineConfig::default(), &server_addr, Some(1))
+    });
+    // retry until the server thread has bound the port
+    let stream = (0..100)
+        .find_map(|_| {
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            TcpStream::connect(&bound).ok()
+        })
+        .expect("server did not come up");
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    writeln!(
+        writer,
+        "{{\"prompt\": [5, 9, 13], \"max_new_tokens\": 6, \
+         \"stop_token_ids\": [{stop}]}}"
+    )
+    .unwrap();
+    writer.flush().unwrap();
+
+    let mut tokens: Vec<i32> = Vec::new();
+    loop {
+        let mut line = String::new();
+        assert!(reader.read_line(&mut line).unwrap() > 0, "server closed");
+        let v = json::parse(line.trim()).unwrap();
+        match v.str_field("event").unwrap().as_str() {
+            "token" => {
+                let lp = v.req("logprob").unwrap().as_f64().unwrap();
+                assert!(lp <= 1e-12 && lp.is_finite(),
+                        "token events carry a sane logprob proxy");
+                tokens.push(v.req("token").unwrap().as_i64().unwrap() as i32);
+            }
+            "done" => {
+                assert_eq!(v.str_field("finish_reason").unwrap(), "stop");
+                let toks: Vec<i32> = v.req("tokens").unwrap().as_arr()
+                    .unwrap().iter()
+                    .map(|x| x.as_i64().unwrap() as i32).collect();
+                assert_eq!(toks, reference[..cut],
+                           "done reports the truncated stream");
+                assert_eq!(tokens, toks,
+                           "streamed events reconstruct the done list");
+                break;
+            }
+            other => panic!("unexpected event {other}"),
+        }
+    }
+    handle.join().unwrap().unwrap();
+}
