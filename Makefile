@@ -5,7 +5,7 @@
 # real JAX/Pallas AOT flow (`python -m compile.aot`) produces the same
 # manifest schema on a machine with a working XLA toolchain.
 
-.PHONY: artifacts test tier1
+.PHONY: artifacts test tier1 bench bench-gate
 
 artifacts:
 	python3 python/compile/gen_sim_artifacts.py
@@ -14,3 +14,12 @@ tier1:
 	cd rust && cargo build --release && cargo test -q
 
 test: tier1
+
+# End-to-end serving benchmark matrix → BENCH_local.json (docs/BENCHMARKS.md)
+bench:
+	cd rust && cargo build --release && ./target/release/repro bench --label local
+
+# Deterministic-counter regression gate against the checked-in baseline
+bench-gate:
+	cd rust && cargo build --release && \
+	  ./target/release/repro bench --compare ../BENCH_baseline.json

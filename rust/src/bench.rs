@@ -1,0 +1,842 @@
+//! End-to-end serving benchmark subsystem (`repro bench`).
+//!
+//! The paper's headline claim is an *end-to-end serving* number — a
+//! generic Triton kernel taken from 19.7% to 105.9% of state-of-the-art
+//! — yet kernels in isolation (`microbench`, `benches/fig*.rs`) cannot
+//! demonstrate or protect such a win: tuning is only trustworthy when
+//! the harness simulates realistic request patterns end-to-end
+//! (Ringlein et al., "GPU Performance Portability Needs Autotuning").
+//! This module drives the **full engine** over a named scenario matrix —
+//! prefill-heavy, decode-heavy, mixed Poisson arrivals, prefix-cache
+//! replay, parallel sampling, beam search (with and without
+//! `early_stopping`), and deliberate page-pool oversubscription — and
+//! records, per scenario:
+//!
+//! * **wall-clock timings** — tokens/s throughput, TTFT, inter-token
+//!   latency and request latency as p50/p95/p99 [`Snapshot`]s. Noisy on
+//!   shared runners, reported as *advisory* deltas only.
+//! * **a deterministic work-counter fingerprint** — engine steps, pages
+//!   allocated, CoW copies, prefix-cache hits, preemptions,
+//!   self-preemptions, beam forks/prunes, generated tokens, … The sim
+//!   runtime is bit-exact, so two runs of one scenario produce
+//!   *identical* fingerprints; any drift is a behavior change, and any
+//!   regression in a gated counter fails `repro bench --compare`.
+//!
+//! Reports serialize as schema-versioned `BENCH_<label>.json` files at
+//! the repository root; `BENCH_baseline.json` is checked in and CI's
+//! `bench` job gates every push against it. The gating policy (which
+//! counters fail the build in which direction, and why timings never do)
+//! lives in `docs/BENCHMARKS.md`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{EngineConfig, SamplingParams};
+use crate::engine::Engine;
+use crate::json::{self, num, obj, Value};
+use crate::metrics::Snapshot;
+use crate::runtime::Runtime;
+use crate::workload::{ArrivalProcess, BeamSearchLoad, BestOfN, GroupRequest,
+                      PrefixReplay, Rng};
+
+/// Version of the `BENCH_*.json` schema; bumped on incompatible change.
+/// `compare` refuses to gate across versions.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Virtual engine steps per second of Poisson-arrival time: the
+/// `mixed_poisson` scenario maps each arrival's `at_s` onto a step index
+/// (`at_s * STEPS_PER_S`), so the injection schedule is deterministic —
+/// real wall time never decides what lands in which batch.
+const STEPS_PER_S: f64 = 25.0;
+
+/// Deterministic work-counter fingerprint of one scenario run. Counters
+/// are byte-stable across runs and machines (the sim runtime is exact
+/// integer arithmetic), which is what lets CI gate on them while timing
+/// deltas stay advisory.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Fingerprint {
+    pub counters: BTreeMap<String, u64>,
+}
+
+impl Fingerprint {
+    /// Snapshot the engine's deterministic counters after a scenario.
+    pub fn from_engine(e: &Engine) -> Self {
+        let m = &e.metrics;
+        let mut c = BTreeMap::new();
+        let mut put = |k: &str, v: u64| {
+            c.insert(k.to_string(), v);
+        };
+        put("engine_steps", m.steps);
+        put("generated_tokens", m.generated_tokens);
+        put("prompt_tokens", m.prompt_tokens);
+        put("preemptions", m.preemptions);
+        put("self_preemptions", m.self_preemptions);
+        put("groups_finished", m.groups_finished);
+        put("pages_allocated", m.pages_allocated);
+        put("forked_pages", m.forked_pages);
+        put("cow_copies", m.cow_copies);
+        put("prefix_hit_tokens", m.prefix_hit_tokens);
+        put("prefix_lookup_tokens", m.prefix_lookup_tokens);
+        put("prefix_evictions", m.prefix_evictions);
+        put("stop_finishes", m.stop_finishes);
+        put("beam_forks", m.beam_forks);
+        put("beam_prunes", m.beam_prunes);
+        put("beam_pruned_pages", m.beam_pruned_pages);
+        put("beam_finished_hyps", m.beam_finished_hyps);
+        put("beam_early_terminations", m.beam_early_terminations);
+        put("token_events", m.token_events);
+        Fingerprint { counters: c }
+    }
+
+    fn to_json(&self) -> Value {
+        Value::Obj(
+            self.counters
+                .iter()
+                .map(|(k, v)| (k.clone(), num(*v as f64)))
+                .collect(),
+        )
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        let mut counters = BTreeMap::new();
+        for (k, x) in v.as_obj()? {
+            counters.insert(k.clone(), x.as_f64()? as u64);
+        }
+        Ok(Fingerprint { counters })
+    }
+}
+
+/// How `compare` gates one fingerprint counter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Gate {
+    /// Any change is a regression: these counters describe *what* the
+    /// scenario produced (outputs, finish reasons), not how fast — a
+    /// drift means the workload's results changed.
+    Exact,
+    /// More is a regression (work/cost counters); less is an
+    /// improvement worth noting.
+    UpIsRegression,
+    /// Less is a regression (cache-effectiveness counters).
+    DownIsRegression,
+    /// Recorded for observability, never gated.
+    Informational,
+}
+
+/// Gating class of a fingerprint counter (see `docs/BENCHMARKS.md` for
+/// the rationale per counter).
+pub fn gate_of(counter: &str) -> Gate {
+    match counter {
+        "generated_tokens" | "groups_finished" | "stop_finishes"
+        | "beam_finished_hyps" => Gate::Exact,
+        "engine_steps" | "prompt_tokens" | "pages_allocated" | "cow_copies"
+        | "preemptions" | "self_preemptions" | "prefix_evictions"
+        | "beam_forks" | "beam_prunes" | "beam_pruned_pages" => {
+            Gate::UpIsRegression
+        }
+        "prefix_hit_tokens" => Gate::DownIsRegression,
+        _ => Gate::Informational,
+    }
+}
+
+/// Wall-clock metrics of one scenario run. Advisory only: sim timings
+/// are noisy on shared runners, so `compare` reports deltas but never
+/// fails on them.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Timings {
+    /// Scenario wall time, seconds.
+    pub wall_s: f64,
+    /// Generated tokens per wall second.
+    pub throughput_tok_s: f64,
+    /// Time to first token per request, ms.
+    pub ttft_ms: Snapshot,
+    /// Latency between consecutive tokens of one branch, ms.
+    pub inter_token_ms: Snapshot,
+    /// End-to-end request latency (enqueue → last branch done), ms.
+    pub request_latency_ms: Snapshot,
+}
+
+fn snapshot_json(s: &Snapshot) -> Value {
+    obj(vec![
+        ("count", num(s.count as f64)),
+        ("mean", num(s.mean)),
+        ("p50", num(s.p50)),
+        ("p95", num(s.p95)),
+        ("p99", num(s.p99)),
+        ("min", num(s.min)),
+        ("max", num(s.max)),
+    ])
+}
+
+fn snapshot_from_json(v: &Value) -> Result<Snapshot> {
+    Ok(Snapshot {
+        count: v.req("count")?.as_f64()? as u64,
+        mean: v.req("mean")?.as_f64()?,
+        p50: v.req("p50")?.as_f64()?,
+        p95: v.req("p95")?.as_f64()?,
+        p99: v.req("p99")?.as_f64()?,
+        min: v.req("min")?.as_f64()?,
+        max: v.req("max")?.as_f64()?,
+    })
+}
+
+/// One scenario's record in a benchmark report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioResult {
+    pub name: String,
+    /// Whether the fingerprint is gate-worthy. The in-process scenarios
+    /// all are; the optional TCP-server replay is not (client/server
+    /// thread interleaving decides batch composition).
+    pub deterministic: bool,
+    /// Requests the scenario issued.
+    pub requests: usize,
+    pub fingerprint: Fingerprint,
+    pub timings: Timings,
+}
+
+impl ScenarioResult {
+    fn to_json(&self) -> Value {
+        obj(vec![
+            ("name", json::s(&self.name)),
+            ("deterministic", Value::Bool(self.deterministic)),
+            ("requests", num(self.requests as f64)),
+            ("fingerprint", self.fingerprint.to_json()),
+            (
+                "timings",
+                obj(vec![
+                    ("wall_s", num(self.timings.wall_s)),
+                    ("throughput_tok_s", num(self.timings.throughput_tok_s)),
+                    ("ttft_ms", snapshot_json(&self.timings.ttft_ms)),
+                    ("inter_token_ms",
+                     snapshot_json(&self.timings.inter_token_ms)),
+                    ("request_latency_ms",
+                     snapshot_json(&self.timings.request_latency_ms)),
+                ]),
+            ),
+        ])
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        let t = v.req("timings")?;
+        Ok(ScenarioResult {
+            name: v.str_field("name")?,
+            deterministic: v.req("deterministic")?.as_bool()?,
+            requests: v.usize_field("requests")?,
+            fingerprint: Fingerprint::from_json(v.req("fingerprint")?)?,
+            timings: Timings {
+                wall_s: t.req("wall_s")?.as_f64()?,
+                throughput_tok_s: t.req("throughput_tok_s")?.as_f64()?,
+                ttft_ms: snapshot_from_json(t.req("ttft_ms")?)?,
+                inter_token_ms: snapshot_from_json(t.req("inter_token_ms")?)?,
+                request_latency_ms:
+                    snapshot_from_json(t.req("request_latency_ms")?)?,
+            },
+        })
+    }
+}
+
+/// A full benchmark report: the unit `BENCH_<label>.json` serializes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchReport {
+    pub schema_version: u64,
+    pub label: String,
+    pub model: String,
+    pub scenarios: Vec<ScenarioResult>,
+}
+
+impl BenchReport {
+    pub fn to_json_string(&self) -> String {
+        // One scenario object per line keeps the checked-in baseline
+        // diffable without a JSON formatter.
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("\"schema_version\": {},\n", self.schema_version));
+        s.push_str(&format!("\"label\": {},\n", json::s(&self.label)));
+        s.push_str(&format!("\"model\": {},\n", json::s(&self.model)));
+        s.push_str("\"scenarios\": [\n");
+        for (i, sc) in self.scenarios.iter().enumerate() {
+            s.push_str(&sc.to_json().to_string());
+            if i + 1 < self.scenarios.len() {
+                s.push(',');
+            }
+            s.push('\n');
+        }
+        s.push_str("]\n}\n");
+        s
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = json::parse(text)?;
+        let scenarios = v
+            .req("scenarios")?
+            .as_arr()?
+            .iter()
+            .map(ScenarioResult::from_json)
+            .collect::<Result<_>>()?;
+        Ok(BenchReport {
+            schema_version: v.req("schema_version")?.as_f64()? as u64,
+            label: v.str_field("label")?,
+            model: v.str_field("model")?,
+            scenarios,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json_string())
+            .with_context(|| format!("writing {path:?}"))
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path:?}"))?;
+        Self::parse(&text).with_context(|| format!("parsing {path:?}"))
+    }
+
+    pub fn scenario(&self, name: &str) -> Option<&ScenarioResult> {
+        self.scenarios.iter().find(|s| s.name == name)
+    }
+}
+
+/// Default location of `BENCH_<label>.json`: the repository root.
+pub fn default_report_path(label: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate lives one level under the repo root")
+        .join(format!("BENCH_{label}.json"))
+}
+
+// ------------------------------------------------------------- scenarios
+
+/// The in-process scenario matrix, in run order.
+pub const SCENARIOS: [&str; 8] = [
+    "prefill_heavy",
+    "decode_heavy",
+    "mixed_poisson",
+    "prefix_replay",
+    "parallel_sampling",
+    "beam_search",
+    "beam_early_stop",
+    "preemption_pressure",
+];
+
+const VOCAB: usize = 2048;
+
+/// The beam workload shared by `beam_search` and `beam_early_stop`:
+/// one literal, so the "early stopping must do no more work than the
+/// default cutoff" comparison stays apples-to-apples by construction.
+fn beam_bench_load() -> BeamSearchLoad {
+    BeamSearchLoad {
+        beam_width: 3,
+        length_penalty: 1.0,
+        shared_prefix: 24,
+        tail: 6,
+        max_new_tokens: 8,
+        vocab: VOCAB,
+        stop_token_ids: (0..VOCAB as i32).step_by(7).collect(),
+    }
+}
+
+fn bench_config(model: &str) -> EngineConfig {
+    EngineConfig {
+        model: model.to_string(),
+        ..Default::default()
+    }
+}
+
+/// Enqueue every request up front and drive the engine to completion.
+fn run_all(engine: &mut Engine, reqs: &[GroupRequest]) -> Result<()> {
+    for r in reqs {
+        engine.add_group(r.prompt.clone(), r.max_new_tokens,
+                         r.sampling.clone())?;
+    }
+    engine.run_to_completion()?;
+    Ok(())
+}
+
+/// Drive the engine over a deterministic arrival schedule: request `i`
+/// is injected once the *step counter* reaches `at_step[i]` (virtual
+/// time, not wall time), and idle gaps fast-forward to the next arrival
+/// so the schedule cannot depend on how fast the host steps.
+fn run_arrivals(engine: &mut Engine,
+                arrivals: &[(u64, GroupRequest)]) -> Result<()> {
+    let mut next = 0usize;
+    let mut step_no = 0u64;
+    loop {
+        while next < arrivals.len() && arrivals[next].0 <= step_no {
+            let r = &arrivals[next].1;
+            engine.add_group(r.prompt.clone(), r.max_new_tokens,
+                             r.sampling.clone())?;
+            next += 1;
+        }
+        if next >= arrivals.len() && !engine.has_unfinished() {
+            return Ok(());
+        }
+        if engine.step()?.is_none() {
+            if engine.has_unfinished() {
+                bail!("scheduler made no progress with work pending");
+            }
+            // idle: jump straight to the next arrival
+            step_no = arrivals[next].0;
+            continue;
+        }
+        step_no += 1;
+    }
+}
+
+/// Build and run one named scenario; returns its fingerprint + timings.
+pub fn run_scenario(rt: &Rc<Runtime>, model: &str, name: &str)
+    -> Result<ScenarioResult> {
+    let mut engine = Engine::new(rt.clone(), bench_config(model))?;
+    engine.warmup()?;
+    let t0 = Instant::now();
+    let requests: usize = match name {
+        // Long prompts, tiny continuations: the chunked-prefill /
+        // admission-watermark path dominates.
+        "prefill_heavy" => {
+            let mut rng = Rng::new(11);
+            let reqs: Vec<GroupRequest> = (0..8)
+                .map(|_| GroupRequest {
+                    prompt: {
+                        let len = rng.range(48, 80);
+                        rng.tokens(len, VOCAB)
+                    },
+                    sampling: SamplingParams::default(),
+                    max_new_tokens: 2,
+                })
+                .collect();
+            run_all(&mut engine, &reqs)?;
+            reqs.len()
+        }
+        // Short prompts, long decodes: steady-state decode batches.
+        "decode_heavy" => {
+            let mut rng = Rng::new(13);
+            let reqs: Vec<GroupRequest> = (0..6)
+                .map(|_| GroupRequest {
+                    prompt: rng.tokens(8, VOCAB),
+                    sampling: SamplingParams::default(),
+                    max_new_tokens: 24,
+                })
+                .collect();
+            run_all(&mut engine, &reqs)?;
+            reqs.len()
+        }
+        // Poisson arrivals with varied prompt/output lengths, injected
+        // on a deterministic virtual-step schedule.
+        "mixed_poisson" => {
+            let mut rng = Rng::new(31);
+            let process = ArrivalProcess {
+                rate_per_s: 12.0,
+                min_prompt: 8,
+                max_prompt: 48,
+                min_new: 4,
+                max_new: 16,
+            };
+            let events = process.sample(10, &mut rng);
+            let arrivals: Vec<(u64, GroupRequest)> = events
+                .iter()
+                .map(|ev| {
+                    (
+                        (ev.at_s * STEPS_PER_S) as u64,
+                        GroupRequest {
+                            prompt: rng.tokens(ev.prompt_len, VOCAB),
+                            sampling: SamplingParams::default(),
+                            max_new_tokens: ev.max_new_tokens,
+                        },
+                    )
+                })
+                .collect();
+            run_arrivals(&mut engine, &arrivals)?;
+            arrivals.len()
+        }
+        // Shared-prefix fan-out: wave 2 replays wave 1's prompts and is
+        // served almost entirely from the prefix cache.
+        "prefix_replay" => {
+            let w = PrefixReplay {
+                shared_prefix: 64,
+                tail: 6,
+                max_new_tokens: 4,
+                vocab: VOCAB,
+                seed: 21,
+            };
+            run_all(&mut engine, &w.wave(4))?;
+            run_all(&mut engine, &w.wave(4))?;
+            8
+        }
+        // Best-of-n groups: CoW fork at prefill completion, divergent
+        // branch decode, batched copy_blocks dispatches.
+        "parallel_sampling" => {
+            let w = BestOfN {
+                n: 4,
+                shared_prefix: 32,
+                tail: 8,
+                max_new_tokens: 6,
+                vocab: VOCAB,
+                stop_token_ids: Vec::new(),
+            };
+            let reqs = w.requests(3, &mut Rng::new(5));
+            run_all(&mut engine, &reqs)?;
+            reqs.len()
+        }
+        // Beam groups with a dense stop set: per-step fork/prune, the
+        // finished pool, and the attainable-score cutoff.
+        "beam_search" => {
+            let reqs = beam_bench_load().requests(3, &mut Rng::new(9));
+            run_all(&mut engine, &reqs)?;
+            reqs.len()
+        }
+        // Same beam load with `early_stopping`: terminates at pool fill,
+        // so its step/fork counters must come in at or under
+        // `beam_search`'s.
+        "beam_early_stop" => {
+            let reqs: Vec<GroupRequest> = beam_bench_load()
+                .requests(3, &mut Rng::new(9))
+                .into_iter()
+                .map(|mut r| {
+                    r.sampling = r.sampling.with_early_stopping(true);
+                    r
+                })
+                .collect();
+            run_all(&mut engine, &reqs)?;
+            reqs.len()
+        }
+        // Deliberate page-pool oversubscription: concurrent decodes
+        // outgrow the 12-page tiny pool, forcing preemption-by-recompute
+        // and prefix-cache-assisted re-admission.
+        "preemption_pressure" => {
+            let mut rng = Rng::new(17);
+            let reqs: Vec<GroupRequest> = (0..4)
+                .map(|_| GroupRequest {
+                    prompt: rng.tokens(40, VOCAB),
+                    sampling: SamplingParams::default(),
+                    max_new_tokens: 24,
+                })
+                .collect();
+            run_all(&mut engine, &reqs)?;
+            reqs.len()
+        }
+        other => bail!("unknown bench scenario '{other}'"),
+    };
+    let wall_s = t0.elapsed().as_secs_f64();
+    let m = &engine.metrics;
+    Ok(ScenarioResult {
+        name: name.to_string(),
+        deterministic: true,
+        requests,
+        fingerprint: Fingerprint::from_engine(&engine),
+        timings: Timings {
+            wall_s,
+            throughput_tok_s: m.generated_tokens as f64 / wall_s.max(1e-9),
+            ttft_ms: m.ttft_ms.snapshot(),
+            inter_token_ms: m.inter_token_ms.snapshot(),
+            request_latency_ms: m.group_latency_ms.snapshot(),
+        },
+    })
+}
+
+/// Optional TCP-server replay: the same engine behind the JSON-lines
+/// front-end, one sequential client. Timing-only — thread interleaving
+/// decides batch composition, so the fingerprint is not gate-worthy and
+/// the scenario is marked non-deterministic.
+pub fn run_server_replay(artifacts_dir: PathBuf, model: &str)
+    -> Result<ScenarioResult> {
+    use crate::metrics::Histogram;
+    use crate::server::{serve, Client};
+    use std::net::TcpListener;
+
+    let probe = TcpListener::bind("127.0.0.1:0")?;
+    let addr = format!("127.0.0.1:{}", probe.local_addr()?.port());
+    drop(probe);
+    let n_requests = 6usize;
+    let ecfg = bench_config(model);
+    let bound = addr.clone();
+    let server = std::thread::spawn(move || {
+        serve(artifacts_dir, ecfg, &bound, Some(n_requests))
+    });
+    let connected = (0..100).find_map(|_| {
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        Client::connect(&addr).ok()
+    });
+    let Some(mut client) = connected else {
+        // surface the server thread's real failure when it already died
+        if server.is_finished() {
+            server.join().unwrap().context("bench server failed")?;
+        }
+        bail!("bench server did not come up on {addr}");
+    };
+
+    let mut rng = Rng::new(41);
+    let mut ttft = Histogram::new();
+    let mut latency = Histogram::new();
+    let mut tokens = 0u64;
+    let t0 = Instant::now();
+    for _ in 0..n_requests {
+        let prompt = rng.tokens(rng.range(8, 32), VOCAB);
+        let done = client.generate(&prompt, 12)?;
+        ttft.record(done.ttft_ms);
+        latency.record(done.total_ms);
+        tokens += done.tokens.len() as u64;
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    server.join().unwrap()?;
+    Ok(ScenarioResult {
+        name: "server_replay".to_string(),
+        deterministic: false,
+        requests: n_requests,
+        fingerprint: Fingerprint::default(),
+        timings: Timings {
+            wall_s,
+            throughput_tok_s: tokens as f64 / wall_s.max(1e-9),
+            ttft_ms: ttft.snapshot(),
+            inter_token_ms: Snapshot::default(),
+            request_latency_ms: latency.snapshot(),
+        },
+    })
+}
+
+/// Run the scenario matrix (all of [`SCENARIOS`], or the `only` subset)
+/// and assemble a report. `wire` appends the TCP `server_replay`
+/// scenario.
+pub fn run_matrix(artifacts_dir: PathBuf, model: &str, only: Option<&[String]>,
+                  wire: bool) -> Result<BenchReport> {
+    let rt = Rc::new(Runtime::load_dir(artifacts_dir.clone())?);
+    let mut scenarios = Vec::new();
+    for name in SCENARIOS {
+        if let Some(filter) = only {
+            if !filter.iter().any(|f| f == name) {
+                continue;
+            }
+        }
+        eprintln!("[bench] running scenario '{name}'");
+        scenarios.push(run_scenario(&rt, model, name)?);
+    }
+    if wire {
+        eprintln!("[bench] running scenario 'server_replay' (TCP)");
+        scenarios.push(run_server_replay(artifacts_dir, model)?);
+    }
+    if scenarios.is_empty() {
+        bail!("scenario filter matched nothing");
+    }
+    Ok(BenchReport {
+        schema_version: SCHEMA_VERSION,
+        label: String::new(),
+        model: model.to_string(),
+        scenarios,
+    })
+}
+
+// --------------------------------------------------------------- compare
+
+/// Outcome of gating one report against a baseline.
+#[derive(Debug, Clone, Default)]
+pub struct Comparison {
+    /// Gated counter regressions (fail the build).
+    pub regressions: Vec<String>,
+    /// Gated counters that *improved* (informational; a reminder to
+    /// refresh the baseline so the win is protected).
+    pub improvements: Vec<String>,
+    /// Advisory timing deltas (never fail the build).
+    pub timing_notes: Vec<String>,
+}
+
+impl Comparison {
+    pub fn passed(&self) -> bool {
+        self.regressions.is_empty()
+    }
+}
+
+fn pct_delta(cur: f64, base: f64) -> f64 {
+    if base.abs() < 1e-12 {
+        0.0
+    } else {
+        (cur - base) / base * 100.0
+    }
+}
+
+/// Gate `current` against `baseline`. Deterministic-counter regressions
+/// (per [`gate_of`]) populate `regressions`; timing deltas are advisory.
+/// `strict` escalates *any* counter difference on a deterministic
+/// scenario to a regression — the CI determinism check runs the matrix
+/// twice and strict-compares the two reports.
+pub fn compare(current: &BenchReport, baseline: &BenchReport, strict: bool)
+    -> Comparison {
+    let mut out = Comparison::default();
+    if current.schema_version != baseline.schema_version {
+        out.regressions.push(format!(
+            "schema_version {} != baseline {} — regenerate the baseline",
+            current.schema_version, baseline.schema_version
+        ));
+        return out;
+    }
+    for base in &baseline.scenarios {
+        if !base.deterministic {
+            continue;
+        }
+        let Some(cur) = current.scenario(&base.name) else {
+            out.regressions.push(format!(
+                "scenario '{}' missing from the current report", base.name
+            ));
+            continue;
+        };
+        for (k, &bv) in &base.fingerprint.counters {
+            let Some(&cv) = cur.fingerprint.counters.get(k) else {
+                out.regressions.push(format!(
+                    "{}: counter '{k}' disappeared (baseline {bv})",
+                    base.name
+                ));
+                continue;
+            };
+            if cv == bv {
+                continue;
+            }
+            let line = format!("{}: {k} {bv} -> {cv}", base.name);
+            let gate = if strict { Gate::Exact } else { gate_of(k) };
+            match gate {
+                Gate::Exact => out.regressions.push(line),
+                Gate::UpIsRegression => {
+                    if cv > bv {
+                        out.regressions.push(line);
+                    } else {
+                        out.improvements.push(line);
+                    }
+                }
+                Gate::DownIsRegression => {
+                    if cv < bv {
+                        out.regressions.push(line);
+                    } else {
+                        out.improvements.push(line);
+                    }
+                }
+                Gate::Informational => {}
+            }
+        }
+        let t = pct_delta(cur.timings.throughput_tok_s,
+                          base.timings.throughput_tok_s);
+        let f = pct_delta(cur.timings.ttft_ms.p50, base.timings.ttft_ms.p50);
+        out.timing_notes.push(format!(
+            "{}: throughput {:+.1}% ({:.0} -> {:.0} tok/s), \
+             ttft p50 {:+.1}%",
+            base.name, t, base.timings.throughput_tok_s,
+            cur.timings.throughput_tok_s, f
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report_with(counters: &[(&str, u64)]) -> BenchReport {
+        let mut fp = Fingerprint::default();
+        for (k, v) in counters {
+            fp.counters.insert(k.to_string(), *v);
+        }
+        BenchReport {
+            schema_version: SCHEMA_VERSION,
+            label: "t".into(),
+            model: "tiny".into(),
+            scenarios: vec![ScenarioResult {
+                name: "s".into(),
+                deterministic: true,
+                requests: 1,
+                fingerprint: fp,
+                timings: Timings::default(),
+            }],
+        }
+    }
+
+    #[test]
+    fn identical_reports_pass() {
+        let r = report_with(&[("engine_steps", 10), ("generated_tokens", 64)]);
+        let cmp = compare(&r, &r, false);
+        assert!(cmp.passed());
+        assert!(cmp.improvements.is_empty());
+        let strict = compare(&r, &r, true);
+        assert!(strict.passed(), "identity also passes strict mode");
+    }
+
+    #[test]
+    fn cost_counter_gates_upward_only() {
+        let base = report_with(&[("engine_steps", 10)]);
+        let worse = report_with(&[("engine_steps", 11)]);
+        let better = report_with(&[("engine_steps", 9)]);
+        assert!(!compare(&worse, &base, false).passed(),
+                "more steps for the same scenario is a regression");
+        let cmp = compare(&better, &base, false);
+        assert!(cmp.passed(), "fewer steps is an improvement, not a failure");
+        assert_eq!(cmp.improvements.len(), 1);
+        // strict mode fails on ANY drift, improvement included
+        assert!(!compare(&better, &base, true).passed());
+    }
+
+    #[test]
+    fn hit_counter_gates_downward_only() {
+        let base = report_with(&[("prefix_hit_tokens", 96)]);
+        let worse = report_with(&[("prefix_hit_tokens", 80)]);
+        let better = report_with(&[("prefix_hit_tokens", 112)]);
+        assert!(!compare(&worse, &base, false).passed(),
+                "losing cache hits is a regression");
+        assert!(compare(&better, &base, false).passed());
+    }
+
+    #[test]
+    fn exact_counter_gates_any_change() {
+        let base = report_with(&[("generated_tokens", 64)]);
+        for v in [63, 65] {
+            let cur = report_with(&[("generated_tokens", v)]);
+            assert!(!compare(&cur, &base, false).passed(),
+                    "output drift {v} must fail in either direction");
+        }
+    }
+
+    #[test]
+    fn missing_scenario_and_counter_regress() {
+        let base = report_with(&[("engine_steps", 10)]);
+        let mut renamed = base.clone();
+        renamed.scenarios[0].name = "other".into();
+        assert!(!compare(&renamed, &base, false).passed(),
+                "a dropped scenario is lost coverage");
+        let empty = report_with(&[]);
+        assert!(!compare(&empty, &base, false).passed(),
+                "a dropped counter is lost coverage");
+    }
+
+    #[test]
+    fn schema_version_mismatch_refuses_to_gate() {
+        let base = report_with(&[("engine_steps", 10)]);
+        let mut cur = base.clone();
+        cur.schema_version = SCHEMA_VERSION + 1;
+        let cmp = compare(&cur, &base, false);
+        assert!(!cmp.passed());
+        assert!(cmp.regressions[0].contains("schema_version"));
+    }
+
+    #[test]
+    fn informational_counters_never_gate() {
+        let base = report_with(&[("forked_pages", 9), ("token_events", 4)]);
+        let cur = report_with(&[("forked_pages", 90), ("token_events", 1)]);
+        assert!(compare(&cur, &base, false).passed());
+        assert_eq!(gate_of("some_future_counter"), Gate::Informational);
+    }
+
+    #[test]
+    fn report_json_roundtrips() {
+        let mut r = report_with(&[("engine_steps", 12), ("cow_copies", 3)]);
+        r.scenarios[0].timings = Timings {
+            wall_s: 0.25,
+            throughput_tok_s: 512.0,
+            ttft_ms: crate::metrics::Snapshot {
+                count: 4, mean: 1.5, p50: 1.0, p95: 3.0, p99: 3.5,
+                min: 0.5, max: 3.5,
+            },
+            ..Default::default()
+        };
+        let text = r.to_json_string();
+        let parsed = BenchReport::parse(&text).unwrap();
+        assert_eq!(parsed, r, "serialize → parse is identity");
+        assert!(text.contains("\"schema_version\": 1"));
+    }
+}

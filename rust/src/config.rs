@@ -158,7 +158,15 @@ pub enum SamplingMode {
     /// forking and retiring branches *per decode step*. `length_penalty`
     /// is the GNMT-style exponent applied to the final hypothesis
     /// ranking (`score = cum_logprob / len^length_penalty`).
-    Beam { beam_width: usize, length_penalty: f64 },
+    /// `early_stopping` terminates the group as soon as its finished
+    /// pool holds `beam_width` hypotheses, skipping the attainable-score
+    /// comparison — the cheaper (vLLM `early_stopping=True`) knob next
+    /// to the default "best live cannot beat worst finished" cutoff.
+    Beam {
+        beam_width: usize,
+        length_penalty: f64,
+        early_stopping: bool,
+    },
 }
 
 /// Per-request sampling configuration — the vLLM `SamplingParams`
@@ -223,16 +231,34 @@ impl Default for SamplingParams {
 
 impl SamplingParams {
     /// Beam-search params: `beam_width` hypotheses, deterministic in
-    /// `seed`, ranked with `length_penalty` at completion.
+    /// `seed`, ranked with `length_penalty` at completion. The default
+    /// termination is the attainable-score cutoff; see
+    /// [`SamplingParams::with_early_stopping`] for the cheaper knob.
     pub fn beam(beam_width: usize, length_penalty: f64, seed: u64) -> Self {
         SamplingParams {
             n: beam_width,
             seed,
             temperature: 0.0,
-            mode: SamplingMode::Beam { beam_width, length_penalty },
+            mode: SamplingMode::Beam {
+                beam_width,
+                length_penalty,
+                early_stopping: false,
+            },
             stop_token_ids: Vec::new(),
             stop_sequences: Vec::new(),
         }
+    }
+
+    /// Builder (beam mode only; no-op otherwise): terminate the group as
+    /// soon as the finished pool holds `beam_width` hypotheses instead of
+    /// waiting for the attainable-score cutoff. Cheaper — no live branch
+    /// decodes past the pool fill — at the cost of possibly missing a
+    /// live hypothesis that could still have out-scored the pool.
+    pub fn with_early_stopping(mut self, on: bool) -> Self {
+        if let SamplingMode::Beam { early_stopping, .. } = &mut self.mode {
+            *early_stopping = on;
+        }
+        self
     }
 
     /// Builder: terminate branches on any of these generated token ids.
@@ -508,10 +534,29 @@ mod tests {
         assert!(p.is_beam());
         assert!(!p.is_greedy());
         assert_eq!(p.width(), 3);
+        assert_eq!(p.mode,
+                   SamplingMode::Beam { beam_width: 3, length_penalty: 1.0,
+                                        early_stopping: false },
+                   "the default termination is the attainable-score cutoff");
         let q = SamplingParams { n: 4, ..Default::default() };
         assert!(!q.is_beam());
         assert_eq!(q.width(), 4);
         assert_eq!(SamplingParams::default().width(), 1);
+    }
+
+    #[test]
+    fn early_stopping_builder_flips_beam_mode_only() {
+        let p = SamplingParams::beam(2, 1.0, 3).with_early_stopping(true);
+        assert_eq!(p.mode,
+                   SamplingMode::Beam { beam_width: 2, length_penalty: 1.0,
+                                        early_stopping: true });
+        // candidates and width are unaffected by the termination knob
+        assert_eq!(p.width(), 2);
+        assert_eq!(p.beam_candidates(77, 2048),
+                   SamplingParams::beam(2, 1.0, 3).beam_candidates(77, 2048));
+        // a no-op outside beam mode
+        let q = SamplingParams::default().with_early_stopping(true);
+        assert_eq!(q.mode, SamplingMode::Parallel);
     }
 
     #[test]

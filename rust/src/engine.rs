@@ -430,6 +430,7 @@ impl Engine {
         self.metrics.prefix_cached_blocks = self.kv.cached_blocks() as u64;
         self.metrics.forked_pages = cache.forked_pages;
         self.metrics.cow_copies = cache.cow_copies;
+        self.metrics.pages_allocated = cache.pages_allocated;
         self.metrics.prompt_tokens += batch
             .seqs
             .iter()

@@ -13,7 +13,10 @@
 //!   continuous-batching scheduler over sequence groups, attention-
 //!   metadata builder, decision-tree kernel heuristics, autotuner, PJRT
 //!   runtime, serving engine, TCP front-end, workload generators, benches
-//!   for every figure of the paper's evaluation.
+//!   for every figure of the paper's evaluation, and an end-to-end
+//!   serving benchmark subsystem ([`bench`], `repro bench`) whose
+//!   deterministic work-counter fingerprints gate CI against
+//!   performance regressions (see `docs/BENCHMARKS.md`).
 //!
 //! Python never runs on the request path: `make artifacts` is the only
 //! Python step, after which the `repro` binary is self-contained.
@@ -136,9 +139,9 @@
 //!
 //! ## Beam search
 //!
-//! [`config::SamplingMode::Beam`]` { beam_width, length_penalty }` keeps
-//! the `beam_width` highest-scoring hypotheses instead of independent
-//! branches. Each step, every live hypothesis's raw sample expands into
+//! [`config::SamplingMode::Beam`]` { beam_width, length_penalty,
+//! early_stopping }` keeps the `beam_width` highest-scoring hypotheses
+//! instead of independent branches. Each step, every live hypothesis's raw sample expands into
 //! scored candidate continuations
 //! ([`config::SamplingParams::beam_candidates`], deterministic in
 //! `(raw, seed, index)`); the global top `beam_width` by cumulative
@@ -165,7 +168,10 @@
 //! ([`scheduler::SequenceGroup::best_attainable`]), the group
 //! **early-terminates** — live branches retire in one step with their
 //! pages reclaimed immediately, so `length_penalty` bites mid-flight
-//! instead of only at final ranking. Under extreme memory pressure a
+//! instead of only at final ranking. Setting `early_stopping` skips the
+//! attainable-score comparison entirely: the group terminates the
+//! moment the pool fills, the cheaper knob when the best-possible late
+//! hypothesis is not worth the extra decode steps. Under extreme memory pressure a
 //! beam branch parked on a pending sample **self-preempts** (frees its
 //! pages and re-prefills later; the parked sample is a pure function of
 //! its history), so a single over-wide group degrades to recompute
@@ -224,6 +230,7 @@
 
 pub mod autotune;
 pub mod batch;
+pub mod bench;
 pub mod config;
 pub mod engine;
 pub mod heuristics;
@@ -238,6 +245,7 @@ pub mod scheduler;
 pub mod server;
 pub mod workload;
 
+pub use bench::{BenchReport, Comparison, Fingerprint};
 pub use config::{Bucket, EngineConfig, KernelConfig, ModelConfig,
                  SamplingMode, SamplingParams, Variant};
 pub use engine::{Engine, StepReport};

@@ -3,18 +3,21 @@
 //! Subcommands:
 //!   serve        run the TCP JSON-lines inference server
 //!   run          generate from a synthetic prompt (offline, one-shot)
+//!   bench        end-to-end serving benchmark matrix → BENCH_<label>.json
+//!                (and --compare: the deterministic perf-regression gate)
 //!   bench-micro  kernel microbenchmarks for one scenario
 //!   tune         §5 autotuning flow → heuristics.json + Listing-2 dump
 //!   inspect      list artifacts / models / heuristics
 //!
 //! (Hand-rolled arg parsing: the offline vendored crate set has no clap.)
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
 use anyhow::{bail, Context, Result};
 
 use triton_anatomy::autotune;
+use triton_anatomy::bench;
 use triton_anatomy::config::{EngineConfig, SamplingParams};
 use triton_anatomy::engine::Engine;
 use triton_anatomy::heuristics::Heuristics;
@@ -80,7 +83,12 @@ COMMANDS:
   run          --prompt-len 16 --max-new 16 --model tiny [--heuristics F]
                [--n 4 --sample-seed 1 --temperature 0.7]  parallel sampling
                [--beam-width 3 --length-penalty 1.0]      beam search
+               [--early-stopping]            stop at beam pool fill
                [--stop 5,9] [--stop-seq \"1,2;7,8\"]        stop conditions
+  bench        --label pr5 [--out F] [--scenarios a,b] [--wire]
+               runs the serving scenario matrix, writes BENCH_<label>.json
+               --compare BASELINE.json [--against CURRENT.json] [--strict]
+               gates deterministic counters; exits non-zero on regression
   bench-micro  --scenario decode|prefill|mixed --batch 4 --seq-len 256
                [--decode-share 0.5] [--iters 5] [--warmup 2]
   tune         --out artifacts/heuristics.json [--iters 3] [--max-seq-len 2048]
@@ -103,6 +111,7 @@ fn main() -> Result<()> {
     match cmd.as_str() {
         "serve" => cmd_serve(&args, dir),
         "run" => cmd_run(&args, dir),
+        "bench" => cmd_bench(&args, dir),
         "bench-micro" => cmd_bench_micro(&args, dir),
         "tune" => cmd_tune(&args, dir),
         "inspect" => cmd_inspect(dir),
@@ -163,6 +172,8 @@ fn cmd_run(args: &Args, dir: PathBuf) -> Result<()> {
             args.f64_or("length-penalty", 1.0)?,
             args.usize_or("sample-seed", 0)? as u64,
         )
+        .with_early_stopping(
+            args.get("early-stopping").is_some_and(|v| v != "false"))
     } else {
         SamplingParams {
             n: args.usize_or("n", 1)?,
@@ -196,6 +207,84 @@ fn cmd_run(args: &Args, dir: PathBuf) -> Result<()> {
         }
     }
     println!("--- metrics ---\n{}", engine.metrics.dump());
+    Ok(())
+}
+
+fn cmd_bench(args: &Args, dir: PathBuf) -> Result<()> {
+    let model = args.get("model").unwrap_or("tiny");
+    let only: Option<Vec<String>> = args.get("scenarios").map(|v| {
+        v.split(',').filter(|s| !s.is_empty()).map(String::from).collect()
+    });
+    let wire = args.get("wire").is_some_and(|v| v != "false");
+
+    // Gate mode: compare a report (freshly run, or --against FILE)
+    // against a baseline; deterministic-counter regressions exit
+    // non-zero, timing deltas are advisory.
+    if let Some(base_path) = args.get("compare") {
+        let mut baseline = bench::BenchReport::load(Path::new(base_path))?;
+        // A scenario filter gates only the scenarios it runs: restrict
+        // the baseline to the filtered set so the others are not
+        // reported as lost coverage.
+        if let Some(filter) = &only {
+            baseline.scenarios
+                .retain(|s| filter.iter().any(|f| f == &s.name));
+            if baseline.scenarios.is_empty() {
+                bail!("--scenarios matched nothing in {base_path}");
+            }
+        }
+        let current = match args.get("against") {
+            Some(p) => bench::BenchReport::load(Path::new(p))?,
+            None => bench::run_matrix(dir, model, only.as_deref(), wire)?,
+        };
+        let strict = args.get("strict").is_some_and(|v| v != "false");
+        let cmp = bench::compare(&current, &baseline, strict);
+        for note in &cmp.timing_notes {
+            println!("[timing]      {note}");
+        }
+        for imp in &cmp.improvements {
+            println!("[improvement] {imp}");
+        }
+        for reg in &cmp.regressions {
+            println!("[REGRESSION]  {reg}");
+        }
+        if !cmp.passed() {
+            bail!(
+                "{} deterministic-counter regression(s) vs {base_path}{}",
+                cmp.regressions.len(),
+                if strict { " (strict)" } else { "" }
+            );
+        }
+        println!(
+            "bench gate PASS: {} scenario(s) vs {base_path}{}",
+            baseline.scenarios.iter().filter(|s| s.deterministic).count(),
+            if strict { " (strict)" } else { "" }
+        );
+        return Ok(());
+    }
+
+    // Run mode: execute the matrix and emit BENCH_<label>.json.
+    let label = args.get("label").unwrap_or("local").to_string();
+    let mut report = bench::run_matrix(dir, model, only.as_deref(), wire)?;
+    report.label = label.clone();
+    let out = args
+        .get("out")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| bench::default_report_path(&label));
+    report.save(&out)?;
+    println!("{:<20} {:>6} {:>8} {:>10} {:>10} {:>10}",
+             "scenario", "reqs", "steps", "tok/s", "ttft_p50", "lat_p99");
+    for s in &report.scenarios {
+        println!(
+            "{:<20} {:>6} {:>8} {:>10.0} {:>10.2} {:>10.2}",
+            s.name,
+            s.requests,
+            s.fingerprint.counters.get("engine_steps").copied().unwrap_or(0),
+            s.timings.throughput_tok_s,
+            s.timings.ttft_ms.p50,
+            s.timings.request_latency_ms.p99,
+        );
+    }
+    println!("wrote {out:?}");
     Ok(())
 }
 

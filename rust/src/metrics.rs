@@ -74,20 +74,48 @@ impl Histogram {
         if self.count == 0 { 0.0 } else { self.max }
     }
 
-    /// Upper bound of the bucket containing quantile `q` (0..=1).
+    /// Value at quantile `q` (0..=1), linearly interpolated inside the
+    /// log bucket holding the target rank and clamped to the observed
+    /// `[min, max]` — so a single-sample histogram reports the sample
+    /// exactly, `q = 0` reports the minimum and `q = 1` the maximum.
+    /// Empty histograms report 0.
     pub fn quantile(&self, q: f64) -> f64 {
         if self.count == 0 {
             return 0.0;
         }
-        let target = (q * self.count as f64).ceil() as u64;
+        let q = q.clamp(0.0, 1.0);
+        if q == 0.0 {
+            return self.min;
+        }
+        let target = ((q * self.count as f64).ceil() as u64).max(1);
         let mut seen = 0;
         for (i, &c) in self.buckets.iter().enumerate() {
-            seen += c;
-            if seen >= target.max(1) {
-                return Self::bucket_upper(i);
+            if c == 0 {
+                continue;
             }
+            if seen + c >= target {
+                let lower = if i == 0 { 0.0 } else { Self::bucket_upper(i - 1) };
+                let upper = Self::bucket_upper(i);
+                let frac = (target - seen) as f64 / c as f64;
+                let v = lower + frac * (upper - lower);
+                return v.clamp(self.min, self.max);
+            }
+            seen += c;
         }
         self.max
+    }
+
+    /// Percentile snapshot for reports (the serving-benchmark JSON).
+    pub fn snapshot(&self) -> Snapshot {
+        Snapshot {
+            count: self.count,
+            mean: self.mean(),
+            p50: self.quantile(0.50),
+            p95: self.quantile(0.95),
+            p99: self.quantile(0.99),
+            min: self.min(),
+            max: self.max(),
+        }
     }
 
     pub fn summary(&self) -> String {
@@ -102,6 +130,19 @@ impl Histogram {
             self.max()
         )
     }
+}
+
+/// Point-in-time percentile summary of one [`Histogram`] — the shape the
+/// serving benchmark (`repro bench`) serializes per latency metric.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Snapshot {
+    pub count: u64,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub min: f64,
+    pub max: f64,
 }
 
 /// Engine-level counters + histograms.
@@ -123,6 +164,11 @@ pub struct EngineMetrics {
     pub groups_finished: u64,
     /// End-to-end latency of finished groups, ms (enqueue → last branch).
     pub group_latency_ms: Histogram,
+    /// Time to first token per group, ms (enqueue → first committed
+    /// token of any branch; beam groups commit at their first
+    /// expansion). Recorded the moment the token applies, so in-flight
+    /// requests already show up in the percentiles.
+    pub ttft_ms: Histogram,
     /// KV pages shared by copy-on-write forks of parallel-sampling groups.
     pub forked_pages: u64,
     /// Copy-on-write page copies triggered by divergent branch writes.
@@ -155,6 +201,10 @@ pub struct EngineMetrics {
     /// (mirror of `SchedulerStats::self_preemptions`).
     pub self_preemptions: u64,
     // ----- automatic prefix cache (mirrors kvcache::CacheStats) -----
+    /// KV pages handed out by the allocator so far (fresh or reclaimed;
+    /// mirrors `kvcache::CacheStats::pages_allocated`) — the memory-side
+    /// work counter of the benchmark fingerprint.
+    pub pages_allocated: u64,
     /// Prompt tokens served from cached KV pages instead of re-prefill.
     pub prefix_hit_tokens: u64,
     /// Prompt tokens examined by admission-time cache lookups.
@@ -192,6 +242,8 @@ impl EngineMetrics {
         let _ = writeln!(s, "cow_pairs_per_step {}",
                          self.cow_pairs_per_step.summary());
         let _ = writeln!(s, "group_latency_ms {}", self.group_latency_ms.summary());
+        let _ = writeln!(s, "ttft_ms {}", self.ttft_ms.summary());
+        let _ = writeln!(s, "pages_allocated {}", self.pages_allocated);
         let _ = writeln!(s, "token_events {}", self.token_events);
         let _ = writeln!(s, "inter_token_ms {}", self.inter_token_ms.summary());
         let _ = writeln!(s, "stop_finishes {}", self.stop_finishes);
@@ -244,9 +296,74 @@ mod tests {
     #[test]
     fn empty_histogram_is_zero() {
         let h = Histogram::new();
-        assert_eq!(h.quantile(0.99), 0.0);
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), 0.0, "empty histogram, q={q}");
+        }
         assert_eq!(h.mean(), 0.0);
         assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+        let s = h.snapshot();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.p99, 0.0);
+    }
+
+    #[test]
+    fn single_sample_quantile_is_exact_at_every_q() {
+        let mut h = Histogram::new();
+        h.record(137.5);
+        // the min/max clamp makes a one-sample histogram report the
+        // sample exactly, not its log-bucket upper bound
+        for q in [0.0, 0.25, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), 137.5, "q={q}");
+        }
+        let s = h.snapshot();
+        assert_eq!((s.count, s.p50, s.p95, s.p99), (1, 137.5, 137.5, 137.5));
+        assert_eq!((s.min, s.max), (137.5, 137.5));
+    }
+
+    #[test]
+    fn quantile_extremes_hit_min_and_max() {
+        let mut h = Histogram::new();
+        for v in [3.0, 10.0, 100.0, 1000.0, 5000.0] {
+            h.record(v);
+        }
+        // q=0 targets rank 1 → clamped into the first bucket ≥ min;
+        // q=1 targets rank n → the max exactly
+        assert_eq!(h.quantile(0.0), 3.0);
+        assert_eq!(h.quantile(1.0), 5000.0);
+        // out-of-range q is clamped, not wrapped
+        assert_eq!(h.quantile(-1.0), h.quantile(0.0));
+        assert_eq!(h.quantile(2.0), h.quantile(1.0));
+    }
+
+    #[test]
+    fn quantile_interpolates_between_bucket_bounds() {
+        // 4 equal samples in one log bucket: ranks 1..4 map to evenly
+        // spaced points between the bucket's lower and upper bound
+        // (clamped to the observed range), so q=0.25 < q=0.5 < q=1.0
+        // strictly — a non-interpolating quantile would return the same
+        // bucket upper bound for all three.
+        let mut h = Histogram::new();
+        for _ in 0..4 {
+            h.record(150.0); // bucket (~128, ~181]
+        }
+        let q25 = h.quantile(0.25);
+        let q50 = h.quantile(0.5);
+        let q100 = h.quantile(1.0);
+        assert_eq!(q100, 150.0, "full-rank quantile clamps to max");
+        assert_eq!(q25, 150.0, "clamp: every rank reports the only value");
+        assert_eq!(q50, 150.0);
+
+        // two distinct values in distinct buckets: the interpolated p50
+        // lands in the first value's bucket, p99 in the second's
+        let mut h = Histogram::new();
+        h.record(10.0);
+        h.record(1000.0);
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        assert!(p50 >= 10.0 && p50 < 16.0, "p50={p50} stays near the low value");
+        assert!(p99 > 700.0 && p99 <= 1000.0, "p99={p99} nears the max");
+        assert!(p50 < p99, "interpolated quantiles stay monotone");
     }
 
     #[test]

@@ -65,7 +65,10 @@
 //! ([`SequenceGroup::best_attainable`] — the vLLM-style "best live
 //! cannot beat worst finished" cutoff), the live branches are retired in
 //! one step, their pages reclaimed immediately, and the group finishes
-//! early. At completion the hypotheses are ranked best-first and
+//! early. With `early_stopping`
+//! ([`crate::config::SamplingMode::Beam`]) the attainable-score
+//! comparison is skipped: the group terminates the moment the pool
+//! fills. At completion the hypotheses are ranked best-first and
 //! truncated to exactly `beam_width`.
 
 use crate::config::SamplingMode;
@@ -363,7 +366,9 @@ impl OutputProcessor {
         out: &mut StepOutputs,
         now_ns: u64,
     ) {
-        let SamplingMode::Beam { beam_width, .. } = g.sampling.mode else {
+        let SamplingMode::Beam { beam_width, early_stopping, .. } =
+            g.sampling.mode
+        else {
             return;
         };
         let live: Vec<usize> = (0..g.seqs.len())
@@ -379,7 +384,11 @@ impl OutputProcessor {
         // beam_width hypotheses whose worst score beats the most
         // optimistic attainable score of every live hypothesis, no live
         // branch can ever place — retire them all (reclaiming their
-        // pages this step) and let the group finish now.
+        // pages this step) and let the group finish now. With
+        // `early_stopping` the attainable-score comparison is skipped
+        // entirely: a full pool terminates the group immediately (vLLM's
+        // `early_stopping=True`), trading a possible better late
+        // hypothesis for zero decode work past the fill.
         let mut fin_scores: Vec<f64> = g
             .seqs
             .iter()
@@ -388,12 +397,15 @@ impl OutputProcessor {
             .collect();
         fin_scores.sort_by(|a, b| b.total_cmp(a));
         if fin_scores.len() >= beam_width {
-            let worst = fin_scores[beam_width - 1];
-            let best_live = live
-                .iter()
-                .map(|&i| g.best_attainable(&g.seqs[i]))
-                .fold(f64::NEG_INFINITY, f64::max);
-            if best_live <= worst {
+            let cutoff = early_stopping || {
+                let worst = fin_scores[beam_width - 1];
+                let best_live = live
+                    .iter()
+                    .map(|&i| g.best_attainable(&g.seqs[i]))
+                    .fold(f64::NEG_INFINITY, f64::max);
+                best_live <= worst
+            };
+            if cutoff {
                 self.retire_live(g, kv, metrics, out, &live);
                 metrics.beam_early_terminations += 1;
                 g.forked = true;
@@ -460,6 +472,17 @@ impl OutputProcessor {
                 });
                 g.next_branch += 1;
             }
+        }
+        // A group whose entire expansion stopped produces its first
+        // visible output as pool hypotheses; that is still its first
+        // token for TTFT purposes (apply_token never runs for it, and
+        // when it does run this same step, the identical timestamp and
+        // the is-none guard keep the sample single and deterministic).
+        if !pool_new.is_empty() && g.first_token_ns.is_none() {
+            g.first_token_ns = Some(now_ns);
+            metrics
+                .ttft_ms
+                .record(now_ns.saturating_sub(g.enqueue_ns) as f64 / 1e6);
         }
         cands.sort_by(|a, b| {
             b.cum
@@ -610,6 +633,9 @@ fn apply_token(
     }
     if g.first_token_ns.is_none() {
         g.first_token_ns = Some(now_ns);
+        metrics
+            .ttft_ms
+            .record(now_ns.saturating_sub(g.enqueue_ns) as f64 / 1e6);
     }
 }
 

@@ -7,9 +7,10 @@
 //!
 //! Protocol (one JSON object per line; the field-by-field reference
 //! lives in `docs/WIRE_PROTOCOL.md`). `n`, `seed` and `temperature` are
-//! optional (parallel sampling), as are `beam_width` and
-//! `length_penalty` (beam search; `beam_width` takes precedence over
-//! `n`) and the stop conditions `stop_token_ids` / `stop_sequences`
+//! optional (parallel sampling), as are `beam_width`, `length_penalty`
+//! and `early_stopping` (beam search; `beam_width` takes precedence over
+//! `n`, `early_stopping` terminates the group as soon as its finished
+//! pool fills) and the stop conditions `stop_token_ids` / `stop_sequences`
 //! (arrays; a branch finishes the step its generated output ends in
 //! one). `cached_tokens` reports the prompt's prefix-cache hit length at
 //! admission; `score` is the hypothesis's length-penalized cumulative
@@ -213,7 +214,10 @@ fn parse_request(line: &str) -> Result<(Vec<i32>, usize, SamplingParams)> {
     let sampling = if beam_width > 0 {
         let length_penalty = v.get("length_penalty").map(|x| x.as_f64())
             .transpose()?.unwrap_or(1.0);
+        let early_stopping = v.get("early_stopping").map(|x| x.as_bool())
+            .transpose()?.unwrap_or(false);
         SamplingParams::beam(beam_width, length_penalty, seed)
+            .with_early_stopping(early_stopping)
     } else {
         SamplingParams {
             n: v.get("n").map(|x| x.as_usize()).transpose()?.unwrap_or(1),
@@ -369,11 +373,15 @@ impl Client {
             ("seed", num(sampling.seed as f64)),
             ("temperature", num(sampling.temperature)),
         ];
-        if let crate::config::SamplingMode::Beam { beam_width, length_penalty } =
-            sampling.mode
+        if let crate::config::SamplingMode::Beam {
+            beam_width, length_penalty, early_stopping,
+        } = sampling.mode
         {
             fields.push(("beam_width", num(beam_width as f64)));
             fields.push(("length_penalty", num(length_penalty)));
+            if early_stopping {
+                fields.push(("early_stopping", Value::Bool(true)));
+            }
         }
         if !sampling.stop_token_ids.is_empty() {
             fields.push(("stop_token_ids", Value::Arr(
@@ -491,7 +499,17 @@ mod tests {
         assert_eq!(s.seed, 4);
         assert_eq!(s.mode,
                    crate::config::SamplingMode::Beam {
-                       beam_width: 3, length_penalty: 0.7 });
+                       beam_width: 3, length_penalty: 0.7,
+                       early_stopping: false });
+        // early_stopping rides along on beam requests
+        let (_, _, s) = parse_request(
+            r#"{"prompt": [5], "beam_width": 2, "early_stopping": true}"#,
+        )
+        .unwrap();
+        assert_eq!(s.mode,
+                   crate::config::SamplingMode::Beam {
+                       beam_width: 2, length_penalty: 1.0,
+                       early_stopping: true });
         // stop conditions ride along on both parallel and beam requests
         let (_, _, s) = parse_request(
             r#"{"prompt": [5], "stop_token_ids": [7, 9],

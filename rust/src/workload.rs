@@ -248,6 +248,46 @@ impl BestOfN {
     }
 }
 
+/// Prefix-cache replay workload: `waves` identical waves of greedy
+/// single-branch requests sharing one long system prefix, each wave
+/// byte-identical to the last. Wave 1 is the cold fill; every later wave
+/// replays the same prompts and should be served almost entirely from
+/// the prefix cache — the §7-style shared-prefix fan-out the automatic
+/// prefix cache exists for, and the serving-benchmark scenario that
+/// pins its hit-token counters.
+#[derive(Debug, Clone)]
+pub struct PrefixReplay {
+    /// Shared system-prompt prefix length (tokens).
+    pub shared_prefix: usize,
+    /// Unique per-request tail length (tokens).
+    pub tail: usize,
+    pub max_new_tokens: usize,
+    pub vocab: usize,
+    /// RNG seed deriving the wave's prompts — waves regenerate from the
+    /// same seed, so every wave issues byte-identical requests.
+    pub seed: u64,
+}
+
+impl PrefixReplay {
+    /// One wave of `count` requests; every call returns the same
+    /// requests (the replay property — the RNG restarts from `seed`).
+    pub fn wave(&self, count: usize) -> Vec<GroupRequest> {
+        let mut rng = Rng::new(self.seed);
+        let prefix = rng.tokens(self.shared_prefix, self.vocab);
+        (0..count)
+            .map(|_| {
+                let mut prompt = prefix.clone();
+                prompt.extend(rng.tokens(self.tail.max(1), self.vocab));
+                GroupRequest {
+                    prompt,
+                    sampling: SamplingParams::default(),
+                    max_new_tokens: self.max_new_tokens,
+                }
+            })
+            .collect()
+    }
+}
+
 /// Beam-search workload: shared system prefix + unique user tails, each
 /// request asking for `beam_width` hypotheses — the decode scenario that
 /// stresses mid-stream `fork`/`unshare_last` on pages far deeper than the
@@ -379,6 +419,27 @@ mod tests {
         // deterministic for a fixed seed
         let again = w.requests(6, &mut Rng::new(5));
         assert_eq!(reqs[3].prompt, again[3].prompt);
+    }
+
+    #[test]
+    fn prefix_replay_waves_are_byte_identical() {
+        let w = PrefixReplay {
+            shared_prefix: 48,
+            tail: 6,
+            max_new_tokens: 4,
+            vocab: 2048,
+            seed: 21,
+        };
+        let a = w.wave(5);
+        let b = w.wave(5);
+        assert_eq!(a.len(), 5);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt, "waves replay the same prompts");
+            assert_eq!(x.prompt.len(), 54);
+            assert_eq!(x.prompt[..48], a[0].prompt[..48], "prefix shared");
+            assert!(x.sampling.is_greedy());
+        }
+        assert_ne!(a[0].prompt[48..], a[1].prompt[48..], "tails unique");
     }
 
     #[test]

@@ -1,0 +1,140 @@
+//! Integration tests for the serving benchmark subsystem (`bench.rs`):
+//!
+//!   (a) the scenario matrix runs end-to-end on the checked-in tiny
+//!       artifacts, every scenario exercising the counters it exists
+//!       for (prefill volume, decode volume, cache hits, CoW forks,
+//!       beam fork/prune/pool, preemptions);
+//!   (b) fingerprints are *deterministic*: running the matrix twice
+//!       yields byte-identical counters (the property the CI gate
+//!       stands on), enforced via strict compare;
+//!   (c) `BENCH_*.json` reports roundtrip through save/load;
+//!   (d) the compare gate fails on an injected counter regression and
+//!       passes on the identity — the exit-code contract CI relies on.
+
+use std::rc::Rc;
+
+use triton_anatomy::bench::{self, BenchReport, SCHEMA_VERSION, SCENARIOS};
+use triton_anatomy::runtime::Runtime;
+
+fn run_matrix() -> BenchReport {
+    let mut r = bench::run_matrix(
+        triton_anatomy::default_artifacts_dir(), "tiny", None, false,
+    )
+    .expect("matrix must run on the checked-in artifacts");
+    r.label = "test".into();
+    r
+}
+
+#[test]
+fn matrix_covers_scenarios_and_their_counters() {
+    let report = run_matrix();
+    assert_eq!(report.schema_version, SCHEMA_VERSION);
+    assert!(report.scenarios.len() >= 6,
+            "the acceptance floor is six scenarios");
+    for name in SCENARIOS {
+        assert!(report.scenario(name).is_some(), "scenario '{name}' missing");
+    }
+    let get = |scn: &str, k: &str| -> u64 {
+        *report.scenario(scn).unwrap().fingerprint.counters.get(k)
+            .unwrap_or_else(|| panic!("{scn} lacks counter {k}"))
+    };
+    // every scenario generated output and finished all its requests
+    for s in &report.scenarios {
+        assert!(s.deterministic);
+        let fp = &s.fingerprint.counters;
+        assert!(fp["generated_tokens"] > 0, "{} idle", s.name);
+        assert_eq!(fp["groups_finished"], s.requests as u64,
+                   "{} did not finish its requests", s.name);
+        assert!(s.timings.throughput_tok_s > 0.0);
+        assert_eq!(s.timings.ttft_ms.count, s.requests as u64,
+                   "{}: one TTFT sample per request", s.name);
+        assert_eq!(s.timings.request_latency_ms.count, s.requests as u64);
+    }
+    // scenario-specific load-bearing counters
+    assert!(get("prefill_heavy", "prompt_tokens")
+            > get("decode_heavy", "prompt_tokens"),
+            "prefill_heavy is the prompt-dominated scenario");
+    assert!(get("decode_heavy", "generated_tokens")
+            > get("prefill_heavy", "generated_tokens"),
+            "decode_heavy is the decode-dominated scenario");
+    assert!(get("prefix_replay", "prefix_hit_tokens") > 0,
+            "the replay wave must hit the prefix cache");
+    assert!(get("parallel_sampling", "forked_pages") > 0);
+    assert!(get("parallel_sampling", "cow_copies") > 0,
+            "divergent branches must CoW-split shared pages");
+    assert!(get("beam_search", "beam_forks") > 0);
+    assert!(get("beam_search", "beam_prunes") > 0);
+    assert!(get("beam_search", "beam_finished_hyps") > 0,
+            "the stop set must feed the finished pool");
+    assert!(get("preemption_pressure", "preemptions") > 0,
+            "oversubscribing the page pool must preempt");
+    // early stopping can only shorten the identical beam load
+    assert!(get("beam_early_stop", "engine_steps")
+            <= get("beam_search", "engine_steps"),
+            "early_stopping must terminate no later than the cutoff");
+    assert!(get("beam_early_stop", "beam_early_terminations") > 0);
+}
+
+#[test]
+fn fingerprints_are_deterministic_across_runs() {
+    let a = run_matrix();
+    let b = run_matrix();
+    for (x, y) in a.scenarios.iter().zip(&b.scenarios) {
+        assert_eq!(x.fingerprint, y.fingerprint,
+                   "scenario '{}' fingerprint drifted between runs", x.name);
+    }
+    // ...which is exactly what strict compare certifies
+    let cmp = bench::compare(&a, &b, true);
+    assert!(cmp.passed(), "strict self-compare: {:?}", cmp.regressions);
+}
+
+#[test]
+fn single_scenario_filter_and_json_roundtrip() {
+    let only = vec!["mixed_poisson".to_string()];
+    let mut report = bench::run_matrix(
+        triton_anatomy::default_artifacts_dir(), "tiny", Some(&only), false,
+    )
+    .unwrap();
+    report.label = "roundtrip".into();
+    assert_eq!(report.scenarios.len(), 1);
+
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("BENCH_roundtrip_{}.json", std::process::id()));
+    report.save(&path).unwrap();
+    let loaded = BenchReport::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded, report, "save → load is identity");
+
+    // unknown scenario names are an error, not silence
+    let bogus = vec!["no_such_scenario".to_string()];
+    assert!(bench::run_matrix(
+        triton_anatomy::default_artifacts_dir(), "tiny", Some(&bogus), false,
+    )
+    .is_err());
+}
+
+#[test]
+fn compare_gate_rejects_injected_regression() {
+    let rt = Rc::new(
+        Runtime::load_dir(triton_anatomy::default_artifacts_dir()).unwrap(),
+    );
+    let s = bench::run_scenario(&rt, "tiny", "decode_heavy").unwrap();
+    let base = BenchReport {
+        schema_version: SCHEMA_VERSION,
+        label: "base".into(),
+        model: "tiny".into(),
+        scenarios: vec![s.clone()],
+    };
+    let mut cur = base.clone();
+    // identity passes
+    assert!(bench::compare(&cur, &base, false).passed());
+    // a cost counter creeping up fails the gate
+    *cur.scenarios[0]
+        .fingerprint
+        .counters
+        .get_mut("engine_steps")
+        .unwrap() += 1;
+    let cmp = bench::compare(&cur, &base, false);
+    assert!(!cmp.passed());
+    assert!(cmp.regressions[0].contains("engine_steps"));
+}

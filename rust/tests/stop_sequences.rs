@@ -222,6 +222,52 @@ fn beam_early_termination_reclaims_pages_at_the_cutoff_step() {
                "early termination is deterministic");
 }
 
+/// (b) `early_stopping=true`: the group terminates the moment the
+/// finished pool holds `beam_width` hypotheses — no attainable-score
+/// comparison — so it can never run *longer* than the default cutoff,
+/// its survivors all come from the pool, and the run stays
+/// deterministic with every page returned.
+#[test]
+fn early_stopping_terminates_at_pool_fill() {
+    let stops: Vec<i32> = (0..2048).step_by(5).collect();
+    let sampling = |early: bool| {
+        SamplingParams::beam(2, 1.0, 7)
+            .with_stop_tokens(stops.clone())
+            .with_early_stopping(early)
+    };
+    let run = |early: bool| {
+        let mut e = engine(128, 8);
+        e.add_group((10..30).collect(), 64, sampling(early)).unwrap();
+        let fin = e.run_to_completion().unwrap();
+        (fin, e)
+    };
+    let (fin_early, e_early) = run(true);
+    let (_, e_default) = run(false);
+    assert_eq!(e_early.metrics.beam_early_terminations, 1,
+               "the pool-fill cutoff fired");
+    assert!(e_early.metrics.steps <= e_default.metrics.steps,
+            "skipping the attainable comparison can only stop sooner \
+             ({} vs {} steps)",
+            e_early.metrics.steps, e_default.metrics.steps);
+    let g = &fin_early[0];
+    assert_eq!(g.seqs.len(), 2, "exactly beam_width hypotheses");
+    for s in &g.seqs {
+        assert_eq!(s.finish_reason(), Some(FinishReason::Stop),
+                   "early-stop survivors all come from the finished pool");
+        assert!(s.output.len() < 64);
+    }
+    assert!(g.final_score(&g.seqs[0]) >= g.final_score(&g.seqs[1]));
+    assert_eq!(e_early.free_page_fraction(), 1.0, "all pages returned");
+    // deterministic replay
+    let (fin2, _) = run(true);
+    let key = |g: &triton_anatomy::SequenceGroup| {
+        g.seqs.iter()
+            .map(|s| (s.output.clone(), s.cum_logprob))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(key(&fin_early[0]), key(&fin2[0]));
+}
+
 /// The model's raw next token for an arbitrary history, via a fresh
 /// greedy engine over a shared runtime (greedy passes raw tokens through
 /// unsalted) — the oracle's probe.
@@ -376,6 +422,170 @@ fn early_terminated_beams_match_exhaustive_oracle() {
             assert_eq!(toks, &pool[i].tokens,
                        "width {width} seed {seed}: hypothesis {i} tokens \
                         diverged from the oracle");
+            assert!((cum - pool[i].cum).abs() < 1e-9,
+                    "width {width} seed {seed}: hypothesis {i} score");
+            assert_eq!(*reason, Some(pool[i].reason),
+                       "width {width} seed {seed}: hypothesis {i} reason");
+        }
+    }
+}
+
+/// (b) A beam group whose *entire first expansion* stops — every
+/// candidate goes straight to the finished pool, `apply_token` never
+/// runs — still records exactly one TTFT sample: the pool hypotheses
+/// are its first visible output.
+#[test]
+fn all_stop_first_expansion_still_records_ttft() {
+    let mut e = engine(128, 8);
+    e.add_group(
+        (10..30).collect(),
+        8,
+        SamplingParams::beam(2, 1.0, 7).with_stop_tokens((0..2048).collect()),
+    )
+    .unwrap();
+    let fin = e.run_to_completion().unwrap();
+    let g = &fin[0];
+    assert_eq!(e.metrics.ttft_ms.count(), 1,
+               "one TTFT sample despite no live token ever applying");
+    assert_eq!(g.seqs.len(), 2, "pool fills to beam_width immediately");
+    for s in &g.seqs {
+        assert_eq!(s.output.len(), 1);
+        assert_eq!(s.finish_reason(), Some(FinishReason::Stop));
+    }
+    assert_eq!(e.free_page_fraction(), 1.0);
+}
+
+/// (b) Exhaustive-scoring oracle for `early_stopping=true`: identical
+/// pool semantics, but the cutoff is *pool full* — no attainable-score
+/// comparison. The engine's early-stopped groups must select the same
+/// hypotheses with the same scores.
+#[test]
+fn early_stopped_beams_match_exhaustive_oracle() {
+    let rt = Rc::new(
+        Runtime::load_dir(triton_anatomy::default_artifacts_dir()).unwrap(),
+    );
+    let configs: Vec<(usize, f64, u64, Vec<i32>)> = vec![
+        (2, 1.0, 7, (0..2048).step_by(5).collect()),
+        (3, 0.5, 11, (0..2048).step_by(3).collect()),
+    ];
+    for (width, penalty, seed, stops) in configs {
+        let prompt: Vec<i32> = (50..58).collect();
+        let max_new = 12usize;
+        let sampling = SamplingParams::beam(width, penalty, seed)
+            .with_stop_tokens(stops.clone())
+            .with_early_stopping(true);
+
+        // engine run
+        let mut e = engine_on(&rt, 128, 8);
+        e.add_group(prompt.clone(), max_new, sampling.clone()).unwrap();
+        let fin = e.run_to_completion().unwrap();
+        let engine_hyps: Vec<(Vec<i32>, f64, Option<FinishReason>)> = fin[0]
+            .seqs
+            .iter()
+            .map(|s| (s.output.clone(), s.cum_logprob, s.finish_reason()))
+            .collect();
+
+        // oracle run: plain beam search over candidate histories with a
+        // finished pool; terminate as soon as the pool holds `width`
+        #[derive(Clone)]
+        struct Hyp {
+            id: usize,
+            tokens: Vec<i32>,
+            cum: f64,
+            reason: FinishReason,
+        }
+        let score = |h: &Hyp| {
+            h.cum / (h.tokens.len().max(1) as f64).powf(penalty)
+        };
+        let mut live = vec![Hyp {
+            id: 0, tokens: Vec::new(), cum: 0.0, reason: FinishReason::Length,
+        }];
+        let mut pool: Vec<Hyp> = Vec::new();
+        let mut next_id = 1usize;
+        for _ in 0..max_new {
+            if live.is_empty() {
+                break;
+            }
+            if pool.len() >= width {
+                // early_stopping: a full pool terminates outright
+                live.clear();
+                break;
+            }
+            let mut cands: Vec<(f64, usize, usize, i32)> = Vec::new();
+            let mut pool_new: Vec<Hyp> = Vec::new();
+            for h in &live {
+                let mut hist = prompt.clone();
+                hist.extend_from_slice(&h.tokens);
+                let raw = raw_next(&rt, &hist);
+                for (ci, (tok, lp)) in
+                    sampling.beam_candidates(raw, 2048).into_iter().enumerate()
+                {
+                    let mut ext = h.tokens.clone();
+                    ext.push(tok);
+                    if sampling.hit_stop(&ext) {
+                        pool_new.push(Hyp {
+                            id: next_id,
+                            tokens: ext,
+                            cum: h.cum + lp,
+                            reason: FinishReason::Stop,
+                        });
+                        next_id += 1;
+                    } else {
+                        cands.push((h.cum + lp, h.id, ci, tok));
+                    }
+                }
+            }
+            cands.sort_by(|a, b| {
+                b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2))
+            });
+            cands.truncate(width);
+            let mut survivors: Vec<Hyp> = Vec::new();
+            let mut children: Vec<Hyp> = Vec::new();
+            for h in &live {
+                let mine: Vec<&(f64, usize, usize, i32)> =
+                    cands.iter().filter(|c| c.1 == h.id).collect();
+                if mine.is_empty() {
+                    continue; // pruned
+                }
+                let mut kept = h.clone();
+                kept.tokens.push(mine[0].3);
+                kept.cum = mine[0].0;
+                survivors.push(kept);
+                for c in &mine[1..] {
+                    let mut child = h.clone();
+                    child.id = next_id;
+                    next_id += 1;
+                    child.tokens.push(c.3);
+                    child.cum = c.0;
+                    children.push(child);
+                }
+            }
+            survivors.extend(children);
+            live = survivors;
+            pool.extend(pool_new);
+            if pool.len() > width {
+                pool.sort_by(|a, b| {
+                    score(b).total_cmp(&score(a)).then(a.id.cmp(&b.id))
+                });
+                pool.truncate(width);
+            }
+            let (done, still): (Vec<Hyp>, Vec<Hyp>) =
+                live.into_iter().partition(|h| h.tokens.len() >= max_new);
+            live = still;
+            pool.extend(done);
+        }
+        pool.extend(live);
+        pool.sort_by(|a, b| {
+            score(b).total_cmp(&score(a)).then(a.id.cmp(&b.id))
+        });
+        pool.truncate(width);
+
+        assert_eq!(engine_hyps.len(), pool.len(),
+                   "width {width}: hypothesis count");
+        for (i, (toks, cum, reason)) in engine_hyps.iter().enumerate() {
+            assert_eq!(toks, &pool[i].tokens,
+                       "width {width} seed {seed}: early-stopped hypothesis \
+                        {i} tokens diverged from the oracle");
             assert!((cum - pool[i].cum).abs() < 1e-9,
                     "width {width} seed {seed}: hypothesis {i} score");
             assert_eq!(*reason, Some(pool[i].reason),
