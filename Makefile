@@ -16,8 +16,10 @@ tier1:
 test: tier1
 
 # End-to-end serving benchmark matrix → BENCH_local.json (docs/BENCHMARKS.md)
+# BENCH_ONLY=multi_tenant_storm (comma-separated) restricts the matrix.
 bench:
-	cd rust && cargo build --release && ./target/release/repro bench --label local
+	cd rust && cargo build --release && ./target/release/repro bench \
+	  --label local $(if $(BENCH_ONLY),--scenarios $(BENCH_ONLY),)
 
 # Deterministic-counter regression gate against the checked-in baseline
 bench-gate:

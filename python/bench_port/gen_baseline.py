@@ -1,0 +1,1517 @@
+#!/usr/bin/env python3
+"""Offline behavioral port of the Rust serving engine's bench matrix.
+
+Regenerates BENCH_baseline.json on machines without a Rust toolchain by
+replaying the exact integer/f64 arithmetic of the engine (scheduler, paged
+KV cache, sim sampler, output pipeline) in pure stdlib Python. Counters are
+bit-exact with `repro bench`; wall-clock timings are emitted as zeros (only
+counters gate — see docs/BENCHMARKS.md).
+
+Usage:
+  python3 python/bench_port/gen_baseline.py --validate   # check the port
+  python3 python/bench_port/gen_baseline.py --out BENCH_baseline.json
+"""
+
+import argparse
+import json
+import math
+import os
+import struct
+import sys
+from collections import OrderedDict, deque
+
+MASK = (1 << 64) - 1
+FNV_MUL = 0x100000001B3
+HASH_SEED = 0xCBF29CE484222325
+
+VOCAB = 2048
+MAX_MODEL_LEN = 512
+NUM_SLOTS = 208
+BLOCK_SIZE = 16
+ENVELOPE_MAX_TOKENS = 128
+ENVELOPE_MAX_SEQS = 8
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+DECODE_FIRST = "decode_first"
+LEGACY_MIXED = "legacy_mixed"
+
+INTERACTIVE = "interactive"
+BATCH = "batch"
+
+
+def compute_wseed():
+    """Fold the tiny model's weight stream exactly like the sim runtime."""
+    data = open(os.path.join(REPO, "rust", "artifacts", "tiny.weights.bin"), "rb").read()
+    ws = 0x9E3779B97F4A7C15
+    for (bits,) in struct.iter_unpack("<I", data):
+        ws = ((ws ^ bits) * FNV_MUL) & MASK
+    return ws
+
+
+WSEED = compute_wseed()
+
+
+def raw_sample(stream):
+    """FNV chain over (token ^ (pos << 20)) for the row's fed stream."""
+    h = (HASH_SEED ^ WSEED) & MASK
+    for p, t in enumerate(stream):
+        kv = (t & MASK) ^ ((p << 20) & MASK)
+        h = ((h ^ kv) * FNV_MUL) & MASK
+    return h % VOCAB
+
+
+def f64_bits(x):
+    return struct.unpack("<Q", struct.pack("<d", x))[0]
+
+
+def rotl64(x, n):
+    return ((x << n) | (x >> (64 - n))) & MASK
+
+
+def logprob_proxy(tok):
+    return math.log((tok + 1) / max(VOCAB, 1))
+
+
+def cdiv(a, b):
+    return -(-a // b)
+
+
+# ---------------------------------------------------------------------------
+# Sampling params (config.rs)
+# ---------------------------------------------------------------------------
+
+
+class SamplingParams:
+    def __init__(self, n=1, seed=0, temperature=0.0, beam=None,
+                 stop_token_ids=None, stop_sequences=None):
+        self.n = n
+        self.seed = seed & MASK
+        self.temperature = temperature
+        self.beam = beam  # None or dict(width, length_penalty, early_stopping)
+        self.stop_token_ids = list(stop_token_ids or [])
+        self.stop_sequences = [list(s) for s in (stop_sequences or [])]
+
+    @staticmethod
+    def greedy():
+        return SamplingParams()
+
+    @staticmethod
+    def beam_params(width, length_penalty, seed):
+        return SamplingParams(n=width, seed=seed, temperature=0.0,
+                              beam=dict(width=width, length_penalty=length_penalty,
+                                        early_stopping=False))
+
+    def with_early_stopping(self, v):
+        self.beam["early_stopping"] = v
+        return self
+
+    def is_beam(self):
+        return self.beam is not None
+
+    def is_greedy(self):
+        return (self.beam is None and self.n == 1 and self.seed == 0
+                and self.temperature == 0.0)
+
+    def width(self):
+        return self.beam["width"] if self.beam else self.n
+
+    def salt_for(self, branch):
+        if self.is_greedy():
+            return 0
+        h = (0x9E3779B97F4A7C15 ^ self.seed) & MASK
+        h = ((h ^ (branch & MASK)) * FNV_MUL) & MASK
+        h = ((h ^ f64_bits(self.temperature)) * FNV_MUL) & MASK
+        return h | 1
+
+    def sample(self, raw, branch):
+        salt = self.salt_for(branch)
+        if salt == 0:
+            return raw
+        mixed = (((raw & 0xFFFFFFFF) ^ salt) * 0x2545F4914F6CDD1D) & MASK
+        return (mixed >> 17) % max(VOCAB, 1)
+
+    def beam_candidates(self, raw):
+        width = min(self.beam["width"], max(VOCAB, 1))
+        out = []
+        chosen = set()
+        for j in range(width):
+            h = ((raw & 0xFFFFFFFF) ^ rotl64(self.seed, 17) ^ 0xA0761D6478BD642F) & MASK
+            h = ((h ^ j) * FNV_MUL) & MASK
+            h ^= h >> 29
+            h = (h * 0xBF58476D1CE4E5B9) & MASK
+            h ^= h >> 32
+            token = h % VOCAB
+            while token in chosen:
+                token = (token + 1) % VOCAB
+            chosen.add(token)
+            u = ((h >> 11) | 1) / float(1 << 53)
+            lp = math.log(u) - 0.02 * j
+            out.append((token, lp))
+        return out
+
+    def hit_stop(self, output):
+        if output and output[-1] in self.stop_token_ids:
+            return True
+        for seq in self.stop_sequences:
+            if seq and len(output) >= len(seq) and output[-len(seq):] == seq:
+                return True
+        return False
+
+    def hit_stop_with(self, output, nxt):
+        if nxt in self.stop_token_ids:
+            return True
+        for seq in self.stop_sequences:
+            if not seq or seq[-1] != nxt:
+                continue
+            head = seq[:-1]
+            if len(output) >= len(head) and (not head or output[-len(head):] == head):
+                return True
+        return False
+
+
+# ---------------------------------------------------------------------------
+# Engine config (config.rs)
+# ---------------------------------------------------------------------------
+
+
+class EngineConfig:
+    def __init__(self):
+        self.block_size = BLOCK_SIZE
+        self.max_batched_tokens = 256
+        self.max_num_seqs = 8
+        self.watermark = 2
+        self.caching = True
+        self.sched_policy = DECODE_FIRST
+        self.max_prefill_tokens_per_step = 0
+        self.tenant_weights = {}
+
+    def prefill_budget(self):
+        if self.max_prefill_tokens_per_step == 0:
+            return self.max_batched_tokens
+        return min(self.max_prefill_tokens_per_step, self.max_batched_tokens)
+
+    def tenant_weight(self, tenant):
+        w = self.tenant_weights.get(tenant)
+        return max(w, 1) if w is not None else 1
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache (kvcache.rs)
+# ---------------------------------------------------------------------------
+
+
+def hash_block(prev, toks):
+    h = ((prev * FNV_MUL) & MASK) ^ len(toks)
+    for t in toks:
+        h = ((h ^ (t & 0xFFFFFFFF)) * FNV_MUL) & MASK
+    return h
+
+
+class BlockTable:
+    __slots__ = ("pages", "len", "committed", "chain")
+
+    def __init__(self):
+        self.pages = []
+        self.len = 0
+        self.committed = 0
+        self.chain = HASH_SEED
+
+
+class KvCacheManager:
+    def __init__(self, num_slots, block_size, caching):
+        self.bs = block_size
+        self.caching = caching
+        self.num_pages = num_slots // block_size
+        # page 0 is scratch; free list pops from the end -> first alloc is 1
+        self.free_list = list(range(self.num_pages - 1, 0, -1))
+        self.rc = [0] * self.num_pages
+        self.tables = []
+        self.index = {}  # chain -> page
+        self.page_key = [None] * self.num_pages
+        self.evictable = {}  # tick -> page
+        self.page_tick = [None] * self.num_pages
+        self.tick = 0
+        self.step = 0
+        self.stats = dict(pages_allocated=0, evictions=0, hit_tokens=0,
+                          lookup_tokens=0, lookups=0, forked_pages=0, cow_copies=0)
+
+    def advance_step(self):
+        self.step += 1
+
+    def free_pages(self):
+        return len(self.free_list) + len(self.evictable)
+
+    def register(self):
+        for i, t in enumerate(self.tables):
+            if t is None:
+                self.tables[i] = BlockTable()
+                return i
+        self.tables.append(BlockTable())
+        return len(self.tables) - 1
+
+    def evict_lru(self):
+        t = min(self.evictable)
+        p = self.evictable.pop(t)
+        key = self.page_key[p]
+        self.page_key[p] = None
+        if key is not None:
+            self.index.pop(key, None)
+        self.page_tick[p] = None
+        self.stats["evictions"] += 1
+        return p
+
+    def allocate_page(self):
+        if self.free_list:
+            p = self.free_list.pop()
+        elif self.evictable:
+            p = self.evict_lru()
+        else:
+            return None
+        self.rc[p] = 1
+        self.stats["pages_allocated"] += 1
+        return p
+
+    def release_page(self, p):
+        self.rc[p] -= 1
+        if self.rc[p] == 0:
+            if self.caching and self.page_key[p] is not None:
+                self.tick += 1
+                self.evictable[self.tick] = p
+                self.page_tick[p] = self.tick
+            else:
+                self.free_list.append(p)
+
+    def acquire_cached(self, p):
+        if self.rc[p] > 0:
+            self.rc[p] += 1
+        else:
+            t = self.page_tick[p]
+            if t is not None:
+                self.evictable.pop(t, None)
+                self.page_tick[p] = None
+            self.rc[p] = 1
+
+    def lookup_prefix(self, tokens):
+        if not self.caching or not tokens:
+            return 0
+        max_full = (len(tokens) - 1) // self.bs
+        hit = 0
+        chain = HASH_SEED
+        for blk in range(max_full):
+            chain = hash_block(chain, tokens[blk * self.bs:(blk + 1) * self.bs])
+            if chain in self.index:
+                hit = (blk + 1) * self.bs
+            else:
+                break
+        return hit
+
+    def parked_prefix_pages(self, tokens):
+        if not self.caching or not tokens:
+            return 0
+        max_full = (len(tokens) - 1) // self.bs
+        parked = 0
+        chain = HASH_SEED
+        for blk in range(max_full):
+            chain = hash_block(chain, tokens[blk * self.bs:(blk + 1) * self.bs])
+            if chain in self.index:
+                if self.rc[self.index[chain]] == 0:
+                    parked += 1
+            else:
+                break
+        return parked
+
+    def attach_prefix(self, h, tokens):
+        if not self.caching:
+            return 0
+        self.stats["lookups"] += 1
+        self.stats["lookup_tokens"] += len(tokens)
+        max_full = (len(tokens) - 1) // self.bs if tokens else 0
+        pages = []
+        matched_chain = HASH_SEED
+        chain = HASH_SEED
+        for blk in range(max_full):
+            chain = hash_block(chain, tokens[blk * self.bs:(blk + 1) * self.bs])
+            if chain in self.index:
+                pages.append(self.index[chain])
+                matched_chain = chain
+            else:
+                break
+        if not pages:
+            return 0
+        for p in pages:
+            self.acquire_cached(p)
+        t = self.tables[h]
+        t.committed = len(pages)
+        t.chain = matched_chain
+        t.pages = pages
+        t.len = len(pages) * self.bs
+        cached = len(pages) * self.bs
+        self.stats["hit_tokens"] += cached
+        return cached
+
+    def commit_prefix(self, h, tokens, computed):
+        if not self.caching:
+            return
+        t = self.tables[h]
+        computed = min(computed, len(tokens))
+        full = min(computed // self.bs, len(t.pages))
+        start = min(t.committed, full)
+        if start >= full:
+            return
+        chain = HASH_SEED if start == 0 else t.chain
+        for blk in range(start, full):
+            chain = hash_block(chain, tokens[blk * self.bs:(blk + 1) * self.bs])
+            p = t.pages[blk]
+            if chain in self.index:
+                continue
+            if self.page_key[p] is None:
+                self.index[chain] = p
+                self.page_key[p] = chain
+        t.committed = full
+        t.chain = chain
+
+    def grow(self, h, new_total):
+        t = self.tables[h]
+        need = max(0, cdiv(new_total, self.bs) - len(t.pages))
+        if need > self.free_pages():
+            return False
+        for _ in range(need):
+            p = self.allocate_page()
+            assert p is not None
+            t.pages.append(p)
+        t.len = new_total
+        return True
+
+    def free(self, h):
+        t = self.tables[h]
+        self.tables[h] = None
+        for p in reversed(t.pages):
+            self.release_page(p)
+
+    def free_counting(self, h):
+        n = len(self.tables[h].pages)
+        self.free(h)
+        return n
+
+    def fork(self, parent):
+        src = self.tables[parent]
+        h = self.register()
+        t = self.tables[h]
+        t.pages = list(src.pages)
+        t.len = src.len
+        t.committed = src.committed
+        t.chain = src.chain
+        for p in t.pages:
+            self.rc[p] += 1
+        self.stats["forked_pages"] += len(t.pages)
+        return h
+
+    def unshare_last(self, h):
+        """Returns (ok, pair): ok=False models the Rust Err (pool exhausted)."""
+        t = self.tables[h]
+        if not t.pages or self.rc[t.pages[-1]] == 1:
+            return True, None
+        fresh = self.allocate_page()
+        if fresh is None:
+            return False, None
+        old = t.pages[-1]
+        t.pages[-1] = fresh
+        self.release_page(old)
+        self.stats["cow_copies"] += 1
+        return True, (old, fresh)
+
+    def pages_needed_from(self, cached, new_total):
+        return max(0, cdiv(new_total, self.bs) - cached // self.bs)
+
+    def committed_blocks(self, h):
+        return self.tables[h].committed
+
+
+# ---------------------------------------------------------------------------
+# Scheduler (scheduler.rs)
+# ---------------------------------------------------------------------------
+
+PASS_DECODES = "decodes"
+PASS_PREFILLS = "prefills"
+PASS_MIXED = "mixed"
+
+MAX_SELF_PREEMPTS = 8
+
+FINISHED_STATES = ("finished_stop", "finished_length")
+
+
+class Sequence:
+    __slots__ = ("branch", "state", "output", "logprobs", "handle", "computed",
+                 "cum_logprob", "pending", "stall")
+
+    def __init__(self, branch, state="waiting", output=None, logprobs=None,
+                 handle=None, computed=0, cum_logprob=0.0, pending=None, stall=0):
+        self.branch = branch
+        self.state = state
+        self.output = output if output is not None else []
+        self.logprobs = logprobs if logprobs is not None else []
+        self.handle = handle
+        self.computed = computed
+        self.cum_logprob = cum_logprob
+        self.pending = pending
+        self.stall = stall
+
+    def is_finished(self):
+        return self.state in FINISHED_STATES
+
+
+class Group:
+    def __init__(self, gid, prompt, sampling, max_new, arrival_seq, priority, tenant):
+        self.id = gid
+        self.prompt = list(prompt)
+        self.sampling = sampling
+        self.max_new = max(max_new, 1)
+        self.arrival_seq = arrival_seq
+        self.priority = priority
+        self.tenant = tenant
+        self.seqs = [Sequence(branch=0)]
+        self.next_branch = 1
+        self.forked = False
+        self.admitted = False
+        self.cached_tokens = 0
+        self.self_preempts = 0
+        self.preemptions = 0
+        self.first_token_ns = None
+
+    def stream(self, branch):
+        return self.prompt + self.seq(branch).output
+
+    def seq(self, branch):
+        for s in self.seqs:
+            if s.branch == branch:
+                return s
+        raise KeyError(branch)
+
+    def seq_index(self, branch):
+        for i, s in enumerate(self.seqs):
+            if s.branch == branch:
+                return i
+        raise KeyError(branch)
+
+    def token_at(self, branch, i):
+        if i < len(self.prompt):
+            return self.prompt[i]
+        return self.seq(branch).output[i - len(self.prompt)]
+
+    def is_finished(self):
+        return all(s.is_finished() for s in self.seqs)
+
+    def reserved_rows(self):
+        live = sum(1 for s in self.seqs if not s.is_finished())
+        extra = 0 if self.forked else max(0, self.sampling.width() - len(self.seqs))
+        return live + extra
+
+    def final_score(self, s):
+        if self.sampling.is_beam():
+            lp = self.sampling.beam["length_penalty"]
+            return s.cum_logprob / (max(len(s.output), 1) ** lp)
+        return 0.0
+
+    def best_attainable(self, s):
+        lp = self.sampling.beam["length_penalty"]
+        if lp > 0.0:
+            length = max(self.max_new, 1)
+        else:
+            length = max(len(s.output), 1)
+        return s.cum_logprob / (length ** lp)
+
+
+class Row:
+    __slots__ = ("id", "branch", "handle", "ctx_len", "tokens", "samples", "prefill")
+
+    def __init__(self, gid, branch, handle, ctx_len, tokens, samples, prefill):
+        self.id = gid
+        self.branch = branch
+        self.handle = handle
+        self.ctx_len = ctx_len
+        self.tokens = tokens
+        self.samples = samples
+        self.prefill = prefill
+
+
+class Batch:
+    def __init__(self):
+        self.seqs = []
+        self.preempted = []
+        self.cow_copies = []
+
+
+INF_BUDGET = 1 << 62
+
+
+class Scheduler:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.running = []
+        self.waiting = {}  # tenant -> deque[Group]
+        self.finished = []
+        self.next_arrival = 0
+        self.drr_cursor = None
+        self.deficit = {}
+        self.stats = dict(steps=0, scheduled_tokens=0, preemptions=0,
+                          self_preemptions=0, decode_stall_steps=0,
+                          max_decode_gap_steps=0, prefill_chunk_deferrals=0,
+                          cached_tokens=0, forked_branches=0, wfq={})
+
+    def add_group_with(self, group):
+        assert group.prompt
+        assert group.sampling.width() >= 1
+        group.arrival_seq = self.next_arrival
+        self.next_arrival += 1
+        q = self.waiting.setdefault(group.tenant, deque())
+        if group.priority == INTERACTIVE:
+            pos = len(q)
+            for i, og in enumerate(q):
+                if og.priority == BATCH:
+                    pos = i
+                    break
+            q.insert(pos, group)
+        else:
+            q.append(group)
+
+    def has_unfinished(self):
+        return any(self.waiting.values()) or bool(self.running)
+
+    def take_finished(self):
+        out = self.finished
+        self.finished = []
+        return out
+
+    def group_by_id(self, gid):
+        for g in self.running:
+            if g.id == gid:
+                return g
+        return None
+
+    def schedule(self, kv):
+        kv.advance_step()
+        batch = Batch()
+        while True:
+            self.schedule_pass(batch, kv)
+            if batch.seqs or not self.has_unfinished() or not self.self_preempt_parked(kv):
+                break
+        self.note_decode_stalls(batch)
+        self.stats["steps"] += 1
+        self.stats["scheduled_tokens"] += sum(len(r.tokens) for r in batch.seqs)
+        return batch
+
+    def schedule_pass(self, batch, kv):
+        st = {
+            "budget": self.cfg.max_batched_tokens,
+            "prefill_budget": (self.cfg.prefill_budget()
+                               if self.cfg.sched_policy == DECODE_FIRST else INF_BUDGET),
+        }
+        scheduled = set()
+        self.running.sort(key=lambda g: g.arrival_seq)
+        decode_first = self.cfg.sched_policy == DECODE_FIRST
+        if decode_first:
+            if self.continuations(PASS_DECODES, batch, kv, st, scheduled):
+                self.continuations(PASS_PREFILLS, batch, kv, st, scheduled)
+        else:
+            self.continuations(PASS_MIXED, batch, kv, st, scheduled)
+        while (st["budget"] > 0 and st["prefill_budget"] > 0
+               and len(batch.seqs) < self.cfg.max_num_seqs):
+            r = self.admit_resumption(batch, kv, st)
+            if r is True:
+                continue
+            if r is False:
+                break
+            if decode_first:
+                if not self.admit_drr(batch, kv, st):
+                    break
+            else:
+                t = self.fcfs_tenant()
+                if t is None:
+                    break
+                if self.try_admit_front(t, False, batch, kv, st) != "admitted":
+                    break
+
+    def continuations(self, pk, batch, kv, st, scheduled):
+        gi = 0
+        done = False
+        while gi < len(self.running) and not done:
+            if st["budget"] == 0:
+                break
+            g = self.running[gi]
+            bi = 0
+            while bi < len(g.seqs):
+                if st["budget"] == 0:
+                    done = True
+                    break
+                s = g.seqs[bi]
+                if s.state != "running":
+                    bi += 1
+                    continue
+                total = len(g.prompt) + len(s.output)
+                if s.pending is not None and s.computed >= total:
+                    bi += 1
+                    continue
+                is_prefill = s.computed < total
+                is_decode = bool(s.output) and s.computed + 1 >= total
+                if (pk == PASS_DECODES and not is_decode) or \
+                   (pk == PASS_PREFILLS and is_decode):
+                    bi += 1
+                    continue
+                if is_decode:
+                    n_new = 1
+                    samples = True
+                else:
+                    want = min(total - s.computed, st["budget"])
+                    n = min(want, st["prefill_budget"])
+                    if n < want:
+                        self.stats["prefill_chunk_deferrals"] += 1
+                    if n == 0:
+                        bi += 1
+                        continue
+                    n_new = n
+                    samples = s.computed + n == total
+                target = total + 1 if s.computed >= total else s.computed + n_new
+                ok = True
+                pair = None
+                if s.computed % self.cfg.block_size != 0:
+                    ok, pair = kv.unshare_last(s.handle)
+                if ok and pair is not None:
+                    batch.cow_copies.append(pair)
+                if not ok or not kv.grow(s.handle, target):
+                    j = self.pick_victim(g.id, scheduled)
+                    if j is None:
+                        return False
+                    self.preempt(j, batch, kv)
+                    if j < gi:
+                        gi -= 1
+                    continue  # retry the same branch
+                if is_prefill:
+                    tokens = [g.token_at(s.branch, i)
+                              for i in range(s.computed, s.computed + n_new)]
+                else:
+                    tokens = [s.output[-1] if s.output else g.prompt[-1]]
+                st["budget"] -= min(len(tokens), st["budget"])
+                if not is_decode:
+                    st["prefill_budget"] = max(0, st["prefill_budget"] - len(tokens))
+                batch.seqs.append(Row(g.id, s.branch, s.handle, s.computed,
+                                      tokens, samples, is_prefill))
+                scheduled.add(g.id)
+                bi += 1
+            gi += 1
+        return True
+
+    def note_decode_stalls(self, batch):
+        if not batch.seqs:
+            return
+        in_batch = {(r.id, r.branch) for r in batch.seqs}
+        for g in self.running:
+            for s in g.seqs:
+                ready = (s.state == "running" and s.pending is None
+                         and bool(s.output)
+                         and s.computed + 1 >= len(g.prompt) + len(s.output))
+                if not ready or (g.id, s.branch) in in_batch:
+                    s.stall = 0
+                else:
+                    s.stall += 1
+                    self.stats["decode_stall_steps"] += 1
+                    self.stats["max_decode_gap_steps"] = max(
+                        self.stats["max_decode_gap_steps"], s.stall)
+
+    def self_preempt_parked(self, kv):
+        for g in self.running:
+            if g.self_preempts >= MAX_SELF_PREEMPTS:
+                continue
+            for s in g.seqs:
+                if (s.state == "running" and s.pending is not None
+                        and s.handle is not None
+                        and s.computed >= len(g.prompt) + len(s.output)):
+                    kv.free(s.handle)
+                    s.handle = None
+                    s.state = "waiting"
+                    s.computed = 0
+                    s.stall = 0
+                    g.self_preempts += 1
+                    g.preemptions += 1
+                    self.stats["self_preemptions"] += 1
+                    return True
+        return False
+
+    def admit_resumption(self, batch, kv, st):
+        for gi, g in enumerate(self.running):
+            for bi, s in enumerate(g.seqs):
+                if s.state == "waiting":
+                    res = self.admit_branch(None, False, gi, bi, batch, kv, st)
+                    return res == "admitted"
+        return None
+
+    def fcfs_tenant(self):
+        best = None
+        for t, q in self.waiting.items():
+            if not q:
+                continue
+            if best is None or q[0].arrival_seq < self.waiting[best][0].arrival_seq:
+                best = t
+        return best
+
+    def admit_drr(self, batch, kv, st):
+        quantum = max(self.cfg.block_size, 1)
+        admitted_total = False
+        while True:
+            if (st["budget"] == 0 or st["prefill_budget"] == 0
+                    or len(batch.seqs) >= self.cfg.max_num_seqs):
+                return admitted_total
+            tenants = sorted(t for t, q in self.waiting.items() if q)
+            if not tenants:
+                return admitted_total
+            start = 0
+            if self.drr_cursor is not None:
+                for i, t in enumerate(tenants):
+                    if t > self.drr_cursor:
+                        start = i
+                        break
+            admitted_any = False
+            deficit_limited = False
+            for k in range(len(tenants)):
+                t = tenants[(start + k) % len(tenants)]
+                self.deficit[t] = (self.deficit.get(t, 0)
+                                   + quantum * self.cfg.tenant_weight(t))
+                while True:
+                    if (st["budget"] == 0 or st["prefill_budget"] == 0
+                            or len(batch.seqs) >= self.cfg.max_num_seqs):
+                        return admitted_total
+                    res = self.try_admit_front(t, True, batch, kv, st)
+                    if res == "admitted":
+                        admitted_any = True
+                        admitted_total = True
+                        self.drr_cursor = t
+                        continue
+                    if res == "deficit":
+                        deficit_limited = True
+                    break
+            if not admitted_any and not deficit_limited:
+                return admitted_total
+
+    def try_admit_front(self, tenant, enforce, batch, kv, st):
+        q = self.waiting.get(tenant)
+        if not q:
+            return "blocked"
+        g = q[0]
+        if self.reserved_rows_total() + g.reserved_rows() > self.cfg.max_num_seqs:
+            return "blocked"
+        bi = None
+        for i, s in enumerate(g.seqs):
+            if s.state == "waiting":
+                bi = i
+                break
+        if bi is None:
+            return "blocked"
+        return self.admit_branch(tenant, enforce, None, bi, batch, kv, st)
+
+    def admit_branch(self, tenant, enforce, gi, bi, batch, kv, st):
+        from_queue = tenant is not None
+        g = self.waiting[tenant][0] if from_queue else self.running[gi]
+        s = g.seqs[bi]
+        stream = g.stream(s.branch)
+        total = len(stream)
+        cached = kv.lookup_prefix(stream)
+        uncached = total - cached
+        if enforce and self.deficit.get(tenant, 0) < uncached:
+            return "deficit"
+        chunk = min(uncached, st["budget"], st["prefill_budget"])
+        if chunk == 0:
+            return "blocked"
+        need = kv.pages_needed_from(cached, cached + chunk)
+        parked = kv.parked_prefix_pages(stream)
+        if kv.free_pages() < parked + need + self.cfg.watermark:
+            return "blocked"
+        handle = kv.register()
+        kv.attach_prefix(handle, stream)
+        if not kv.grow(handle, cached + chunk):
+            kv.free(handle)
+            return "blocked"
+        tokens = stream[cached:cached + chunk]
+        st["budget"] -= chunk
+        st["prefill_budget"] = max(0, st["prefill_budget"] - chunk)
+        self.stats["cached_tokens"] += cached
+        if enforce:
+            self.deficit[tenant] = max(0, self.deficit[tenant] - uncached)
+        if from_queue:
+            self.stats["wfq"][tenant] = self.stats["wfq"].get(tenant, 0) + uncached
+            q = self.waiting[tenant]
+            q.popleft()
+            if not q:
+                del self.waiting[tenant]
+                self.deficit.pop(tenant, None)
+            self.running.append(g)
+        if not g.admitted:
+            g.admitted = True
+            g.cached_tokens = cached
+        s.state = "running"
+        s.handle = handle
+        s.computed = cached
+        batch.seqs.append(Row(g.id, s.branch, handle, cached, tokens,
+                              cached + chunk == total, True))
+        return "admitted"
+
+    def reserved_rows_total(self):
+        return sum(g.reserved_rows() for g in self.running)
+
+    def recompute_cost(self, g, kv):
+        cost = 0
+        for s in g.seqs:
+            if s.state == "running" and s.handle is not None:
+                cost += max(0, s.computed - kv.committed_blocks(s.handle) * self.cfg.block_size)
+        return cost
+
+    def pick_victim(self, current_id, scheduled, kv=None):
+        cands = []
+        for j, g in enumerate(self.running):
+            if g.id == current_id or g.id in scheduled:
+                continue
+            if not any(s.state == "running" for s in g.seqs):
+                continue
+            cands.append(j)
+        if not cands:
+            return None
+        return min(cands, key=lambda j: (self.recompute_cost(self.running[j], self._kv),
+                                         -self.running[j].arrival_seq))
+
+    def preempt(self, j, batch, kv):
+        g = self.running.pop(j)
+        for s in g.seqs:
+            if s.handle is not None:
+                kv.free(s.handle)
+                s.handle = None
+            if s.state == "running":
+                s.state = "waiting"
+                s.computed = 0
+            s.stall = 0
+        g.preemptions += 1
+        self.stats["preemptions"] += 1
+        batch.preempted.append(g.id)
+        self.waiting.setdefault(g.tenant, deque()).appendleft(g)
+
+
+# ---------------------------------------------------------------------------
+# Output pipeline (output.rs)
+# ---------------------------------------------------------------------------
+
+
+class StepOutputs:
+    def __init__(self):
+        self.tokens = 0  # TokenEvent count
+        self.appended = 0
+        self.finished = 0
+
+
+class Candidate:
+    __slots__ = ("cum", "lp", "branch", "ci", "token")
+
+    def __init__(self, cum, lp, branch, ci, token):
+        self.cum = cum
+        self.lp = lp
+        self.branch = branch
+        self.ci = ci
+        self.token = token
+
+
+class OutputProcessor:
+    def process(self, sched, batch, samples, kv, m):
+        out = StepOutputs()
+        # Stage 1: bookkeeping + parallel sampling
+        for row in batch.seqs:
+            g = sched.group_by_id(row.id)
+            if g is None:
+                continue
+            pos = g.seq_index(row.branch)
+            s = g.seqs[pos]
+            s.computed = row.ctx_len + len(row.tokens)
+            if (kv.caching and s.handle is not None
+                    and s.computed // kv.bs > kv.committed_blocks(s.handle)):
+                known = [g.token_at(row.branch, i) for i in range(s.computed)]
+                kv.commit_prefix(s.handle, known, s.computed)
+            if not row.samples:
+                continue
+            raw = samples.get((row.id, row.branch))
+            if raw is None:
+                continue
+            if s.computed < len(g.prompt) + len(s.output):
+                continue  # replay after preemption
+            if g.sampling.is_beam():
+                s.pending = raw
+                continue
+            tok = g.sampling.sample(raw, row.branch)
+            lp = logprob_proxy(tok)
+            self.apply_token(g, pos, tok, lp, out, stream=True)
+            n = g.sampling.n
+            if (not g.forked and n > 1 and row.branch == 0
+                    and len(g.seqs[pos].output) == 1):
+                parent = g.seqs[pos].handle
+                computed0 = g.seqs[pos].computed
+                for b in range(1, n):
+                    h = kv.fork(parent)
+                    first = g.sampling.sample(raw, b)
+                    flp = logprob_proxy(first)
+                    g.seqs.append(Sequence(branch=b, state="running",
+                                           output=[first], logprobs=[flp],
+                                           handle=h, computed=computed0))
+                    g.next_branch = b + 1
+                    sched.stats["forked_branches"] += 1
+                    out.appended += 1
+                    out.tokens += 1
+                g.forked = True
+        # Stage 2: beam expansion
+        for g in sched.running:
+            if g.sampling.is_beam():
+                self.expand_beam(g, kv, m, out)
+        # Stage 3: stop conditions / length caps
+        for g in sched.running:
+            for s in g.seqs:
+                if s.is_finished():
+                    continue
+                if g.sampling.hit_stop(s.output):
+                    s.state = "finished_stop"
+                    m["stop_finishes"] += 1
+                    out.finished += 1
+                elif len(s.output) >= g.max_new:
+                    s.state = "finished_length"
+                    out.finished += 1
+        # Stage 4: free finished handles, retire finished groups
+        j = 0
+        while j < len(sched.running):
+            g = sched.running[j]
+            for s in g.seqs:
+                if s.is_finished() and s.handle is not None:
+                    kv.free(s.handle)
+                    s.handle = None
+            if g.is_finished():
+                sched.running.pop(j)
+                if g.sampling.is_beam():
+                    order = sorted(g.seqs,
+                                   key=lambda s: (-g.final_score(s), s.branch))
+                    g.seqs = order[:g.sampling.width()]
+                    for s in g.seqs:
+                        out.tokens += len(s.output)
+                sched.finished.append(g)
+            else:
+                j += 1
+        return out
+
+    def apply_token(self, g, pos, token, lp, out, stream):
+        s = g.seqs[pos]
+        s.output.append(token)
+        s.logprobs.append(lp)
+        out.appended += 1
+        if stream:
+            out.tokens += 1
+        if g.first_token_ns is None:
+            g.first_token_ns = 0
+
+    def retire_live(self, g, kv, m, indices):
+        for i in reversed(indices):
+            s = g.seqs.pop(i)
+            if s.handle is not None:
+                m["beam_pruned_pages"] += kv.free_counting(s.handle)
+                s.handle = None
+            m["beam_prunes"] += 1
+
+    def expand_beam(self, g, kv, m, out):
+        width = g.sampling.beam["width"]
+        live = [i for i, s in enumerate(g.seqs) if not s.is_finished()]
+        if not live:
+            return
+        if any(g.seqs[i].pending is None for i in live):
+            return
+        fin_scores = sorted((g.final_score(s) for s in g.seqs if s.is_finished()),
+                            reverse=True)
+        if len(fin_scores) >= width:
+            best_live = float("-inf")
+            for i in live:
+                best_live = max(best_live, g.best_attainable(g.seqs[i]))
+            if g.sampling.beam["early_stopping"] or best_live <= fin_scores[width - 1]:
+                self.retire_live(g, kv, m, live)
+                m["beam_early_terminations"] += 1
+                g.forked = True
+                return
+        pool_start = g.next_branch
+        cands = []
+        pool_new = []
+        for i in live:
+            s = g.seqs[i]
+            raw = s.pending
+            stopped = []
+            for ci, (token, lp) in enumerate(g.sampling.beam_candidates(raw)):
+                if g.sampling.hit_stop_with(s.output, token):
+                    stopped.append((token, lp))
+                else:
+                    cands.append(Candidate(s.cum_logprob + lp, lp, s.branch, ci, token))
+            for token, lp in stopped:
+                pool_new.append(Sequence(branch=g.next_branch, state="finished_stop",
+                                         output=s.output + [token],
+                                         logprobs=s.logprobs + [lp],
+                                         cum_logprob=s.cum_logprob + lp))
+                g.next_branch += 1
+        if pool_new and g.first_token_ns is None:
+            g.first_token_ns = 0
+        cands.sort(key=lambda c: (-c.cum, c.branch, c.ci))
+        del cands[width:]
+        retired = []
+        children = []
+        for i in live:
+            s = g.seqs[i]
+            mine = [(c.token, c.cum, c.lp) for c in cands if c.branch == s.branch]
+            if not mine:
+                retired.append(i)
+                continue
+            base = list(s.output)
+            base_lps = list(s.logprobs)
+            s.pending = None
+            s.cum_logprob = mine[0][1]
+            self.apply_token(g, i, mine[0][0], mine[0][2], out, stream=False)
+            for token, cum, lp in mine[1:]:
+                if s.handle is not None:
+                    h = kv.fork(s.handle)
+                    computed = s.computed
+                    state = "running"
+                else:
+                    h = None
+                    computed = 0
+                    state = "waiting"
+                children.append(Sequence(branch=g.next_branch, state=state,
+                                         output=base + [token],
+                                         logprobs=base_lps + [lp],
+                                         handle=h, computed=computed,
+                                         cum_logprob=cum))
+                g.next_branch += 1
+                m["beam_forks"] += 1
+                out.appended += 1
+        self.retire_live(g, kv, m, retired)
+        g.seqs.extend(children)
+        g.seqs.extend(pool_new)
+        fins = [i for i, s in enumerate(g.seqs) if s.is_finished()]
+        if len(fins) > width:
+            order = sorted(fins, key=lambda i: (-g.final_score(g.seqs[i]),
+                                                g.seqs[i].branch))
+            for i in sorted(order[width:], reverse=True):
+                s = g.seqs.pop(i)
+                if s.handle is not None:
+                    kv.free(s.handle)
+        for s in g.seqs:
+            if s.is_finished() and s.branch >= pool_start:
+                out.finished += 1
+                m["beam_finished_hyps"] += 1
+                m["stop_finishes"] += 1
+                out.appended += 1
+        g.forked = True
+        g.self_preempts = 0
+
+
+# ---------------------------------------------------------------------------
+# Engine (engine.rs)
+# ---------------------------------------------------------------------------
+
+
+def fresh_metrics():
+    return dict(steps=0, generated_tokens=0, prompt_tokens=0, preemptions=0,
+                self_preemptions=0, groups_finished=0, pages_allocated=0,
+                forked_pages=0, cow_copies=0, prefix_hit_tokens=0,
+                prefix_lookup_tokens=0, prefix_evictions=0, stop_finishes=0,
+                beam_forks=0, beam_prunes=0, beam_pruned_pages=0,
+                beam_finished_hyps=0, beam_early_terminations=0, token_events=0,
+                decode_stall_steps=0, max_decode_gap_steps=0,
+                prefill_chunk_deferrals=0, wfq_admitted_tokens={})
+
+
+class Engine:
+    def __init__(self, cfg):
+        cfg.max_batched_tokens = min(cfg.max_batched_tokens, ENVELOPE_MAX_TOKENS)
+        cfg.max_num_seqs = min(cfg.max_num_seqs, ENVELOPE_MAX_SEQS)
+        self.cfg = cfg
+        self.kv = KvCacheManager(NUM_SLOTS, BLOCK_SIZE, cfg.caching)
+        self.sched = Scheduler(cfg)
+        self.sched._kv = self.kv  # pick_victim cost needs committed_blocks
+        self.out_proc = OutputProcessor()
+        self.next_id = 1
+        self.m = fresh_metrics()
+
+    def warmup(self):
+        pass  # precompile only; no counter effects
+
+    def add_group(self, prompt, sampling, max_new, priority=INTERACTIVE,
+                  tenant="default"):
+        width = sampling.width()
+        assert 1 <= width <= self.cfg.max_num_seqs and width <= VOCAB
+        assert all(0 <= t < VOCAB for t in prompt)
+        limit = MAX_MODEL_LEN - len(prompt)
+        assert limit > 0
+        gid = self.next_id
+        self.next_id += 1
+        g = Group(gid, prompt, sampling, min(max_new, limit), 0, priority, tenant)
+        self.sched.add_group_with(g)
+        return gid
+
+    def step(self):
+        batch = self.sched.schedule(self.kv)
+        st = self.sched.stats
+        m = self.m
+        m["self_preemptions"] = st["self_preemptions"]
+        m["decode_stall_steps"] = st["decode_stall_steps"]
+        m["max_decode_gap_steps"] = st["max_decode_gap_steps"]
+        m["prefill_chunk_deferrals"] = st["prefill_chunk_deferrals"]
+        m["wfq_admitted_tokens"] = dict(st["wfq"])
+        if not batch.seqs:
+            return None
+        samples = {}
+        for row in batch.seqs:
+            if row.samples:
+                g = self.sched.group_by_id(row.id)
+                stream = g.stream(row.branch)
+                samples[(row.id, row.branch)] = raw_sample(
+                    stream[:row.ctx_len + len(row.tokens)])
+        outs = self.out_proc.process(self.sched, batch, samples, self.kv, m)
+        m["token_events"] += outs.tokens
+        m["generated_tokens"] += outs.appended
+        for _ in self.sched.take_finished():
+            m["groups_finished"] += 1
+        m["steps"] += 1
+        m["preemptions"] += len(batch.preempted)
+        ks = self.kv.stats
+        m["prefix_hit_tokens"] = ks["hit_tokens"]
+        m["prefix_lookup_tokens"] = ks["lookup_tokens"]
+        m["prefix_evictions"] = ks["evictions"]
+        m["forked_pages"] = ks["forked_pages"]
+        m["cow_copies"] = ks["cow_copies"]
+        m["pages_allocated"] = ks["pages_allocated"]
+        m["prompt_tokens"] += sum(len(r.tokens) for r in batch.seqs if r.prefill)
+        return outs
+
+    def run_to_completion(self):
+        while self.sched.has_unfinished():
+            if self.step() is None and self.sched.has_unfinished():
+                raise RuntimeError("engine stuck with work pending")
+
+
+# ---------------------------------------------------------------------------
+# Workload generators (workload.rs)
+# ---------------------------------------------------------------------------
+
+
+class Rng:
+    def __init__(self, seed):
+        self.state = max(seed, 1) & MASK
+
+    def next_u64(self):
+        x = self.state
+        x ^= (x << 13) & MASK
+        x ^= x >> 7
+        x ^= (x << 17) & MASK
+        self.state = x
+        return (x * 0x2545F4914F6CDD1D) & MASK
+
+    def below(self, n):
+        return self.next_u64() % max(n, 1)
+
+    def range(self, lo, hi):
+        return lo + self.below(hi - lo + 1)
+
+    def f64(self):
+        return (self.next_u64() >> 11) / float(1 << 53)
+
+    def exponential(self, rate):
+        return -math.log(max(self.f64(), 1e-12)) / rate
+
+    def tokens(self, n, vocab=VOCAB):
+        return [self.below(vocab) for _ in range(n)]
+
+
+class Request:
+    def __init__(self, prompt, sampling, max_new, priority=INTERACTIVE,
+                 tenant="default"):
+        self.prompt = prompt
+        self.sampling = sampling
+        self.max_new = max_new
+        self.priority = priority
+        self.tenant = tenant
+
+
+def arrival_process_sample(rng, rate, min_prompt, max_prompt, min_new, max_new, n):
+    events = []
+    t = 0.0
+    for _ in range(n):
+        t += rng.exponential(rate)
+        plen = rng.range(min_prompt, max_prompt)
+        mnew = rng.range(min_new, max_new)
+        events.append((t, plen, mnew))
+    return events
+
+
+def best_of_n_requests(n, shared_prefix, tail, max_new, stop_ids, count, rng):
+    prefix = rng.tokens(shared_prefix)
+    reqs = []
+    for i in range(count):
+        prompt = prefix + rng.tokens(max(tail, 1))
+        sp = SamplingParams(n=n, seed=i + 1, temperature=0.7,
+                            stop_token_ids=stop_ids)
+        reqs.append(Request(prompt, sp, max_new))
+    return reqs
+
+
+def prefix_replay_wave(shared_prefix, tail, max_new, seed, count):
+    rng = Rng(seed)
+    prefix = rng.tokens(shared_prefix)
+    reqs = []
+    for _ in range(count):
+        prompt = prefix + rng.tokens(max(tail, 1))
+        reqs.append(Request(prompt, SamplingParams.greedy(), max_new))
+    return reqs
+
+
+def beam_bench_requests(early_stopping, count, rng):
+    width, penalty, shared_prefix, tail, max_new = 3, 1.0, 24, 6, 8
+    stop_ids = list(range(0, VOCAB, 7))
+    prefix = rng.tokens(shared_prefix)
+    reqs = []
+    for i in range(count):
+        prompt = prefix + rng.tokens(max(tail, 1))
+        sp = SamplingParams.beam_params(width, penalty, i + 1)
+        sp.stop_token_ids = stop_ids
+        sp.with_early_stopping(early_stopping)
+        reqs.append(Request(prompt, sp, max_new))
+    return reqs
+
+
+def long_context_stall_arrivals(rng):
+    streams, stream_prompt, stream_new = 3, 6, 12
+    long_prompt, long_new = 80, 4
+    arrivals = []
+    for _ in range(streams):
+        arrivals.append((0, Request(rng.tokens(max(stream_prompt, 1)),
+                                    SamplingParams.greedy(), stream_new,
+                                    INTERACTIVE, "default")))
+    arrivals.append((2, Request(rng.tokens(max(long_prompt, 1)),
+                                SamplingParams.greedy(), long_new,
+                                BATCH, "default")))
+    return arrivals
+
+
+def multi_tenant_storm_requests(rounds, rng):
+    tenants = [("acme", 3), ("bligh", 1), ("corto", 2)]
+    min_prompt, max_prompt, max_new = 6, 18, 4
+    reqs = []
+    for _ in range(rounds):
+        for tenant, volume in tenants:
+            for k in range(volume):
+                length = rng.range(min_prompt, max_prompt)
+                prompt = rng.tokens(max(length, 1))
+                prio = INTERACTIVE if k == 0 else BATCH
+                reqs.append(Request(prompt, SamplingParams.greedy(), max_new,
+                                    prio, tenant))
+    return reqs
+
+
+# ---------------------------------------------------------------------------
+# Bench harness (bench.rs)
+# ---------------------------------------------------------------------------
+
+SCENARIOS = ["prefill_heavy", "decode_heavy", "mixed_poisson", "prefix_replay",
+             "parallel_sampling", "beam_search", "beam_early_stop",
+             "preemption_pressure", "long_context_stall", "multi_tenant_storm"]
+
+STEPS_PER_S = 25.0
+SCHEMA_VERSION = 1
+
+
+def bench_config(name, policy=DECODE_FIRST):
+    cfg = EngineConfig()
+    cfg.sched_policy = policy
+    if name == "long_context_stall":
+        cfg.max_prefill_tokens_per_step = 32
+    elif name == "multi_tenant_storm":
+        cfg.tenant_weights = {"acme": 4, "bligh": 2, "corto": 1}
+    return cfg
+
+
+def run_all(engine, reqs):
+    for r in reqs:
+        engine.add_group(r.prompt, r.sampling, r.max_new, r.priority, r.tenant)
+    engine.run_to_completion()
+
+
+def run_arrivals(engine, arrivals):
+    nxt = 0
+    step_no = 0
+    while True:
+        while nxt < len(arrivals) and arrivals[nxt][0] <= step_no:
+            r = arrivals[nxt][1]
+            engine.add_group(r.prompt, r.sampling, r.max_new, r.priority, r.tenant)
+            nxt += 1
+        if nxt >= len(arrivals) and not engine.sched.has_unfinished():
+            return
+        if engine.step() is None:
+            if engine.sched.has_unfinished():
+                raise RuntimeError("engine stuck with work pending")
+            step_no = arrivals[nxt][0]
+        else:
+            step_no += 1
+
+
+def run_scenario(name, policy=DECODE_FIRST):
+    engine = Engine(bench_config(name, policy))
+    engine.warmup()
+    if name == "prefill_heavy":
+        rng = Rng(11)
+        for _ in range(8):
+            ln = rng.range(48, 80)
+            engine.add_group(rng.tokens(ln), SamplingParams.greedy(), 2)
+        engine.run_to_completion()
+        requests = 8
+    elif name == "decode_heavy":
+        rng = Rng(13)
+        for _ in range(6):
+            engine.add_group(rng.tokens(8), SamplingParams.greedy(), 24)
+        engine.run_to_completion()
+        requests = 6
+    elif name == "mixed_poisson":
+        rng = Rng(31)
+        events = arrival_process_sample(rng, 12.0, 8, 48, 4, 16, 10)
+        arrivals = [(int(at * STEPS_PER_S),
+                     Request(rng.tokens(plen), SamplingParams.greedy(), mnew))
+                    for (at, plen, mnew) in events]
+        run_arrivals(engine, arrivals)
+        requests = 10
+    elif name == "prefix_replay":
+        run_all(engine, prefix_replay_wave(64, 6, 4, 21, 4))
+        run_all(engine, prefix_replay_wave(64, 6, 4, 21, 4))
+        requests = 8
+    elif name == "parallel_sampling":
+        run_all(engine, best_of_n_requests(4, 32, 8, 6, [], 3, Rng(5)))
+        requests = 3
+    elif name == "beam_search":
+        run_all(engine, beam_bench_requests(False, 3, Rng(9)))
+        requests = 3
+    elif name == "beam_early_stop":
+        run_all(engine, beam_bench_requests(True, 3, Rng(9)))
+        requests = 3
+    elif name == "preemption_pressure":
+        rng = Rng(17)
+        for _ in range(4):
+            engine.add_group(rng.tokens(40), SamplingParams.greedy(), 24)
+        engine.run_to_completion()
+        requests = 4
+    elif name == "long_context_stall":
+        run_arrivals(engine, long_context_stall_arrivals(Rng(37)))
+        requests = 4
+    elif name == "multi_tenant_storm":
+        run_all(engine, multi_tenant_storm_requests(2, Rng(43)))
+        requests = 12
+    else:
+        raise ValueError(name)
+    return engine, requests
+
+
+def fingerprint(m):
+    fp = OrderedDict()
+    fp["engine_steps"] = m["steps"]
+    for k in ("generated_tokens", "prompt_tokens", "preemptions",
+              "self_preemptions", "groups_finished", "pages_allocated",
+              "forked_pages", "cow_copies", "prefix_hit_tokens",
+              "prefix_lookup_tokens", "prefix_evictions", "stop_finishes",
+              "beam_forks", "beam_prunes", "beam_pruned_pages",
+              "beam_finished_hyps", "beam_early_terminations", "token_events",
+              "decode_stall_steps", "max_decode_gap_steps",
+              "prefill_chunk_deferrals"):
+        fp[k] = m[k]
+    for tenant in sorted(m["wfq_admitted_tokens"]):
+        fp["wfq_admitted_tokens:%s" % tenant] = m["wfq_admitted_tokens"][tenant]
+    return fp
+
+
+def zero_snapshot():
+    return OrderedDict([("count", 0), ("mean", 0.0), ("p50", 0.0), ("p95", 0.0),
+                        ("p99", 0.0), ("min", 0.0), ("max", 0.0)])
+
+
+def scenario_result(name, engine, requests):
+    return OrderedDict([
+        ("name", name),
+        ("deterministic", True),
+        ("requests", requests),
+        ("fingerprint", fingerprint(engine.m)),
+        ("timings", OrderedDict([
+            ("wall_s", 0.0),
+            ("throughput_tok_s", 0.0),
+            ("ttft_ms", zero_snapshot()),
+            ("inter_token_ms", zero_snapshot()),
+            ("request_latency_ms", zero_snapshot()),
+        ])),
+    ])
+
+
+def generate(out_path):
+    report = OrderedDict([
+        ("schema_version", SCHEMA_VERSION),
+        ("label", "baseline"),
+        ("model", "tiny"),
+        ("scenarios", []),
+    ])
+    for name in SCENARIOS:
+        engine, requests = run_scenario(name)
+        report["scenarios"].append(scenario_result(name, engine, requests))
+        print("  %-20s steps=%-4d gen=%-4d prompt=%-4d" %
+              (name, engine.m["steps"], engine.m["generated_tokens"],
+               engine.m["prompt_tokens"]))
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=1)
+        f.write("\n")
+    print("wrote %s" % out_path)
+
+
+def validate(baseline_path, policy):
+    """Replay the matrix and diff counters against a checked-in baseline.
+
+    Use --legacy to model the pre-SLO scheduler (how this port was first
+    cross-checked against the baseline the old Rust engine produced)."""
+    base = json.load(open(baseline_path))
+    failures = 0
+    for sc in base["scenarios"]:
+        name = sc["name"]
+        engine, requests = run_scenario(name, policy=policy)
+        got = fingerprint(engine.m)
+        want = sc["fingerprint"]
+        diffs = []
+        for k, v in want.items():
+            if got.get(k, 0) != v:
+                diffs.append("%s: want %s got %s" % (k, v, got.get(k, 0)))
+        if requests != sc["requests"]:
+            diffs.append("requests: want %s got %s" % (sc["requests"], requests))
+        status = "ok" if not diffs else "FAIL"
+        print("%-20s %s" % (name, status))
+        for d in diffs:
+            print("    " + d)
+        failures += bool(diffs)
+    if failures:
+        print("%d scenario(s) diverged" % failures)
+        return 1
+    print("port matches the checked-in baseline")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--validate", action="store_true",
+                    help="replay the matrix and diff vs the checked-in baseline")
+    ap.add_argument("--legacy", action="store_true",
+                    help="validate with the pre-SLO LegacyMixed policy")
+    ap.add_argument("--baseline", default=os.path.join(REPO, "BENCH_baseline.json"))
+    ap.add_argument("--out", default=os.path.join(REPO, "BENCH_baseline.json"))
+    args = ap.parse_args()
+    assert WSEED == 0x5E5A8215F9C06550, hex(WSEED)
+    if args.validate:
+        sys.exit(validate(args.baseline,
+                          LEGACY_MIXED if args.legacy else DECODE_FIRST))
+    generate(args.out)
+
+
+if __name__ == "__main__":
+    main()

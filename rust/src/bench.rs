@@ -9,8 +9,11 @@
 //! This module drives the **full engine** over a named scenario matrix —
 //! prefill-heavy, decode-heavy, mixed Poisson arrivals, prefix-cache
 //! replay, parallel sampling, beam search (with and without
-//! `early_stopping`), and deliberate page-pool oversubscription — and
-//! records, per scenario:
+//! `early_stopping`), deliberate page-pool oversubscription, a
+//! long-context prompt landing behind live decode streams (pinning the
+//! decode-first policy's bounded inter-token gaps), and a skewed
+//! multi-tenant storm (pinning the weighted-fair-queuing admission
+//! shares) — and records, per scenario:
 //!
 //! * **wall-clock timings** — tokens/s throughput, TTFT, inter-token
 //!   latency and request latency as p50/p95/p99 [`Snapshot`]s. Noisy on
@@ -35,13 +38,13 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::config::{EngineConfig, SamplingParams};
+use crate::config::{EngineConfig, RequestMeta, SamplingParams};
 use crate::engine::Engine;
 use crate::json::{self, num, obj, Value};
 use crate::metrics::Snapshot;
 use crate::runtime::Runtime;
 use crate::workload::{ArrivalProcess, BeamSearchLoad, BestOfN, GroupRequest,
-                      PrefixReplay, Rng};
+                      LongContextStall, MultiTenantStorm, PrefixReplay, Rng};
 
 /// Version of the `BENCH_*.json` schema; bumped on incompatible change.
 /// `compare` refuses to gate across versions.
@@ -89,6 +92,14 @@ impl Fingerprint {
         put("beam_finished_hyps", m.beam_finished_hyps);
         put("beam_early_terminations", m.beam_early_terminations);
         put("token_events", m.token_events);
+        put("decode_stall_steps", m.decode_stall_steps);
+        put("max_decode_gap_steps", m.max_decode_gap_steps);
+        put("prefill_chunk_deferrals", m.prefill_chunk_deferrals);
+        // one counter per tenant the WFQ admission path credited, so the
+        // fair-share split itself is part of the gated fingerprint
+        for (tenant, n) in &m.wfq_admitted_tokens {
+            c.insert(format!("wfq_admitted_tokens:{tenant}"), *n);
+        }
         Fingerprint { counters: c }
     }
 
@@ -129,15 +140,23 @@ pub enum Gate {
 /// Gating class of a fingerprint counter (see `docs/BENCHMARKS.md` for
 /// the rationale per counter).
 pub fn gate_of(counter: &str) -> Gate {
+    // per-tenant WFQ admission shares: any drift means the fair-queuing
+    // split changed, which is a behavior change like an output drift
+    if counter.starts_with("wfq_admitted_tokens:") {
+        return Gate::Exact;
+    }
     match counter {
         "generated_tokens" | "groups_finished" | "stop_finishes"
         | "beam_finished_hyps" => Gate::Exact,
         "engine_steps" | "prompt_tokens" | "pages_allocated" | "cow_copies"
         | "preemptions" | "self_preemptions" | "prefix_evictions"
-        | "beam_forks" | "beam_prunes" | "beam_pruned_pages" => {
+        | "beam_forks" | "beam_prunes" | "beam_pruned_pages"
+        | "decode_stall_steps" | "max_decode_gap_steps" => {
             Gate::UpIsRegression
         }
         "prefix_hit_tokens" => Gate::DownIsRegression,
+        // `prefill_chunk_deferrals` lands here on purpose: deferring a
+        // chunk is the policy *working*, not a cost
         _ => Gate::Informational,
     }
 }
@@ -311,7 +330,7 @@ pub fn default_report_path(label: &str) -> PathBuf {
 // ------------------------------------------------------------- scenarios
 
 /// The in-process scenario matrix, in run order.
-pub const SCENARIOS: [&str; 8] = [
+pub const SCENARIOS: [&str; 10] = [
     "prefill_heavy",
     "decode_heavy",
     "mixed_poisson",
@@ -320,6 +339,8 @@ pub const SCENARIOS: [&str; 8] = [
     "beam_search",
     "beam_early_stop",
     "preemption_pressure",
+    "long_context_stall",
+    "multi_tenant_storm",
 ];
 
 const VOCAB: usize = 2048;
@@ -339,18 +360,33 @@ fn beam_bench_load() -> BeamSearchLoad {
     }
 }
 
-fn bench_config(model: &str) -> EngineConfig {
-    EngineConfig {
+/// Engine config for one scenario. Most run the stock config; the SLO
+/// scenarios pin their policy knobs here so the fingerprints exercise
+/// (and gate) the prefill chunk cap and the DRR tenant weights.
+fn bench_config(model: &str, scenario: &str) -> EngineConfig {
+    let mut cfg = EngineConfig {
         model: model.to_string(),
         ..Default::default()
+    };
+    match scenario {
+        "long_context_stall" => cfg.max_prefill_tokens_per_step = 32,
+        "multi_tenant_storm" => {
+            cfg.tenant_weights = vec![
+                ("acme".to_string(), 4),
+                ("bligh".to_string(), 2),
+                ("corto".to_string(), 1),
+            ];
+        }
+        _ => {}
     }
+    cfg
 }
 
 /// Enqueue every request up front and drive the engine to completion.
 fn run_all(engine: &mut Engine, reqs: &[GroupRequest]) -> Result<()> {
     for r in reqs {
-        engine.add_group(r.prompt.clone(), r.max_new_tokens,
-                         r.sampling.clone())?;
+        engine.add_group_with(r.prompt.clone(), r.max_new_tokens,
+                              r.sampling.clone(), r.meta.clone())?;
     }
     engine.run_to_completion()?;
     Ok(())
@@ -367,8 +403,8 @@ fn run_arrivals(engine: &mut Engine,
     loop {
         while next < arrivals.len() && arrivals[next].0 <= step_no {
             let r = &arrivals[next].1;
-            engine.add_group(r.prompt.clone(), r.max_new_tokens,
-                             r.sampling.clone())?;
+            engine.add_group_with(r.prompt.clone(), r.max_new_tokens,
+                                  r.sampling.clone(), r.meta.clone())?;
             next += 1;
         }
         if next >= arrivals.len() && !engine.has_unfinished() {
@@ -389,7 +425,7 @@ fn run_arrivals(engine: &mut Engine,
 /// Build and run one named scenario; returns its fingerprint + timings.
 pub fn run_scenario(rt: &Rc<Runtime>, model: &str, name: &str)
     -> Result<ScenarioResult> {
-    let mut engine = Engine::new(rt.clone(), bench_config(model))?;
+    let mut engine = Engine::new(rt.clone(), bench_config(model, name))?;
     engine.warmup()?;
     let t0 = Instant::now();
     let requests: usize = match name {
@@ -405,6 +441,7 @@ pub fn run_scenario(rt: &Rc<Runtime>, model: &str, name: &str)
                     },
                     sampling: SamplingParams::default(),
                     max_new_tokens: 2,
+                    meta: RequestMeta::default(),
                 })
                 .collect();
             run_all(&mut engine, &reqs)?;
@@ -418,6 +455,7 @@ pub fn run_scenario(rt: &Rc<Runtime>, model: &str, name: &str)
                     prompt: rng.tokens(8, VOCAB),
                     sampling: SamplingParams::default(),
                     max_new_tokens: 24,
+                    meta: RequestMeta::default(),
                 })
                 .collect();
             run_all(&mut engine, &reqs)?;
@@ -444,6 +482,7 @@ pub fn run_scenario(rt: &Rc<Runtime>, model: &str, name: &str)
                             prompt: rng.tokens(ev.prompt_len, VOCAB),
                             sampling: SamplingParams::default(),
                             max_new_tokens: ev.max_new_tokens,
+                            meta: RequestMeta::default(),
                         },
                     )
                 })
@@ -512,8 +551,54 @@ pub fn run_scenario(rt: &Rc<Runtime>, model: &str, name: &str)
                     prompt: rng.tokens(40, VOCAB),
                     sampling: SamplingParams::default(),
                     max_new_tokens: 24,
+                    meta: RequestMeta::default(),
                 })
                 .collect();
+            run_all(&mut engine, &reqs)?;
+            reqs.len()
+        }
+        // One long batch-class prompt lands two steps behind short
+        // interactive decode streams. The engine runs with a 32-token
+        // prefill chunk cap, so the long prefill spreads over several
+        // steps while every stream keeps emitting — the scenario pins
+        // `max_decode_gap_steps` (bounded), `decode_stall_steps`, and
+        // the `prefill_chunk_deferrals` the cap produces.
+        "long_context_stall" => {
+            let w = LongContextStall {
+                streams: 3,
+                stream_prompt: 6,
+                stream_new: 12,
+                long_prompt: 80,
+                long_new: 4,
+                vocab: VOCAB,
+            };
+            let mut rng = Rng::new(37);
+            let mut arrivals: Vec<(u64, GroupRequest)> = w
+                .streams(&mut rng)
+                .into_iter()
+                .map(|r| (0, r))
+                .collect();
+            arrivals.push((2, w.long_request(&mut rng)));
+            run_arrivals(&mut engine, &arrivals)?;
+            arrivals.len()
+        }
+        // Three tenants with 3:1:2 submission skew against 4:2:1 DRR
+        // weights: admission order is decided by the weighted-fair
+        // queues, and the per-tenant `wfq_admitted_tokens:*` counters
+        // pin the resulting share split exactly.
+        "multi_tenant_storm" => {
+            let w = MultiTenantStorm {
+                tenants: vec![
+                    ("acme".to_string(), 3),
+                    ("bligh".to_string(), 1),
+                    ("corto".to_string(), 2),
+                ],
+                min_prompt: 6,
+                max_prompt: 18,
+                max_new_tokens: 4,
+                vocab: VOCAB,
+            };
+            let reqs = w.requests(2, &mut Rng::new(43));
             run_all(&mut engine, &reqs)?;
             reqs.len()
         }
@@ -550,7 +635,7 @@ pub fn run_server_replay(artifacts_dir: PathBuf, model: &str)
     let addr = format!("127.0.0.1:{}", probe.local_addr()?.port());
     drop(probe);
     let n_requests = 6usize;
-    let ecfg = bench_config(model);
+    let ecfg = bench_config(model, "server_replay");
     let bound = addr.clone();
     let server = std::thread::spawn(move || {
         serve(artifacts_dir, ecfg, &bound, Some(n_requests))
@@ -647,11 +732,21 @@ impl Comparison {
     }
 }
 
-fn pct_delta(cur: f64, base: f64) -> f64 {
+/// Relative delta in percent, or `None` when the baseline is ~zero —
+/// a zeroed baseline (e.g. one regenerated offline with no timing data)
+/// must render as "no baseline", not as a misleading `+0.0%`.
+fn pct_delta(cur: f64, base: f64) -> Option<f64> {
     if base.abs() < 1e-12 {
-        0.0
+        None
     } else {
-        (cur - base) / base * 100.0
+        Some((cur - base) / base * 100.0)
+    }
+}
+
+fn fmt_pct(delta: Option<f64>) -> String {
+    match delta {
+        Some(p) => format!("{p:+.1}%"),
+        None => "n/a (no timing baseline)".to_string(),
     }
 }
 
@@ -660,6 +755,12 @@ fn pct_delta(cur: f64, base: f64) -> f64 {
 /// `strict` escalates *any* counter difference on a deterministic
 /// scenario to a regression — the CI determinism check runs the matrix
 /// twice and strict-compares the two reports.
+///
+/// The check is symmetric: a scenario or counter present only in
+/// `current` is also a difference. Under `strict` it is a regression
+/// (two runs of one build must be identical in *both* directions); in
+/// gating mode it lands in `improvements` as new coverage the baseline
+/// does not protect yet — a reminder to regenerate it.
 pub fn compare(current: &BenchReport, baseline: &BenchReport, strict: bool)
     -> Comparison {
     let mut out = Comparison::default();
@@ -716,11 +817,41 @@ pub fn compare(current: &BenchReport, baseline: &BenchReport, strict: bool)
                           base.timings.throughput_tok_s);
         let f = pct_delta(cur.timings.ttft_ms.p50, base.timings.ttft_ms.p50);
         out.timing_notes.push(format!(
-            "{}: throughput {:+.1}% ({:.0} -> {:.0} tok/s), \
-             ttft p50 {:+.1}%",
-            base.name, t, base.timings.throughput_tok_s,
-            cur.timings.throughput_tok_s, f
+            "{}: throughput {} ({:.0} -> {:.0} tok/s), ttft p50 {}",
+            base.name, fmt_pct(t), base.timings.throughput_tok_s,
+            cur.timings.throughput_tok_s, fmt_pct(f)
         ));
+    }
+    // the symmetric direction: anything only the current report has
+    for cur in &current.scenarios {
+        if !cur.deterministic {
+            continue;
+        }
+        let Some(base) = baseline.scenario(&cur.name) else {
+            let line = format!(
+                "scenario '{}' added (absent from the baseline)", cur.name
+            );
+            if strict {
+                out.regressions.push(line);
+            } else {
+                out.improvements.push(line);
+            }
+            continue;
+        };
+        for (k, &cv) in &cur.fingerprint.counters {
+            if !base.fingerprint.counters.contains_key(k) {
+                let line = format!(
+                    "{}: counter '{k}' added (current {cv}, \
+                     absent from the baseline)",
+                    cur.name
+                );
+                if strict {
+                    out.regressions.push(line);
+                } else {
+                    out.improvements.push(line);
+                }
+            }
+        }
     }
     out
 }
@@ -820,6 +951,80 @@ mod tests {
         let cur = report_with(&[("forked_pages", 90), ("token_events", 1)]);
         assert!(compare(&cur, &base, false).passed());
         assert_eq!(gate_of("some_future_counter"), Gate::Informational);
+    }
+
+    #[test]
+    fn slo_counters_gate_in_their_classes() {
+        assert_eq!(gate_of("wfq_admitted_tokens:acme"), Gate::Exact);
+        assert_eq!(gate_of("wfq_admitted_tokens:anyone-else"), Gate::Exact);
+        assert_eq!(gate_of("decode_stall_steps"), Gate::UpIsRegression);
+        assert_eq!(gate_of("max_decode_gap_steps"), Gate::UpIsRegression);
+        assert_eq!(gate_of("prefill_chunk_deferrals"), Gate::Informational);
+
+        let base = report_with(&[("max_decode_gap_steps", 0)]);
+        let worse = report_with(&[("max_decode_gap_steps", 5)]);
+        assert!(!compare(&worse, &base, false).passed(),
+                "a decode stream starving longer is a regression");
+        let base = report_with(&[("wfq_admitted_tokens:acme", 96)]);
+        let drift = report_with(&[("wfq_admitted_tokens:acme", 80)]);
+        assert!(!compare(&drift, &base, false).passed(),
+                "a fair-share drift fails in either direction");
+    }
+
+    #[test]
+    fn added_scenario_fails_strict_but_not_gating_compare() {
+        let base = report_with(&[("engine_steps", 10)]);
+        let mut cur = base.clone();
+        cur.scenarios.push(ScenarioResult {
+            name: "brand_new".into(),
+            deterministic: true,
+            requests: 1,
+            fingerprint: Fingerprint::default(),
+            timings: Timings::default(),
+        });
+        let strict = compare(&cur, &base, true);
+        assert!(!strict.passed(),
+                "strict self-compare must see an added scenario");
+        assert!(strict.regressions.iter().any(|r| r.contains("brand_new")));
+        let gating = compare(&cur, &base, false);
+        assert!(gating.passed(),
+                "new coverage is tolerated until the baseline regenerates");
+        assert!(gating.improvements.iter().any(|r| r.contains("brand_new")));
+    }
+
+    #[test]
+    fn added_counter_fails_strict_but_not_gating_compare() {
+        let base = report_with(&[("engine_steps", 10)]);
+        let cur = report_with(&[("engine_steps", 10), ("novel_counter", 3)]);
+        let strict = compare(&cur, &base, true);
+        assert!(!strict.passed(),
+                "strict self-compare must see an added counter");
+        assert!(strict.regressions.iter()
+                    .any(|r| r.contains("novel_counter")));
+        let gating = compare(&cur, &base, false);
+        assert!(gating.passed());
+        assert!(gating.improvements.iter()
+                    .any(|r| r.contains("novel_counter")));
+    }
+
+    #[test]
+    fn zero_timing_baseline_reports_na_not_zero_delta() {
+        let base = report_with(&[("engine_steps", 10)]);
+        let mut cur = base.clone();
+        cur.scenarios[0].timings.throughput_tok_s = 512.0;
+        cur.scenarios[0].timings.ttft_ms.p50 = 1.5;
+        let cmp = compare(&cur, &base, false);
+        assert!(cmp.passed());
+        assert!(cmp.timing_notes[0].contains("n/a (no timing baseline)"),
+                "zeroed baseline timings must not print a +0.0% delta: {}",
+                cmp.timing_notes[0]);
+        // with a real baseline the percent delta comes back
+        let mut base2 = cur.clone();
+        base2.scenarios[0].timings.throughput_tok_s = 256.0;
+        let cmp2 = compare(&cur, &base2, false);
+        assert!(cmp2.timing_notes[0].contains("+100.0%"),
+                "real baselines keep percent deltas: {}",
+                cmp2.timing_notes[0]);
     }
 
     #[test]

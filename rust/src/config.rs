@@ -385,6 +385,109 @@ impl SamplingParams {
     }
 }
 
+/// Request priority class — the SLO tier of one request.
+///
+/// `Interactive` requests are admitted ahead of `Batch` requests *of the
+/// same tenant* (admission stays FCFS within a class, so scheduling
+/// remains a deterministic function of the arrival sequence). Each class
+/// also gets its own TTFT histogram in
+/// [`crate::metrics::EngineMetrics`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Priority {
+    /// Latency-sensitive traffic: admitted ahead of `Batch` work from
+    /// the same tenant.
+    Interactive,
+    /// Throughput traffic: yields admission order to `Interactive`.
+    Batch,
+}
+
+impl Priority {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "interactive" => Priority::Interactive,
+            "batch" => Priority::Batch,
+            other => bail!(
+                "unknown priority '{other}' \
+                 (expected 'interactive' or 'batch')"
+            ),
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+        }
+    }
+}
+
+/// SLO metadata carried next to [`SamplingParams`] by every request:
+/// which tenant submitted it and which priority class it belongs to.
+///
+/// The default (`Interactive`, tenant `"default"`) reproduces the
+/// pre-metadata engine exactly — one tenant, one class, pure FCFS — so
+/// every call site that does not care about SLOs keeps its behavior.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct RequestMeta {
+    /// SLO tier; see [`Priority`].
+    pub priority: Priority,
+    /// Fair-queuing key: requests from the same tenant share one FCFS
+    /// admission queue and one DRR deficit counter. Must be non-empty
+    /// on the wire (the server rejects empty tenants).
+    pub tenant: String,
+}
+
+impl Default for RequestMeta {
+    fn default() -> Self {
+        RequestMeta {
+            priority: Priority::Interactive,
+            tenant: "default".to_string(),
+        }
+    }
+}
+
+impl RequestMeta {
+    pub fn new(priority: Priority, tenant: impl Into<String>) -> Self {
+        RequestMeta { priority, tenant: tenant.into() }
+    }
+}
+
+/// Batch-composition policy run by the scheduler's `schedule_pass`
+/// (see `docs/ARCHITECTURE.md` §2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// Pre-SLO behavior: one arrival-ordered walk over the running set
+    /// mixing decodes and prefill chunks under the shared token budget.
+    /// An older group's prefill chunk can consume the whole budget and
+    /// starve every newer group's decode for the length of the chunked
+    /// prefill — kept as an explicit knob for A/B and regression tests.
+    LegacyMixed,
+    /// Decodes are scheduled first (they always land: one token each),
+    /// then prefill chunks spend what remains of the budget, further
+    /// capped by `EngineConfig::max_prefill_tokens_per_step`.
+    DecodeFirst,
+}
+
+impl SchedPolicy {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "legacy" => SchedPolicy::LegacyMixed,
+            "decode-first" => SchedPolicy::DecodeFirst,
+            other => bail!(
+                "unknown scheduling policy '{other}' \
+                 (expected 'legacy' or 'decode-first')"
+            ),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedPolicy::LegacyMixed => "legacy",
+            SchedPolicy::DecodeFirst => "decode-first",
+        }
+    }
+}
+
 /// Engine-level knobs (the vLLM-engine-args analogue).
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
@@ -407,6 +510,38 @@ pub struct EngineConfig {
     pub model: String,
     /// Fallback kernel variant when the heuristics file has no opinion.
     pub default_variant: Variant,
+    /// Batch-composition policy; `DecodeFirst` is the default.
+    pub sched_policy: SchedPolicy,
+    /// Per-step cap on prefill tokens (running chunks + fresh
+    /// admissions) under `DecodeFirst`; `0` means "no cap beyond
+    /// `max_batched_tokens`". Ignored under `LegacyMixed`.
+    pub max_prefill_tokens_per_step: usize,
+    /// DRR weights per tenant: admission order and prefill-budget share
+    /// track these (see `docs/ARCHITECTURE.md` §2). Tenants not listed
+    /// weigh 1; empty = every tenant equal (pure round-robin).
+    pub tenant_weights: Vec<(String, u64)>,
+}
+
+impl EngineConfig {
+    /// Effective per-step prefill budget under `DecodeFirst`
+    /// (`0` = uncapped, i.e. the whole token budget).
+    pub fn prefill_budget(&self) -> usize {
+        if self.max_prefill_tokens_per_step == 0 {
+            self.max_batched_tokens
+        } else {
+            self.max_prefill_tokens_per_step.min(self.max_batched_tokens)
+        }
+    }
+
+    /// DRR weight of one tenant: the configured weight (floored at 1 so
+    /// a zero weight cannot starve a tenant forever), else 1.
+    pub fn tenant_weight(&self, tenant: &str) -> u64 {
+        self.tenant_weights
+            .iter()
+            .find(|(t, _)| t == tenant)
+            .map(|(_, w)| (*w).max(1))
+            .unwrap_or(1)
+    }
 }
 
 impl Default for EngineConfig {
@@ -419,6 +554,9 @@ impl Default for EngineConfig {
             enable_prefix_caching: true,
             model: "tiny".to_string(),
             default_variant: Variant::QBlock,
+            sched_policy: SchedPolicy::DecodeFirst,
+            max_prefill_tokens_per_step: 0,
+            tenant_weights: Vec::new(),
         }
     }
 }
@@ -587,6 +725,48 @@ mod tests {
         }
         // non-beam modes expand to nothing
         assert!(SamplingParams::default().beam_candidates(5, 2048).is_empty());
+    }
+
+    #[test]
+    fn priority_and_policy_parse_roundtrip() {
+        for p in [Priority::Interactive, Priority::Batch] {
+            assert_eq!(Priority::parse(p.as_str()).unwrap(), p);
+        }
+        assert!(Priority::parse("urgent").is_err());
+        for p in [SchedPolicy::LegacyMixed, SchedPolicy::DecodeFirst] {
+            assert_eq!(SchedPolicy::parse(p.name()).unwrap(), p);
+        }
+        assert!(SchedPolicy::parse("fifo").is_err());
+        // Interactive sorts ahead of Batch (the admission order relies
+        // on the derived ordering)
+        assert!(Priority::Interactive < Priority::Batch);
+    }
+
+    #[test]
+    fn request_meta_default_is_the_pre_slo_request() {
+        let m = RequestMeta::default();
+        assert_eq!(m.priority, Priority::Interactive);
+        assert_eq!(m.tenant, "default");
+        assert_eq!(m, RequestMeta::new(Priority::Interactive, "default"));
+    }
+
+    #[test]
+    fn tenant_weights_and_prefill_budget() {
+        let mut cfg = EngineConfig::default();
+        assert_eq!(cfg.sched_policy, SchedPolicy::DecodeFirst);
+        // unlisted tenants weigh 1; zero weights are floored at 1
+        assert_eq!(cfg.tenant_weight("anyone"), 1);
+        cfg.tenant_weights =
+            vec![("a".to_string(), 4), ("z".to_string(), 0)];
+        assert_eq!(cfg.tenant_weight("a"), 4);
+        assert_eq!(cfg.tenant_weight("z"), 1);
+        assert_eq!(cfg.tenant_weight("b"), 1);
+        // 0 = uncapped; a cap larger than the budget clamps to it
+        assert_eq!(cfg.prefill_budget(), cfg.max_batched_tokens);
+        cfg.max_prefill_tokens_per_step = 32;
+        assert_eq!(cfg.prefill_budget(), 32);
+        cfg.max_prefill_tokens_per_step = 4096;
+        assert_eq!(cfg.prefill_budget(), cfg.max_batched_tokens);
     }
 
     #[test]

@@ -33,7 +33,8 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::batch::{self, BatchMetadata};
-use crate::config::{EngineConfig, ModelConfig, SamplingParams, Variant};
+use crate::config::{EngineConfig, ModelConfig, RequestMeta, SamplingParams,
+                    Variant};
 use crate::heuristics::{Heuristics, KernelChoice};
 use crate::kvcache::{KvCacheManager, PageId};
 use crate::manifest::ArtifactSpec;
@@ -193,9 +194,20 @@ impl Engine {
 
     /// Enqueue a sequence group: `sampling.width()` branches sharing
     /// `prompt` (parallel branches or beam hypotheses), each generating
-    /// up to `max_new_tokens`.
+    /// up to `max_new_tokens`. Uses the default [`RequestMeta`]
+    /// (interactive priority, `"default"` tenant).
     pub fn add_group(&mut self, prompt: Vec<i32>, max_new_tokens: usize,
                      sampling: SamplingParams) -> Result<RequestId> {
+        self.add_group_with(prompt, max_new_tokens, sampling,
+                            RequestMeta::default())
+    }
+
+    /// Enqueue a sequence group with explicit SLO metadata: the priority
+    /// class steers queue insertion, the tenant selects the weighted-fair
+    /// admission queue.
+    pub fn add_group_with(&mut self, prompt: Vec<i32>, max_new_tokens: usize,
+                          sampling: SamplingParams, meta: RequestMeta)
+        -> Result<RequestId> {
         if sampling.width() == 0 {
             bail!("sampling width must be at least 1");
         }
@@ -219,8 +231,9 @@ impl Engine {
         }
         let id = self.next_id;
         self.next_id += 1;
-        self.scheduler.add_group(
-            id, prompt, sampling, max_new_tokens.min(limit), self.now_ns());
+        self.scheduler.add_group_with(
+            id, prompt, sampling, meta, max_new_tokens.min(limit),
+            self.now_ns());
         Ok(id)
     }
 
@@ -350,6 +363,13 @@ impl Engine {
         // exactly the diagnostic for a schedule call that came back
         // empty (a post-mortem dump must see the final failing call).
         self.metrics.self_preemptions = self.scheduler.stats.self_preemptions;
+        self.metrics.decode_stall_steps = self.scheduler.stats.decode_stall_steps;
+        self.metrics.max_decode_gap_steps =
+            self.scheduler.stats.max_decode_gap_steps;
+        self.metrics.prefill_chunk_deferrals =
+            self.scheduler.stats.prefill_chunk_deferrals;
+        self.metrics.wfq_admitted_tokens =
+            self.scheduler.stats.wfq_admitted_tokens.clone();
         // CoW splits must reach the device cache even when the batch ended
         // up empty (the split branch may only be dispatched next step).
         self.apply_cow_copies(&batch.cow_copies)?;

@@ -177,13 +177,34 @@
 //! its history), so a single over-wide group degrades to recompute
 //! instead of wedging the engine.
 //!
+//! ## SLO-aware scheduling
+//!
+//! Batch composition is policy-driven
+//! ([`config::EngineConfig::sched_policy`]). The default
+//! [`config::SchedPolicy::DecodeFirst`] schedules every ready decode
+//! row *before* spending the remaining token budget on prefill chunks,
+//! optionally capped per step
+//! ([`config::EngineConfig::max_prefill_tokens_per_step`]), so a long
+//! prompt landing mid-flight cannot starve live streams — the legacy
+//! single mixed arrival-ordered pass survives as
+//! [`config::SchedPolicy::LegacyMixed`] for A/B runs. Requests carry
+//! [`config::RequestMeta`] — a [`config::Priority`] class
+//! (`Interactive` slots ahead of `Batch` within its tenant) and a
+//! `tenant` string — and admission across tenants runs deficit-round-
+//! robin weighted fair queuing over per-tenant FCFS queues
+//! ([`config::EngineConfig::tenant_weights`]). Starvation is observable:
+//! [`metrics::EngineMetrics`] mirrors scheduler counters for decode
+//! stall steps, the worst inter-token gap, prefill chunk deferrals,
+//! per-tenant admitted-token shares, and per-class TTFT histograms.
+//!
 //! ## Streaming wire protocol
 //!
 //! The TCP front-end ([`server`]) speaks JSON lines (field-by-field
 //! reference: `docs/WIRE_PROTOCOL.md`). Submit carries `prompt`,
 //! `max_new_tokens`, and optionally `n`/`seed`/`temperature` (parallel)
 //! or `beam_width`/`length_penalty` (beam), plus
-//! `stop_token_ids`/`stop_sequences`. Responses are `token` events —
+//! `stop_token_ids`/`stop_sequences` and the validated SLO metadata
+//! pair `priority`/`tenant`. Responses are `token` events —
 //! `{event, id, branch, token, position, logprob}` — and one `done` per
 //! branch with the full token list, `ttft_ms`, `total_ms`,
 //! `cached_tokens`, the hypothesis `score` and its `finish_reason`
@@ -246,8 +267,9 @@ pub mod server;
 pub mod workload;
 
 pub use bench::{BenchReport, Comparison, Fingerprint};
-pub use config::{Bucket, EngineConfig, KernelConfig, ModelConfig,
-                 SamplingMode, SamplingParams, Variant};
+pub use config::{Bucket, EngineConfig, KernelConfig, ModelConfig, Priority,
+                 RequestMeta, SamplingMode, SamplingParams, SchedPolicy,
+                 Variant};
 pub use engine::{Engine, StepReport};
 pub use heuristics::{Heuristics, KernelChoice};
 pub use manifest::Manifest;

@@ -18,7 +18,7 @@ use anyhow::{bail, Context, Result};
 
 use triton_anatomy::autotune;
 use triton_anatomy::bench;
-use triton_anatomy::config::{EngineConfig, SamplingParams};
+use triton_anatomy::config::{EngineConfig, SamplingParams, SchedPolicy};
 use triton_anatomy::engine::Engine;
 use triton_anatomy::heuristics::Heuristics;
 use triton_anatomy::microbench::{self, BenchOpts};
@@ -80,6 +80,9 @@ USAGE: repro <command> [--artifacts DIR] [options]
 
 COMMANDS:
   serve        --addr 127.0.0.1:7001 --model tiny [--max-requests N]
+               [--sched-policy decode-first|legacy]  batch-composition policy
+               [--max-prefill-tokens N]  per-step prefill chunk cap (0 = off)
+               [--tenant-weights acme=4,bligh=2]     DRR fair-queuing weights
   run          --prompt-len 16 --max-new 16 --model tiny [--heuristics F]
                [--n 4 --sample-seed 1 --temperature 0.7]  parallel sampling
                [--beam-width 3 --length-penalty 1.0]      beam search
@@ -123,10 +126,32 @@ fn main() -> Result<()> {
 }
 
 fn engine_config(args: &Args) -> Result<EngineConfig> {
+    // --tenant-weights acme=4,bligh=2  (unlisted tenants weigh 1)
+    let tenant_weights: Vec<(String, u64)> = match args.get("tenant-weights") {
+        Some(v) => v
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|pair| {
+                let (t, w) = pair.split_once('=').with_context(|| {
+                    format!("--tenant-weights '{pair}' (want tenant=weight)")
+                })?;
+                let w: u64 = w.trim().parse()
+                    .with_context(|| format!("--tenant-weights '{pair}'"))?;
+                Ok((t.trim().to_string(), w))
+            })
+            .collect::<Result<_>>()?,
+        None => Vec::new(),
+    };
     Ok(EngineConfig {
         model: args.get("model").unwrap_or("tiny").to_string(),
         max_batched_tokens: args.usize_or("max-batched-tokens", 256)?,
         max_num_seqs: args.usize_or("max-num-seqs", 8)?,
+        sched_policy: match args.get("sched-policy") {
+            Some(v) => SchedPolicy::parse(v)?,
+            None => SchedPolicy::DecodeFirst,
+        },
+        max_prefill_tokens_per_step: args.usize_or("max-prefill-tokens", 0)?,
+        tenant_weights,
         ..Default::default()
     })
 }

@@ -200,6 +200,25 @@ pub struct EngineMetrics {
     /// Parked beam branches self-preempted under extreme memory pressure
     /// (mirror of `SchedulerStats::self_preemptions`).
     pub self_preemptions: u64,
+    // ----- SLO-aware scheduling (mirrors SchedulerStats) -----
+    /// Branch-steps a decode-ready branch sat out a non-empty batch
+    /// (starvation accounting; mirror of
+    /// `SchedulerStats::decode_stall_steps`).
+    pub decode_stall_steps: u64,
+    /// Worst consecutive stall run observed by any single branch (mirror
+    /// of `SchedulerStats::max_decode_gap_steps`).
+    pub max_decode_gap_steps: u64,
+    /// Prefill chunks truncated or zeroed by the per-step prefill cap
+    /// (mirror of `SchedulerStats::prefill_chunk_deferrals`).
+    pub prefill_chunk_deferrals: u64,
+    /// Uncached prompt tokens admitted from each tenant's waiting queue
+    /// (mirror of `SchedulerStats::wfq_admitted_tokens`) — the WFQ share
+    /// counter the `multi_tenant_storm` scenario gates on.
+    pub wfq_admitted_tokens: std::collections::BTreeMap<String, u64>,
+    /// TTFT of `Priority::Interactive` groups, ms (subset of `ttft_ms`).
+    pub ttft_interactive_ms: Histogram,
+    /// TTFT of `Priority::Batch` groups, ms (subset of `ttft_ms`).
+    pub ttft_batch_ms: Histogram,
     // ----- automatic prefix cache (mirrors kvcache::CacheStats) -----
     /// KV pages handed out by the allocator so far (fresh or reclaimed;
     /// mirrors `kvcache::CacheStats::pages_allocated`) — the memory-side
@@ -254,6 +273,16 @@ impl EngineMetrics {
         let _ = writeln!(s, "beam_early_terminations {}",
                          self.beam_early_terminations);
         let _ = writeln!(s, "self_preemptions {}", self.self_preemptions);
+        let _ = writeln!(s, "decode_stall_steps {}", self.decode_stall_steps);
+        let _ = writeln!(s, "max_decode_gap_steps {}", self.max_decode_gap_steps);
+        let _ = writeln!(s, "prefill_chunk_deferrals {}",
+                         self.prefill_chunk_deferrals);
+        for (t, n) in &self.wfq_admitted_tokens {
+            let _ = writeln!(s, "wfq_admitted_tokens{{tenant=\"{t}\"}} {n}");
+        }
+        let _ = writeln!(s, "ttft_interactive_ms {}",
+                         self.ttft_interactive_ms.summary());
+        let _ = writeln!(s, "ttft_batch_ms {}", self.ttft_batch_ms.summary());
         let _ = writeln!(s, "prefix_cache_hit_tokens {}", self.prefix_hit_tokens);
         let _ = writeln!(s, "prefix_cache_lookup_tokens {}",
                          self.prefix_lookup_tokens);
@@ -423,6 +452,24 @@ mod tests {
         assert!(d.contains("beam_finished_hyps 4"));
         assert!(d.contains("beam_early_terminations 1"));
         assert!(d.contains("self_preemptions 2"));
+    }
+
+    #[test]
+    fn slo_scheduling_metrics_dump() {
+        let mut m = EngineMetrics::default();
+        m.decode_stall_steps = 7;
+        m.max_decode_gap_steps = 3;
+        m.prefill_chunk_deferrals = 2;
+        m.wfq_admitted_tokens.insert("acme".into(), 96);
+        m.ttft_interactive_ms.record(2.0);
+        m.ttft_batch_ms.record(40.0);
+        let d = m.dump();
+        assert!(d.contains("decode_stall_steps 7"));
+        assert!(d.contains("max_decode_gap_steps 3"));
+        assert!(d.contains("prefill_chunk_deferrals 2"));
+        assert!(d.contains("wfq_admitted_tokens{tenant=\"acme\"} 96"));
+        assert!(d.contains("ttft_interactive_ms n=1"));
+        assert!(d.contains("ttft_batch_ms n=1"));
     }
 
     #[test]

@@ -71,7 +71,7 @@
 //! fills. At completion the hypotheses are ranked best-first and
 //! truncated to exactly `beam_width`.
 
-use crate::config::SamplingMode;
+use crate::config::{Priority, SamplingMode};
 use crate::kvcache::KvCacheManager;
 use crate::metrics::EngineMetrics;
 use crate::scheduler::{FinishReason, PendingSample, RequestId,
@@ -237,6 +237,7 @@ impl OutputProcessor {
                         pending: None,
                         first_token_ns: Some(now_ns),
                         last_token_ns: Some(now_ns),
+                        stall: 0,
                     });
                     g.next_branch = b + 1;
                     sched.stats.forked_branches += 1;
@@ -469,6 +470,7 @@ impl OutputProcessor {
                     pending: None,
                     first_token_ns: Some(now_ns),
                     last_token_ns: Some(now_ns),
+                    stall: 0,
                 });
                 g.next_branch += 1;
             }
@@ -480,9 +482,7 @@ impl OutputProcessor {
         // the is-none guard keep the sample single and deterministic).
         if !pool_new.is_empty() && g.first_token_ns.is_none() {
             g.first_token_ns = Some(now_ns);
-            metrics
-                .ttft_ms
-                .record(now_ns.saturating_sub(g.enqueue_ns) as f64 / 1e6);
+            record_ttft(metrics, g, now_ns);
         }
         cands.sort_by(|a, b| {
             b.cum
@@ -544,6 +544,7 @@ impl OutputProcessor {
                     pending: None,
                     first_token_ns: Some(now_ns),
                     last_token_ns: Some(now_ns),
+                    stall: 0,
                 });
                 g.next_branch += 1;
                 stats.forked_branches += 1;
@@ -633,9 +634,18 @@ fn apply_token(
     }
     if g.first_token_ns.is_none() {
         g.first_token_ns = Some(now_ns);
-        metrics
-            .ttft_ms
-            .record(now_ns.saturating_sub(g.enqueue_ns) as f64 / 1e6);
+        record_ttft(metrics, g, now_ns);
+    }
+}
+
+/// Record a group's time-to-first-token: once in the aggregate histogram
+/// and once in its priority class's histogram (the per-class SLO view).
+fn record_ttft(metrics: &mut EngineMetrics, g: &SequenceGroup, now_ns: u64) {
+    let ms = now_ns.saturating_sub(g.enqueue_ns) as f64 / 1e6;
+    metrics.ttft_ms.record(ms);
+    match g.meta.priority {
+        Priority::Interactive => metrics.ttft_interactive_ms.record(ms),
+        Priority::Batch => metrics.ttft_batch_ms.record(ms),
     }
 }
 

@@ -16,9 +16,15 @@
 //! admission; `score` is the hypothesis's length-penalized cumulative
 //! logprob proxy (0 outside beam mode); every `token` event carries the
 //! token's `logprob` proxy, and `done` carries the branch's
-//! `finish_reason` ("length" or "stop").
+//! `finish_reason` ("length" or "stop"). The SLO metadata fields
+//! `priority` ("interactive" | "batch", default "interactive") and
+//! `tenant` (non-empty string, default "default") steer the scheduler's
+//! weighted-fair admission; they are *validated*, not silently
+//! defaulted — an unknown priority string or an empty tenant yields a
+//! structured `error` event.
 //!   → {"prompt": [1,2,3], "max_new_tokens": 8, "n": 2, "seed": 7,
-//!      "temperature": 0.8, "stop_token_ids": [42]}
+//!      "temperature": 0.8, "stop_token_ids": [42],
+//!      "priority": "batch", "tenant": "acme"}
 //!   → {"prompt": [1,2,3], "max_new_tokens": 8, "beam_width": 3,
 //!      "length_penalty": 1.0, "seed": 7, "stop_sequences": [[4, 5]]}
 //!   ← {"event":"token","id":1,"branch":0,"token":42,"position":0,
@@ -52,9 +58,9 @@ use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::thread;
 use std::time::Duration;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
-use crate::config::{EngineConfig, SamplingParams};
+use crate::config::{EngineConfig, Priority, RequestMeta, SamplingParams};
 use crate::engine::Engine;
 use crate::json::{self, num, obj, Value};
 use crate::runtime::Runtime;
@@ -65,6 +71,7 @@ struct Incoming {
     prompt: Vec<i32>,
     max_new_tokens: usize,
     sampling: SamplingParams,
+    meta: RequestMeta,
     reply: Sender<Outgoing>,
 }
 
@@ -167,9 +174,10 @@ fn handle_connection(stream: TcpStream, tx: Sender<Incoming>) -> Result<()> {
             continue;
         }
         match parse_request(&line) {
-            Ok((prompt, max_new, sampling)) => {
+            Ok((prompt, max_new, sampling, meta)) => {
                 tx.send(Incoming { prompt, max_new_tokens: max_new,
-                                   sampling, reply: reply_tx.clone() })
+                                   sampling, meta,
+                                   reply: reply_tx.clone() })
                     .context("engine gone")?;
             }
             Err(e) => {
@@ -183,7 +191,8 @@ fn handle_connection(stream: TcpStream, tx: Sender<Incoming>) -> Result<()> {
     Ok(())
 }
 
-fn parse_request(line: &str) -> Result<(Vec<i32>, usize, SamplingParams)> {
+fn parse_request(line: &str)
+    -> Result<(Vec<i32>, usize, SamplingParams, RequestMeta)> {
     let v = json::parse(line)?;
     let prompt: Vec<i32> = v
         .req("prompt")?
@@ -229,7 +238,25 @@ fn parse_request(line: &str) -> Result<(Vec<i32>, usize, SamplingParams)> {
     }
     .with_stop_tokens(stop_token_ids)
     .with_stop_sequences(stop_sequences);
-    Ok((prompt, max_new, sampling))
+    // SLO metadata is validated, never silently defaulted: a typo'd
+    // priority class or an empty tenant would otherwise slip into the
+    // "default" WFQ bucket and the mistake would only show up as a
+    // mis-shared budget much later.
+    let priority = match v.get("priority") {
+        Some(x) => Priority::parse(x.as_str()?)?,
+        None => Priority::Interactive,
+    };
+    let tenant = match v.get("tenant") {
+        Some(x) => {
+            let t = x.as_str()?;
+            if t.is_empty() {
+                bail!("tenant must be a non-empty string");
+            }
+            t.to_string()
+        }
+        None => "default".to_string(),
+    };
+    Ok((prompt, max_new, sampling, RequestMeta::new(priority, tenant)))
 }
 
 /// The engine thread: intake + step loop.
@@ -260,7 +287,8 @@ fn engine_loop(artifacts_dir: std::path::PathBuf, ecfg: EngineConfig,
                 }
             };
             let Some(m) = msg else { break };
-            match engine.add_group(m.prompt, m.max_new_tokens, m.sampling) {
+            match engine.add_group_with(m.prompt, m.max_new_tokens,
+                                        m.sampling, m.meta) {
                 Ok(id) => {
                     inflight.insert(id, (m.reply, engine.now_ns()));
                 }
@@ -366,6 +394,16 @@ impl Client {
     /// Submit a parallel-sampling (`n` branches) or beam request.
     pub fn submit_sampled(&mut self, prompt: &[i32], max_new_tokens: usize,
                           sampling: &SamplingParams) -> Result<()> {
+        self.submit_with_meta(prompt, max_new_tokens, sampling,
+                              &RequestMeta::default())
+    }
+
+    /// [`Client::submit_sampled`] with explicit SLO metadata: the
+    /// `priority` and `tenant` wire fields ride along and steer the
+    /// server's weighted-fair admission.
+    pub fn submit_with_meta(&mut self, prompt: &[i32], max_new_tokens: usize,
+                            sampling: &SamplingParams, meta: &RequestMeta)
+        -> Result<()> {
         let mut fields = vec![
             ("prompt", Value::Arr(prompt.iter().map(|t| num(*t as f64)).collect())),
             ("max_new_tokens", num(max_new_tokens as f64)),
@@ -395,6 +433,8 @@ impl Client {
                         s.iter().map(|t| num(*t as f64)).collect()))
                     .collect())));
         }
+        fields.push(("priority", json::s(meta.priority.as_str())));
+        fields.push(("tenant", json::s(&meta.tenant)));
         let req = obj(fields);
         writeln!(self.writer, "{req}")?;
         self.writer.flush()?;
@@ -472,16 +512,18 @@ mod tests {
 
     #[test]
     fn request_parsing() {
-        let (p, n, s) =
+        let (p, n, s, m) =
             parse_request(r#"{"prompt": [1, 2, 3], "max_new_tokens": 4}"#)
                 .unwrap();
         assert_eq!(p, vec![1, 2, 3]);
         assert_eq!(n, 4);
         assert!(s.is_greedy(), "sampling defaults to greedy n=1");
-        let (_, n, _) = parse_request(r#"{"prompt": [5]}"#).unwrap();
+        assert_eq!(m, RequestMeta::default(),
+                   "absent SLO fields fall back to the pre-SLO request");
+        let (_, n, _, _) = parse_request(r#"{"prompt": [5]}"#).unwrap();
         assert_eq!(n, 16, "default max_new_tokens");
         assert!(parse_request(r#"{"max_new_tokens": 4}"#).is_err());
-        let (_, _, s) = parse_request(
+        let (_, _, s, _) = parse_request(
             r#"{"prompt": [5], "n": 3, "seed": 11, "temperature": 0.5}"#,
         )
         .unwrap();
@@ -489,7 +531,7 @@ mod tests {
         assert_eq!(s.seed, 11);
         assert!((s.temperature - 0.5).abs() < 1e-12);
         // beam_width switches the request into beam mode
-        let (_, _, s) = parse_request(
+        let (_, _, s, _) = parse_request(
             r#"{"prompt": [5], "beam_width": 3, "length_penalty": 0.7,
                 "seed": 4}"#,
         )
@@ -502,7 +544,7 @@ mod tests {
                        beam_width: 3, length_penalty: 0.7,
                        early_stopping: false });
         // early_stopping rides along on beam requests
-        let (_, _, s) = parse_request(
+        let (_, _, s, _) = parse_request(
             r#"{"prompt": [5], "beam_width": 2, "early_stopping": true}"#,
         )
         .unwrap();
@@ -511,14 +553,14 @@ mod tests {
                        beam_width: 2, length_penalty: 1.0,
                        early_stopping: true });
         // stop conditions ride along on both parallel and beam requests
-        let (_, _, s) = parse_request(
+        let (_, _, s, _) = parse_request(
             r#"{"prompt": [5], "stop_token_ids": [7, 9],
                 "stop_sequences": [[1, 2], [3]]}"#,
         )
         .unwrap();
         assert_eq!(s.stop_token_ids, vec![7, 9]);
         assert_eq!(s.stop_sequences, vec![vec![1, 2], vec![3]]);
-        let (_, _, s) = parse_request(
+        let (_, _, s, _) = parse_request(
             r#"{"prompt": [5], "beam_width": 2, "stop_token_ids": [4]}"#,
         )
         .unwrap();
@@ -527,6 +569,30 @@ mod tests {
         assert!(parse_request(
             r#"{"prompt": [5], "stop_sequences": [7]}"#).is_err(),
             "stop_sequences entries must be arrays");
+    }
+
+    #[test]
+    fn slo_metadata_parsing_and_validation() {
+        let (_, _, _, m) = parse_request(
+            r#"{"prompt": [5], "priority": "batch", "tenant": "acme"}"#,
+        )
+        .unwrap();
+        assert_eq!(m, RequestMeta::new(Priority::Batch, "acme"));
+        let (_, _, _, m) = parse_request(
+            r#"{"prompt": [5], "priority": "interactive"}"#,
+        )
+        .unwrap();
+        assert_eq!(m, RequestMeta::new(Priority::Interactive, "default"));
+        // validation: unknown class and empty tenant are rejected, not
+        // silently defaulted
+        let e = parse_request(r#"{"prompt": [5], "priority": "urgent"}"#)
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("unknown priority"), "{e:#}");
+        let e = parse_request(r#"{"prompt": [5], "tenant": ""}"#)
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("non-empty"), "{e:#}");
+        assert!(parse_request(r#"{"prompt": [5], "priority": 3}"#).is_err(),
+                "priority must be a string");
     }
 
     #[test]

@@ -10,7 +10,7 @@
 //!
 //! Deterministic xorshift RNG so every bench run is reproducible.
 
-use crate::config::SamplingParams;
+use crate::config::{Priority, RequestMeta, SamplingParams};
 
 /// Small deterministic RNG (xorshift64*).
 #[derive(Debug, Clone)]
@@ -202,6 +202,10 @@ pub struct GroupRequest {
     pub prompt: Vec<i32>,
     pub sampling: SamplingParams,
     pub max_new_tokens: usize,
+    /// SLO metadata (priority class + tenant) the scheduler's admission
+    /// policy keys on; generators that don't care use the default
+    /// (`Interactive` / `"default"`).
+    pub meta: RequestMeta,
 }
 
 /// Best-of-n workload: every request shares a common system-prompt prefix
@@ -242,6 +246,7 @@ impl BestOfN {
                     }
                     .with_stop_tokens(self.stop_token_ids.clone()),
                     max_new_tokens: self.max_new_tokens,
+                    meta: RequestMeta::default(),
                 }
             })
             .collect()
@@ -282,6 +287,7 @@ impl PrefixReplay {
                     prompt,
                     sampling: SamplingParams::default(),
                     max_new_tokens: self.max_new_tokens,
+                    meta: RequestMeta::default(),
                 }
             })
             .collect()
@@ -325,9 +331,102 @@ impl BeamSearchLoad {
                         self.beam_width, self.length_penalty, i as u64 + 1)
                         .with_stop_tokens(self.stop_token_ids.clone()),
                     max_new_tokens: self.max_new_tokens,
+                    meta: RequestMeta::default(),
                 }
             })
             .collect()
+    }
+}
+
+/// Long-context stall workload: a handful of short-prompt greedy decode
+/// streams that should be mid-generation when one very long prompt lands
+/// behind them. Under a mixed scheduler the long prefill's chunks can
+/// monopolize the token budget and starve the decoders for many
+/// consecutive steps; under the decode-first policy with a prefill chunk
+/// cap the inter-token gap of every stream stays bounded. The bench
+/// scenario pins exactly that gap.
+#[derive(Debug, Clone)]
+pub struct LongContextStall {
+    /// Number of short decode streams admitted first.
+    pub streams: usize,
+    /// Prompt length of each decode stream (tokens).
+    pub stream_prompt: usize,
+    /// Tokens each decode stream generates.
+    pub stream_new: usize,
+    /// Length of the late-arriving long prompt (tokens).
+    pub long_prompt: usize,
+    /// Tokens the long request generates once prefilled.
+    pub long_new: usize,
+    pub vocab: usize,
+}
+
+impl LongContextStall {
+    /// The short interactive decode streams (submit these first).
+    pub fn streams(&self, rng: &mut Rng) -> Vec<GroupRequest> {
+        (0..self.streams)
+            .map(|_| GroupRequest {
+                prompt: rng.tokens(self.stream_prompt.max(1), self.vocab),
+                sampling: SamplingParams::default(),
+                max_new_tokens: self.stream_new,
+                meta: RequestMeta::new(Priority::Interactive, "default"),
+            })
+            .collect()
+    }
+
+    /// The long batch-class prompt that arrives behind the streams.
+    pub fn long_request(&self, rng: &mut Rng) -> GroupRequest {
+        GroupRequest {
+            prompt: rng.tokens(self.long_prompt.max(1), self.vocab),
+            sampling: SamplingParams::default(),
+            max_new_tokens: self.long_new,
+            meta: RequestMeta::new(Priority::Batch, "default"),
+        }
+    }
+}
+
+/// Multi-tenant storm workload: several tenants submit greedy requests in
+/// interleaved rounds with deliberately skewed per-round volume, so a
+/// FCFS scheduler would let the heaviest tenant crowd out the rest. The
+/// weighted-fair-queuing admission path should instead hold each tenant's
+/// admitted-token share near its configured weight — the bench scenario
+/// pins the per-tenant `wfq_admitted_tokens` counters.
+#[derive(Debug, Clone)]
+pub struct MultiTenantStorm {
+    /// `(tenant, requests_per_round)` — the submission skew. Order is the
+    /// within-round interleave, so generation is deterministic.
+    pub tenants: Vec<(String, usize)>,
+    /// Prompt length range (uniform per request).
+    pub min_prompt: usize,
+    pub max_prompt: usize,
+    pub max_new_tokens: usize,
+    pub vocab: usize,
+}
+
+impl MultiTenantStorm {
+    /// Generate `rounds` interleaved rounds. The first request a tenant
+    /// submits each round is `Interactive`, the rest `Batch` — the mixed
+    /// class profile the per-class TTFT histograms split on.
+    pub fn requests(&self, rounds: usize, rng: &mut Rng) -> Vec<GroupRequest> {
+        let mut out = Vec::new();
+        for _ in 0..rounds {
+            for (tenant, volume) in &self.tenants {
+                for k in 0..*volume {
+                    let len = rng.range(self.min_prompt, self.max_prompt);
+                    let priority = if k == 0 {
+                        Priority::Interactive
+                    } else {
+                        Priority::Batch
+                    };
+                    out.push(GroupRequest {
+                        prompt: rng.tokens(len.max(1), self.vocab),
+                        sampling: SamplingParams::default(),
+                        max_new_tokens: self.max_new_tokens,
+                        meta: RequestMeta::new(priority, tenant.clone()),
+                    });
+                }
+            }
+        }
+        out
     }
 }
 
@@ -468,6 +567,63 @@ mod tests {
         assert_ne!(reqs[0].sampling.seed, reqs[1].sampling.seed);
         assert_eq!(reqs[2].prompt, w.requests(4, &mut Rng::new(9))[2].prompt,
                    "deterministic for a fixed seed");
+    }
+
+    #[test]
+    fn long_context_stall_splits_classes() {
+        let w = LongContextStall {
+            streams: 4,
+            stream_prompt: 6,
+            stream_new: 16,
+            long_prompt: 140,
+            long_new: 4,
+            vocab: 2048,
+        };
+        let mut rng = Rng::new(17);
+        let streams = w.streams(&mut rng);
+        let long = w.long_request(&mut rng);
+        assert_eq!(streams.len(), 4);
+        for s in &streams {
+            assert_eq!(s.prompt.len(), 6);
+            assert_eq!(s.meta.priority, Priority::Interactive);
+            assert!(s.sampling.is_greedy());
+        }
+        assert_eq!(long.prompt.len(), 140);
+        assert_eq!(long.meta.priority, Priority::Batch);
+        assert_eq!(long.meta.tenant, "default");
+        // deterministic for a fixed seed
+        let mut rng2 = Rng::new(17);
+        assert_eq!(w.streams(&mut rng2)[2].prompt, streams[2].prompt);
+    }
+
+    #[test]
+    fn multi_tenant_storm_interleaves_skewed_tenants() {
+        let w = MultiTenantStorm {
+            tenants: vec![("a".into(), 3), ("b".into(), 1), ("c".into(), 2)],
+            min_prompt: 4,
+            max_prompt: 12,
+            max_new_tokens: 5,
+            vocab: 2048,
+        };
+        let mut rng = Rng::new(23);
+        let reqs = w.requests(2, &mut rng);
+        assert_eq!(reqs.len(), 12, "two rounds of 3+1+2");
+        let count = |t: &str| reqs.iter().filter(|r| r.meta.tenant == t).count();
+        assert_eq!((count("a"), count("b"), count("c")), (6, 2, 4));
+        // within-round interleave: round 1 is a,a,a,b,c,c
+        let tenants: Vec<&str> =
+            reqs[..6].iter().map(|r| r.meta.tenant.as_str()).collect();
+        assert_eq!(tenants, ["a", "a", "a", "b", "c", "c"]);
+        // first request per tenant per round is interactive, rest batch
+        assert_eq!(reqs[0].meta.priority, Priority::Interactive);
+        assert_eq!(reqs[1].meta.priority, Priority::Batch);
+        assert_eq!(reqs[3].meta.priority, Priority::Interactive);
+        assert!(reqs.iter().all(|r| {
+            (w.min_prompt..=w.max_prompt).contains(&r.prompt.len())
+        }));
+        // deterministic for a fixed seed
+        let again = w.requests(2, &mut Rng::new(23));
+        assert_eq!(reqs[7].prompt, again[7].prompt);
     }
 
     #[test]

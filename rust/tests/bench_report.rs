@@ -73,6 +73,20 @@ fn matrix_covers_scenarios_and_their_counters() {
             <= get("beam_search", "engine_steps"),
             "early_stopping must terminate no later than the cutoff");
     assert!(get("beam_early_stop", "beam_early_terminations") > 0);
+    // the long prompt must be chunk-capped without starving the streams
+    assert!(get("long_context_stall", "prefill_chunk_deferrals") > 0,
+            "the 32-token chunk cap must defer the long prefill");
+    assert!(get("long_context_stall", "max_decode_gap_steps") <= 1,
+            "decode-first keeps every stream's inter-token gap bounded \
+             while the long prompt prefills");
+    assert_eq!(get("long_context_stall", "decode_stall_steps"), 0,
+               "no step with ready decodes may schedule none of them");
+    // every tenant of the storm must appear in the WFQ share counters
+    for tenant in ["acme", "bligh", "corto"] {
+        assert!(get("multi_tenant_storm",
+                    &format!("wfq_admitted_tokens:{tenant}")) > 0,
+                "tenant '{tenant}' was never admitted");
+    }
 }
 
 #[test]
@@ -137,4 +151,46 @@ fn compare_gate_rejects_injected_regression() {
     let cmp = bench::compare(&cur, &base, false);
     assert!(!cmp.passed());
     assert!(cmp.regressions[0].contains("engine_steps"));
+}
+
+#[test]
+fn strict_compare_is_symmetric_on_real_reports() {
+    let rt = Rc::new(
+        Runtime::load_dir(triton_anatomy::default_artifacts_dir()).unwrap(),
+    );
+    let decode = bench::run_scenario(&rt, "tiny", "decode_heavy").unwrap();
+    let prefill = bench::run_scenario(&rt, "tiny", "prefill_heavy").unwrap();
+    let base = BenchReport {
+        schema_version: SCHEMA_VERSION,
+        label: "base".into(),
+        model: "tiny".into(),
+        scenarios: vec![decode.clone()],
+    };
+
+    // an ADDED scenario: invisible to the old one-directional walk
+    let mut cur = base.clone();
+    cur.scenarios.push(prefill);
+    let strict = bench::compare(&cur, &base, true);
+    assert!(!strict.passed(),
+            "strict compare must flag a scenario only the current run has");
+    assert!(strict.regressions.iter()
+                .any(|r| r.contains("prefill_heavy") && r.contains("added")),
+            "unexpected regressions: {:?}", strict.regressions);
+    let gating = bench::compare(&cur, &base, false);
+    assert!(gating.passed(),
+            "an added scenario is new coverage, not a gating failure");
+    assert!(gating.improvements.iter().any(|r| r.contains("prefill_heavy")));
+
+    // an ADDED counter inside an existing scenario
+    let mut cur = base.clone();
+    cur.scenarios[0]
+        .fingerprint
+        .counters
+        .insert("wfq_admitted_tokens:ghost".into(), 7);
+    let strict = bench::compare(&cur, &base, true);
+    assert!(!strict.passed(),
+            "strict compare must flag a counter only the current run has");
+    assert!(strict.regressions.iter()
+                .any(|r| r.contains("wfq_admitted_tokens:ghost")));
+    assert!(bench::compare(&cur, &base, false).passed());
 }

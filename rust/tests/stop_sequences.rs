@@ -637,6 +637,77 @@ fn infeasible_beam_group_still_fails_gracefully() {
             "a group that can never fit must surface the OOM");
 }
 
+/// (c) Wire protocol: the SLO metadata fields are validated server-side
+/// — an unknown priority string or an empty tenant yields a structured
+/// `error` event (not a silent default) and the connection stays usable:
+/// a subsequent valid request with explicit `priority`/`tenant` fields
+/// completes normally.
+#[test]
+fn wire_protocol_validates_slo_metadata() {
+    let dir = triton_anatomy::default_artifacts_dir();
+    let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+    let port = probe.local_addr().unwrap().port();
+    drop(probe);
+    let bound = format!("127.0.0.1:{port}");
+    let server_addr = bound.clone();
+    let handle = std::thread::spawn(move || {
+        serve(dir, EngineConfig::default(), &server_addr, Some(1))
+    });
+    let stream = (0..100)
+        .find_map(|_| {
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            TcpStream::connect(&bound).ok()
+        })
+        .expect("server did not come up");
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+
+    let bad = [
+        (r#"{"prompt": [5, 9], "priority": "urgent"}"#, "unknown priority"),
+        (r#"{"prompt": [5, 9], "tenant": ""}"#, "non-empty"),
+        (r#"{"prompt": [5, 9], "priority": 3}"#, ""),
+    ];
+    for (req, needle) in bad {
+        writeln!(writer, "{req}").unwrap();
+        writer.flush().unwrap();
+        let mut line = String::new();
+        assert!(reader.read_line(&mut line).unwrap() > 0, "server closed");
+        let v = json::parse(line.trim()).unwrap();
+        assert_eq!(v.str_field("event").unwrap(), "error",
+                   "invalid SLO metadata must yield an error event: {req}");
+        let msg = v.str_field("message").unwrap();
+        assert!(msg.contains(needle),
+                "error message '{msg}' should mention '{needle}'");
+    }
+
+    // the connection survives; a valid metadata-carrying request runs
+    writeln!(
+        writer,
+        "{}",
+        r#"{"prompt": [5, 9, 13], "max_new_tokens": 3,
+            "priority": "batch", "tenant": "acme"}"#
+            .replace('\n', " ")
+    )
+    .unwrap();
+    writer.flush().unwrap();
+    let mut done = false;
+    while !done {
+        let mut line = String::new();
+        assert!(reader.read_line(&mut line).unwrap() > 0, "server closed");
+        let v = json::parse(line.trim()).unwrap();
+        match v.str_field("event").unwrap().as_str() {
+            "token" => {}
+            "done" => {
+                let toks = v.req("tokens").unwrap().as_arr().unwrap().len();
+                assert_eq!(toks, 3, "the valid request completes normally");
+                done = true;
+            }
+            other => panic!("unexpected event {other}"),
+        }
+    }
+    handle.join().unwrap().unwrap();
+}
+
 /// (c) Wire protocol: stop fields parse over the socket, every `token`
 /// event carries a `logprob`, and `done` reports `finish_reason: stop`
 /// with the truncated token list.
