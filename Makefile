@@ -5,7 +5,7 @@
 # real JAX/Pallas AOT flow (`python -m compile.aot`) produces the same
 # manifest schema on a machine with a working XLA toolchain.
 
-.PHONY: artifacts test tier1 bench bench-gate
+.PHONY: artifacts test tier1 bench bench-gate profile
 
 artifacts:
 	python3 python/compile/gen_sim_artifacts.py
@@ -20,6 +20,13 @@ test: tier1
 bench:
 	cd rust && cargo build --release && ./target/release/repro bench \
 	  --label local $(if $(BENCH_ONLY),--scenarios $(BENCH_ONLY),)
+
+# Per-phase step-loop profile (schedule/build/stage/dispatch/output wall
+# time plus the arena/hash-memo counters) over the bench matrix.
+# BENCH_ONLY=decode_heavy narrows it to one scenario's hot loop.
+profile:
+	cd rust && cargo build --release && ./target/release/repro bench \
+	  --label profile --phases $(if $(BENCH_ONLY),--scenarios $(BENCH_ONLY),)
 
 # Deterministic-counter regression gate against the checked-in baseline
 bench-gate:

@@ -208,6 +208,20 @@ def hash_block(prev, toks):
     return h
 
 
+def hasher_update(memo, stream, bs):
+    """PrefixHasher::update — extend the per-sequence block-hash memo to
+    cover every probe-relevant full block (capped so one token is left to
+    compute), returning how many hashes the memo served (the
+    prefix_hash_skips unit)."""
+    max_full = (len(stream) - 1) // bs if stream else 0
+    reused = min(len(memo), max_full)
+    chain = memo[-1] if memo else HASH_SEED
+    for blk in range(len(memo), max_full):
+        chain = hash_block(chain, stream[blk * bs:(blk + 1) * bs])
+        memo.append(chain)
+    return reused
+
+
 class BlockTable:
     __slots__ = ("pages", "len", "committed", "chain")
 
@@ -443,7 +457,7 @@ FINISHED_STATES = ("finished_stop", "finished_length")
 
 class Sequence:
     __slots__ = ("branch", "state", "output", "logprobs", "handle", "computed",
-                 "cum_logprob", "pending", "stall")
+                 "cum_logprob", "pending", "stall", "hash_memo")
 
     def __init__(self, branch, state="waiting", output=None, logprobs=None,
                  handle=None, computed=0, cum_logprob=0.0, pending=None, stall=0):
@@ -456,6 +470,9 @@ class Sequence:
         self.cum_logprob = cum_logprob
         self.pending = pending
         self.stall = stall
+        # rolling block-hash memo (kvcache.rs PrefixHasher); survives
+        # preemption, fork children start fresh
+        self.hash_memo = []
 
     def is_finished(self):
         return self.state in FINISHED_STATES
@@ -557,7 +574,8 @@ class Scheduler:
         self.stats = dict(steps=0, scheduled_tokens=0, preemptions=0,
                           self_preemptions=0, decode_stall_steps=0,
                           max_decode_gap_steps=0, prefill_chunk_deferrals=0,
-                          cached_tokens=0, forked_branches=0, wfq={})
+                          prefix_hash_skips=0, cached_tokens=0,
+                          forked_branches=0, wfq={})
 
     def add_group_with(self, group):
         assert group.prompt
@@ -814,6 +832,11 @@ class Scheduler:
         s = g.seqs[bi]
         stream = g.stream(s.branch)
         total = len(stream)
+        # memo update first, mirroring Rust: skips are counted per probe,
+        # including attempts that end DeficitLimited or Blocked below
+        if kv.caching:
+            self.stats["prefix_hash_skips"] += hasher_update(
+                s.hash_memo, stream, kv.bs)
         cached = kv.lookup_prefix(stream)
         uncached = total - cached
         if enforce and self.deficit.get(tenant, 0) < uncached:
@@ -1120,7 +1143,8 @@ def fresh_metrics():
                 beam_forks=0, beam_prunes=0, beam_pruned_pages=0,
                 beam_finished_hyps=0, beam_early_terminations=0, token_events=0,
                 decode_stall_steps=0, max_decode_gap_steps=0,
-                prefill_chunk_deferrals=0, wfq_admitted_tokens={})
+                prefill_chunk_deferrals=0, arena_reuses=0, arena_grows=0,
+                prefix_hash_skips=0, wfq_admitted_tokens={})
 
 
 class Engine:
@@ -1134,6 +1158,9 @@ class Engine:
         self.out_proc = OutputProcessor()
         self.next_id = 1
         self.m = fresh_metrics()
+        # StepArena demand high-water marks (engine.rs): rows / new tokens
+        self.arena_rows = 0
+        self.arena_toks = 0
 
     def warmup(self):
         pass  # precompile only; no counter effects
@@ -1159,9 +1186,19 @@ class Engine:
         m["decode_stall_steps"] = st["decode_stall_steps"]
         m["max_decode_gap_steps"] = st["max_decode_gap_steps"]
         m["prefill_chunk_deferrals"] = st["prefill_chunk_deferrals"]
+        m["prefix_hash_skips"] = st["prefix_hash_skips"]
         m["wfq_admitted_tokens"] = dict(st["wfq"])
         if not batch.seqs:
             return None
+        # arena accounting, demand-keyed exactly like StepArena (engine.rs)
+        rows = len(batch.seqs)
+        toks = sum(len(r.tokens) for r in batch.seqs)
+        if rows > self.arena_rows or toks > self.arena_toks:
+            self.arena_rows = max(self.arena_rows, rows)
+            self.arena_toks = max(self.arena_toks, toks)
+            m["arena_grows"] += 1
+        else:
+            m["arena_reuses"] += 1
         samples = {}
         for row in batch.seqs:
             if row.samples:
@@ -1420,7 +1457,8 @@ def fingerprint(m):
               "beam_forks", "beam_prunes", "beam_pruned_pages",
               "beam_finished_hyps", "beam_early_terminations", "token_events",
               "decode_stall_steps", "max_decode_gap_steps",
-              "prefill_chunk_deferrals"):
+              "prefill_chunk_deferrals", "arena_reuses", "arena_grows",
+              "prefix_hash_skips"):
         fp[k] = m[k]
     for tenant in sorted(m["wfq_admitted_tokens"]):
         fp["wfq_admitted_tokens:%s" % tenant] = m["wfq_admitted_tokens"][tenant]
@@ -1432,12 +1470,22 @@ def zero_snapshot():
                         ("p99", 0.0), ("min", 0.0), ("max", 0.0)])
 
 
+def zero_phases():
+    """Per-phase step profiler block (bench.rs PhaseProfile): the port has
+    no wall clock, so like the timings it emits zeroed snapshots — compare
+    never reads phases, only the fingerprint gates."""
+    return OrderedDict([(k, zero_snapshot())
+                        for k in ("schedule_us", "build_us", "stage_us",
+                                  "dispatch_us", "output_us")])
+
+
 def scenario_result(name, engine, requests):
     return OrderedDict([
         ("name", name),
         ("deterministic", True),
         ("requests", requests),
         ("fingerprint", fingerprint(engine.m)),
+        ("phases", zero_phases()),
         ("timings", OrderedDict([
             ("wall_s", 0.0),
             ("throughput_tok_s", 0.0),

@@ -110,6 +110,24 @@ pub fn default_grid(rng: &mut Rng, max_seq_len: usize) -> Vec<Scenario> {
             grid.push(Scenario::mixed(4, l, share, rng));
         }
     }
+    // Beam decode: lockstep hypothesis rows at a shared depth — the
+    // fluctuating-row-count shape beam groups feed the decode tree.
+    for &(g, w) in &[(1usize, 4usize), (2, 4)] {
+        for &l in &[128usize, 256] {
+            if l <= max_seq_len {
+                grid.push(Scenario::beam(g, w, l, rng));
+            }
+        }
+    }
+    // Chunked prefill under DecodeFirst: decode rows plus one prompt
+    // chunk mid-flight — the mixed shape the prefill tree must cover.
+    if 256 <= max_seq_len {
+        for &c in &[32usize, 64] {
+            for &d in &[2usize, 4] {
+                grid.push(Scenario::chunked_prefill(d, 128, 256, c, rng));
+            }
+        }
+    }
     grid
 }
 
@@ -319,6 +337,34 @@ mod tests {
         let mut s = sample(1, 64, Variant::QBlock);
         s.latencies.retain(|(c, _)| c.variant == Variant::QBlock);
         assert!(s.cost_of(&choice(Variant::Parts)) > s.cost_of(&choice(Variant::QBlock)));
+    }
+
+    #[test]
+    fn default_grid_covers_beam_and_chunked_prefill() {
+        let mut rng = crate::workload::Rng::new(1);
+        let grid = default_grid(&mut rng, 2048);
+        assert!(grid.iter().any(|s| s.name.starts_with("beam-")),
+                "grid must include beam-decode scenarios");
+        assert!(grid.iter().any(|s| s.name.starts_with("chunked-")),
+                "grid must include chunked-prefill scenarios");
+        // beam scenarios feed the decode tree, chunked ones the prefill tree
+        for s in &grid {
+            let f = features_of_scenario(s);
+            if s.name.starts_with("beam-") {
+                assert!(f.is_decode_only(), "{} must be decode-only", s.name);
+            }
+            if s.name.starts_with("chunked-") {
+                assert!(!f.is_decode_only(),
+                        "{} must carry a prefill chunk", s.name);
+            }
+        }
+        // a small envelope prunes the long scenarios but keeps the shapes
+        let small = default_grid(&mut crate::workload::Rng::new(1), 128);
+        assert!(!small.iter().any(|s| s.name.starts_with("beam-")
+                                      && s.name.ends_with("-l256")));
+        assert!(small.iter().any(|s| s.name.starts_with("beam-")));
+        assert!(!small.iter().any(|s| s.name.starts_with("chunked-")),
+                "chunked scenarios need a 256-token envelope");
     }
 
     #[test]

@@ -28,7 +28,7 @@ use crate::scheduler::{RequestId, ScheduledBatch};
 pub const DECODE_LIKE_MAX_QUERY: usize = 16;
 
 /// Scenario features consumed by the heuristics decision tree.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct BatchFeatures {
     pub num_seqs: usize,
     pub num_decodes: usize,
@@ -66,7 +66,10 @@ impl BatchFeatures {
 }
 
 /// Bucket-shaped host tensors for one step, in artifact operand order.
-#[derive(Debug, Clone)]
+/// `Default` is the empty shell the engine's step arena starts from;
+/// [`build_into`] resizes every tensor to its bucket shape in place, so
+/// after a few steps the buffers stop reallocating.
+#[derive(Debug, Clone, Default)]
 pub struct BatchMetadata {
     pub token_ids: Vec<i32>,
     pub positions: Vec<i32>,
@@ -86,34 +89,36 @@ pub struct BatchMetadata {
 }
 
 pub fn features_of(batch: &ScheduledBatch) -> BatchFeatures {
+    // Single pass, no temporaries: this runs inside the hot step loop.
     let num_seqs = batch.seqs.len();
-    let qlens: Vec<usize> = batch.seqs.iter().map(|s| s.tokens.len()).collect();
-    let seqlens: Vec<usize> =
-        batch.seqs.iter().map(|s| s.ctx_len + s.tokens.len()).collect();
-    BatchFeatures {
+    let mut f = BatchFeatures {
         num_seqs,
         num_decodes: batch.num_decodes(),
-        num_decode_like: batch
-            .seqs
-            .iter()
-            .filter(|s| s.ctx_len > 0 && s.tokens.len() <= DECODE_LIKE_MAX_QUERY)
-            .count(),
-        max_query_len: qlens.iter().copied().max().unwrap_or(0),
-        avg_query_len: if num_seqs == 0 {
-            0.0
-        } else {
-            qlens.iter().sum::<usize>() as f64 / num_seqs as f64
-        },
-        max_seq_len: seqlens.iter().copied().max().unwrap_or(0),
-        total_kv_tokens: seqlens.iter().sum(),
-        total_new_tokens: qlens.iter().sum(),
+        ..Default::default()
+    };
+    let mut sum_q = 0usize;
+    for s in &batch.seqs {
+        let q = s.tok_len;
+        let total = s.ctx_len + q;
+        if s.ctx_len > 0 && q <= DECODE_LIKE_MAX_QUERY {
+            f.num_decode_like += 1;
+        }
+        f.max_query_len = f.max_query_len.max(q);
+        f.max_seq_len = f.max_seq_len.max(total);
+        f.total_kv_tokens += total;
+        sum_q += q;
     }
+    f.total_new_tokens = sum_q;
+    if num_seqs > 0 {
+        f.avg_query_len = sum_q as f64 / num_seqs as f64;
+    }
+    f
 }
 
 /// Aligned packed-token footprint of a batch under a kernel config.
 pub fn packed_tokens(batch: &ScheduledBatch, cfg: &KernelConfig) -> usize {
     let a = cfg.q_align();
-    batch.seqs.iter().map(|s| align_up(s.tokens.len(), a)).sum()
+    batch.seqs.iter().map(|s| align_up(s.tok_len, a)).sum()
 }
 
 /// Does this batch fit the bucket under the kernel's layout rules?
@@ -129,7 +134,7 @@ pub fn fits(batch: &ScheduledBatch, cfg: &KernelConfig, bucket: &Bucket,
         return false;
     }
     batch.seqs.iter().all(|s| {
-        cdiv(s.ctx_len + s.tokens.len(), kv.block_size()) <= bucket.max_blocks
+        cdiv(s.ctx_len + s.tok_len, kv.block_size()) <= bucket.max_blocks
     })
 }
 
@@ -137,31 +142,48 @@ pub fn fits(batch: &ScheduledBatch, cfg: &KernelConfig, bucket: &Bucket,
 /// bucket envelope — the engine must have bucketed correctly.
 pub fn build(batch: &ScheduledBatch, cfg: &KernelConfig, bucket: &Bucket,
              kv: &KvCacheManager) -> Result<BatchMetadata> {
+    let mut md = BatchMetadata::default();
+    build_into(batch, cfg, bucket, kv, &mut md)?;
+    Ok(md)
+}
+
+/// Zero the buffer and size it to its bucket shape, keeping capacity:
+/// once the arena has seen the largest bucket, this never reallocates.
+fn reset(v: &mut Vec<i32>, n: usize) {
+    v.clear();
+    v.resize(n, 0);
+}
+
+/// [`build`] into a caller-owned [`BatchMetadata`]: every tensor is
+/// cleared and refilled in place, so the engine's step arena reuses one
+/// metadata block across steps without reallocating. On error `md` is
+/// left untouched.
+pub fn build_into(batch: &ScheduledBatch, cfg: &KernelConfig,
+                  bucket: &Bucket, kv: &KvCacheManager,
+                  md: &mut BatchMetadata) -> Result<()> {
     if !fits(batch, cfg, bucket, kv) {
         bail!("batch does not fit bucket {bucket:?} under {:?}", cfg.variant);
     }
     let align = cfg.q_align();
     let (s_cap, t_cap) = (bucket.max_seqs, bucket.max_tokens);
 
-    let mut md = BatchMetadata {
-        token_ids: vec![0; t_cap],
-        positions: vec![0; t_cap],
-        // padding lanes scatter into the scratch page (physical page 0)
-        slot_mapping: vec![0; t_cap],
-        block_table: vec![0; s_cap * bucket.max_blocks],
-        seq_lens: vec![0; s_cap],
-        ctx_lens: vec![0; s_cap],
-        query_start_loc: vec![0; s_cap + 1],
-        last_token_idx: vec![0; s_cap],
-        order: Vec::with_capacity(batch.seqs.len()),
-        features: features_of(batch),
-        bucket: *bucket,
-    };
+    reset(&mut md.token_ids, t_cap);
+    reset(&mut md.positions, t_cap);
+    // padding lanes scatter into the scratch page (physical page 0)
+    reset(&mut md.slot_mapping, t_cap);
+    reset(&mut md.block_table, s_cap * bucket.max_blocks);
+    reset(&mut md.seq_lens, s_cap);
+    reset(&mut md.ctx_lens, s_cap);
+    reset(&mut md.query_start_loc, s_cap + 1);
+    reset(&mut md.last_token_idx, s_cap);
+    md.order.clear();
+    md.features = features_of(batch);
+    md.bucket = *bucket;
 
     let mut t = 0usize;
     for (i, s) in batch.seqs.iter().enumerate() {
         let table = kv.table(s.handle);
-        let total = s.ctx_len + s.tokens.len();
+        let total = s.ctx_len + s.tok_len;
         debug_assert!(table.len() >= total,
                       "cache not grown before metadata build");
         md.seq_lens[i] = total as i32;
@@ -170,20 +192,20 @@ pub fn build(batch: &ScheduledBatch, cfg: &KernelConfig, bucket: &Bucket,
         for (b, &p) in table.pages().iter().enumerate() {
             md.block_table[i * bucket.max_blocks + b] = p as i32;
         }
-        for (j, &tok) in s.tokens.iter().enumerate() {
+        for (j, &tok) in batch.tokens_of(s).iter().enumerate() {
             let pos = s.ctx_len + j;
             md.token_ids[t + j] = tok;
             md.positions[t + j] = pos as i32;
             md.slot_mapping[t + j] = kv.slot(s.handle, pos) as i32;
         }
-        md.last_token_idx[i] = (t + s.tokens.len() - 1) as i32;
+        md.last_token_idx[i] = (t + s.tok_len - 1) as i32;
         md.order.push((s.id, s.branch));
-        t += align_up(s.tokens.len(), align);
+        t += align_up(s.tok_len, align);
     }
     for i in batch.seqs.len()..=s_cap {
         md.query_start_loc[i] = t as i32;
     }
-    Ok(md)
+    Ok(())
 }
 
 #[cfg(test)]
@@ -376,7 +398,7 @@ mod tests {
             let mut covered = vec![false; bucket.max_tokens];
             for (i, s) in b.seqs.iter().enumerate() {
                 let t0 = md.query_start_loc[i] as usize;
-                for j in 0..s.tokens.len() {
+                for j in 0..s.tok_len {
                     assert!(!covered[t0 + j], "overlap at {}", t0 + j);
                     covered[t0 + j] = true;
                 }

@@ -95,9 +95,14 @@ impl Fingerprint {
         put("decode_stall_steps", m.decode_stall_steps);
         put("max_decode_gap_steps", m.max_decode_gap_steps);
         put("prefill_chunk_deferrals", m.prefill_chunk_deferrals);
+        put("arena_reuses", m.arena_reuses);
+        put("arena_grows", m.arena_grows);
+        put("prefix_hash_skips", m.prefix_hash_skips);
         // one counter per tenant the WFQ admission path credited, so the
-        // fair-share split itself is part of the gated fingerprint
-        for (tenant, n) in &m.wfq_admitted_tokens {
+        // fair-share split itself is part of the gated fingerprint (read
+        // through the live accessor — the hot loop no longer mirrors the
+        // map into metrics)
+        for (tenant, n) in e.wfq_admitted_tokens() {
             c.insert(format!("wfq_admitted_tokens:{tenant}"), *n);
         }
         Fingerprint { counters: c }
@@ -151,12 +156,15 @@ pub fn gate_of(counter: &str) -> Gate {
         "engine_steps" | "prompt_tokens" | "pages_allocated" | "cow_copies"
         | "preemptions" | "self_preemptions" | "prefix_evictions"
         | "beam_forks" | "beam_prunes" | "beam_pruned_pages"
-        | "decode_stall_steps" | "max_decode_gap_steps" => {
-            Gate::UpIsRegression
-        }
+        | "decode_stall_steps" | "max_decode_gap_steps"
+        | "arena_grows" => Gate::UpIsRegression,
         "prefix_hit_tokens" => Gate::DownIsRegression,
         // `prefill_chunk_deferrals` lands here on purpose: deferring a
-        // chunk is the policy *working*, not a cost
+        // chunk is the policy *working*, not a cost. `arena_reuses` and
+        // `prefix_hash_skips` are informational too: both are coupled to
+        // step/attempt counts with no monotone goodness direction, and
+        // their determinism is enforced by the strict run-twice
+        // self-compare rather than a baseline gate.
         _ => Gate::Informational,
     }
 }
@@ -202,6 +210,63 @@ fn snapshot_from_json(v: &Value) -> Result<Snapshot> {
     })
 }
 
+/// Per-phase step-loop wall-time profile (schedule → build → stage →
+/// dispatch → output), one [`Snapshot`] per phase, recorded once per
+/// dispatched step. Advisory like the other timings: `compare` never
+/// reads it — the deterministic side of the profiler (`arena_*`,
+/// `prefix_hash_skips`) lives in the fingerprint instead.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct PhaseProfile {
+    pub schedule_us: Snapshot,
+    pub build_us: Snapshot,
+    pub stage_us: Snapshot,
+    pub dispatch_us: Snapshot,
+    pub output_us: Snapshot,
+}
+
+impl PhaseProfile {
+    pub fn from_metrics(m: &crate::metrics::EngineMetrics) -> Self {
+        PhaseProfile {
+            schedule_us: m.phase_schedule_us.snapshot(),
+            build_us: m.phase_build_us.snapshot(),
+            stage_us: m.phase_stage_us.snapshot(),
+            dispatch_us: m.phase_dispatch_us.snapshot(),
+            output_us: m.phase_output_us.snapshot(),
+        }
+    }
+
+    /// `(name, snapshot)` view in pipeline order (tables, dumps).
+    pub fn rows(&self) -> [(&'static str, &Snapshot); 5] {
+        [
+            ("schedule", &self.schedule_us),
+            ("build", &self.build_us),
+            ("stage", &self.stage_us),
+            ("dispatch", &self.dispatch_us),
+            ("output", &self.output_us),
+        ]
+    }
+
+    fn to_json(&self) -> Value {
+        obj(vec![
+            ("schedule_us", snapshot_json(&self.schedule_us)),
+            ("build_us", snapshot_json(&self.build_us)),
+            ("stage_us", snapshot_json(&self.stage_us)),
+            ("dispatch_us", snapshot_json(&self.dispatch_us)),
+            ("output_us", snapshot_json(&self.output_us)),
+        ])
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        Ok(PhaseProfile {
+            schedule_us: snapshot_from_json(v.req("schedule_us")?)?,
+            build_us: snapshot_from_json(v.req("build_us")?)?,
+            stage_us: snapshot_from_json(v.req("stage_us")?)?,
+            dispatch_us: snapshot_from_json(v.req("dispatch_us")?)?,
+            output_us: snapshot_from_json(v.req("output_us")?)?,
+        })
+    }
+}
+
 /// One scenario's record in a benchmark report.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ScenarioResult {
@@ -214,6 +279,9 @@ pub struct ScenarioResult {
     pub requests: usize,
     pub fingerprint: Fingerprint,
     pub timings: Timings,
+    /// Per-phase step-loop profile. Absent in pre-profiler reports —
+    /// `from_json` fills zeroed snapshots so old files keep loading.
+    pub phases: PhaseProfile,
 }
 
 impl ScenarioResult {
@@ -223,6 +291,7 @@ impl ScenarioResult {
             ("deterministic", Value::Bool(self.deterministic)),
             ("requests", num(self.requests as f64)),
             ("fingerprint", self.fingerprint.to_json()),
+            ("phases", self.phases.to_json()),
             (
                 "timings",
                 obj(vec![
@@ -252,6 +321,10 @@ impl ScenarioResult {
                 inter_token_ms: snapshot_from_json(t.req("inter_token_ms")?)?,
                 request_latency_ms:
                     snapshot_from_json(t.req("request_latency_ms")?)?,
+            },
+            phases: match v.req("phases") {
+                Ok(p) => PhaseProfile::from_json(p)?,
+                Err(_) => PhaseProfile::default(),
             },
         })
     }
@@ -618,6 +691,7 @@ pub fn run_scenario(rt: &Rc<Runtime>, model: &str, name: &str)
             inter_token_ms: m.inter_token_ms.snapshot(),
             request_latency_ms: m.group_latency_ms.snapshot(),
         },
+        phases: PhaseProfile::from_metrics(m),
     })
 }
 
@@ -678,6 +752,7 @@ pub fn run_server_replay(artifacts_dir: PathBuf, model: &str)
             inter_token_ms: Snapshot::default(),
             request_latency_ms: latency.snapshot(),
         },
+        phases: PhaseProfile::default(),
     })
 }
 
@@ -875,6 +950,7 @@ mod tests {
                 requests: 1,
                 fingerprint: fp,
                 timings: Timings::default(),
+                phases: PhaseProfile::default(),
             }],
         }
     }
@@ -972,6 +1048,45 @@ mod tests {
     }
 
     #[test]
+    fn arena_and_hash_counters_gate_in_their_classes() {
+        assert_eq!(gate_of("arena_grows"), Gate::UpIsRegression);
+        assert_eq!(gate_of("arena_reuses"), Gate::Informational);
+        assert_eq!(gate_of("prefix_hash_skips"), Gate::Informational);
+        let base = report_with(&[("arena_grows", 1)]);
+        let worse = report_with(&[("arena_grows", 3)]);
+        assert!(!compare(&worse, &base, false).passed(),
+                "an arena that keeps regrowing in steady state is a \
+                 regression");
+        let better = report_with(&[("arena_grows", 0)]);
+        assert!(compare(&better, &base, false).passed());
+    }
+
+    #[test]
+    fn phases_roundtrip_and_default_when_absent() {
+        let mut r = report_with(&[("engine_steps", 4)]);
+        r.scenarios[0].phases.stage_us = crate::metrics::Snapshot {
+            count: 4, mean: 2.0, p50: 2.0, p95: 2.5, p99: 2.5,
+            min: 1.0, max: 2.5,
+        };
+        let parsed = BenchReport::parse(&r.to_json_string()).unwrap();
+        assert_eq!(parsed, r, "phase profile survives the roundtrip");
+
+        // a pre-profiler report (no "phases" key) still loads, with
+        // zeroed snapshots
+        let zs = r#"{"count":0,"mean":0,"p50":0,"p95":0,"p99":0,"min":0,"max":0}"#;
+        let legacy = format!(
+            r#"{{"schema_version": 1, "label": "t", "model": "tiny",
+                 "scenarios": [{{"name": "s", "deterministic": true,
+                 "requests": 1, "fingerprint": {{"engine_steps": 4}},
+                 "timings": {{"wall_s": 0, "throughput_tok_s": 0,
+                 "ttft_ms": {zs}, "inter_token_ms": {zs},
+                 "request_latency_ms": {zs}}}}}]}}"#
+        );
+        let parsed = BenchReport::parse(&legacy).unwrap();
+        assert_eq!(parsed.scenarios[0].phases, PhaseProfile::default());
+    }
+
+    #[test]
     fn added_scenario_fails_strict_but_not_gating_compare() {
         let base = report_with(&[("engine_steps", 10)]);
         let mut cur = base.clone();
@@ -981,6 +1096,7 @@ mod tests {
             requests: 1,
             fingerprint: Fingerprint::default(),
             timings: Timings::default(),
+            phases: PhaseProfile::default(),
         });
         let strict = compare(&cur, &base, true);
         assert!(!strict.passed(),

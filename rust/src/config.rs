@@ -91,7 +91,7 @@ impl KernelConfig {
 
 /// Static-shape envelope of one executable (mirror of Bucket) — the AOT
 /// analogue of one recorded CUDA/HIP graph.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
 pub struct Bucket {
     pub max_seqs: usize,
     pub max_tokens: usize,

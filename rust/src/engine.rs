@@ -61,6 +61,25 @@ pub struct StepReport {
     pub dispatch_us: f64,
 }
 
+/// Reusable step-state arena: the engine-owned collections that the hot
+/// loop fills in place (`Scheduler::schedule_into`, `batch::build_into`,
+/// the sample-row map, the staged upload handles) instead of allocating
+/// fresh every step. `rows_cap` / `toks_cap` track the *demand*
+/// high-water marks the arena has already absorbed: a step whose row and
+/// new-token demand both fit under the marks counts as an `arena_reuse`,
+/// anything else as an `arena_grow`. Keying on scheduler demand (not on
+/// allocator capacity or compiled bucket shape) keeps the counters a
+/// deterministic function of the workload alone.
+#[derive(Default)]
+struct StepArena {
+    batch: ScheduledBatch,
+    md: BatchMetadata,
+    samples: Vec<SampleOutput>,
+    uploads: Vec<xla::PjRtBuffer>,
+    rows_cap: usize,
+    toks_cap: usize,
+}
+
 pub struct Engine {
     rt: Rc<Runtime>,
     pub model_name: String,
@@ -80,6 +99,7 @@ pub struct Engine {
     /// Slot capacity of the compiled cache buffers (state lane stride).
     num_slots: usize,
     out_proc: OutputProcessor,
+    arena: StepArena,
     started: Instant,
     pub metrics: EngineMetrics,
     next_id: RequestId,
@@ -167,6 +187,7 @@ impl Engine {
             step_specs,
             num_slots,
             out_proc,
+            arena: StepArena::default(),
             started: Instant::now(),
             metrics: EngineMetrics::default(),
             next_id: 1,
@@ -252,6 +273,23 @@ impl Engine {
     /// Read-only view of the KV-cache manager (tests, diagnostics).
     pub fn kv(&self) -> &KvCacheManager {
         &self.kv
+    }
+
+    /// Live per-tenant WFQ admitted-token counters. The scheduler owns
+    /// the authoritative map; the hot step loop no longer clones it into
+    /// `metrics` every step (that clone dominated decode-step overhead
+    /// at high tenant counts).
+    pub fn wfq_admitted_tokens(&self) -> &std::collections::BTreeMap<String, u64> {
+        &self.scheduler.stats.wfq_admitted_tokens
+    }
+
+    /// Snapshot report-only mirrors into `metrics` — currently the WFQ
+    /// admitted-token map. Call before `metrics.dump()` (or any path that
+    /// reads `metrics.wfq_admitted_tokens` directly) instead of paying
+    /// the clone once per step.
+    pub fn sync_report_metrics(&mut self) {
+        self.metrics.wfq_admitted_tokens =
+            self.scheduler.stats.wfq_admitted_tokens.clone();
     }
 
     /// Pick the artifact for this batch: heuristics choose the variant and
@@ -356,28 +394,62 @@ impl Engine {
     }
 
     /// One engine step. Returns None when there is nothing to do.
+    ///
+    /// Steady-state hot path is arena-backed: the `ScheduledBatch`, the
+    /// `BatchMetadata` tensors, the sample-row map and the staged upload
+    /// handles all live in [`StepArena`] and are filled in place — once
+    /// the arena has grown to the workload's widest shape, the
+    /// schedule→build→stage path performs no heap allocation.
     pub fn step(&mut self) -> Result<Option<StepReport>> {
         let t_step = Instant::now();
-        let batch = self.scheduler.schedule(&mut self.kv);
+        // Take the arena pieces for the duration of the step (the borrow
+        // checker cannot see that `dispatch(&mut self, ..)` leaves
+        // `self.arena.batch`/`md` alone); every successful exit restores
+        // them. An error path drops the buffers — acceptable capacity
+        // loss, engine errors are fatal to the run.
+        let mut batch = std::mem::take(&mut self.arena.batch);
+        let mut md = std::mem::take(&mut self.arena.md);
+        let t_phase = Instant::now();
+        self.scheduler.schedule_into(&mut self.kv, &mut batch);
+        let schedule_us = t_phase.elapsed().as_secs_f64() * 1e6;
         // Mirror before any early return: the self-preemption count is
         // exactly the diagnostic for a schedule call that came back
         // empty (a post-mortem dump must see the final failing call).
+        // The WFQ admitted-token map is deliberately NOT mirrored here —
+        // cloning it every step was hot-loop waste; report paths use
+        // `wfq_admitted_tokens()` / `sync_report_metrics()` instead.
         self.metrics.self_preemptions = self.scheduler.stats.self_preemptions;
         self.metrics.decode_stall_steps = self.scheduler.stats.decode_stall_steps;
         self.metrics.max_decode_gap_steps =
             self.scheduler.stats.max_decode_gap_steps;
         self.metrics.prefill_chunk_deferrals =
             self.scheduler.stats.prefill_chunk_deferrals;
-        self.metrics.wfq_admitted_tokens =
-            self.scheduler.stats.wfq_admitted_tokens.clone();
+        self.metrics.prefix_hash_skips = self.scheduler.stats.prefix_hash_skips;
         // CoW splits must reach the device cache even when the batch ended
         // up empty (the split branch may only be dispatched next step).
         self.apply_cow_copies(&batch.cow_copies)?;
         if batch.is_empty() {
+            self.arena.batch = batch;
+            self.arena.md = md;
             return Ok(None);
         }
+        // Arena accounting, demand-keyed: a step reuses the arena iff its
+        // row demand and new-token demand both fit under the high-water
+        // marks every prior step established.
+        let rows = batch.seqs.len();
+        let toks = batch.total_new_tokens();
+        if rows > self.arena.rows_cap || toks > self.arena.toks_cap {
+            self.arena.rows_cap = self.arena.rows_cap.max(rows);
+            self.arena.toks_cap = self.arena.toks_cap.max(toks);
+            self.metrics.arena_grows += 1;
+        } else {
+            self.metrics.arena_reuses += 1;
+        }
         let spec = self.select_artifact(&batch)?;
-        let md = batch::build(&batch, &spec.config, &spec.bucket, &self.kv)?;
+        let t_phase = Instant::now();
+        batch::build_into(&batch, &spec.config, &spec.bucket, &self.kv,
+                          &mut md)?;
+        let build_us = t_phase.elapsed().as_secs_f64() * 1e6;
 
         let t_dispatch = Instant::now();
         let tokens = self.dispatch(&spec, &md)?;
@@ -388,22 +460,22 @@ impl Engine {
         // logprob-proxy score, then hand them to the output processor —
         // which owns salting, stop conditions, forking (parallel and
         // per-step beam expansion) and group retirement.
-        let samples: Vec<SampleOutput> = md
-            .order
-            .iter()
-            .enumerate()
-            .map(|(i, &(id, branch))| SampleOutput {
+        let t_phase = Instant::now();
+        let mut samples = std::mem::take(&mut self.arena.samples);
+        samples.clear();
+        samples.extend(md.order.iter().enumerate().map(
+            |(i, &(id, branch))| SampleOutput {
                 id,
                 branch,
                 raw: tokens[i],
                 logprob: output::logprob_proxy(tokens[i],
                                                self.model_cfg.vocab_size),
-            })
-            .collect();
+            }));
         let now = self.now_ns();
         let outputs = self.out_proc.process(
-            &mut self.scheduler, &batch, samples, &mut self.kv,
+            &mut self.scheduler, &batch, &samples, &mut self.kv,
             &mut self.metrics, now);
+        self.arena.samples = samples;
         self.metrics.token_events += outputs.tokens.len() as u64;
         // Exact throughput accounting: the processor reports how many
         // tokens actually became output this step (forked branches'
@@ -418,6 +490,7 @@ impl Engine {
             }
             self.finished.push(g);
         }
+        let output_us = t_phase.elapsed().as_secs_f64() * 1e6;
 
         // bookkeeping
         let step_us = t_step.elapsed().as_secs_f64() * 1e6;
@@ -437,6 +510,14 @@ impl Engine {
         self.metrics.step_us.record(step_us);
         self.metrics.dispatch_us.record(dispatch_us);
         self.metrics.overhead_us.record(step_us - dispatch_us);
+        // Per-phase profile. All five histograms are recorded only on
+        // dispatched (non-empty) steps so their counts stay aligned with
+        // `steps`; `stage`/`dispatch` are recorded inside `dispatch()`
+        // where the upload/execute boundary is visible. CoW page-copy
+        // work is excluded (it has its own `cow_pairs_per_step` view).
+        self.metrics.phase_schedule_us.record(schedule_us);
+        self.metrics.phase_build_us.record(build_us);
+        self.metrics.phase_output_us.record(output_us);
         self.metrics.preemptions += batch.preempted.len() as u64;
         let cache = self.kv.cache_stats();
         self.metrics.prefix_hit_tokens = cache.hit_tokens;
@@ -455,40 +536,59 @@ impl Engine {
             .seqs
             .iter()
             .filter(|s| s.prefill)
-            .map(|s| s.tokens.len() as u64)
+            .map(|s| s.tok_len as u64)
             .sum::<u64>();
         *self
             .metrics
             .variant_picks
             .entry(spec.config.variant.name().to_string())
             .or_default() += 1;
+        // restore the arena for the next step
+        self.arena.batch = batch;
+        self.arena.md = md;
         Ok(Some(report))
     }
 
     /// Upload metadata, chain the state buffer through the step
     /// executable, and read back the sampled tokens.
+    ///
+    /// Staging is zero-clone: the eight metadata tensors are uploaded
+    /// straight from the arena-resident `BatchMetadata` slices (no
+    /// per-step `HostTensor` `Vec` copies), and the resulting device
+    /// handles land in the arena's persistent `uploads` buffer.
     fn dispatch(&mut self, spec: &ArtifactSpec, md: &BatchMetadata)
         -> Result<Vec<i32>> {
         let exe = self.rt.executable(&spec.name)?;
         let n_params = self.weights.len();
-        let meta = [
-            HostTensor::I32(md.token_ids.clone()),
-            HostTensor::I32(md.positions.clone()),
+        let t_stage = Instant::now();
+        let meta: [&[i32]; 8] = [
+            &md.token_ids,
+            &md.positions,
             // state goes between positions and block_table (operand order)
-            HostTensor::I32(md.block_table.clone()),
-            HostTensor::I32(md.seq_lens.clone()),
-            HostTensor::I32(md.ctx_lens.clone()),
-            HostTensor::I32(md.query_start_loc.clone()),
-            HostTensor::I32(md.slot_mapping.clone()),
-            HostTensor::I32(md.last_token_idx.clone()),
+            &md.block_table,
+            &md.seq_lens,
+            &md.ctx_lens,
+            &md.query_start_loc,
+            &md.slot_mapping,
+            &md.last_token_idx,
         ];
-        let mut uploaded = Vec::with_capacity(meta.len());
+        let mut uploaded = std::mem::take(&mut self.arena.uploads);
+        uploaded.clear();
         for (j, t) in meta.iter().enumerate() {
             // operand index: params, then token_ids/positions (j<2),
             // then state, then the rest shifted by one
             let idx = if j < 2 { n_params + j } else { n_params + j + 1 };
-            uploaded.push(self.rt.upload_for(&exe, idx, t)?);
+            match self.rt.upload_i32_for(&exe, idx, t) {
+                Ok(buf) => uploaded.push(buf),
+                Err(e) => {
+                    self.arena.uploads = uploaded;
+                    return Err(e);
+                }
+            }
         }
+        let stage_us = t_stage.elapsed().as_secs_f64() * 1e6;
+
+        let t_exec = Instant::now();
         let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(
             n_params + meta.len() + 1);
         args.extend(self.weights.iter());
@@ -498,10 +598,18 @@ impl Engine {
         args.extend(uploaded[2..].iter());
 
         let new_state = self.rt.execute(&exe, &args)?;
+        drop(args);
         self.state = new_state;
+        // return the device handles to the arena (clear first so stale
+        // buffers are released now, not at the next dispatch)
+        uploaded.clear();
+        self.arena.uploads = uploaded;
 
-        let toks = self.rt.execute(&self.extract.clone(), &[&self.state])?;
+        let toks = self.rt.execute(&self.extract, &[&self.state])?;
         let tail = self.rt.download_f32(&toks)?;
+        let exec_us = t_exec.elapsed().as_secs_f64() * 1e6;
+        self.metrics.phase_stage_us.record(stage_us);
+        self.metrics.phase_dispatch_us.record(exec_us);
         Ok(md
             .order
             .iter()
@@ -723,6 +831,54 @@ mod tests {
                    Some(crate::scheduler::FinishReason::Stop));
         assert_eq!(e.metrics.stop_finishes, 1);
         assert_eq!(e.free_page_fraction(), 1.0);
+    }
+
+    #[test]
+    fn arena_reaches_steady_state_on_pure_decode() {
+        let mut e = engine();
+        for i in 0..3 {
+            e.add_request(vec![i as i32 + 1; 8], 24).unwrap();
+        }
+        // warmup: drive past the prefills until the decode batch has
+        // reached its widest shape (the arena's high-water marks)
+        for _ in 0..6 {
+            e.step().unwrap();
+        }
+        let grows_after_warmup = e.metrics.arena_grows;
+        assert!(grows_after_warmup > 0, "first step must grow the arena");
+        while e.has_unfinished() {
+            e.step().unwrap();
+        }
+        assert_eq!(e.metrics.arena_grows, grows_after_warmup,
+                   "steady-state decode must reuse the arena, never grow it");
+        assert!(e.metrics.arena_reuses > 0);
+        assert_eq!(e.metrics.arena_reuses + e.metrics.arena_grows,
+                   e.metrics.steps,
+                   "every dispatched step is either a reuse or a grow");
+        // the per-phase profiler records exactly once per dispatched step
+        for h in [
+            &e.metrics.phase_schedule_us,
+            &e.metrics.phase_build_us,
+            &e.metrics.phase_stage_us,
+            &e.metrics.phase_dispatch_us,
+            &e.metrics.phase_output_us,
+        ] {
+            assert_eq!(h.count(), e.metrics.steps);
+        }
+    }
+
+    #[test]
+    fn wfq_counters_surface_without_per_step_clone() {
+        let mut e = engine();
+        e.add_request(vec![4, 5, 6], 3).unwrap();
+        e.run_to_completion().unwrap();
+        assert!(e.metrics.wfq_admitted_tokens.is_empty(),
+                "the hot loop must not mirror the WFQ map");
+        let admitted: u64 = e.wfq_admitted_tokens().values().sum();
+        assert!(admitted > 0, "live accessor sees the scheduler counters");
+        e.sync_report_metrics();
+        assert_eq!(&e.metrics.wfq_admitted_tokens,
+                   e.wfq_admitted_tokens());
     }
 
     #[test]

@@ -199,6 +199,50 @@ fn hash_block(prev: u64, tokens: &[i32]) -> u64 {
     h
 }
 
+/// Rolling block-chain hash memo for one append-only token stream.
+///
+/// The prefix-cache probes ([`KvCacheManager::lookup_prefix`],
+/// [`KvCacheManager::parked_prefix_pages`],
+/// [`KvCacheManager::attach_prefix`]) each walk the stream's full-block
+/// chain from `HASH_SEED` — three full re-hashes of an unchanged prefix
+/// per admission attempt. A `PrefixHasher` owned by the sequence caches
+/// the chain link of every full block it has ever seen; because a
+/// sequence's stream (prompt + generated output) only ever appends,
+/// cached links stay valid for the sequence's whole lifetime, across
+/// chunked prefill, preemption and resumption. [`PrefixHasher::update`]
+/// hashes only the blocks that filled since the last probe and the
+/// `*_hashed` probe variants then run over the memo with zero re-hashing.
+#[derive(Debug, Clone, Default)]
+pub struct PrefixHasher {
+    hashes: Vec<u64>,
+}
+
+impl PrefixHasher {
+    /// Extend the memo to cover every *probe-relevant* full block of
+    /// `stream` (all full blocks, capped so at least one token is left to
+    /// compute — the same cap every prefix probe applies). Returns the
+    /// number of block hashes served from the memo instead of recomputed,
+    /// the `prefix_hash_skips` unit of work saved.
+    pub fn update(&mut self, stream: &[i32], block_size: usize) -> usize {
+        let max_full = stream.len().saturating_sub(1) / block_size;
+        // streams are append-only, so the memo never runs ahead of them
+        debug_assert!(self.hashes.len() <= max_full || max_full == 0);
+        let reused = self.hashes.len().min(max_full);
+        let mut chain = self.hashes.last().copied().unwrap_or(HASH_SEED);
+        for blk in self.hashes.len()..max_full {
+            chain = hash_block(chain,
+                               &stream[blk * block_size..(blk + 1) * block_size]);
+            self.hashes.push(chain);
+        }
+        reused
+    }
+
+    /// The memoized chain links, one per full block, in block order.
+    pub fn hashes(&self) -> &[u64] {
+        &self.hashes
+    }
+}
+
 /// The cache manager: allocator + all live block tables + prefix index.
 #[derive(Debug)]
 pub struct KvCacheManager {
@@ -408,16 +452,22 @@ impl KvCacheManager {
     /// at least one token is left to compute (the model must still produce
     /// next-token logits for the request). Read-only.
     pub fn lookup_prefix(&self, tokens: &[i32]) -> usize {
+        let mut hasher = PrefixHasher::default();
+        hasher.update(tokens, self.alloc.block_size);
+        self.lookup_prefix_hashed(hasher.hashes())
+    }
+
+    /// [`Self::lookup_prefix`] over precomputed block-chain hashes (one per
+    /// full block, probe-capped) — the hot path used with a per-sequence
+    /// [`PrefixHasher`] memo so unchanged prefixes are never re-hashed.
+    pub fn lookup_prefix_hashed(&self, hashes: &[u64]) -> usize {
         if !self.caching {
             return 0;
         }
         let bs = self.alloc.block_size;
-        let max_full = tokens.len().saturating_sub(1) / bs;
-        let mut chain = HASH_SEED;
         let mut hit = 0;
-        for blk in 0..max_full {
-            chain = hash_block(chain, &tokens[blk * bs..(blk + 1) * bs]);
-            if self.index.contains_key(&chain) {
+        for (blk, chain) in hashes.iter().enumerate() {
+            if self.index.contains_key(chain) {
                 hit = (blk + 1) * bs;
             } else {
                 break;
@@ -431,16 +481,19 @@ impl KvCacheManager {
     /// the admission watermark would otherwise count as reclaimable, so
     /// admission must charge them against its headroom check. Read-only.
     pub fn parked_prefix_pages(&self, tokens: &[i32]) -> usize {
+        let mut hasher = PrefixHasher::default();
+        hasher.update(tokens, self.alloc.block_size);
+        self.parked_prefix_pages_hashed(hasher.hashes())
+    }
+
+    /// [`Self::parked_prefix_pages`] over precomputed block-chain hashes.
+    pub fn parked_prefix_pages_hashed(&self, hashes: &[u64]) -> usize {
         if !self.caching {
             return 0;
         }
-        let bs = self.alloc.block_size;
-        let max_full = tokens.len().saturating_sub(1) / bs;
-        let mut chain = HASH_SEED;
         let mut parked = 0;
-        for blk in 0..max_full {
-            chain = hash_block(chain, &tokens[blk * bs..(blk + 1) * bs]);
-            match self.index.get(&chain) {
+        for chain in hashes {
+            match self.index.get(chain) {
                 Some(&p) => {
                     if self.alloc.ref_count(p) == 0 {
                         parked += 1;
@@ -456,6 +509,19 @@ impl KvCacheManager {
     /// `h` by refcount bump. Returns the number of tokens now considered
     /// computed. The handle's table must still be empty.
     pub fn attach_prefix(&mut self, h: SeqHandle, tokens: &[i32]) -> usize {
+        let mut hasher = PrefixHasher::default();
+        hasher.update(tokens, self.alloc.block_size);
+        self.attach_prefix_hashed(h, hasher.hashes(), tokens.len())
+    }
+
+    /// [`Self::attach_prefix`] over precomputed block-chain hashes.
+    /// `total_len` is the stream length in tokens (for lookup accounting).
+    pub fn attach_prefix_hashed(
+        &mut self,
+        h: SeqHandle,
+        hashes: &[u64],
+        total_len: usize,
+    ) -> usize {
         if !self.caching {
             return 0;
         }
@@ -464,18 +530,15 @@ impl KvCacheManager {
             "attach_prefix on a grown table"
         );
         self.stats.lookups += 1;
-        self.stats.lookup_tokens += tokens.len() as u64;
+        self.stats.lookup_tokens += total_len as u64;
         let bs = self.alloc.block_size;
-        let max_full = tokens.len().saturating_sub(1) / bs;
-        let mut chain = HASH_SEED;
         let mut matched_chain = HASH_SEED;
         let mut pages: Vec<PageId> = Vec::new();
-        for blk in 0..max_full {
-            chain = hash_block(chain, &tokens[blk * bs..(blk + 1) * bs]);
-            match self.index.get(&chain) {
+        for chain in hashes {
+            match self.index.get(chain) {
                 Some(&p) => {
                     pages.push(p);
-                    matched_chain = chain;
+                    matched_chain = *chain;
                 }
                 None => break,
             }
@@ -1040,5 +1103,86 @@ mod tests {
             }
             assert_eq!(m.free_pages(), capacity);
         }
+    }
+
+    // ------------------------------------------------ prefix-hasher tests
+
+    #[test]
+    fn prefix_hasher_extends_incrementally() {
+        let t = toks(64, 2);
+        let mut hasher = PrefixHasher::default();
+        // 17 tokens -> 1 probe-relevant full block, nothing memoized yet
+        assert_eq!(hasher.update(&t[..17], 16), 0);
+        assert_eq!(hasher.hashes().len(), 1);
+        // same stream again: the single block is served from the memo
+        assert_eq!(hasher.update(&t[..17], 16), 1);
+        assert_eq!(hasher.hashes().len(), 1);
+        // grown stream: old blocks reused, only new ones hashed
+        assert_eq!(hasher.update(&t, 16), 1);
+        assert_eq!(hasher.hashes().len(), 3);
+        assert_eq!(hasher.update(&t, 16), 3);
+
+        // the memo chain matches a from-scratch hash of the same stream
+        let mut fresh = PrefixHasher::default();
+        assert_eq!(fresh.update(&t, 16), 0);
+        assert_eq!(fresh.hashes(), hasher.hashes());
+    }
+
+    #[test]
+    fn prefix_hasher_ignores_exact_block_boundary_tail() {
+        // 32 tokens = 2 full blocks, but the probe cap leaves one token to
+        // compute: only the first block is probe-relevant.
+        let t = toks(32, 4);
+        let mut hasher = PrefixHasher::default();
+        hasher.update(&t, 16);
+        assert_eq!(hasher.hashes().len(), 1);
+        assert_eq!(hasher.update(&t, 16), 1);
+    }
+
+    #[test]
+    fn hashed_probes_match_token_slice_probes() {
+        let mut m = caching(8);
+        let t = toks(48, 1);
+        let h1 = m.register();
+        m.grow(h1, 48).unwrap();
+        m.commit_prefix(h1, &t, 48);
+        m.free(h1);
+
+        let mut hasher = PrefixHasher::default();
+        hasher.update(&t, m.block_size());
+        assert_eq!(m.lookup_prefix_hashed(hasher.hashes()), m.lookup_prefix(&t));
+        assert_eq!(
+            m.parked_prefix_pages_hashed(hasher.hashes()),
+            m.parked_prefix_pages(&t)
+        );
+
+        let h2 = m.register();
+        let cached = m.attach_prefix_hashed(h2, hasher.hashes(), t.len());
+        assert_eq!(cached, 32);
+        assert_eq!(m.table(h2).len(), 32);
+        assert_eq!(m.cache_stats().hit_tokens, 32);
+        assert_eq!(m.cache_stats().lookups, 1);
+        assert_eq!(m.cache_stats().lookup_tokens, 48);
+        m.free(h2);
+
+        // a miss probe over foreign hashes attaches nothing
+        let mut other = PrefixHasher::default();
+        other.update(&toks(48, 9), m.block_size());
+        assert_eq!(m.lookup_prefix_hashed(other.hashes()), 0);
+        let h3 = m.register();
+        assert_eq!(m.attach_prefix_hashed(h3, other.hashes(), 48), 0);
+    }
+
+    #[test]
+    fn hashed_probes_noop_without_caching() {
+        let mut m = KvCacheManager::new(16 * 8, 16);
+        let t = toks(48, 1);
+        let mut hasher = PrefixHasher::default();
+        hasher.update(&t, m.block_size());
+        assert_eq!(m.lookup_prefix_hashed(hasher.hashes()), 0);
+        assert_eq!(m.parked_prefix_pages_hashed(hasher.hashes()), 0);
+        let h = m.register();
+        assert_eq!(m.attach_prefix_hashed(h, hasher.hashes(), 48), 0);
+        assert_eq!(m.cache_stats().lookups, 0);
     }
 }

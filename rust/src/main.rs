@@ -88,8 +88,10 @@ COMMANDS:
                [--beam-width 3 --length-penalty 1.0]      beam search
                [--early-stopping]            stop at beam pool fill
                [--stop 5,9] [--stop-seq \"1,2;7,8\"]        stop conditions
-  bench        --label pr5 [--out F] [--scenarios a,b] [--wire]
+  bench        --label pr5 [--out F] [--scenarios a,b] [--wire] [--phases]
                runs the serving scenario matrix, writes BENCH_<label>.json
+               (--phases also prints the per-phase step-loop breakdown:
+               schedule/build/stage/dispatch/output mean + p95 per scenario)
                --compare BASELINE.json [--against CURRENT.json] [--strict]
                gates deterministic counters; exits non-zero on regression
   bench-micro  --scenario decode|prefill|mixed --batch 4 --seq-len 256
@@ -231,6 +233,8 @@ fn cmd_run(args: &Args, dir: PathBuf) -> Result<()> {
             println!("branch {} ({}): {:?}", s.branch, reason, s.output);
         }
     }
+    // the WFQ map is mirrored into metrics at report time only
+    engine.sync_report_metrics();
     println!("--- metrics ---\n{}", engine.metrics.dump());
     Ok(())
 }
@@ -308,6 +312,21 @@ fn cmd_bench(args: &Args, dir: PathBuf) -> Result<()> {
             s.timings.ttft_ms.p50,
             s.timings.request_latency_ms.p99,
         );
+    }
+    if args.get("phases").is_some_and(|v| v != "false") {
+        println!("\nper-phase step-loop breakdown (us, mean / p95):");
+        println!("{:<20} {:>18} {:>18} {:>18} {:>18} {:>18}",
+                 "scenario", "schedule", "build", "stage", "dispatch",
+                 "output");
+        for s in &report.scenarios {
+            let cell = |snap: &triton_anatomy::metrics::Snapshot| {
+                format!("{:.1} / {:.1}", snap.mean, snap.p95)
+            };
+            let r = s.phases.rows();
+            println!("{:<20} {:>18} {:>18} {:>18} {:>18} {:>18}",
+                     s.name, cell(r[0].1), cell(r[1].1), cell(r[2].1),
+                     cell(r[3].1), cell(r[4].1));
+        }
     }
     println!("wrote {out:?}");
     Ok(())

@@ -235,6 +235,30 @@ pub struct EngineMetrics {
     /// Steps a cached page sat refcount-0 before the allocator reclaimed
     /// it (mirrors `KvCacheManager::eviction_age`).
     pub prefix_eviction_age_steps: Histogram,
+    // ----- step arena / hot-loop memory discipline -----
+    /// Non-empty steps whose row/token demand fit the step arena's
+    /// existing capacity — steady state is every step landing here.
+    pub arena_reuses: u64,
+    /// Non-empty steps that forced the step arena to raise a capacity
+    /// watermark (gated: a steady-state regression shows up as growth
+    /// that never settles).
+    pub arena_grows: u64,
+    /// Block hashes served from per-sequence memos during admission
+    /// probes (mirror of `SchedulerStats::prefix_hash_skips`).
+    pub prefix_hash_skips: u64,
+    /// Per-phase step wall time, µs: scheduler pass (recorded only for
+    /// steps that dispatched work, so the phase histograms stay
+    /// count-aligned).
+    pub phase_schedule_us: Histogram,
+    /// Per-phase step wall time, µs: metadata build.
+    pub phase_build_us: Histogram,
+    /// Per-phase step wall time, µs: host-tensor staging (upload).
+    pub phase_stage_us: Histogram,
+    /// Per-phase step wall time, µs: executable dispatch + extraction
+    /// (the model-step dispatch only; `apply_cow_copies` is excluded).
+    pub phase_dispatch_us: Histogram,
+    /// Per-phase step wall time, µs: output pipeline + bookkeeping.
+    pub phase_output_us: Histogram,
     /// Picks per kernel variant name.
     pub variant_picks: std::collections::BTreeMap<String, u64>,
 }
@@ -295,6 +319,17 @@ impl EngineMetrics {
         let _ = writeln!(s, "step_us {}", self.step_us.summary());
         let _ = writeln!(s, "dispatch_us {}", self.dispatch_us.summary());
         let _ = writeln!(s, "overhead_us {}", self.overhead_us.summary());
+        let _ = writeln!(s, "arena_reuses {}", self.arena_reuses);
+        let _ = writeln!(s, "arena_grows {}", self.arena_grows);
+        let _ = writeln!(s, "prefix_hash_skips {}", self.prefix_hash_skips);
+        let _ = writeln!(s, "phase_schedule_us {}",
+                         self.phase_schedule_us.summary());
+        let _ = writeln!(s, "phase_build_us {}", self.phase_build_us.summary());
+        let _ = writeln!(s, "phase_stage_us {}", self.phase_stage_us.summary());
+        let _ = writeln!(s, "phase_dispatch_us {}",
+                         self.phase_dispatch_us.summary());
+        let _ = writeln!(s, "phase_output_us {}",
+                         self.phase_output_us.summary());
         for (v, n) in &self.variant_picks {
             let _ = writeln!(s, "variant_picks{{variant=\"{v}\"}} {n}");
         }
@@ -470,6 +505,27 @@ mod tests {
         assert!(d.contains("wfq_admitted_tokens{tenant=\"acme\"} 96"));
         assert!(d.contains("ttft_interactive_ms n=1"));
         assert!(d.contains("ttft_batch_ms n=1"));
+    }
+
+    #[test]
+    fn arena_and_phase_metrics_dump() {
+        let mut m = EngineMetrics::default();
+        m.arena_reuses = 9;
+        m.arena_grows = 1;
+        m.prefix_hash_skips = 42;
+        m.phase_schedule_us.record(3.0);
+        m.phase_build_us.record(5.0);
+        m.phase_stage_us.record(2.0);
+        m.phase_dispatch_us.record(60.0);
+        m.phase_output_us.record(4.0);
+        let d = m.dump();
+        assert!(d.contains("arena_reuses 9"));
+        assert!(d.contains("arena_grows 1"));
+        assert!(d.contains("prefix_hash_skips 42"));
+        for phase in ["schedule", "build", "stage", "dispatch", "output"] {
+            assert!(d.contains(&format!("phase_{phase}_us n=1")),
+                    "missing phase_{phase}_us");
+        }
     }
 
     #[test]

@@ -144,11 +144,15 @@ pub struct StepOutputs {
 /// their results.
 pub struct OutputProcessor {
     vocab: usize,
+    /// Reusable buffer for the known-stream rebuild feeding
+    /// `commit_prefix` — part of the engine's step arena discipline
+    /// (steady-state decode steps must not allocate here).
+    known_scratch: Vec<i32>,
 }
 
 impl OutputProcessor {
     pub fn new(vocab: usize) -> Self {
-        OutputProcessor { vocab }
+        OutputProcessor { vocab, known_scratch: Vec::new() }
     }
 
     /// Apply one completed step. `samples` pairs each sampled `(group,
@@ -158,15 +162,16 @@ impl OutputProcessor {
     /// `n = 1` path passes tokens through untouched and stays
     /// byte-identical to the pre-pipeline engine.
     pub fn process(
-        &self,
+        &mut self,
         sched: &mut Scheduler,
         batch: &ScheduledBatch,
-        samples: Vec<SampleOutput>,
+        samples: &[SampleOutput],
         kv: &mut KvCacheManager,
         metrics: &mut EngineMetrics,
         now_ns: u64,
     ) -> StepOutputs {
-        let mut out = StepOutputs { samples, ..Default::default() };
+        let mut out =
+            StepOutputs { samples: samples.to_vec(), ..Default::default() };
 
         // ---- stage 1: per-row application --------------------------------
         for s in &batch.seqs {
@@ -176,7 +181,7 @@ impl OutputProcessor {
                 .find(|g| g.id == s.id)
                 .expect("scheduled group vanished");
             let pos = g.seq_index(s.branch).expect("scheduled branch vanished");
-            g.seqs[pos].computed = s.ctx_len + s.tokens.len();
+            g.seqs[pos].computed = s.ctx_len + s.tok_len;
             let computed = g.seqs[pos].computed;
             // Publish newly-filled full blocks into the prefix index so
             // later requests (and this group after a preemption) can
@@ -185,9 +190,10 @@ impl OutputProcessor {
             if kv.prefix_caching_enabled()
                 && computed / kv.block_size() > kv.committed_blocks(s.handle)
             {
-                let known: Vec<i32> =
-                    (0..computed).map(|j| g.token_at(s.branch, j)).collect();
-                kv.commit_prefix(s.handle, &known, computed);
+                self.known_scratch.clear();
+                self.known_scratch
+                    .extend((0..computed).map(|j| g.token_at(s.branch, j)));
+                kv.commit_prefix(s.handle, &self.known_scratch, computed);
             }
             if !s.samples {
                 continue; // mid-prefill chunk: sample discarded
@@ -238,6 +244,7 @@ impl OutputProcessor {
                         first_token_ns: Some(now_ns),
                         last_token_ns: Some(now_ns),
                         stall: 0,
+                        hash_memo: Default::default(),
                     });
                     g.next_branch = b + 1;
                     sched.stats.forked_branches += 1;
@@ -471,6 +478,7 @@ impl OutputProcessor {
                     first_token_ns: Some(now_ns),
                     last_token_ns: Some(now_ns),
                     stall: 0,
+                    hash_memo: Default::default(),
                 });
                 g.next_branch += 1;
             }
@@ -545,6 +553,7 @@ impl OutputProcessor {
                     first_token_ns: Some(now_ns),
                     last_token_ns: Some(now_ns),
                     stall: 0,
+                    hash_memo: Default::default(),
                 });
                 g.next_branch += 1;
                 stats.forked_branches += 1;
@@ -667,7 +676,7 @@ pub(crate) fn step_all_for_tests(
         .collect();
     let mut metrics = EngineMetrics::default();
     OutputProcessor::new(2048)
-        .process(sched, batch, samples, kv, &mut metrics, 0);
+        .process(sched, batch, &samples, kv, &mut metrics, 0);
 }
 
 #[cfg(test)]

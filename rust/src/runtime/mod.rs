@@ -161,6 +161,25 @@ impl Runtime {
         self.upload(t, &spec.shape)
     }
 
+    /// Upload an i32 slice validated against an input spec, without first
+    /// materialising an owned `HostTensor` (zero-clone staging for the
+    /// per-step metadata tensors). A device buffer is still created per
+    /// upload — the PjRt surface has no in-place device-buffer mutation —
+    /// but the host-side copy into a fresh `Vec<i32>` is gone.
+    pub fn upload_i32_for(&self, exe: &Executable, idx: usize,
+                          data: &[i32]) -> Result<xla::PjRtBuffer> {
+        let spec = &exe.spec.inputs[idx];
+        if data.len() != spec.elements() || spec.dtype != DType::I32 {
+            bail!(
+                "operand {idx} ({}) expects {:?} {:?}, got {} i32 elements",
+                spec.name, spec.dtype, spec.shape, data.len()
+            );
+        }
+        self.client
+            .buffer_from_host_buffer(data, &spec.shape, None)
+            .map_err(|e| anyhow!("upload: {e}"))
+    }
+
     /// Run with pre-uploaded buffers (the hot path). Returns the single
     /// output buffer (all artifacts are single-result by construction).
     pub fn execute(&self, exe: &Executable,

@@ -83,7 +83,7 @@ use std::collections::{BTreeMap, HashSet, VecDeque};
 
 use crate::config::{EngineConfig, Priority, RequestMeta, SamplingParams,
                     SchedPolicy};
-use crate::kvcache::{KvCacheManager, PageId, SeqHandle};
+use crate::kvcache::{KvCacheManager, PageId, PrefixHasher, SeqHandle};
 
 pub type RequestId = u64;
 
@@ -164,6 +164,12 @@ pub struct Sequence {
     /// Reset the step the branch lands in a batch (or stops being
     /// decode-ready, e.g. by preemption).
     pub(crate) stall: u64,
+    /// Rolling block-hash memo over this branch's (append-only) stream:
+    /// admission probes hash only blocks that filled since the last
+    /// probe (`SchedulerStats::prefix_hash_skips` counts the saved
+    /// work). Survives preemption — the stream it summarizes does not
+    /// change; fork children start fresh.
+    pub(crate) hash_memo: PrefixHasher,
 }
 
 impl Sequence {
@@ -180,6 +186,7 @@ impl Sequence {
             first_token_ns: None,
             last_token_ns: None,
             stall: 0,
+            hash_memo: PrefixHasher::default(),
         }
     }
 
@@ -344,21 +351,30 @@ pub struct ScheduledSeq {
     pub handle: SeqHandle,
     /// Context length: tokens already in the KV cache.
     pub ctx_len: usize,
-    /// New tokens to process this step (1 for decode, >1 for prefill chunk).
-    pub tokens: Vec<i32>,
+    /// Start of this row's new tokens in [`ScheduledBatch::tokens`].
+    pub tok_start: usize,
+    /// New tokens to process this step (1 for decode, >1 for prefill
+    /// chunk); the row's slice is `batch.tokens[tok_start..][..tok_len]`
+    /// (see [`ScheduledBatch::tokens_of`]).
+    pub tok_len: usize,
     /// Does the sampled token become visible output? (false for non-final
     /// prefill chunks — their sample is discarded.)
     pub samples: bool,
-    /// Provenance: true when `tokens` come from the branch's known stream
-    /// (prefill chunk — fresh, continued, or the tail after a prefix-cache
-    /// hit), false for a decode continuation feeding the last sample.
-    /// Shape alone cannot tell a one-token cache-hit tail from a decode.
+    /// Provenance: true when the tokens come from the branch's known
+    /// stream (prefill chunk — fresh, continued, or the tail after a
+    /// prefix-cache hit), false for a decode continuation feeding the
+    /// last sample. Shape alone cannot tell a one-token cache-hit tail
+    /// from a decode.
     pub prefill: bool,
 }
 
 #[derive(Debug, Default)]
 pub struct ScheduledBatch {
     pub seqs: Vec<ScheduledSeq>,
+    /// Flat new-token buffer, the concatenation of every row's slice in
+    /// `seqs` order — one reusable allocation instead of a `Vec` per row
+    /// (see the step-arena notes in `docs/ARCHITECTURE.md`).
+    pub tokens: Vec<i32>,
     pub preempted: Vec<RequestId>,
     /// Copy-on-write `(src, dst)` page pairs from `unshare_last`: the
     /// engine must copy each page's cache content device-side before
@@ -372,18 +388,33 @@ impl ScheduledBatch {
         self.seqs.is_empty()
     }
 
+    /// The new tokens of one scheduled row.
+    pub fn tokens_of(&self, s: &ScheduledSeq) -> &[i32] {
+        &self.tokens[s.tok_start..s.tok_start + s.tok_len]
+    }
+
+    /// Empty the batch for reuse, keeping every buffer's capacity (the
+    /// step arena's allocation-free steady state depends on this).
+    pub fn clear(&mut self) {
+        self.seqs.clear();
+        self.tokens.clear();
+        self.preempted.clear();
+        self.cow_copies.clear();
+    }
+
     pub fn num_decodes(&self) -> usize {
         // §6.1: "we count the number of decodes in the batch" to drive the
         // kernel-variant heuristic.
-        self.seqs.iter().filter(|s| s.tokens.len() == 1 && s.ctx_len > 0).count()
+        self.seqs.iter().filter(|s| s.tok_len == 1 && s.ctx_len > 0).count()
     }
 
     pub fn total_new_tokens(&self) -> usize {
-        self.seqs.iter().map(|s| s.tokens.len()).sum()
+        // every row's slice lives in `tokens`, disjointly and in order
+        self.tokens.len()
     }
 
     pub fn is_decode_only(&self) -> bool {
-        self.seqs.iter().all(|s| s.tokens.len() == 1 && s.ctx_len > 0)
+        self.seqs.iter().all(|s| s.tok_len == 1 && s.ctx_len > 0)
     }
 }
 
@@ -410,6 +441,12 @@ pub struct SchedulerStats {
     /// `max_prefill_tokens_per_step` (never by the shared token budget;
     /// budget exhaustion is not the cap's doing).
     pub prefill_chunk_deferrals: u64,
+    /// Block hashes served from per-sequence [`PrefixHasher`] memos
+    /// instead of recomputed during admission probes — the work the
+    /// incremental prefix hashing saves. Counted per probe (a blocked
+    /// admission retries its probe later and re-counts), so the value is
+    /// a deterministic function of the admission-attempt sequence.
+    pub prefix_hash_skips: u64,
     /// Uncached prefill tokens committed at admission, per tenant — the
     /// WFQ share counters: their long-run ratios track `tenant_weights`.
     pub wfq_admitted_tokens: BTreeMap<String, u64>,
@@ -458,6 +495,13 @@ pub struct Scheduler {
     pub(crate) running: Vec<SequenceGroup>,
     pub(crate) finished: Vec<SequenceGroup>,
     next_arrival: u64,
+    /// Admission-probe scratch: one branch's full stream (prompt +
+    /// output), reused across probes so steady state allocates nothing.
+    stream_scratch: Vec<i32>,
+    /// Admission-probe scratch: the branch's memoized block-chain
+    /// hashes, copied out of its [`PrefixHasher`] so the cache probes
+    /// can run while the branch stays borrowed elsewhere.
+    hash_scratch: Vec<u64>,
     pub stats: SchedulerStats,
 }
 
@@ -471,6 +515,8 @@ impl Scheduler {
             running: Vec::new(),
             finished: Vec::new(),
             next_arrival: 0,
+            stream_scratch: Vec::new(),
+            hash_scratch: Vec::new(),
             stats: SchedulerStats::default(),
         }
     }
@@ -575,20 +621,30 @@ impl Scheduler {
     /// pass runs again with the freed pages, so single-group OOM
     /// degrades to recompute instead of wedging the engine.
     pub fn schedule(&mut self, kv: &mut KvCacheManager) -> ScheduledBatch {
-        kv.advance_step();
         let mut batch = ScheduledBatch::default();
+        self.schedule_into(kv, &mut batch);
+        batch
+    }
+
+    /// [`Scheduler::schedule`] into a caller-owned batch: `batch` is
+    /// cleared (capacity kept) and filled in place — the engine's step
+    /// arena reuses one batch across steps so steady-state scheduling
+    /// allocates nothing.
+    pub fn schedule_into(&mut self, kv: &mut KvCacheManager,
+                         batch: &mut ScheduledBatch) {
+        kv.advance_step();
+        batch.clear();
         loop {
-            self.schedule_pass(kv, &mut batch);
+            self.schedule_pass(kv, batch);
             if !batch.is_empty() || !self.has_unfinished()
                 || !self.self_preempt_parked(kv)
             {
                 break;
             }
         }
-        self.note_decode_stalls(&batch);
+        self.note_decode_stalls(batch);
         self.stats.steps += 1;
         self.stats.scheduled_tokens += batch.total_new_tokens() as u64;
-        batch
     }
 
     /// One scheduling pass: continuations (phase 1) then admissions
@@ -780,24 +836,29 @@ impl Scheduler {
                 let g = &self.running[gi];
                 let s = &g.seqs[bi];
                 let branch = s.branch;
-                let tokens: Vec<i32> = if is_prefill {
-                    (s.computed..s.computed + n_new)
-                        .map(|k| g.token_at(branch, k))
-                        .collect()
+                let tok_start = batch.tokens.len();
+                if is_prefill {
+                    batch.tokens.extend(
+                        (s.computed..s.computed + n_new)
+                            .map(|k| g.token_at(branch, k)),
+                    );
                 } else {
-                    vec![*s.output.last().or(g.prompt.last()).unwrap()]
-                };
-                *budget -= tokens.len().min(*budget);
+                    batch
+                        .tokens
+                        .push(*s.output.last().or(g.prompt.last()).unwrap());
+                }
+                let tok_len = batch.tokens.len() - tok_start;
+                *budget -= tok_len.min(*budget);
                 if !is_decode {
-                    *prefill_budget =
-                        prefill_budget.saturating_sub(tokens.len());
+                    *prefill_budget = prefill_budget.saturating_sub(tok_len);
                 }
                 batch.seqs.push(ScheduledSeq {
                     id: g.id,
                     branch,
                     handle,
                     ctx_len: s.computed,
-                    tokens,
+                    tok_start,
+                    tok_len,
                     samples,
                     prefill: is_prefill,
                 });
@@ -1028,19 +1089,37 @@ impl Scheduler {
                     -> Admit {
         let from_queue = tenant.is_some();
         let tenant = tenant.map(str::to_string);
-        let g = if from_queue {
-            let t = tenant.as_deref().unwrap();
-            self.waiting[t].front().unwrap()
-        } else {
-            &self.running[gi]
+        // Stage the branch's stream and its memoized block hashes into
+        // the scheduler scratch buffers: the probes below then run over
+        // slices while the group borrow is long gone, and the only block
+        // hashing is over blocks that filled since the branch's last
+        // probe (everything older is served from the memo and counted in
+        // `prefix_hash_skips` — re-counted on every retried probe).
+        let branch = {
+            let g = if from_queue {
+                let t = tenant.as_deref().unwrap();
+                self.waiting.get_mut(t).unwrap().front_mut().unwrap()
+            } else {
+                &mut self.running[gi]
+            };
+            let s = &mut g.seqs[bi];
+            self.stream_scratch.clear();
+            self.stream_scratch.extend_from_slice(&g.prompt);
+            self.stream_scratch.extend_from_slice(&s.output);
+            self.hash_scratch.clear();
+            if kv.prefix_caching_enabled() {
+                let skips =
+                    s.hash_memo.update(&self.stream_scratch, kv.block_size());
+                self.stats.prefix_hash_skips += skips as u64;
+                self.hash_scratch.extend_from_slice(s.hash_memo.hashes());
+            }
+            s.branch
         };
-        let branch = g.seqs[bi].branch;
-        let stream = g.stream(branch);
-        let total = stream.len();
+        let total = self.stream_scratch.len();
 
         // Read-only probe first: a blocked admission must leave the cache
         // untouched (no LRU churn, no hit-metric inflation).
-        let cached = kv.lookup_prefix(&stream);
+        let cached = kv.lookup_prefix_hashed(&self.hash_scratch);
         let uncached = total - cached;
         if enforce_deficit {
             // DRR: the deficit must cover the whole uncached prefill —
@@ -1062,15 +1141,16 @@ impl Scheduler {
         // being reclaimable the moment they attach, so they are charged
         // against the headroom up front — otherwise a large parked prefix
         // could pass the check and then leave grow without pages.
-        let parked = kv.parked_prefix_pages(&stream);
+        let parked = kv.parked_prefix_pages_hashed(&self.hash_scratch);
         if kv.free_pages() < parked + need + self.cfg.watermark_blocks {
             return Admit::Blocked;
         }
         // Attach the cached full-block prefix by refcount bump; prefill
-        // then starts at the first uncached token. `lookup_prefix` /
-        // `attach_prefix` cap the hit so at least one token remains.
+        // then starts at the first uncached token. The hashed probes cap
+        // the hit so at least one token remains.
         let handle = kv.register();
-        let attached = kv.attach_prefix(handle, &stream);
+        let attached = kv.attach_prefix_hashed(handle, &self.hash_scratch,
+                                               total);
         debug_assert_eq!(attached, cached, "lookup/attach must agree");
         if kv.grow(handle, cached + chunk).is_err() {
             // Defensive: unreachable while the parked-page charge above is
@@ -1079,7 +1159,10 @@ impl Scheduler {
             kv.free(handle);
             return Admit::Blocked;
         }
-        let tokens: Vec<i32> = stream[cached..cached + chunk].to_vec();
+        let tok_start = batch.tokens.len();
+        batch
+            .tokens
+            .extend_from_slice(&self.stream_scratch[cached..cached + chunk]);
         *budget -= chunk;
         *prefill_budget = prefill_budget.saturating_sub(chunk);
         self.stats.cached_tokens += cached as u64;
@@ -1121,7 +1204,8 @@ impl Scheduler {
             branch,
             handle,
             ctx_len: cached,
-            tokens,
+            tok_start,
+            tok_len: chunk,
             samples: cached + chunk == total,
             prefill: true,
         });
@@ -1242,12 +1326,12 @@ mod tests {
         s.add_request(1, vec![1, 2, 3, 4, 5], 3, 0);
         let b = s.schedule(&mut kv);
         assert_eq!(b.seqs.len(), 1);
-        assert_eq!(b.seqs[0].tokens, vec![1, 2, 3, 4, 5]);
+        assert_eq!(b.tokens_of(&b.seqs[0]), &[1, 2, 3, 4, 5]);
         assert_eq!(b.num_decodes(), 0);
         step_all(&mut s, &mut kv, &b);
 
         let b = s.schedule(&mut kv);
-        assert_eq!(b.seqs[0].tokens.len(), 1);
+        assert_eq!(b.seqs[0].tok_len, 1);
         assert_eq!(b.seqs[0].ctx_len, 5);
         assert!(b.is_decode_only());
         step_all(&mut s, &mut kv, &b);
@@ -1272,10 +1356,10 @@ mod tests {
         s.add_request(2, vec![9; 8], 2, 0);
         let b = s.schedule(&mut kv);
         assert_eq!(b.seqs[0].id, 1, "decode first");
-        assert_eq!(b.seqs[0].tokens.len(), 1);
+        assert_eq!(b.seqs[0].tok_len, 1);
         // budget 8: decode took 1, prefill gets a 7-token chunk
         assert_eq!(b.seqs[1].id, 2);
-        assert_eq!(b.seqs[1].tokens.len(), 7);
+        assert_eq!(b.seqs[1].tok_len, 7);
         assert!(!b.seqs[1].samples, "chunked prefill must not sample yet");
     }
 
@@ -1289,7 +1373,7 @@ mod tests {
             if b.is_empty() {
                 break;
             }
-            seen.extend(b.seqs[0].tokens.clone());
+            seen.extend_from_slice(b.tokens_of(&b.seqs[0]));
             step_all(&mut s, &mut kv, &b);
         }
         // prompt fed exactly once across chunks, then one decode token
@@ -1372,7 +1456,7 @@ mod tests {
         let b = s.schedule(&mut kv);
         assert_eq!(b.seqs.len(), 1);
         assert_eq!(b.seqs[0].ctx_len, 32, "cached prefix becomes context");
-        assert_eq!(b.seqs[0].tokens.len(), 16, "only the tail is prefilled");
+        assert_eq!(b.seqs[0].tok_len, 16, "only the tail is prefilled");
         assert!(b.seqs[0].samples, "single remaining chunk samples");
         assert_eq!(s.stats.cached_tokens, 32);
         let fin = s.take_finished();
@@ -1404,7 +1488,7 @@ mod tests {
         s.add_group(1, (0..48).collect(), sampled(4), 4, 0);
         let b = s.schedule(&mut kv);
         assert_eq!(b.seqs.len(), 1, "prefill runs once per group");
-        assert_eq!(b.seqs[0].tokens.len(), 48);
+        assert_eq!(b.seqs[0].tok_len, 48);
         let handle = b.seqs[0].handle;
         step_all(&mut s, &mut kv, &b);
 
@@ -1688,7 +1772,7 @@ mod tests {
         s.add_request(1, vec![7; 12], 2, 0);
         for _ in 0..3 {
             let b = s.schedule(&mut kv);
-            assert_eq!(b.seqs[0].tokens.len(), 4, "admission + chunks capped");
+            assert_eq!(b.seqs[0].tok_len, 4, "admission + chunks capped");
             assert!(b.seqs[0].prefill);
             step_all(&mut s, &mut kv, &b);
         }
@@ -1751,7 +1835,7 @@ mod tests {
         for _ in 0..8 {
             let b = s.schedule(&mut kv);
             trace.push(b.seqs.iter()
-                       .map(|q| (q.id, q.branch, q.tokens.len()))
+                       .map(|q| (q.id, q.branch, q.tok_len))
                        .collect());
             step_all(&mut s, &mut kv, &b);
         }

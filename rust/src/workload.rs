@@ -140,6 +140,41 @@ impl Scenario {
         }
     }
 
+    /// Beam-decode batch: `groups` beam groups of `width` live hypotheses
+    /// each, all decoding one token. Hypotheses of a group sit at the same
+    /// depth (they expand in lockstep), while depths vary across groups —
+    /// the ragged row shape beam search feeds the kernels per step.
+    pub fn beam(groups: usize, width: usize, seq_len: usize,
+                rng: &mut Rng) -> Self {
+        let mut seqs: Vec<SeqShape> = Vec::with_capacity(groups * width);
+        for _ in 0..groups {
+            let len = rng.range(seq_len / 2, seq_len).max(1);
+            for _ in 0..width {
+                seqs.push((len, 1));
+            }
+        }
+        Scenario { name: format!("beam-g{groups}-w{width}-l{seq_len}"), seqs }
+    }
+
+    /// Chunked-prefill batch under the decode-first policy: `decodes`
+    /// decode rows plus one long prompt advancing `chunk` tokens this
+    /// step, its context being the chunks already computed. This is the
+    /// mixed shape the DecodeFirst scheduler emits while a long prompt
+    /// drains through the per-step prefill cap.
+    pub fn chunked_prefill(decodes: usize, seq_len: usize, prompt_len: usize,
+                           chunk: usize, rng: &mut Rng) -> Self {
+        let mut seqs: Vec<SeqShape> = (0..decodes)
+            .map(|_| (rng.range(seq_len / 2, seq_len).max(1), 1))
+            .collect();
+        let chunk = chunk.clamp(1, prompt_len.max(1));
+        let ctx = rng.below((prompt_len / chunk).max(1)) * chunk;
+        seqs.push((ctx, chunk.min(prompt_len - ctx)));
+        Scenario {
+            name: format!("chunked-d{decodes}-p{prompt_len}-c{chunk}"),
+            seqs,
+        }
+    }
+
     pub fn total_query_tokens(&self) -> usize {
         self.seqs.iter().map(|s| s.1).sum()
     }
@@ -471,6 +506,37 @@ mod tests {
         assert!((s.decode_share() - 0.5).abs() < 0.26);
         let p = Scenario::mixed(8, 128, 0.0, &mut rng);
         assert_eq!(p.decode_share(), 0.0);
+    }
+
+    #[test]
+    fn beam_scenario_is_lockstep_decode() {
+        let mut rng = Rng::new(4);
+        let s = Scenario::beam(3, 4, 256, &mut rng);
+        assert_eq!(s.seqs.len(), 12);
+        assert_eq!(s.decode_share(), 1.0, "every hypothesis row decodes");
+        for g in 0..3 {
+            let depth = s.seqs[g * 4].0;
+            assert!((128..=256).contains(&depth));
+            assert!(s.seqs[g * 4..(g + 1) * 4].iter()
+                        .all(|&(c, q)| c == depth && q == 1),
+                    "group hypotheses sit at one depth");
+        }
+        assert_eq!(s.name, "beam-g3-w4-l256");
+    }
+
+    #[test]
+    fn chunked_prefill_scenario_mixes_decodes_and_one_chunk() {
+        let mut rng = Rng::new(6);
+        let s = Scenario::chunked_prefill(4, 128, 256, 64, &mut rng);
+        assert_eq!(s.seqs.len(), 5);
+        assert!(s.seqs[..4].iter().all(|&(c, q)| q == 1 && c >= 64),
+                "decode rows come first");
+        let (ctx, q) = s.seqs[4];
+        assert_eq!(ctx % 64, 0, "context is whole computed chunks");
+        assert!(ctx < 256);
+        assert_eq!(q, 64.min(256 - ctx));
+        assert!(s.decode_share() < 1.0, "the chunk row is not a decode");
+        assert_eq!(s.name, "chunked-d4-p256-c64");
     }
 
     #[test]

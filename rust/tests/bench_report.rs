@@ -90,6 +90,40 @@ fn matrix_covers_scenarios_and_their_counters() {
 }
 
 #[test]
+fn arena_and_phase_instrumentation_lands_in_every_scenario() {
+    let report = run_matrix();
+    for s in &report.scenarios {
+        let fp = &s.fingerprint.counters;
+        for key in ["arena_reuses", "arena_grows", "prefix_hash_skips"] {
+            assert!(fp.contains_key(key), "{} lacks counter {key}", s.name);
+        }
+        let steps = fp["engine_steps"];
+        assert_eq!(fp["arena_reuses"] + fp["arena_grows"], steps,
+                   "{}: every dispatched step reuses or grows the arena",
+                   s.name);
+        assert!(fp["arena_reuses"] > 0,
+                "{}: the drain tail must reuse the arena", s.name);
+        // the per-phase profiler covers exactly the dispatched steps
+        for (phase, snap) in s.phases.rows() {
+            assert_eq!(snap.count, steps,
+                       "{}: phase '{phase}' histogram is not step-aligned",
+                       s.name);
+        }
+    }
+    let get = |scn: &str, k: &str| {
+        report.scenario(scn).unwrap().fingerprint.counters[k]
+    };
+    // steady-state decode must be dominated by arena reuse, not growth
+    assert!(get("decode_heavy", "arena_reuses")
+            > get("decode_heavy", "arena_grows"),
+            "decode_heavy must settle into arena reuse");
+    // the replay waves oversubscribe the tiny pool, so queued admissions
+    // re-probe: their memoized block hashes must be served, not re-hashed
+    assert!(get("prefix_replay", "prefix_hash_skips") > 0,
+            "repeat admission probes must hit the per-sequence hash memo");
+}
+
+#[test]
 fn fingerprints_are_deterministic_across_runs() {
     let a = run_matrix();
     let b = run_matrix();
