@@ -596,6 +596,13 @@ class Scheduler:
     def has_unfinished(self):
         return any(self.waiting.values()) or bool(self.running)
 
+    def live_rows(self):
+        """Scheduler::live_rows — waiting widths + running reservations,
+        the load half of the shard status the router places by."""
+        waiting = sum(g.sampling.width()
+                      for q in self.waiting.values() for g in q)
+        return waiting + sum(g.reserved_rows() for g in self.running)
+
     def take_finished(self):
         out = self.finished
         self.finished = []
@@ -1137,7 +1144,8 @@ class OutputProcessor:
 
 def fresh_metrics():
     return dict(steps=0, generated_tokens=0, prompt_tokens=0, preemptions=0,
-                self_preemptions=0, groups_finished=0, pages_allocated=0,
+                self_preemptions=0, groups_finished=0, cancelled_groups=0,
+                pages_allocated=0,
                 forked_pages=0, cow_copies=0, prefix_hit_tokens=0,
                 prefix_lookup_tokens=0, prefix_evictions=0, stop_finishes=0,
                 beam_forks=0, beam_prunes=0, beam_pruned_pages=0,
@@ -1177,6 +1185,21 @@ class Engine:
         g = Group(gid, prompt, sampling, min(max_new, limit), 0, priority, tenant)
         self.sched.add_group_with(g)
         return gid
+
+    def add_group_routed(self, prompt, sampling, max_new, memo,
+                         priority=INTERACTIVE, tenant="default"):
+        """Engine::add_group_routed — the sharded tier's entry point: the
+        router's block-hash memo seeds the root branch, so admission
+        probes reuse it (each seeded block counts in prefix_hash_skips)."""
+        gid = self.add_group(prompt, sampling, max_new, priority, tenant)
+        for g in self.sched.waiting[tenant]:
+            if g.id == gid:
+                g.seqs[0].hash_memo = list(memo)
+                return gid
+        raise KeyError(gid)
+
+    def live_rows(self):
+        return self.sched.live_rows()
 
     def step(self):
         batch = self.sched.schedule(self.kv)
@@ -1348,12 +1371,78 @@ def multi_tenant_storm_requests(rounds, rng):
 
 
 # ---------------------------------------------------------------------------
+# Prefix-affinity router (router.rs)
+# ---------------------------------------------------------------------------
+
+AFFINITY = "affinity"
+ROUND_ROBIN = "round-robin"
+
+
+class Router:
+    """Router — placement is a pure function of the admission sequence.
+
+    `place` hashes the prompt's leading full blocks once (the memo is
+    returned for the engine to reuse), derives the affinity key, and
+    scores shards with the deterministic tuple (live_rows, -free_pages,
+    placements, index)."""
+
+    def __init__(self, shards, policy, block_size,
+                 affinity_blocks=4, affinity_overflow_rows=4):
+        assert shards >= 1 and block_size >= 1
+        self.shards = shards
+        self.policy = policy
+        self.bs = block_size
+        self.affinity_blocks = affinity_blocks
+        self.overflow = affinity_overflow_rows
+        self.owner = {}  # affinity key -> shard index
+        self.placed = [0] * shards
+        self.seq = 0
+        self.affinity_hits = 0
+        self.load_routed = 0
+        self.imbalance_max = 0
+
+    def place(self, prompt, statuses):
+        """statuses[i] = (live_rows, free_pages) of shard i. Returns
+        (shard, memo)."""
+        assert len(statuses) == self.shards
+        memo = []
+        hasher_update(memo, prompt, self.bs)
+        n = min(self.affinity_blocks, len(memo))
+        key = memo[n - 1] if n else None
+        if self.policy == ROUND_ROBIN:
+            shard = self.seq % self.shards
+        else:
+            shard = self.place_affinity(key, statuses)
+        self.placed[shard] += 1
+        self.imbalance_max = max(self.imbalance_max,
+                                 max(self.placed) - min(self.placed))
+        self.seq += 1
+        return shard, memo
+
+    def place_affinity(self, key, statuses):
+        if key is not None and key in self.owner:
+            owner = self.owner[key]
+            min_rows = min(s[0] for s in statuses)
+            if statuses[owner][0] <= min_rows + self.overflow:
+                self.affinity_hits += 1
+                return owner
+        shard = min(range(self.shards),
+                    key=lambda i: (statuses[i][0], -statuses[i][1],
+                                   self.placed[i], i))
+        if key is not None:
+            self.owner[key] = shard
+        self.load_routed += 1
+        return shard
+
+
+# ---------------------------------------------------------------------------
 # Bench harness (bench.rs)
 # ---------------------------------------------------------------------------
 
 SCENARIOS = ["prefill_heavy", "decode_heavy", "mixed_poisson", "prefix_replay",
              "parallel_sampling", "beam_search", "beam_early_stop",
-             "preemption_pressure", "long_context_stall", "multi_tenant_storm"]
+             "preemption_pressure", "long_context_stall", "multi_tenant_storm",
+             "sharded_affinity", "server_replay"]
 
 STEPS_PER_S = 25.0
 SCHEMA_VERSION = 1
@@ -1393,7 +1482,95 @@ def run_arrivals(engine, arrivals):
             step_no += 1
 
 
+def merge_fingerprints(fps):
+    """Fingerprint::merge — sum counters key-wise across shards."""
+    out = OrderedDict()
+    for fp in fps:
+        for k, v in fp.items():
+            out[k] = out.get(k, 0) + v
+    return out
+
+
+def sharded_affinity_waves(families, shared_prefix, tail, waves, rng):
+    """workload.rs ShardedAffinity::waves — family prefixes drawn once up
+    front, then one request per family per wave, in family order."""
+    prefixes = [rng.tokens(shared_prefix) for _ in range(families)]
+    out = []
+    for _ in range(waves):
+        out.append([prefix + rng.tokens(max(tail, 1))
+                    for prefix in prefixes])
+    return out
+
+
+def run_sharded_affinity():
+    """bench.rs run_sharded_affinity — a two-shard tier driven through
+    the router, run once per policy over the byte-identical admission
+    sequence; gates on the merged fingerprint plus the rr_* proof
+    counters (affinity must strictly beat round-robin)."""
+    shards, waves, families = 2, 4, 3
+
+    def run_tier(policy):
+        router = Router(shards, policy, BLOCK_SIZE)
+        engines = [Engine(bench_config("sharded_affinity"))
+                   for _ in range(shards)]
+        for wave in sharded_affinity_waves(families, 48, 6, waves, Rng(53)):
+            for prompt in wave:
+                statuses = [(e.live_rows(), e.kv.free_pages())
+                            for e in engines]
+                shard, memo = router.place(prompt, statuses)
+                engines[shard].add_group_routed(
+                    prompt, SamplingParams.greedy(), 4, memo)
+            # each wave drains shard-by-shard, like the Rust scenario
+            for e in engines:
+                e.run_to_completion()
+        return engines, router
+
+    engines, router = run_tier(AFFINITY)
+    rr_engines, _ = run_tier(ROUND_ROBIN)
+    fp = merge_fingerprints([fingerprint(e.m) for e in engines])
+    rr = merge_fingerprints([fingerprint(e.m) for e in rr_engines])
+    assert fp["prefix_hit_tokens"] > rr["prefix_hit_tokens"], \
+        "affinity must beat round-robin on prefix hits"
+    assert fp["pages_allocated"] < rr["pages_allocated"], \
+        "affinity must beat round-robin on pages"
+    fp["router_affinity_hits"] = router.affinity_hits
+    fp["router_load_routed"] = router.load_routed
+    fp["shard_imbalance_max"] = router.imbalance_max
+    fp["rr_prefix_hit_tokens"] = rr["prefix_hit_tokens"]
+    fp["rr_pages_allocated"] = rr["pages_allocated"]
+    return fp, waves * families
+
+
+def run_server_replay():
+    """bench.rs run_server_replay — the lockstep TCP replay reduces to:
+    one single-shard tier, each request placed through the router (memo
+    seeded into the engine) and drained to idle by the client's `run`
+    command before the next submit. The fingerprint is the server's
+    merged `metrics` snapshot: engine counters + router counters."""
+    n_requests = 6
+    engine = Engine(bench_config("server_replay"))
+    router = Router(1, AFFINITY, BLOCK_SIZE)
+    rng = Rng(41)
+    for _ in range(n_requests):
+        ln = rng.range(8, 32)
+        prompt = rng.tokens(ln)
+        shard, memo = router.place(
+            prompt, [(engine.live_rows(), engine.kv.free_pages())])
+        assert shard == 0
+        engine.add_group_routed(prompt, SamplingParams.greedy(), 12, memo)
+        engine.run_to_completion()
+    fp = fingerprint(engine.m)
+    fp["router_affinity_hits"] = router.affinity_hits
+    fp["router_load_routed"] = router.load_routed
+    fp["shard_imbalance_max"] = router.imbalance_max
+    return fp, n_requests
+
+
 def run_scenario(name, policy=DECODE_FIRST):
+    if name == "sharded_affinity":
+        return run_sharded_affinity()
+    if name == "server_replay":
+        return run_server_replay()
     engine = Engine(bench_config(name, policy))
     engine.warmup()
     if name == "prefill_heavy":
@@ -1444,7 +1621,7 @@ def run_scenario(name, policy=DECODE_FIRST):
         requests = 12
     else:
         raise ValueError(name)
-    return engine, requests
+    return fingerprint(engine.m), requests
 
 
 def fingerprint(m):
@@ -1458,7 +1635,7 @@ def fingerprint(m):
               "beam_finished_hyps", "beam_early_terminations", "token_events",
               "decode_stall_steps", "max_decode_gap_steps",
               "prefill_chunk_deferrals", "arena_reuses", "arena_grows",
-              "prefix_hash_skips"):
+              "prefix_hash_skips", "cancelled_groups"):
         fp[k] = m[k]
     for tenant in sorted(m["wfq_admitted_tokens"]):
         fp["wfq_admitted_tokens:%s" % tenant] = m["wfq_admitted_tokens"][tenant]
@@ -1479,12 +1656,12 @@ def zero_phases():
                                   "dispatch_us", "output_us")])
 
 
-def scenario_result(name, engine, requests):
+def scenario_result(name, fp, requests):
     return OrderedDict([
         ("name", name),
         ("deterministic", True),
         ("requests", requests),
-        ("fingerprint", fingerprint(engine.m)),
+        ("fingerprint", fp),
         ("phases", zero_phases()),
         ("timings", OrderedDict([
             ("wall_s", 0.0),
@@ -1504,11 +1681,11 @@ def generate(out_path):
         ("scenarios", []),
     ])
     for name in SCENARIOS:
-        engine, requests = run_scenario(name)
-        report["scenarios"].append(scenario_result(name, engine, requests))
+        fp, requests = run_scenario(name)
+        report["scenarios"].append(scenario_result(name, fp, requests))
         print("  %-20s steps=%-4d gen=%-4d prompt=%-4d" %
-              (name, engine.m["steps"], engine.m["generated_tokens"],
-               engine.m["prompt_tokens"]))
+              (name, fp["engine_steps"], fp["generated_tokens"],
+               fp["prompt_tokens"]))
     with open(out_path, "w") as f:
         json.dump(report, f, indent=1)
         f.write("\n")
@@ -1524,8 +1701,7 @@ def validate(baseline_path, policy):
     failures = 0
     for sc in base["scenarios"]:
         name = sc["name"]
-        engine, requests = run_scenario(name, policy=policy)
-        got = fingerprint(engine.m)
+        got, requests = run_scenario(name, policy=policy)
         want = sc["fingerprint"]
         diffs = []
         for k, v in want.items():

@@ -98,6 +98,7 @@ impl Fingerprint {
         put("arena_reuses", m.arena_reuses);
         put("arena_grows", m.arena_grows);
         put("prefix_hash_skips", m.prefix_hash_skips);
+        put("cancelled_groups", m.cancelled_groups);
         // one counter per tenant the WFQ admission path credited, so the
         // fair-share split itself is part of the gated fingerprint (read
         // through the live accessor — the hot loop no longer mirrors the
@@ -106,6 +107,17 @@ impl Fingerprint {
             c.insert(format!("wfq_admitted_tokens:{tenant}"), *n);
         }
         Fingerprint { counters: c }
+    }
+
+    /// Merge another shard's fingerprint into this one by summing
+    /// counters key-wise. The sharded scenarios gate on the *merged*
+    /// fingerprint: per-shard work is deterministic, so the sum is too,
+    /// and cross-shard invariants (e.g. `arena_reuses + arena_grows ==
+    /// engine_steps`) survive because both sides sum.
+    pub fn merge(&mut self, other: &Fingerprint) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
     }
 
     fn to_json(&self) -> Value {
@@ -152,19 +164,23 @@ pub fn gate_of(counter: &str) -> Gate {
     }
     match counter {
         "generated_tokens" | "groups_finished" | "stop_finishes"
-        | "beam_finished_hyps" => Gate::Exact,
+        | "beam_finished_hyps" | "cancelled_groups" => Gate::Exact,
         "engine_steps" | "prompt_tokens" | "pages_allocated" | "cow_copies"
         | "preemptions" | "self_preemptions" | "prefix_evictions"
         | "beam_forks" | "beam_prunes" | "beam_pruned_pages"
         | "decode_stall_steps" | "max_decode_gap_steps"
-        | "arena_grows" => Gate::UpIsRegression,
-        "prefix_hit_tokens" => Gate::DownIsRegression,
+        | "arena_grows" | "shard_imbalance_max" => Gate::UpIsRegression,
+        "prefix_hit_tokens" | "router_affinity_hits" => Gate::DownIsRegression,
         // `prefill_chunk_deferrals` lands here on purpose: deferring a
         // chunk is the policy *working*, not a cost. `arena_reuses` and
         // `prefix_hash_skips` are informational too: both are coupled to
         // step/attempt counts with no monotone goodness direction, and
         // their determinism is enforced by the strict run-twice
-        // self-compare rather than a baseline gate.
+        // self-compare rather than a baseline gate. Same for
+        // `router_load_routed` (the complement of affinity hits) and the
+        // `rr_*` proof counters (the round-robin comparison run's
+        // numbers, recorded so the affinity win stays visible in the
+        // baseline).
         _ => Gate::Informational,
     }
 }
@@ -271,9 +287,10 @@ impl PhaseProfile {
 #[derive(Debug, Clone, PartialEq)]
 pub struct ScenarioResult {
     pub name: String,
-    /// Whether the fingerprint is gate-worthy. The in-process scenarios
-    /// all are; the optional TCP-server replay is not (client/server
-    /// thread interleaving decides batch composition).
+    /// Whether the fingerprint is gate-worthy. Every scenario is today:
+    /// the in-process matrix by construction, and the TCP
+    /// `server_replay` since lockstep mode made the wire path a pure
+    /// function of the client's command sequence.
     pub deterministic: bool,
     /// Requests the scenario issued.
     pub requests: usize,
@@ -403,7 +420,7 @@ pub fn default_report_path(label: &str) -> PathBuf {
 // ------------------------------------------------------------- scenarios
 
 /// The in-process scenario matrix, in run order.
-pub const SCENARIOS: [&str; 10] = [
+pub const SCENARIOS: [&str; 11] = [
     "prefill_heavy",
     "decode_heavy",
     "mixed_poisson",
@@ -414,6 +431,7 @@ pub const SCENARIOS: [&str; 10] = [
     "preemption_pressure",
     "long_context_stall",
     "multi_tenant_storm",
+    "sharded_affinity",
 ];
 
 const VOCAB: usize = 2048;
@@ -498,6 +516,11 @@ fn run_arrivals(engine: &mut Engine,
 /// Build and run one named scenario; returns its fingerprint + timings.
 pub fn run_scenario(rt: &Rc<Runtime>, model: &str, name: &str)
     -> Result<ScenarioResult> {
+    if name == "sharded_affinity" {
+        // multi-engine: drives its own two-shard tier instead of the
+        // single engine below
+        return run_sharded_affinity(rt, model);
+    }
     let mut engine = Engine::new(rt.clone(), bench_config(model, name))?;
     engine.warmup()?;
     let t0 = Instant::now();
@@ -695,14 +718,142 @@ pub fn run_scenario(rt: &Rc<Runtime>, model: &str, name: &str)
     })
 }
 
-/// Optional TCP-server replay: the same engine behind the JSON-lines
-/// front-end, one sequential client. Timing-only — thread interleaving
-/// decides batch composition, so the fingerprint is not gate-worthy and
-/// the scenario is marked non-deterministic.
+/// The sharded data-parallel tier, in process: two engines (the shards)
+/// behind a [`Router`](crate::router::Router), driven over the
+/// [`ShardedAffinity`] workload in waves — placement reads live shard
+/// load exactly like the server's dispatcher does. The identical
+/// request sequence runs twice, once per routing policy, and the
+/// scenario gates on the *merged* affinity fingerprint (plus the router
+/// counters); the round-robin run's cache counters ride along as `rr_*`
+/// proof counters, and the scenario itself fails unless affinity
+/// strictly beats round-robin on prefix-hit tokens and pages allocated.
+fn run_sharded_affinity(rt: &Rc<Runtime>, model: &str)
+    -> Result<ScenarioResult> {
+    use crate::config::{RouterConfig, RouterPolicy};
+    use crate::router::{Router, ShardStatus};
+    use crate::workload::ShardedAffinity;
+
+    const SHARDS: usize = 2;
+    let load = ShardedAffinity {
+        families: 3,
+        shared_prefix: 48,
+        tail: 6,
+        max_new_tokens: 4,
+        vocab: VOCAB,
+    };
+    let waves = 4usize;
+    let t0 = Instant::now();
+    let run_tier = |policy: RouterPolicy| -> Result<(Vec<Engine>, Router)> {
+        let block_size = bench_config(model, "sharded_affinity").block_size;
+        let mut router = Router::new(
+            RouterConfig { shards: SHARDS, policy,
+                           ..RouterConfig::default() },
+            block_size,
+        );
+        let mut engines = Vec::with_capacity(SHARDS);
+        for _ in 0..SHARDS {
+            let mut e =
+                Engine::new(rt.clone(),
+                            bench_config(model, "sharded_affinity"))?;
+            e.warmup()?;
+            engines.push(e);
+        }
+        // both policies see the byte-identical admission sequence
+        for wave in load.waves(waves, &mut Rng::new(53)) {
+            for r in &wave {
+                let statuses: Vec<ShardStatus> = engines
+                    .iter()
+                    .map(|e| ShardStatus {
+                        live_rows: e.live_rows(),
+                        free_pages: e.kv().free_pages(),
+                    })
+                    .collect();
+                let p = router.place(&r.prompt, &statuses);
+                engines[p.shard].add_group_routed(
+                    r.prompt.clone(), r.max_new_tokens,
+                    r.sampling.clone(), r.meta.clone(), p.memo)?;
+            }
+            // each wave drains shard-by-shard in shard order, so the
+            // load snapshots the next wave places by are themselves a
+            // pure function of the admission sequence
+            for e in &mut engines {
+                e.run_to_completion()?;
+            }
+        }
+        Ok((engines, router))
+    };
+
+    let (mut engines, router) = run_tier(RouterPolicy::Affinity)?;
+    let (rr_engines, _) = run_tier(RouterPolicy::RoundRobin)?;
+
+    let mut fp = Fingerprint::from_engine(&engines[0]);
+    for e in &engines[1..] {
+        fp.merge(&Fingerprint::from_engine(e));
+    }
+    let mut rr = Fingerprint::default();
+    for e in &rr_engines {
+        rr.merge(&Fingerprint::from_engine(e));
+    }
+    let hit = fp.counters["prefix_hit_tokens"];
+    let rr_hit = rr.counters["prefix_hit_tokens"];
+    let pages = fp.counters["pages_allocated"];
+    let rr_pages = rr.counters["pages_allocated"];
+    if hit <= rr_hit || pages >= rr_pages {
+        bail!("affinity routing must strictly beat round-robin: \
+               prefix_hit_tokens {hit} vs rr {rr_hit}, \
+               pages_allocated {pages} vs rr {rr_pages}");
+    }
+    let c = router.counters();
+    fp.counters.insert("router_affinity_hits".into(), c.affinity_hits);
+    fp.counters.insert("router_load_routed".into(), c.load_routed);
+    fp.counters.insert("shard_imbalance_max".into(), c.imbalance_max);
+    fp.counters.insert("rr_prefix_hit_tokens".into(), rr_hit);
+    fp.counters.insert("rr_pages_allocated".into(), rr_pages);
+
+    // merge the advisory timing + phase histograms shard-wise so the
+    // report's phase counts still sum to the merged `engine_steps`
+    let e1 = engines.pop().expect("two shards");
+    let mut e0 = engines.pop().expect("two shards");
+    let m1 = &e1.metrics;
+    let m = &mut e0.metrics;
+    m.ttft_ms.absorb(&m1.ttft_ms);
+    m.inter_token_ms.absorb(&m1.inter_token_ms);
+    m.group_latency_ms.absorb(&m1.group_latency_ms);
+    m.phase_schedule_us.absorb(&m1.phase_schedule_us);
+    m.phase_build_us.absorb(&m1.phase_build_us);
+    m.phase_stage_us.absorb(&m1.phase_stage_us);
+    m.phase_dispatch_us.absorb(&m1.phase_dispatch_us);
+    m.phase_output_us.absorb(&m1.phase_output_us);
+    let wall_s = t0.elapsed().as_secs_f64();
+    let generated = fp.counters["generated_tokens"];
+    Ok(ScenarioResult {
+        name: "sharded_affinity".to_string(),
+        deterministic: true,
+        requests: waves * load.families,
+        fingerprint: fp,
+        timings: Timings {
+            wall_s,
+            throughput_tok_s: generated as f64 / wall_s.max(1e-9),
+            ttft_ms: e0.metrics.ttft_ms.snapshot(),
+            inter_token_ms: e0.metrics.inter_token_ms.snapshot(),
+            request_latency_ms: e0.metrics.group_latency_ms.snapshot(),
+        },
+        phases: PhaseProfile::from_metrics(&e0.metrics),
+    })
+}
+
+/// TCP-server replay, in lockstep: the serving tier runs with
+/// `lockstep: true`, so engines step only on the client's `run`
+/// commands and the wire path becomes a deterministic function of the
+/// replayed command sequence. The fingerprint is the server's own
+/// merged counter snapshot (the `metrics` command) taken after the last
+/// replayed request — gate-worthy, so the scenario is marked
+/// deterministic and CI's strict self-compare now covers the full TCP
+/// path.
 pub fn run_server_replay(artifacts_dir: PathBuf, model: &str)
     -> Result<ScenarioResult> {
     use crate::metrics::Histogram;
-    use crate::server::{serve, Client};
+    use crate::server::{serve_with, Client, ServeOpts};
     use std::net::TcpListener;
 
     let probe = TcpListener::bind("127.0.0.1:0")?;
@@ -712,7 +863,13 @@ pub fn run_server_replay(artifacts_dir: PathBuf, model: &str)
     let ecfg = bench_config(model, "server_replay");
     let bound = addr.clone();
     let server = std::thread::spawn(move || {
-        serve(artifacts_dir, ecfg, &bound, Some(n_requests))
+        serve_with(artifacts_dir, ecfg, ServeOpts {
+            addr: bound,
+            // +1 for the post-snapshot release request below
+            max_requests: Some(n_requests + 1),
+            lockstep: true,
+            ..ServeOpts::default()
+        })
     });
     let connected = (0..100).find_map(|_| {
         std::thread::sleep(std::time::Duration::from_millis(50));
@@ -733,18 +890,29 @@ pub fn run_server_replay(artifacts_dir: PathBuf, model: &str)
     let t0 = Instant::now();
     for _ in 0..n_requests {
         let prompt = rng.tokens(rng.range(8, 32), VOCAB);
-        let done = client.generate(&prompt, 12)?;
+        client.submit(&prompt, 12)?;
+        client.send_cmd("run")?;
+        let done = client.wait_done()?;
+        client.wait_stepped()?;
         ttft.record(done.ttft_ms);
         latency.record(done.total_ms);
         tokens += done.tokens.len() as u64;
     }
     let wall_s = t0.elapsed().as_secs_f64();
+    // the counter snapshot covers exactly the n_requests replayed above
+    let m = client.fetch_metrics()?;
+    let fingerprint = Fingerprint { counters: m.counters };
+    // a throwaway request releases the server's max_requests latch
+    // without entering the fingerprint
+    client.submit(&[1, 2, 3], 1)?;
+    client.send_cmd("run")?;
+    client.wait_done()?;
     server.join().unwrap()?;
     Ok(ScenarioResult {
         name: "server_replay".to_string(),
-        deterministic: false,
+        deterministic: true,
         requests: n_requests,
-        fingerprint: Fingerprint::default(),
+        fingerprint,
         timings: Timings {
             wall_s,
             throughput_tok_s: tokens as f64 / wall_s.max(1e-9),
@@ -758,7 +926,7 @@ pub fn run_server_replay(artifacts_dir: PathBuf, model: &str)
 
 /// Run the scenario matrix (all of [`SCENARIOS`], or the `only` subset)
 /// and assemble a report. `wire` appends the TCP `server_replay`
-/// scenario.
+/// scenario (lockstep, deterministic — CI runs with it on).
 pub fn run_matrix(artifacts_dir: PathBuf, model: &str, only: Option<&[String]>,
                   wire: bool) -> Result<BenchReport> {
     let rt = Rc::new(Runtime::load_dir(artifacts_dir.clone())?);
@@ -773,7 +941,7 @@ pub fn run_matrix(artifacts_dir: PathBuf, model: &str, only: Option<&[String]>,
         scenarios.push(run_scenario(&rt, model, name)?);
     }
     if wire {
-        eprintln!("[bench] running scenario 'server_replay' (TCP)");
+        eprintln!("[bench] running scenario 'server_replay' (TCP, lockstep)");
         scenarios.push(run_server_replay(artifacts_dir, model)?);
     }
     if scenarios.is_empty() {

@@ -561,6 +561,71 @@ impl Default for EngineConfig {
     }
 }
 
+/// Placement policy of the sharded serving tier's router
+/// (see `docs/SHARDING.md`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouterPolicy {
+    /// Prefix-cache-affinity placement: the chain hash of a prompt's
+    /// leading full blocks names an *owner* shard; repeat prefixes are
+    /// routed back to the shard that holds them hot, falling back to
+    /// load scoring for cold prefixes or an overloaded owner.
+    Affinity,
+    /// Strict round-robin by admission index — the comparison baseline
+    /// the `sharded_affinity` bench scenario measures affinity against.
+    RoundRobin,
+}
+
+impl RouterPolicy {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "affinity" => RouterPolicy::Affinity,
+            "round-robin" => RouterPolicy::RoundRobin,
+            other => bail!(
+                "unknown router policy '{other}' \
+                 (expected 'affinity' or 'round-robin')"
+            ),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RouterPolicy::Affinity => "affinity",
+            RouterPolicy::RoundRobin => "round-robin",
+        }
+    }
+}
+
+/// Knobs of the sharded serving tier (`--shards N` and friends). The
+/// default — one shard, affinity policy — reproduces the single-engine
+/// server exactly: with one shard every placement is forced, so the
+/// router degenerates to a pass-through.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// Number of independent engine shards behind the router.
+    pub shards: usize,
+    /// Placement policy; `Affinity` is the default.
+    pub policy: RouterPolicy,
+    /// How many leading full blocks of the prompt form the affinity
+    /// key. Prompts with fewer than one full block carry no key and
+    /// are always load-routed.
+    pub affinity_blocks: usize,
+    /// Load-shedding valve: when the owner shard holds more than this
+    /// many live rows *beyond* the least-loaded shard, the request is
+    /// load-routed instead (and the prefix's ownership moves with it).
+    pub affinity_overflow_rows: usize,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            shards: 1,
+            policy: RouterPolicy::Affinity,
+            affinity_blocks: 4,
+            affinity_overflow_rows: 4,
+        }
+    }
+}
+
 pub fn cdiv(a: usize, b: usize) -> usize {
     a.div_ceil(b)
 }

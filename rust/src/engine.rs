@@ -36,7 +36,7 @@ use crate::batch::{self, BatchMetadata};
 use crate::config::{EngineConfig, ModelConfig, RequestMeta, SamplingParams,
                     Variant};
 use crate::heuristics::{Heuristics, KernelChoice};
-use crate::kvcache::{KvCacheManager, PageId};
+use crate::kvcache::{KvCacheManager, PageId, PrefixHasher};
 use crate::manifest::ArtifactSpec;
 use crate::metrics::EngineMetrics;
 use crate::output::{self, OutputProcessor, SampleOutput, StepOutputs};
@@ -256,6 +256,64 @@ impl Engine {
             id, prompt, sampling, meta, max_new_tokens.min(limit),
             self.now_ns());
         Ok(id)
+    }
+
+    /// [`Engine::add_group_with`] seeded with a [`PrefixHasher`] memo
+    /// the router already computed over the prompt's leading blocks —
+    /// the sharded tier's entry point. Validation is identical; the
+    /// memo rides into the root branch so admission probes extend it
+    /// instead of re-hashing (`prefix_hash_skips` counts the reuse).
+    pub fn add_group_routed(&mut self, prompt: Vec<i32>,
+                            max_new_tokens: usize,
+                            sampling: SamplingParams, meta: RequestMeta,
+                            memo: PrefixHasher) -> Result<RequestId> {
+        if sampling.width() == 0 {
+            bail!("sampling width must be at least 1");
+        }
+        if sampling.width() > self.ecfg.max_num_seqs {
+            bail!("sampling width {} exceeds max_num_seqs {}",
+                  sampling.width(), self.ecfg.max_num_seqs);
+        }
+        if sampling.width() > self.model_cfg.vocab_size {
+            bail!("sampling width {} exceeds vocab {}",
+                  sampling.width(), self.model_cfg.vocab_size);
+        }
+        for &t in &prompt {
+            if t < 0 || t as usize >= self.model_cfg.vocab_size {
+                bail!("token {t} out of vocab");
+            }
+        }
+        let limit = self.model_cfg.max_model_len.saturating_sub(prompt.len());
+        if limit == 0 {
+            bail!("prompt exceeds max_model_len");
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.scheduler.add_group_seeded(
+            id, prompt, sampling, meta, max_new_tokens.min(limit),
+            self.now_ns(), memo);
+        Ok(id)
+    }
+
+    /// Cancel an in-flight group (client disconnected): its branches'
+    /// pages are reclaimed immediately (cached full pages park
+    /// evictable, staying warm for the next request with the prefix).
+    /// Returns `false` for an unknown id — e.g. a group that finished
+    /// before the cancel arrived, which the serving layer treats as a
+    /// normal completion.
+    pub fn cancel_group(&mut self, id: RequestId) -> bool {
+        let cancelled = self.scheduler.cancel_group(id, &mut self.kv);
+        if cancelled {
+            self.metrics.cancelled_groups += 1;
+        }
+        cancelled
+    }
+
+    /// Branch rows this engine is committed to (running reservations
+    /// plus waiting widths) — the load half of the shard status the
+    /// router places by.
+    pub fn live_rows(&self) -> usize {
+        self.scheduler.live_rows()
     }
 
     pub fn has_unfinished(&self) -> bool {

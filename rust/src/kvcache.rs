@@ -241,6 +241,17 @@ impl PrefixHasher {
     pub fn hashes(&self) -> &[u64] {
         &self.hashes
     }
+
+    /// Chain hash of the leading `min(blocks, memoized full blocks)`
+    /// blocks — the sharded tier's affinity key (`docs/SHARDING.md`).
+    /// Because block *i*'s link folds in block *i−1*'s, one `u64`
+    /// identifies the whole leading-block run. `None` when the stream
+    /// has no probe-relevant full block (or `blocks == 0`): such
+    /// prompts carry no affinity and are load-routed.
+    pub fn affinity_key(&self, blocks: usize) -> Option<u64> {
+        let n = blocks.min(self.hashes.len());
+        if n == 0 { None } else { Some(self.hashes[n - 1]) }
+    }
 }
 
 /// The cache manager: allocator + all live block tables + prefix index.

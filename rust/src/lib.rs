@@ -12,7 +12,9 @@
 //!   manager with automatic prefix caching and copy-on-write forking,
 //!   continuous-batching scheduler over sequence groups, attention-
 //!   metadata builder, decision-tree kernel heuristics, autotuner, PJRT
-//!   runtime, serving engine, TCP front-end, workload generators, benches
+//!   runtime, serving engine, TCP front-end with a sharded data-parallel
+//!   tier behind a prefix-affinity router ([`router`], [`shard`],
+//!   `docs/SHARDING.md`), workload generators, benches
 //!   for every figure of the paper's evaluation, and an end-to-end
 //!   serving benchmark subsystem ([`bench`], `repro bench`) whose
 //!   deterministic work-counter fingerprints gate CI against
@@ -261,9 +263,11 @@ pub mod manifest;
 pub mod metrics;
 pub mod microbench;
 pub mod output;
+pub mod router;
 pub mod runtime;
 pub mod scheduler;
 pub mod server;
+pub mod shard;
 pub mod workload;
 
 pub use bench::{BenchReport, Comparison, Fingerprint};

@@ -18,7 +18,8 @@ use anyhow::{bail, Context, Result};
 
 use triton_anatomy::autotune;
 use triton_anatomy::bench;
-use triton_anatomy::config::{EngineConfig, SamplingParams, SchedPolicy};
+use triton_anatomy::config::{EngineConfig, RouterConfig, RouterPolicy,
+                             SamplingParams, SchedPolicy};
 use triton_anatomy::engine::Engine;
 use triton_anatomy::heuristics::Heuristics;
 use triton_anatomy::microbench::{self, BenchOpts};
@@ -83,6 +84,14 @@ COMMANDS:
                [--sched-policy decode-first|legacy]  batch-composition policy
                [--max-prefill-tokens N]  per-step prefill chunk cap (0 = off)
                [--tenant-weights acme=4,bligh=2]     DRR fair-queuing weights
+               [--shards N]              data-parallel engine shards (default 1)
+               [--router affinity|round-robin]       placement policy
+               [--affinity-blocks N]     prefix blocks hashed into the
+                                         affinity key (default 4)
+               [--affinity-overflow-rows N]  live-row slack before an owner
+                                         shard overflows (default 4)
+               [--lockstep]              step only on client run/step commands
+                                         (deterministic wire replay)
   run          --prompt-len 16 --max-new 16 --model tiny [--heuristics F]
                [--n 4 --sample-seed 1 --temperature 0.7]  parallel sampling
                [--beam-width 3 --length-penalty 1.0]      beam search
@@ -162,7 +171,25 @@ fn cmd_serve(args: &Args, dir: PathBuf) -> Result<()> {
     let addr = args.get("addr").unwrap_or("127.0.0.1:7001").to_string();
     let max_requests = args.get("max-requests")
         .map(|v| v.parse()).transpose()?;
-    server::serve(dir, engine_config(args)?, &addr, max_requests)
+    let defaults = RouterConfig::default();
+    let router = RouterConfig {
+        shards: args.usize_or("shards", defaults.shards)?,
+        policy: match args.get("router") {
+            Some(v) => RouterPolicy::parse(v)?,
+            None => defaults.policy,
+        },
+        affinity_blocks: args
+            .usize_or("affinity-blocks", defaults.affinity_blocks)?,
+        affinity_overflow_rows: args
+            .usize_or("affinity-overflow-rows",
+                      defaults.affinity_overflow_rows)?,
+    };
+    server::serve_with(dir, engine_config(args)?, server::ServeOpts {
+        addr,
+        max_requests,
+        router,
+        lockstep: args.get("lockstep").is_some_and(|v| v != "false"),
+    })
 }
 
 fn cmd_run(args: &Args, dir: PathBuf) -> Result<()> {

@@ -54,6 +54,20 @@ impl Histogram {
         self.max = self.max.max(v);
     }
 
+    /// Merge another histogram into this one, bucket-wise. Used by the
+    /// sharded serving tier to fold per-shard phase histograms into one
+    /// tier-level histogram whose `count` stays step-aligned (the sum
+    /// of every shard's dispatched steps).
+    pub fn absorb(&mut self, other: &Histogram) {
+        for (b, &o) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *b += o;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
     pub fn count(&self) -> u64 {
         self.count
     }
@@ -162,6 +176,10 @@ pub struct EngineMetrics {
     // ----- sequence groups / parallel sampling -----
     /// Sequence groups fully finished (all branches done).
     pub groups_finished: u64,
+    /// Sequence groups cancelled mid-flight (client disconnect detected
+    /// by the serving layer) — every live branch's pages were reclaimed
+    /// without the group finishing.
+    pub cancelled_groups: u64,
     /// End-to-end latency of finished groups, ms (enqueue → last branch).
     pub group_latency_ms: Histogram,
     /// Time to first token per group, ms (enqueue → first committed
@@ -280,6 +298,7 @@ impl EngineMetrics {
         let _ = writeln!(s, "prompt_tokens {}", self.prompt_tokens);
         let _ = writeln!(s, "preemptions {}", self.preemptions);
         let _ = writeln!(s, "groups_finished {}", self.groups_finished);
+        let _ = writeln!(s, "cancelled_groups {}", self.cancelled_groups);
         let _ = writeln!(s, "forked_pages {}", self.forked_pages);
         let _ = writeln!(s, "cow_copies {}", self.cow_copies);
         let _ = writeln!(s, "cow_pairs_per_step {}",
@@ -428,6 +447,38 @@ mod tests {
         assert!(p50 >= 10.0 && p50 < 16.0, "p50={p50} stays near the low value");
         assert!(p99 > 700.0 && p99 <= 1000.0, "p99={p99} nears the max");
         assert!(p50 < p99, "interpolated quantiles stay monotone");
+    }
+
+    #[test]
+    fn absorb_merges_buckets_counts_and_extremes() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        for v in [2.0, 10.0, 300.0] {
+            a.record(v);
+        }
+        for v in [1.0, 5000.0] {
+            b.record(v);
+        }
+        let mut merged = Histogram::new();
+        for v in [2.0, 10.0, 300.0, 1.0, 5000.0] {
+            merged.record(v);
+        }
+        a.absorb(&b);
+        assert_eq!(a.count(), merged.count());
+        assert_eq!(a.min(), merged.min());
+        assert_eq!(a.max(), merged.max());
+        assert!((a.mean() - merged.mean()).abs() < 1e-12);
+        for q in [0.0, 0.25, 0.5, 0.95, 1.0] {
+            assert_eq!(a.quantile(q), merged.quantile(q), "q={q}");
+        }
+        // absorbing an empty histogram is a no-op
+        let snap = a.snapshot();
+        a.absorb(&Histogram::new());
+        assert_eq!(a.snapshot(), snap);
+        // an empty histogram absorbing a populated one equals it
+        let mut c = Histogram::new();
+        c.absorb(&merged);
+        assert_eq!(c.snapshot(), merged.snapshot());
     }
 
     #[test]

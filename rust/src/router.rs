@@ -1,0 +1,440 @@
+//! Prefix-affinity router of the sharded serving tier.
+//!
+//! The router multiplexes admitted requests onto N independent engine
+//! shards. Placement combines two signals (see `docs/SHARDING.md`):
+//!
+//! * **Prefix affinity** — the chain hash of the prompt's leading full
+//!   blocks ([`PrefixHasher::affinity_key`]) names the shard that last
+//!   served the prefix; routing repeats back to it turns the per-shard
+//!   content-addressed prefix cache into a tier-level placement signal
+//!   instead of N thrashing caches.
+//! * **Load** — live branch rows and free KV pages, reported by each
+//!   shard over its status channel ([`ShardStatus`]).
+//!
+//! Every decision is a pure function of the admission sequence and the
+//! status snapshots it observed: ties break by a fixed chain (fewest
+//! live rows → most free pages → fewest cumulative placements → lowest
+//! shard index), so two runs over the same sequence produce
+//! byte-identical placements and per-shard admission logs. The
+//! [`Router`] owns no I/O and no threads — the server's dispatcher and
+//! the bench harness drive the same object.
+
+use std::collections::HashMap;
+
+use crate::config::{RouterConfig, RouterPolicy};
+use crate::kvcache::PrefixHasher;
+
+/// One shard's load snapshot, polled over its status channel before
+/// each placement.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ShardStatus {
+    /// Branch rows the shard's engine is committed to
+    /// (`Engine::live_rows`): running reservations + waiting widths.
+    pub live_rows: usize,
+    /// Free KV pages, counting evictable cached pages
+    /// (`KvCacheManager::free_pages`).
+    pub free_pages: usize,
+}
+
+/// Why a placement landed on its shard.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementReason {
+    /// The prompt's affinity key had an owner shard that was not
+    /// overloaded — routed to the hot cache.
+    AffinityHit,
+    /// Cold prefix, keyless prompt, or overloaded owner — routed by
+    /// the load score (and the key's ownership re-registered here).
+    LoadRouted,
+    /// `RouterPolicy::RoundRobin`: admission index modulo shard count.
+    RoundRobin,
+}
+
+/// The routing decision for one request.
+#[derive(Debug)]
+pub struct Placement {
+    pub shard: usize,
+    pub reason: PlacementReason,
+    /// The affinity key the decision used (`None` for prompts with no
+    /// probe-relevant full block).
+    pub key: Option<u64>,
+    /// The block-hash memo computed to derive the key. Thread it into
+    /// the shard's engine (`Engine::add_group_routed`) so admission
+    /// probes extend it instead of re-hashing the same blocks.
+    pub memo: PrefixHasher,
+}
+
+/// Router-level counters, merged into the sharded tier's fingerprint.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct RouterCounters {
+    /// Placements that followed the affinity key to its owner shard.
+    pub affinity_hits: u64,
+    /// Placements decided by the load score (cold prefixes, keyless
+    /// prompts, overflow diversions).
+    pub load_routed: u64,
+    /// Worst cumulative-placement spread observed after any admission:
+    /// `max(placed) - min(placed)` over shards, maxed over the
+    /// sequence. Affinity must not regress this into one hot shard.
+    pub imbalance_max: u64,
+}
+
+/// One admission-log entry; the per-shard logs are the determinism
+/// witness the property tests compare byte-for-byte.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LogEntry {
+    /// Admission index (0-based, global across shards).
+    pub seq: u64,
+    pub shard: usize,
+    /// Affinity key, or 0 for keyless prompts (the chain hash of a
+    /// real block is never 0 in practice; the log also records
+    /// `keyed` to disambiguate).
+    pub key: u64,
+    pub keyed: bool,
+    pub reason: PlacementReason,
+}
+
+/// Deterministic prefix-affinity placement over N shards.
+pub struct Router {
+    cfg: RouterConfig,
+    block_size: usize,
+    /// affinity key → shard currently holding the prefix hot.
+    owner: HashMap<u64, usize>,
+    /// Cumulative placements per shard.
+    placed: Vec<u64>,
+    /// Next admission index.
+    seq: u64,
+    counters: RouterCounters,
+    log: Vec<LogEntry>,
+}
+
+impl Router {
+    pub fn new(cfg: RouterConfig, block_size: usize) -> Self {
+        assert!(cfg.shards >= 1, "router needs at least one shard");
+        assert!(block_size >= 1, "block_size must be positive");
+        let shards = cfg.shards;
+        Router {
+            cfg,
+            block_size,
+            owner: HashMap::new(),
+            placed: vec![0; shards],
+            seq: 0,
+            counters: RouterCounters::default(),
+            log: Vec::new(),
+        }
+    }
+
+    pub fn cfg(&self) -> &RouterConfig {
+        &self.cfg
+    }
+
+    /// Place one request. `statuses[i]` is shard *i*'s load snapshot;
+    /// the slice length must equal the shard count.
+    pub fn place(&mut self, prompt: &[i32], statuses: &[ShardStatus])
+        -> Placement {
+        assert_eq!(statuses.len(), self.cfg.shards,
+                   "one status per shard");
+        let mut memo = PrefixHasher::default();
+        memo.update(prompt, self.block_size);
+        let key = memo.affinity_key(self.cfg.affinity_blocks);
+        let (shard, reason) = match self.cfg.policy {
+            RouterPolicy::RoundRobin => (
+                (self.seq % self.cfg.shards as u64) as usize,
+                PlacementReason::RoundRobin,
+            ),
+            RouterPolicy::Affinity => self.place_affinity(key, statuses),
+        };
+        self.placed[shard] += 1;
+        let max = *self.placed.iter().max().unwrap();
+        let min = *self.placed.iter().min().unwrap();
+        self.counters.imbalance_max = self.counters.imbalance_max.max(max - min);
+        self.log.push(LogEntry {
+            seq: self.seq,
+            shard,
+            key: key.unwrap_or(0),
+            keyed: key.is_some(),
+            reason,
+        });
+        self.seq += 1;
+        Placement { shard, reason, key, memo }
+    }
+
+    fn place_affinity(&mut self, key: Option<u64>,
+                      statuses: &[ShardStatus])
+        -> (usize, PlacementReason) {
+        if let Some(k) = key {
+            if let Some(&owner) = self.owner.get(&k) {
+                let min_rows =
+                    statuses.iter().map(|s| s.live_rows).min().unwrap();
+                let slack = self.cfg.affinity_overflow_rows;
+                if statuses[owner].live_rows <= min_rows + slack {
+                    self.counters.affinity_hits += 1;
+                    return (owner, PlacementReason::AffinityHit);
+                }
+            }
+        }
+        let shard = self.least_loaded(statuses);
+        if let Some(k) = key {
+            // ownership follows the placement: the prefix is about to
+            // be prefilled (hot) on `shard`, stale elsewhere.
+            self.owner.insert(k, shard);
+        }
+        self.counters.load_routed += 1;
+        (shard, PlacementReason::LoadRouted)
+    }
+
+    /// The deterministic load score: fewest live rows, then most free
+    /// pages, then fewest cumulative placements, then lowest index.
+    fn least_loaded(&self, statuses: &[ShardStatus]) -> usize {
+        (0..self.cfg.shards)
+            .min_by_key(|&i| {
+                (statuses[i].live_rows,
+                 std::cmp::Reverse(statuses[i].free_pages),
+                 self.placed[i],
+                 i)
+            })
+            .unwrap()
+    }
+
+    pub fn counters(&self) -> &RouterCounters {
+        &self.counters
+    }
+
+    /// The full admission log, in placement order.
+    pub fn admission_log(&self) -> &[LogEntry] {
+        &self.log
+    }
+
+    /// One shard's admission log rendered as text — the byte-identical
+    /// determinism witness (`seq:key:reason` per line).
+    pub fn shard_log(&self, shard: usize) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        for e in self.log.iter().filter(|e| e.shard == shard) {
+            let reason = match e.reason {
+                PlacementReason::AffinityHit => "affinity",
+                PlacementReason::LoadRouted => "load",
+                PlacementReason::RoundRobin => "rr",
+            };
+            let _ = writeln!(s, "{}:{:016x}:{}", e.seq, e.key, reason);
+        }
+        s
+    }
+
+    /// Cumulative placements per shard.
+    pub fn placements(&self) -> &[u64] {
+        &self.placed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Rng;
+
+    fn cfg(shards: usize, policy: RouterPolicy) -> RouterConfig {
+        RouterConfig { shards, policy, ..RouterConfig::default() }
+    }
+
+    fn status(live_rows: usize, free_pages: usize) -> ShardStatus {
+        ShardStatus { live_rows, free_pages }
+    }
+
+    /// A prompt of `blocks` full 4-token blocks (block_size 4 in these
+    /// tests) + 1 tail token, with the given leading block content.
+    fn prompt_with_prefix(prefix: &[i32], tail_salt: i32) -> Vec<i32> {
+        let mut p = prefix.to_vec();
+        p.extend_from_slice(&[100 + tail_salt, 101 + tail_salt, 1]);
+        p
+    }
+
+    #[test]
+    fn cold_prefix_routes_to_fewest_live_rows() {
+        let mut r = Router::new(cfg(3, RouterPolicy::Affinity), 4);
+        let p = r.place(&[1, 2, 3, 4, 5],
+                        &[status(4, 10), status(1, 2), status(2, 12)]);
+        assert_eq!(p.shard, 1);
+        assert_eq!(p.reason, PlacementReason::LoadRouted);
+        assert!(p.key.is_some());
+    }
+
+    #[test]
+    fn row_tie_breaks_by_free_pages_then_placements_then_index() {
+        // equal rows: most free pages wins
+        let mut r = Router::new(cfg(3, RouterPolicy::Affinity), 4);
+        let p = r.place(&[1, 2, 3, 4, 5],
+                        &[status(2, 5), status(2, 9), status(2, 7)]);
+        assert_eq!(p.shard, 1);
+
+        // equal rows and pages: fewest cumulative placements wins
+        let mut r = Router::new(cfg(2, RouterPolicy::Affinity), 4);
+        let even = [status(0, 8), status(0, 8)];
+        assert_eq!(r.place(&[1, 2, 3, 4, 5], &even).shard, 0,
+                   "full tie breaks to the lowest index");
+        // distinct prefix so affinity cannot shortcut the scorer
+        assert_eq!(r.place(&[9, 8, 7, 6, 5], &even).shard, 1,
+                   "shard 0 now has one placement, shard 1 wins");
+    }
+
+    #[test]
+    fn repeat_prefix_hits_owner_shard() {
+        let mut r = Router::new(cfg(2, RouterPolicy::Affinity), 4);
+        let prefix = [11, 12, 13, 14, 21, 22, 23, 24];
+        let even = [status(0, 8), status(0, 8)];
+        let first = r.place(&prompt_with_prefix(&prefix, 0), &even);
+        assert_eq!(first.reason, PlacementReason::LoadRouted);
+        // same leading blocks, different tail: must follow the owner
+        // even when the load score would pick the other shard
+        let skewed = [status(3, 1), status(0, 8)];
+        let second = r.place(&prompt_with_prefix(&prefix, 5), &skewed);
+        assert_eq!(second.shard, first.shard);
+        assert_eq!(second.reason, PlacementReason::AffinityHit);
+        assert_eq!(second.key, first.key);
+        assert_eq!(r.counters().affinity_hits, 1);
+        assert_eq!(r.counters().load_routed, 1);
+    }
+
+    #[test]
+    fn overloaded_owner_diverts_and_moves_ownership() {
+        let mut r = Router::new(
+            RouterConfig {
+                shards: 2,
+                policy: RouterPolicy::Affinity,
+                affinity_blocks: 4,
+                affinity_overflow_rows: 2,
+            },
+            4,
+        );
+        let prefix = [11, 12, 13, 14, 21, 22, 23, 24];
+        let even = [status(0, 8), status(0, 8)];
+        let first = r.place(&prompt_with_prefix(&prefix, 0), &even);
+        assert_eq!(first.shard, 0);
+        // owner 3 rows beyond the least-loaded shard > overflow 2
+        let hot_owner = [status(5, 2), status(2, 8)];
+        let div = r.place(&prompt_with_prefix(&prefix, 1), &hot_owner);
+        assert_eq!(div.shard, 1);
+        assert_eq!(div.reason, PlacementReason::LoadRouted);
+        // ownership moved with the diversion: a later repeat under even
+        // load goes to shard 1, not back to 0
+        let back = r.place(&prompt_with_prefix(&prefix, 2), &even);
+        assert_eq!(back.shard, 1);
+        assert_eq!(back.reason, PlacementReason::AffinityHit);
+    }
+
+    #[test]
+    fn short_prompt_has_no_key_and_load_routes() {
+        let mut r = Router::new(cfg(2, RouterPolicy::Affinity), 4);
+        // 4 tokens = one full block, but the probe cap ((len-1)/bs)
+        // leaves no probe-relevant block → keyless
+        let p = r.place(&[1, 2, 3, 4], &[status(0, 8), status(0, 8)]);
+        assert!(p.key.is_none());
+        assert_eq!(p.reason, PlacementReason::LoadRouted);
+        assert!(!r.admission_log()[0].keyed);
+    }
+
+    #[test]
+    fn round_robin_ignores_load_and_affinity() {
+        let mut r = Router::new(cfg(3, RouterPolicy::RoundRobin), 4);
+        let skewed = [status(9, 0), status(0, 8), status(0, 8)];
+        let shards: Vec<usize> = (0..7)
+            .map(|_| r.place(&[1, 2, 3, 4, 5], &skewed).shard)
+            .collect();
+        assert_eq!(shards, vec![0, 1, 2, 0, 1, 2, 0]);
+        assert_eq!(r.counters().affinity_hits, 0);
+        assert_eq!(r.counters().imbalance_max, 1);
+    }
+
+    #[test]
+    fn imbalance_max_tracks_worst_spread() {
+        let mut r = Router::new(cfg(2, RouterPolicy::Affinity), 4);
+        let prefix = [11, 12, 13, 14, 21, 22, 23, 24];
+        let even = [status(0, 8), status(0, 8)];
+        // owner never overloads under even statuses: every repeat lands
+        // on shard 0 and the spread grows monotonically
+        for i in 0..4 {
+            r.place(&prompt_with_prefix(&prefix, i), &even);
+        }
+        assert_eq!(r.placements(), &[4, 0]);
+        assert_eq!(r.counters().imbalance_max, 4);
+    }
+
+    /// Deterministic driver for the property tests: a synthetic 2-shard
+    /// tier where each shard's live rows are the requests placed on it
+    /// in the current wave (engines drain between waves).
+    fn drive(seed: u64, requests: usize) -> (Router, Vec<usize>) {
+        let mut rng = Rng::new(seed);
+        let families: Vec<Vec<i32>> =
+            (0..3).map(|_| rng.tokens(8, 512)).collect();
+        let mut r = Router::new(cfg(2, RouterPolicy::Affinity), 4);
+        let mut seq = Vec::new();
+        let mut wave_rows = [0usize; 2];
+        for i in 0..requests {
+            if i % 3 == 0 {
+                wave_rows = [0, 0]; // engines drained between waves
+            }
+            let fam = &families[i % 3];
+            let mut prompt = fam.clone();
+            prompt.extend(rng.tokens(3, 512));
+            let st = [status(wave_rows[0], 8), status(wave_rows[1], 8)];
+            let p = r.place(&prompt, &st);
+            wave_rows[p.shard] += 1;
+            seq.push(p.shard);
+        }
+        (r, seq)
+    }
+
+    #[test]
+    fn placement_sequence_and_shard_logs_are_reproducible() {
+        let (r1, seq1) = drive(97, 60);
+        let (r2, seq2) = drive(97, 60);
+        assert_eq!(seq1, seq2, "shard assignment sequence must replay");
+        for s in 0..2 {
+            assert_eq!(r1.shard_log(s), r2.shard_log(s),
+                       "shard {s} admission log must be byte-identical");
+            assert!(!r1.shard_log(s).is_empty(),
+                    "both shards must have received work");
+        }
+        assert_eq!(r1.counters(), r2.counters());
+    }
+
+    #[test]
+    fn shared_prefix_storm_routes_repeats_to_owner() {
+        let (r, _) = drive(97, 60);
+        let log = r.admission_log();
+        // first sighting of each family is necessarily cold; every
+        // later keyed placement is a "repeat"
+        let mut owner: HashMap<u64, usize> = HashMap::new();
+        let mut repeats = 0u64;
+        let mut to_owner = 0u64;
+        for e in log {
+            assert!(e.keyed, "storm prompts all carry keys");
+            match owner.get(&e.key) {
+                None => {
+                    owner.insert(e.key, e.shard);
+                }
+                Some(&o) => {
+                    repeats += 1;
+                    if e.shard == o {
+                        to_owner += 1;
+                    } else {
+                        owner.insert(e.key, e.shard);
+                    }
+                }
+            }
+        }
+        assert!(repeats >= 50, "storm must mostly be repeats");
+        assert!(to_owner * 10 >= repeats * 9,
+                "expected >=90% of repeats on the owning shard, got {to_owner}/{repeats}");
+        assert!(r.counters().affinity_hits >= to_owner);
+    }
+
+    #[test]
+    fn memo_is_reusable_by_the_engine() {
+        let mut r = Router::new(cfg(2, RouterPolicy::Affinity), 4);
+        let prompt: Vec<i32> = (0..13).collect();
+        let p = r.place(&prompt, &[status(0, 8), status(0, 8)]);
+        // (13-1)/4 = 3 probe-relevant blocks were hashed once here...
+        assert_eq!(p.memo.hashes().len(), 3);
+        let mut memo = p.memo;
+        // ...and a later probe over the same stream reuses all of them
+        assert_eq!(memo.update(&prompt, 4), 3);
+    }
+}

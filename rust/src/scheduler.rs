@@ -546,15 +546,37 @@ impl Scheduler {
     pub fn add_group_with(&mut self, id: RequestId, prompt: Vec<i32>,
                           sampling: SamplingParams, meta: RequestMeta,
                           max_new_tokens: usize, now_ns: u64) {
+        self.add_group_seeded(id, prompt, sampling, meta, max_new_tokens,
+                              now_ns, PrefixHasher::default());
+    }
+
+    /// [`Scheduler::add_group_with`] seeded with a block-hash memo the
+    /// caller already computed over the prompt (the sharded tier's
+    /// router hashes leading blocks to pick a shard; re-hashing them at
+    /// admission would waste exactly that work). The memo becomes the
+    /// root branch's [`PrefixHasher`]; admission probes extend it, and
+    /// every seeded block counts in `prefix_hash_skips` like any other
+    /// memo-served block.
+    pub fn add_group_seeded(&mut self, id: RequestId, prompt: Vec<i32>,
+                            sampling: SamplingParams, meta: RequestMeta,
+                            max_new_tokens: usize, now_ns: u64,
+                            memo: PrefixHasher) {
         assert!(!prompt.is_empty(), "empty prompt");
         assert!(sampling.width() >= 1, "group needs at least one branch");
+        debug_assert!(
+            memo.hashes().len()
+                <= prompt.len().saturating_sub(1) / self.cfg.block_size,
+            "seed memo runs past the prompt's probe-relevant blocks"
+        );
+        let mut root = Sequence::fresh(0);
+        root.hash_memo = memo;
         let g = SequenceGroup {
             id,
             prompt,
             sampling,
             meta,
             max_new_tokens: max_new_tokens.max(1),
-            seqs: vec![Sequence::fresh(0)],
+            seqs: vec![root],
             forked: false,
             next_branch: 1,
             cached_tokens: 0,
@@ -604,9 +626,61 @@ impl Scheduler {
         self.running.iter().map(|g| g.reserved_rows()).sum()
     }
 
-    /// Drain finished groups (ownership moves to the caller).
-    pub fn take_finished(&mut self) -> Vec<SequenceGroup> {
-        std::mem::take(&mut self.finished)
+    /// Branch rows this scheduler is committed to: reserved rows of
+    /// every running group (live branches plus unforked width) plus the
+    /// full width of every group still waiting for admission. The
+    /// sharded tier's router reads this as the shard's load signal — it
+    /// must count waiting groups, or a burst placed between steps would
+    /// look free.
+    pub fn live_rows(&self) -> usize {
+        let waiting: usize = self
+            .waiting
+            .values()
+            .flat_map(|q| q.iter())
+            .map(|g| g.sampling.width())
+            .sum();
+        waiting + self.reserved_rows_total()
+    }
+
+    /// Cancel an in-flight group (client disconnected mid-stream):
+    /// remove it from its waiting queue or the running set, freeing
+    /// every live branch's KV handle — pages are reclaimed (or parked
+    /// evictable, keeping cached prefixes warm) exactly as on normal
+    /// retirement. Returns `false` if the id is unknown — e.g. the
+    /// group already finished, which is not an error (its `done` events
+    /// simply have nobody to read them). Cancelled groups never enter
+    /// `finished`.
+    pub fn cancel_group(&mut self, id: RequestId,
+                        kv: &mut KvCacheManager) -> bool {
+        let mut found_waiting = false;
+        let mut emptied: Option<String> = None;
+        for (tenant, q) in self.waiting.iter_mut() {
+            if let Some(pos) = q.iter().position(|g| g.id == id) {
+                q.remove(pos);
+                found_waiting = true;
+                if q.is_empty() {
+                    emptied = Some(tenant.clone());
+                }
+                break;
+            }
+        }
+        if let Some(tenant) = emptied {
+            self.waiting.remove(&tenant);
+            self.deficit.remove(&tenant);
+        }
+        if found_waiting {
+            return true;
+        }
+        if let Some(pos) = self.running.iter().position(|g| g.id == id) {
+            let mut g = self.running.remove(pos);
+            for s in g.seqs.iter_mut() {
+                if let Some(h) = s.handle.take() {
+                    kv.free(h);
+                }
+            }
+            return true;
+        }
+        false
     }
 
     /// Build the next batch. `kv` is mutated: pages are allocated for the

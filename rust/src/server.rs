@@ -1,9 +1,15 @@
 //! TCP JSON-lines serving front-end.
 //!
-//! The PJRT client is not `Send`, so the engine owns its thread; listener
-//! and per-connection reader/writer threads talk to it over channels. The
-//! engine loop interleaves request intake with `step()` — continuous
-//! batching means new requests join the running batch at the next step.
+//! The PJRT client is not `Send`, so every engine owns its thread.
+//! Intake and dispatch are split: per-connection reader threads parse
+//! requests onto one dispatcher channel; the dispatcher owns the
+//! prefix-affinity [`Router`] and places each request onto one of N
+//! engine shards ([`crate::shard`]), polling per-shard status channels
+//! for the load signal. With the default single shard the tier
+//! degenerates to the classic engine-loop server. Events fan in from
+//! the shards straight to each connection's writer channel; a group
+//! lives wholly on one shard, so per-branch `position` monotonicity on
+//! the wire is preserved by construction. See `docs/SHARDING.md`.
 //!
 //! Protocol (one JSON object per line; the field-by-field reference
 //! lives in `docs/WIRE_PROTOCOL.md`). `n`, `seed` and `temperature` are
@@ -50,33 +56,64 @@
 //! emitted when the group completes (still all before any `done`, with
 //! branches ranked best-first by `score`, and exactly `beam_width` `done`
 //! events).
+//!
+//! # Lockstep mode
+//!
+//! Started with `lockstep: true` ([`ServeOpts`]), the server never
+//! steps on its own: engines advance only on client commands, making
+//! the wire path a deterministic function of the command sequence —
+//! this is how the `server_replay` bench scenario earns a gated counter
+//! fingerprint. Commands are JSON lines with a `cmd` field:
+//!   → {"cmd": "run"}     steps every shard (in shard order) until idle
+//!   ← {"event":"stepped","executed":7}
+//!   → {"cmd": "step"}    at most one step per shard
+//!   ← {"event":"stepped","executed":1}
+//!   → {"cmd": "metrics"} merged counter fingerprint across shards
+//!   ← {"event":"metrics","counters":{...},"free_pages":11,
+//!      "total_pages":11}
+//! `metrics` works in free-running mode too; `run`/`step` outside
+//! lockstep yield a structured `error` event.
 
-use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread;
-use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
-use crate::config::{EngineConfig, Priority, RequestMeta, SamplingParams};
-use crate::engine::Engine;
+use crate::bench::Fingerprint;
+use crate::config::{EngineConfig, Priority, RequestMeta, RouterConfig,
+                    SamplingParams};
 use crate::json::{self, num, obj, Value};
-use crate::runtime::Runtime;
+use crate::router::Router;
 use crate::scheduler::RequestId;
+use crate::shard::{ShardCmd, ShardHandle, ShardReport, ShardRequest};
 
-/// A request forwarded from a connection to the engine thread.
-struct Incoming {
-    prompt: Vec<i32>,
-    max_new_tokens: usize,
-    sampling: SamplingParams,
-    meta: RequestMeta,
-    reply: Sender<Outgoing>,
+/// A parsed wire line forwarded from a connection to the dispatcher.
+enum ToDispatcher {
+    Request {
+        prompt: Vec<i32>,
+        max_new_tokens: usize,
+        sampling: SamplingParams,
+        meta: RequestMeta,
+        reply: Sender<Outgoing>,
+    },
+    Command {
+        kind: CmdKind,
+        reply: Sender<Outgoing>,
+    },
+}
+
+/// Wire commands (`{"cmd": ...}` lines).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum CmdKind {
+    Step,
+    Run,
+    Metrics,
 }
 
 /// Events streamed back to the connection writer.
-enum Outgoing {
+pub enum Outgoing {
     Token {
         id: RequestId,
         branch: usize,
@@ -93,6 +130,17 @@ enum Outgoing {
         cached_tokens: usize,
         score: f64,
         finish_reason: &'static str,
+    },
+    /// Lockstep ack: how many engine steps a `run`/`step` command
+    /// executed (summed over shards).
+    Stepped { executed: u64 },
+    /// Reply to the `metrics` command: the merged deterministic counter
+    /// fingerprint across every shard (plus router counters) and the
+    /// tier's KV-page gauges.
+    Metrics {
+        counters: std::collections::BTreeMap<String, u64>,
+        free_pages: usize,
+        total_pages: usize,
     },
     Error(String),
 }
@@ -121,6 +169,24 @@ fn event_json(ev: &Outgoing) -> String {
             ("finish_reason", json::s(finish_reason)),
         ])
         .to_string(),
+        Outgoing::Stepped { executed } => obj(vec![
+            ("event", json::s("stepped")),
+            ("executed", num(*executed as f64)),
+        ])
+        .to_string(),
+        Outgoing::Metrics { counters, free_pages, total_pages } => {
+            let c: Vec<(&str, Value)> = counters
+                .iter()
+                .map(|(k, v)| (k.as_str(), num(*v as f64)))
+                .collect();
+            obj(vec![
+                ("event", json::s("metrics")),
+                ("counters", obj(c)),
+                ("free_pages", num(*free_pages as f64)),
+                ("total_pages", num(*total_pages as f64)),
+            ])
+            .to_string()
+        }
         Outgoing::Error(msg) => obj(vec![
             ("event", json::s("error")),
             ("message", json::s(msg)),
@@ -129,14 +195,55 @@ fn event_json(ev: &Outgoing) -> String {
     }
 }
 
-/// Serve forever (or until `max_requests` complete, for tests).
+/// Serving-tier options beyond the engine config: bind address,
+/// test-mode request cap, shard/router knobs, lockstep mode.
+#[derive(Debug, Clone)]
+pub struct ServeOpts {
+    pub addr: String,
+    /// Exit once this many requests completed (tests / replay); `None`
+    /// serves forever. Cancelled requests count — a disconnected client
+    /// consumed a serving slot too.
+    pub max_requests: Option<usize>,
+    /// Shard count and placement knobs (`--shards`, `--router`, ...).
+    pub router: RouterConfig,
+    /// Step engines only on client `run`/`step` commands.
+    pub lockstep: bool,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts {
+            addr: "127.0.0.1:7001".to_string(),
+            max_requests: None,
+            router: RouterConfig::default(),
+            lockstep: false,
+        }
+    }
+}
+
+/// Serve forever (or until `max_requests` complete, for tests) with the
+/// default single-shard, free-running tier.
 pub fn serve(artifacts_dir: std::path::PathBuf, ecfg: EngineConfig,
              addr: &str, max_requests: Option<usize>) -> Result<()> {
-    let listener = TcpListener::bind(addr)
-        .with_context(|| format!("binding {addr}"))?;
+    serve_with(artifacts_dir, ecfg, ServeOpts {
+        addr: addr.to_string(),
+        max_requests,
+        ..ServeOpts::default()
+    })
+}
+
+/// The sharded serving tier: bind, spawn N engine shards + the
+/// dispatcher (which owns the [`Router`]), then supervise completions
+/// until `max_requests` is reached (or forever).
+pub fn serve_with(artifacts_dir: std::path::PathBuf, ecfg: EngineConfig,
+                  opts: ServeOpts) -> Result<()> {
+    let listener = TcpListener::bind(&opts.addr)
+        .with_context(|| format!("binding {}", opts.addr))?;
     let local = listener.local_addr()?;
-    eprintln!("[server] listening on {local}");
-    let (tx, rx) = channel::<Incoming>();
+    eprintln!("[server] listening on {local} ({} shard(s), {}{})",
+              opts.router.shards, opts.router.policy.name(),
+              if opts.lockstep { ", lockstep" } else { "" });
+    let (tx, rx) = channel::<ToDispatcher>();
 
     // acceptor: one reader thread per connection
     thread::spawn(move || {
@@ -148,10 +255,162 @@ pub fn serve(artifacts_dir: std::path::PathBuf, ecfg: EngineConfig,
         }
     });
 
-    engine_loop(artifacts_dir, ecfg, rx, max_requests)
+    // engine shards: each loads its own runtime on its own thread
+    let (completions_tx, completions_rx) = channel::<RequestId>();
+    let mut shards: Vec<ShardHandle> = Vec::new();
+    for i in 0..opts.router.shards.max(1) {
+        shards.push(ShardHandle::spawn(i, artifacts_dir.clone(),
+                                       ecfg.clone(), opts.lockstep,
+                                       completions_tx.clone()));
+    }
+    drop(completions_tx);
+
+    // dispatcher: owns the router, places requests, serves commands
+    let router = Router::new(opts.router.clone(), ecfg.block_size);
+    let cmd_channels: Vec<Sender<ShardCmd>> =
+        shards.iter().map(|s| s.cmd.clone()).collect();
+    let lockstep = opts.lockstep;
+    let dispatcher = thread::spawn(move || {
+        dispatcher_loop(rx, cmd_channels, router, lockstep)
+    });
+
+    // supervisor: count completions (finished + cancelled requests)
+    let mut completed = 0usize;
+    loop {
+        match completions_rx.recv() {
+            Ok(_) => {
+                completed += 1;
+                if opts.max_requests.is_some_and(|m| completed >= m) {
+                    break;
+                }
+            }
+            // every shard exited (e.g. a runtime load failure): stop
+            // supervising and surface the error from join below
+            Err(_) => break,
+        }
+    }
+    eprintln!("[server] served {completed} requests, exiting");
+    for s in &shards {
+        let _ = s.cmd.send(ShardCmd::Shutdown);
+    }
+    let mut result = Ok(());
+    for s in shards {
+        if let Err(e) = s.join() {
+            result = Err(e);
+        }
+    }
+    drop(dispatcher); // detaches; its channel senders are gone with us
+    result
 }
 
-fn handle_connection(stream: TcpStream, tx: Sender<Incoming>) -> Result<()> {
+/// The dispatcher thread: one placement (status poll → router → shard
+/// submit) per request, strictly in intake order, so the placement
+/// sequence is a pure function of the admission sequence and the
+/// status snapshots it observed.
+fn dispatcher_loop(rx: Receiver<ToDispatcher>,
+                   shards: Vec<Sender<ShardCmd>>, mut router: Router,
+                   lockstep: bool) -> Result<()> {
+    let mut next_global: RequestId = 1;
+    for msg in rx {
+        match msg {
+            ToDispatcher::Request { prompt, max_new_tokens, sampling,
+                                    meta, reply } => {
+                let mut statuses = Vec::with_capacity(shards.len());
+                for s in &shards {
+                    let (stx, srx) = channel();
+                    if s.send(ShardCmd::Status(stx)).is_err() {
+                        statuses.push(Default::default());
+                        continue;
+                    }
+                    statuses.push(srx.recv().unwrap_or_default());
+                }
+                let placement = router.place(&prompt, &statuses);
+                let req = ShardRequest {
+                    global_id: next_global,
+                    prompt,
+                    max_new_tokens,
+                    sampling,
+                    meta,
+                    memo: placement.memo,
+                    reply: reply.clone(),
+                };
+                next_global += 1;
+                if shards[placement.shard]
+                    .send(ShardCmd::Submit(req))
+                    .is_err()
+                {
+                    let _ = reply.send(Outgoing::Error(format!(
+                        "shard {} is gone", placement.shard)));
+                }
+            }
+            ToDispatcher::Command { kind, reply } => {
+                run_command(kind, &shards, &router, lockstep, &reply);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Execute one wire command against the shard pool.
+fn run_command(kind: CmdKind, shards: &[Sender<ShardCmd>],
+               router: &Router, lockstep: bool,
+               reply: &Sender<Outgoing>) {
+    match kind {
+        CmdKind::Step | CmdKind::Run => {
+            if !lockstep {
+                let _ = reply.send(Outgoing::Error(
+                    "lockstep mode disabled; start the server with \
+                     --lockstep to drive steps from the client"
+                        .to_string(),
+                ));
+                return;
+            }
+            // deterministic shard order: shard 0 drains before shard 1
+            // ever steps
+            let mut executed = 0u64;
+            for s in shards {
+                let (stx, srx) = channel();
+                let cmd = match kind {
+                    CmdKind::Run => ShardCmd::Run(stx),
+                    _ => ShardCmd::Step(stx),
+                };
+                if s.send(cmd).is_ok() {
+                    executed += srx.recv().unwrap_or(0);
+                }
+            }
+            let _ = reply.send(Outgoing::Stepped { executed });
+        }
+        CmdKind::Metrics => {
+            let mut merged = Fingerprint::default();
+            let mut free_pages = 0usize;
+            let mut total_pages = 0usize;
+            for s in shards {
+                let (stx, srx) = channel();
+                if s.send(ShardCmd::Metrics(stx)).is_err() {
+                    continue;
+                }
+                if let Ok(ShardReport { fingerprint, free_pages: f,
+                                        total_pages: t }) = srx.recv() {
+                    merged.merge(&fingerprint);
+                    free_pages += f;
+                    total_pages += t;
+                }
+            }
+            let rc = router.counters();
+            let c = &mut merged.counters;
+            c.insert("router_affinity_hits".into(), rc.affinity_hits);
+            c.insert("router_load_routed".into(), rc.load_routed);
+            c.insert("shard_imbalance_max".into(), rc.imbalance_max);
+            let _ = reply.send(Outgoing::Metrics {
+                counters: merged.counters,
+                free_pages,
+                total_pages,
+            });
+        }
+    }
+}
+
+fn handle_connection(stream: TcpStream, tx: Sender<ToDispatcher>) -> Result<()> {
     let peer = stream.peer_addr()?;
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
@@ -173,12 +432,17 @@ fn handle_connection(stream: TcpStream, tx: Sender<Incoming>) -> Result<()> {
         if line.trim().is_empty() {
             continue;
         }
-        match parse_request(&line) {
-            Ok((prompt, max_new, sampling, meta)) => {
-                tx.send(Incoming { prompt, max_new_tokens: max_new,
-                                   sampling, meta,
-                                   reply: reply_tx.clone() })
-                    .context("engine gone")?;
+        match parse_line(&line) {
+            Ok(Parsed::Request(prompt, max_new, sampling, meta)) => {
+                tx.send(ToDispatcher::Request {
+                    prompt, max_new_tokens: max_new, sampling, meta,
+                    reply: reply_tx.clone() })
+                    .context("dispatcher gone")?;
+            }
+            Ok(Parsed::Command(kind)) => {
+                tx.send(ToDispatcher::Command {
+                    kind, reply: reply_tx.clone() })
+                    .context("dispatcher gone")?;
             }
             Err(e) => {
                 let _ = reply_tx.send(Outgoing::Error(format!("{e:#}")));
@@ -189,6 +453,31 @@ fn handle_connection(stream: TcpStream, tx: Sender<Incoming>) -> Result<()> {
     let _ = w.join();
     eprintln!("[server] {peer} disconnected");
     Ok(())
+}
+
+/// One parsed wire line: a generation request or a command.
+enum Parsed {
+    Request(Vec<i32>, usize, SamplingParams, RequestMeta),
+    Command(CmdKind),
+}
+
+/// Route a wire line: `{"cmd": ...}` lines are commands, everything
+/// else must be a request (`parse_request`).
+fn parse_line(line: &str) -> Result<Parsed> {
+    let v = json::parse(line)?;
+    if let Some(c) = v.get("cmd") {
+        let kind = match c.as_str()? {
+            "step" => CmdKind::Step,
+            "run" => CmdKind::Run,
+            "metrics" => CmdKind::Metrics,
+            other => bail!(
+                "unknown command '{other}' \
+                 (expected 'step', 'run' or 'metrics')"),
+        };
+        return Ok(Parsed::Command(kind));
+    }
+    let (p, n, s, m) = parse_request(line)?;
+    Ok(Parsed::Request(p, n, s, m))
 }
 
 fn parse_request(line: &str)
@@ -257,102 +546,6 @@ fn parse_request(line: &str)
         None => "default".to_string(),
     };
     Ok((prompt, max_new, sampling, RequestMeta::new(priority, tenant)))
-}
-
-/// The engine thread: intake + step loop.
-fn engine_loop(artifacts_dir: std::path::PathBuf, ecfg: EngineConfig,
-               rx: Receiver<Incoming>, max_requests: Option<usize>) -> Result<()> {
-    let rt = std::rc::Rc::new(Runtime::load_dir(artifacts_dir)?);
-    let mut engine = Engine::new(rt, ecfg)?;
-    let n = engine.warmup()?;
-    eprintln!("[server] warmed up {n} executables for '{}'", engine.model_name);
-
-    let mut inflight: HashMap<RequestId, (Sender<Outgoing>, u64)> =
-        HashMap::new();
-    let mut completed = 0usize;
-
-    loop {
-        // intake: drain pending requests (block briefly when idle)
-        loop {
-            let msg = if engine.has_unfinished() {
-                match rx.try_recv() {
-                    Ok(m) => Some(m),
-                    Err(TryRecvError::Empty) => None,
-                    Err(TryRecvError::Disconnected) => return Ok(()),
-                }
-            } else {
-                match rx.recv_timeout(Duration::from_millis(50)) {
-                    Ok(m) => Some(m),
-                    Err(_) => None,
-                }
-            };
-            let Some(m) = msg else { break };
-            match engine.add_group_with(m.prompt, m.max_new_tokens,
-                                        m.sampling, m.meta) {
-                Ok(id) => {
-                    inflight.insert(id, (m.reply, engine.now_ns()));
-                }
-                Err(e) => {
-                    let _ = m.reply.send(Outgoing::Error(format!("{e:#}")));
-                }
-            }
-        }
-
-        if !engine.has_unfinished() {
-            if max_requests.is_some_and(|m| completed >= m) {
-                eprintln!("[server] served {completed} requests, exiting");
-                eprintln!("{}", engine.metrics.dump());
-                return Ok(());
-            }
-            continue;
-        }
-
-        // stream this step's token events immediately — true incremental
-        // streaming, straight from the step-output pipeline
-        if let Some(report) = engine.step()? {
-            for t in &report.outputs.tokens {
-                if let Some((reply, _)) = inflight.get(&t.id) {
-                    let _ = reply.send(Outgoing::Token {
-                        id: t.id,
-                        branch: t.branch,
-                        token: t.token,
-                        position: t.position,
-                        logprob: t.logprob,
-                    });
-                }
-            }
-        }
-
-        // newly finished groups: one done event per branch (tokens were
-        // already streamed above; done carries the full list for
-        // cross-checking plus latency/score observability)
-        for g in engine.take_finished() {
-            if let Some((reply, enq)) = inflight.remove(&g.id) {
-                let total_ms = g.finish_ns
-                    .map(|t| (t.saturating_sub(enq)) as f64 / 1e6)
-                    .unwrap_or(0.0);
-                for s in &g.seqs {
-                    let ttft_ms = s.first_token_ns
-                        .or(g.first_token_ns)
-                        .map(|t| (t.saturating_sub(enq)) as f64 / 1e6)
-                        .unwrap_or(0.0);
-                    let _ = reply.send(Outgoing::Done {
-                        id: g.id,
-                        branch: s.branch,
-                        tokens: s.output.clone(),
-                        ttft_ms,
-                        total_ms,
-                        cached_tokens: g.cached_tokens,
-                        score: g.final_score(s),
-                        finish_reason: s
-                            .finish_reason()
-                            .map_or("length", |r| r.as_str()),
-                    });
-                }
-                completed += 1;
-            }
-        }
-    }
 }
 
 /// Blocking client for examples/tests.
@@ -504,11 +697,88 @@ impl Client {
         }
         Ok(out)
     }
+
+    /// Send a bare wire command (`"run"`, `"step"`, `"metrics"`).
+    pub fn send_cmd(&mut self, cmd: &str) -> Result<()> {
+        let req = obj(vec![("cmd", json::s(cmd))]);
+        writeln!(self.writer, "{req}")?;
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    /// Wait for the next `stepped` ack (lockstep mode); token/done
+    /// events on the way are passed through (callers consume them with
+    /// [`Client::wait_done`] *before* waiting for the ack, since the
+    /// ack is sent after the run's last event).
+    pub fn wait_stepped(&mut self) -> Result<u64> {
+        loop {
+            let mut line = String::new();
+            if self.reader.read_line(&mut line)? == 0 {
+                anyhow::bail!("server closed connection");
+            }
+            let v = json::parse(line.trim())?;
+            match v.req("event")?.as_str()? {
+                "stepped" => {
+                    return Ok(v.req("executed")?.as_i64()? as u64);
+                }
+                "error" => anyhow::bail!("server error: {}",
+                                         v.str_field("message")?),
+                _ => continue,
+            }
+        }
+    }
+
+    /// Lockstep convenience: `run` every shard until idle, returning
+    /// the total step count.
+    pub fn run_until_idle(&mut self) -> Result<u64> {
+        self.send_cmd("run")?;
+        self.wait_stepped()
+    }
+
+    /// Fetch the server's merged counter fingerprint + KV-page gauges
+    /// (`{"cmd": "metrics"}`).
+    pub fn fetch_metrics(&mut self) -> Result<ServerMetrics> {
+        self.send_cmd("metrics")?;
+        loop {
+            let mut line = String::new();
+            if self.reader.read_line(&mut line)? == 0 {
+                anyhow::bail!("server closed connection");
+            }
+            let v = json::parse(line.trim())?;
+            match v.req("event")?.as_str()? {
+                "metrics" => {
+                    let mut counters = std::collections::BTreeMap::new();
+                    for (k, val) in v.req("counters")?.as_obj()? {
+                        counters.insert(k.clone(), val.as_i64()? as u64);
+                    }
+                    return Ok(ServerMetrics {
+                        counters,
+                        free_pages: v.req("free_pages")?.as_usize()?,
+                        total_pages: v.req("total_pages")?.as_usize()?,
+                    });
+                }
+                "error" => anyhow::bail!("server error: {}",
+                                         v.str_field("message")?),
+                _ => continue,
+            }
+        }
+    }
+}
+
+/// The `metrics` command's reply, parsed.
+#[derive(Debug, Clone)]
+pub struct ServerMetrics {
+    /// Merged deterministic counters across shards + router counters.
+    pub counters: std::collections::BTreeMap<String, u64>,
+    pub free_pages: usize,
+    pub total_pages: usize,
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::collections::HashMap;
+    use std::time::Duration;
 
     #[test]
     fn request_parsing() {
@@ -787,6 +1057,120 @@ mod tests {
                 "beam completions must come ranked by score");
         assert!(done.iter().any(|d| d.tokens != done[0].tokens),
                 "hypotheses must diverge");
+        handle.join().unwrap().unwrap();
+    }
+
+    fn ephemeral_addr() -> String {
+        let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+        let port = probe.local_addr().unwrap().port();
+        drop(probe);
+        format!("127.0.0.1:{port}")
+    }
+
+    /// Regression test for the connection-thread lifecycle: a client
+    /// that disconnects mid-stream must get its group *cancelled* — the
+    /// broken pipe detected, remaining branches retired, pages
+    /// reclaimed — instead of the engine decoding into a dead socket.
+    /// Lockstep mode makes the sequence deterministic: the disconnected
+    /// request only starts stepping when the second client says `run`.
+    #[test]
+    fn disconnect_mid_stream_cancels_group_and_reclaims_pages() {
+        let dir = crate::default_artifacts_dir();
+        let bound = ephemeral_addr();
+        let server_addr = bound.clone();
+        let handle = std::thread::spawn(move || {
+            serve_with(dir, EngineConfig::default(), ServeOpts {
+                addr: server_addr,
+                max_requests: Some(3),
+                lockstep: true,
+                ..ServeOpts::default()
+            })
+        });
+        std::thread::sleep(Duration::from_millis(300));
+
+        // client A: submit a long request, then vanish without reading
+        let mut a = Client::connect(&bound).unwrap();
+        let prompt_a: Vec<i32> = (0..20).collect();
+        a.submit(&prompt_a, 48).unwrap();
+        std::thread::sleep(Duration::from_millis(100));
+        drop(a); // closes the socket; no run was ever issued
+
+        // client B: its own request + the run command that steps both
+        let mut b = Client::connect(&bound).unwrap();
+        b.submit(&[7, 8, 9], 4).unwrap();
+        b.send_cmd("run").unwrap();
+        let done = b.wait_done().unwrap();
+        assert_eq!(done.tokens.len(), 4, "B's request completes normally");
+        let executed = b.wait_stepped().unwrap();
+        assert!(executed > 0, "run must have stepped");
+        assert!(executed < 48,
+                "cancellation must cut A's 48-token decode short \
+                 (executed {executed} steps)");
+
+        let m = b.fetch_metrics().unwrap();
+        assert_eq!(m.counters.get("cancelled_groups"), Some(&1),
+                   "A's group must have been cancelled, counters: {:?}",
+                   m.counters);
+        assert_eq!(m.free_pages, m.total_pages,
+                   "every page must be reclaimed after the cancel");
+        assert!(m.counters.contains_key("router_affinity_hits"),
+                "router counters ride along in the metrics event");
+
+        // third completion releases the server
+        b.submit(&[1, 2, 3], 2).unwrap();
+        b.send_cmd("run").unwrap();
+        b.wait_done().unwrap();
+        handle.join().unwrap().unwrap();
+    }
+
+    /// Two engine shards behind the prefix-affinity router over real
+    /// TCP: identical prompts land on one shard's warm cache and
+    /// produce identical greedy tokens; the tier completes all
+    /// requests and exits.
+    #[test]
+    fn end_to_end_sharded_serving() {
+        let dir = crate::default_artifacts_dir();
+        let bound = ephemeral_addr();
+        let server_addr = bound.clone();
+        let handle = std::thread::spawn(move || {
+            serve_with(dir, EngineConfig::default(), ServeOpts {
+                addr: server_addr,
+                max_requests: Some(4),
+                router: RouterConfig {
+                    shards: 2,
+                    ..RouterConfig::default()
+                },
+                ..ServeOpts::default()
+            })
+        });
+        std::thread::sleep(Duration::from_millis(300));
+
+        let mut c = Client::connect(&bound).unwrap();
+        // run/step are lockstep-only: a free-running tier rejects them
+        c.send_cmd("run").unwrap();
+        let e = c.wait_stepped().unwrap_err();
+        assert!(format!("{e:#}").contains("lockstep"), "{e:#}");
+
+        let prompt: Vec<i32> = (0..24).collect(); // one full block + tail
+        let first = c.generate(&prompt, 4).unwrap();
+        let second = c.generate(&prompt, 4).unwrap();
+        assert_eq!(first.tokens, second.tokens,
+                   "same prompt, same greedy tokens through the tier");
+        assert_eq!(second.cached_tokens, 16,
+                   "affinity routed the repeat to the shard holding \
+                    the prefix hot");
+        let other = c.generate(&[900, 901, 902], 3).unwrap();
+        assert_eq!(other.tokens.len(), 3);
+
+        let m = c.fetch_metrics().unwrap();
+        assert!(m.counters.get("router_affinity_hits").copied()
+                    .unwrap_or(0) >= 1,
+                "the repeat prompt must count as an affinity hit: {:?}",
+                m.counters);
+        assert_eq!(m.counters.get("groups_finished"), Some(&3));
+
+        // fourth completion releases the server
+        c.generate(&[5, 6], 2).unwrap();
         handle.join().unwrap().unwrap();
     }
 }

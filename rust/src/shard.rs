@@ -1,0 +1,299 @@
+//! One engine shard of the sharded serving tier.
+//!
+//! The PJRT client is not `Send`, so every shard keeps the proven
+//! engine-owns-its-thread core: [`ShardHandle::spawn`] starts a thread
+//! that loads its *own* [`Runtime`] (shards share no device state),
+//! builds an [`Engine`] and serves a command channel. The server's
+//! dispatcher talks to shards exclusively through [`ShardCmd`]; events
+//! flow back to per-connection reply channels with shard-local request
+//! ids rewritten to the dispatcher's global ids.
+//!
+//! Two drive modes:
+//! * **free-running** (default) — the shard interleaves intake with
+//!   `step()` like the classic single-engine server loop: continuous
+//!   batching, stepping whenever work is pending.
+//! * **lockstep** — the shard *never* steps on its own; it blocks on
+//!   the command channel and executes steps only for [`ShardCmd::Run`]
+//!   / [`ShardCmd::Step`]. This makes the TCP wire path a deterministic
+//!   function of the client's command sequence (`docs/SHARDING.md`).
+//!
+//! Client disconnects are detected here: the first failed event send to
+//! a connection's reply channel cancels the group
+//! ([`Engine::cancel_group`]), reclaiming its pages instead of decoding
+//! into a dead socket.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::bench::Fingerprint;
+use crate::config::{EngineConfig, RequestMeta, SamplingParams};
+use crate::engine::Engine;
+use crate::kvcache::PrefixHasher;
+use crate::router::ShardStatus;
+use crate::runtime::Runtime;
+use crate::scheduler::RequestId;
+use crate::server::Outgoing;
+
+/// A placed request, forwarded by the dispatcher to its shard.
+pub struct ShardRequest {
+    /// Dispatcher-assigned id, global across shards — the `id` every
+    /// wire event carries.
+    pub global_id: RequestId,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub sampling: SamplingParams,
+    pub meta: RequestMeta,
+    /// The router's block-hash memo over the prompt (threaded into
+    /// [`Engine::add_group_routed`] so admission never re-hashes).
+    pub memo: PrefixHasher,
+    /// The submitting connection's event channel.
+    pub reply: Sender<Outgoing>,
+}
+
+/// Per-shard metrics snapshot ([`ShardCmd::Metrics`]).
+pub struct ShardReport {
+    /// The shard engine's deterministic counter fingerprint.
+    pub fingerprint: Fingerprint,
+    /// Free KV pages (evictable cached pages included) — gauge.
+    pub free_pages: usize,
+    /// Total KV pages — gauge.
+    pub total_pages: usize,
+}
+
+/// Commands a shard thread serves.
+pub enum ShardCmd {
+    Submit(ShardRequest),
+    /// Report the load snapshot the router places by.
+    Status(Sender<ShardStatus>),
+    /// Lockstep: step until idle; replies with the step count.
+    Run(Sender<u64>),
+    /// Lockstep: execute at most one step; replies 0 or 1.
+    Step(Sender<u64>),
+    /// Snapshot the shard's counters.
+    Metrics(Sender<ShardReport>),
+    /// Dump metrics and exit the shard thread.
+    Shutdown,
+}
+
+/// Handle to a spawned shard: its command channel + join handle.
+pub struct ShardHandle {
+    pub index: usize,
+    pub cmd: Sender<ShardCmd>,
+    join: JoinHandle<Result<()>>,
+}
+
+impl ShardHandle {
+    /// Spawn shard `index`. The engine (and its runtime) is constructed
+    /// inside the thread; a load failure surfaces from [`Self::join`]
+    /// (and closes `completions`, which the supervisor observes).
+    pub fn spawn(index: usize, artifacts_dir: PathBuf, ecfg: EngineConfig,
+                 lockstep: bool, completions: Sender<RequestId>) -> Self {
+        let (cmd_tx, cmd_rx) = channel::<ShardCmd>();
+        let join = thread::Builder::new()
+            .name(format!("shard-{index}"))
+            .spawn(move || {
+                shard_main(index, artifacts_dir, ecfg, lockstep, cmd_rx,
+                           completions)
+            })
+            .expect("spawning shard thread");
+        ShardHandle { index, cmd: cmd_tx, join }
+    }
+
+    /// Blocking status roundtrip (dispatcher convenience).
+    pub fn status(&self) -> Result<ShardStatus> {
+        let (tx, rx) = channel();
+        self.cmd
+            .send(ShardCmd::Status(tx))
+            .map_err(|_| anyhow!("shard {} gone", self.index))?;
+        rx.recv()
+            .map_err(|_| anyhow!("shard {} died mid-status", self.index))
+    }
+
+    pub fn join(self) -> Result<()> {
+        match self.join.join() {
+            Ok(r) => r,
+            Err(_) => Err(anyhow!("shard {} panicked", self.index)),
+        }
+    }
+}
+
+/// Book-keeping for one in-flight group on this shard.
+struct Inflight {
+    global: RequestId,
+    reply: Sender<Outgoing>,
+    enqueue_ns: u64,
+    /// Set after the first failed send: the group is being cancelled,
+    /// skip further writes.
+    dead: bool,
+}
+
+fn shard_main(index: usize, artifacts_dir: PathBuf, ecfg: EngineConfig,
+              lockstep: bool, rx: Receiver<ShardCmd>,
+              completions: Sender<RequestId>) -> Result<()> {
+    let rt = std::rc::Rc::new(Runtime::load_dir(artifacts_dir)?);
+    let mut engine = Engine::new(rt, ecfg)?;
+    let n = engine.warmup()?;
+    eprintln!("[shard {index}] warmed up {n} executables for '{}'",
+              engine.model_name);
+
+    let mut inflight: HashMap<RequestId, Inflight> = HashMap::new();
+
+    loop {
+        let cmd = if lockstep {
+            // lockstep never steps spontaneously: block for commands
+            match rx.recv() {
+                Ok(c) => Some(c),
+                Err(_) => return Ok(()),
+            }
+        } else if engine.has_unfinished() {
+            match rx.try_recv() {
+                Ok(c) => Some(c),
+                Err(TryRecvError::Empty) => None,
+                Err(TryRecvError::Disconnected) => return Ok(()),
+            }
+        } else {
+            match rx.recv_timeout(Duration::from_millis(50)) {
+                Ok(c) => Some(c),
+                Err(_) => None,
+            }
+        };
+
+        if let Some(cmd) = cmd {
+            match cmd {
+                ShardCmd::Submit(req) => {
+                    let global = req.global_id;
+                    match engine.add_group_routed(req.prompt,
+                                                  req.max_new_tokens,
+                                                  req.sampling, req.meta,
+                                                  req.memo) {
+                        Ok(local) => {
+                            inflight.insert(local, Inflight {
+                                global,
+                                reply: req.reply,
+                                enqueue_ns: engine.now_ns(),
+                                dead: false,
+                            });
+                        }
+                        Err(e) => {
+                            let _ = req.reply
+                                .send(Outgoing::Error(format!("{e:#}")));
+                        }
+                    }
+                }
+                ShardCmd::Status(reply) => {
+                    let _ = reply.send(ShardStatus {
+                        live_rows: engine.live_rows(),
+                        free_pages: engine.kv().free_pages(),
+                    });
+                }
+                ShardCmd::Run(reply) => {
+                    let mut steps = 0u64;
+                    while engine.has_unfinished() {
+                        step_once(&mut engine, &mut inflight, &completions)?;
+                        steps += 1;
+                    }
+                    let _ = reply.send(steps);
+                }
+                ShardCmd::Step(reply) => {
+                    let steps = if engine.has_unfinished() {
+                        step_once(&mut engine, &mut inflight, &completions)?;
+                        1
+                    } else {
+                        0
+                    };
+                    let _ = reply.send(steps);
+                }
+                ShardCmd::Metrics(reply) => {
+                    engine.sync_report_metrics();
+                    let _ = reply.send(ShardReport {
+                        fingerprint: Fingerprint::from_engine(&engine),
+                        free_pages: engine.kv().free_pages(),
+                        total_pages: engine.kv().total_pages(),
+                    });
+                }
+                ShardCmd::Shutdown => {
+                    eprintln!("[shard {index}] shutting down");
+                    eprintln!("{}", engine.metrics.dump());
+                    return Ok(());
+                }
+            }
+            // drain every queued command before stepping
+            continue;
+        }
+
+        if !lockstep && engine.has_unfinished() {
+            step_once(&mut engine, &mut inflight, &completions)?;
+        }
+    }
+}
+
+/// One engine step: stream its token events, detect dead connections
+/// (cancelling their groups and reclaiming pages), emit `done` events
+/// for finished groups — every event carries the *global* id.
+fn step_once(engine: &mut Engine, inflight: &mut HashMap<RequestId, Inflight>,
+             completions: &Sender<RequestId>) -> Result<()> {
+    let mut dead: Vec<RequestId> = Vec::new();
+    if let Some(report) = engine.step()? {
+        for t in &report.outputs.tokens {
+            if let Some(inf) = inflight.get_mut(&t.id) {
+                if inf.dead {
+                    continue;
+                }
+                let sent = inf.reply.send(Outgoing::Token {
+                    id: inf.global,
+                    branch: t.branch,
+                    token: t.token,
+                    position: t.position,
+                    logprob: t.logprob,
+                });
+                if sent.is_err() {
+                    // the connection's writer thread is gone (broken
+                    // pipe): stop decoding into the void
+                    inf.dead = true;
+                    dead.push(t.id);
+                }
+            }
+        }
+    }
+
+    for local in dead {
+        engine.cancel_group(local);
+        if let Some(inf) = inflight.remove(&local) {
+            // a cancellation completes the request for accounting
+            let _ = completions.send(inf.global);
+        }
+    }
+
+    for g in engine.take_finished() {
+        if let Some(inf) = inflight.remove(&g.id) {
+            let total_ms = g.finish_ns
+                .map(|t| (t.saturating_sub(inf.enqueue_ns)) as f64 / 1e6)
+                .unwrap_or(0.0);
+            for s in &g.seqs {
+                let ttft_ms = s.first_token_ns
+                    .or(g.first_token_ns)
+                    .map(|t| (t.saturating_sub(inf.enqueue_ns)) as f64 / 1e6)
+                    .unwrap_or(0.0);
+                let _ = inf.reply.send(Outgoing::Done {
+                    id: inf.global,
+                    branch: s.branch,
+                    tokens: s.output.clone(),
+                    ttft_ms,
+                    total_ms,
+                    cached_tokens: g.cached_tokens,
+                    score: g.final_score(s),
+                    finish_reason: s
+                        .finish_reason()
+                        .map_or("length", |r| r.as_str()),
+                });
+            }
+            let _ = completions.send(inf.global);
+        }
+    }
+    Ok(())
+}

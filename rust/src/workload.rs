@@ -465,6 +465,54 @@ impl MultiTenantStorm {
     }
 }
 
+/// Sharded-affinity workload: `families` distinct long shared prefixes,
+/// issued in interleaved waves (one request per family per wave, each
+/// with a unique tail). Routed by prefix affinity, every family's
+/// repeats land on the shard already holding its prefix hot; routed
+/// round-robin, each family ping-pongs between shards and every shard
+/// ends up computing (and caching) every prefix. The `sharded_affinity`
+/// bench scenario runs both policies over this workload and gates on
+/// affinity beating round-robin in hit tokens and pages allocated.
+#[derive(Debug, Clone)]
+pub struct ShardedAffinity {
+    /// Number of distinct shared-prefix families.
+    pub families: usize,
+    /// Shared prefix length per family (tokens).
+    pub shared_prefix: usize,
+    /// Unique per-request tail length (tokens).
+    pub tail: usize,
+    pub max_new_tokens: usize,
+    pub vocab: usize,
+}
+
+impl ShardedAffinity {
+    /// Generate `waves` waves, each one request per family in family
+    /// order — the admission sequence the router places. Family prefixes
+    /// are drawn once up front, so every wave repeats them exactly.
+    pub fn waves(&self, waves: usize, rng: &mut Rng) -> Vec<Vec<GroupRequest>> {
+        let prefixes: Vec<Vec<i32>> = (0..self.families)
+            .map(|_| rng.tokens(self.shared_prefix, self.vocab))
+            .collect();
+        (0..waves)
+            .map(|_| {
+                prefixes
+                    .iter()
+                    .map(|prefix| {
+                        let mut prompt = prefix.clone();
+                        prompt.extend(rng.tokens(self.tail.max(1), self.vocab));
+                        GroupRequest {
+                            prompt,
+                            sampling: SamplingParams::default(),
+                            max_new_tokens: self.max_new_tokens,
+                            meta: RequestMeta::default(),
+                        }
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
