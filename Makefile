@@ -5,7 +5,7 @@
 # real JAX/Pallas AOT flow (`python -m compile.aot`) produces the same
 # manifest schema on a machine with a working XLA toolchain.
 
-.PHONY: artifacts test tier1 bench bench-gate profile
+.PHONY: artifacts test tier1 test-fault bench bench-gate profile
 
 artifacts:
 	python3 python/compile/gen_sim_artifacts.py
@@ -14,6 +14,13 @@ tier1:
 	cd rust && cargo build --release && cargo test -q
 
 test: tier1
+
+# Crash-tolerance suite (docs/RECOVERY.md): the kill-at-every-step
+# failover property tests and the negative-path wire tests, in release
+# mode — the property sweep replays the whole workload once per kill
+# step, which is debug-build slow but release-build fast.
+test-fault:
+	cd rust && cargo test -q --release --test fault_injection --test wire_negative
 
 # End-to-end serving benchmark matrix → BENCH_local.json (docs/BENCHMARKS.md)
 # BENCH_ONLY=multi_tenant_storm (comma-separated) restricts the matrix.

@@ -1442,7 +1442,7 @@ class Router:
 SCENARIOS = ["prefill_heavy", "decode_heavy", "mixed_poisson", "prefix_replay",
              "parallel_sampling", "beam_search", "beam_early_stop",
              "preemption_pressure", "long_context_stall", "multi_tenant_storm",
-             "sharded_affinity", "server_replay"]
+             "sharded_affinity", "failover_replay", "server_replay"]
 
 STEPS_PER_S = 25.0
 SCHEMA_VERSION = 1
@@ -1489,6 +1489,21 @@ def merge_fingerprints(fps):
         for k, v in fp.items():
             out[k] = out.get(k, 0) + v
     return out
+
+
+def journal_line(seq, shard, step, prompt, max_new):
+    """journal.rs JournalEntry::serialize for default (greedy) sampling:
+    fixed field order, no whitespace, floats as 16-hex f64 bit patterns.
+    `journal_bytes` is a gated counter, so every line must be the exact
+    byte length the Rust dispatcher appends."""
+    bits = "%016x" % f64_bits(0.0)
+    return ('{"seq":%d,"shard":%d,"step":%d,"prompt":[%s],"max_new":%d,'
+            '"n":1,"seed":0,"temp_bits":"%s","beam_width":0,'
+            '"length_penalty_bits":"%s","early_stopping":false,'
+            '"stop_token_ids":[],"stop_sequences":[],'
+            '"priority":"interactive","tenant":"default"}'
+            % (seq, shard, step,
+               ",".join(str(t) for t in prompt), max_new, bits, bits))
 
 
 def sharded_affinity_waves(families, shared_prefix, tail, waves, rng):
@@ -1541,34 +1556,117 @@ def run_sharded_affinity():
     return fp, waves * families
 
 
+def run_failover_replay():
+    """bench.rs run_failover_replay — the SimTier kill/replay harness
+    reduces analytically: the faulted run's merged fingerprint equals the
+    crash-free run's by construction (the replacement engine replays the
+    journal at the recorded admission steps, reproducing the dead
+    shard's exact trajectory), so the port runs the clean two-shard tier
+    once and derives the recovery counters from per-wave bookkeeping:
+
+    * the kill lands at `horizon // 2` of shard 0's crash-free step
+      count, which falls in the first wave whose shard-0 drain performs
+      a dispatch check at or past that step;
+    * every shard-0 journal entry admitted up to and including that wave
+      is replayed (`replayed_groups`);
+    * replay steps the replacement to the *last* replayed entry's
+      admission step, so `replayed_tokens` is shard 0's cumulative
+      generated-token count after the preceding wave;
+    * `journal_bytes` sums the canonical line bytes of every admission
+      on both shards (the journal is append-only through the fault)."""
+    shards, waves, families = 2, 3, 3
+    router = Router(shards, AFFINITY, BLOCK_SIZE)
+    engines = [Engine(bench_config("failover_replay")) for _ in range(shards)]
+    seq = 0
+    entries = []      # (shard, wave) per admission, in admission order
+    shard0 = []       # (cumulative steps, cumulative generated) per wave
+    journal_bytes = 0
+    for w, wave in enumerate(
+            sharded_affinity_waves(families, 48, 6, waves, Rng(61)), 1):
+        for prompt in wave:
+            statuses = [(e.live_rows(), e.kv.free_pages()) for e in engines]
+            shard, memo = router.place(prompt, statuses)
+            seq += 1
+            line = journal_line(seq, shard, engines[shard].m["steps"],
+                                prompt, 4)
+            journal_bytes += len(line) + 1
+            entries.append((shard, w))
+            engines[shard].add_group_routed(
+                prompt, SamplingParams.greedy(), 4, memo)
+        for e in engines:
+            e.run_to_completion()
+        shard0.append((engines[0].m["steps"],
+                       engines[0].m["generated_tokens"]))
+    horizon = shard0[-1][0]
+    assert horizon >= 2, "failover_replay workload too small"
+    kill = horizon // 2
+    # SimTier::drain checks the kill before each dispatch: wave v checks
+    # at steps S_{v-1}..S_v-1 when shard 0 holds work, so the kill fires
+    # in the first wave with S_v > kill that advanced shard 0 at all
+    kill_wave = prev = None
+    for w, (s, _) in enumerate(shard0, 1):
+        if s > kill and s != prev:
+            kill_wave = w
+            break
+        prev = s
+    assert kill_wave is not None, "kill landed outside the storm"
+    replayed_groups = sum(1 for (shard, w) in entries
+                          if shard == 0 and w <= kill_wave)
+    assert replayed_groups > 0, "no shard-0 admissions before the kill"
+    last_wave = max(w for (shard, w) in entries
+                    if shard == 0 and w <= kill_wave)
+    replayed_tokens = shard0[last_wave - 2][1] if last_wave >= 2 else 0
+    fp = merge_fingerprints([fingerprint(e.m) for e in engines])
+    fp["router_affinity_hits"] = router.affinity_hits
+    fp["router_load_routed"] = router.load_routed
+    fp["shard_imbalance_max"] = router.imbalance_max
+    fp["shard_restarts"] = 1
+    fp["replayed_groups"] = replayed_groups
+    fp["replayed_tokens"] = replayed_tokens
+    fp["journal_bytes"] = journal_bytes
+    return fp, waves * families
+
+
 def run_server_replay():
     """bench.rs run_server_replay — the lockstep TCP replay reduces to:
     one single-shard tier, each request placed through the router (memo
     seeded into the engine) and drained to idle by the client's `run`
     command before the next submit. The fingerprint is the server's
-    merged `metrics` snapshot: engine counters + router counters."""
+    merged `metrics` snapshot: engine counters + router counters + the
+    recovery counters (no fault fires, so the restart/replay counters
+    are zero and `journal_bytes` counts the six admissions the
+    dispatcher journaled before forwarding)."""
     n_requests = 6
     engine = Engine(bench_config("server_replay"))
     router = Router(1, AFFINITY, BLOCK_SIZE)
     rng = Rng(41)
-    for _ in range(n_requests):
+    journal_bytes = 0
+    for seq in range(1, n_requests + 1):
         ln = rng.range(8, 32)
         prompt = rng.tokens(ln)
         shard, memo = router.place(
             prompt, [(engine.live_rows(), engine.kv.free_pages())])
         assert shard == 0
+        line = journal_line(seq, 0, engine.m["steps"], prompt, 12)
+        journal_bytes += len(line) + 1
         engine.add_group_routed(prompt, SamplingParams.greedy(), 12, memo)
         engine.run_to_completion()
     fp = fingerprint(engine.m)
     fp["router_affinity_hits"] = router.affinity_hits
     fp["router_load_routed"] = router.load_routed
     fp["shard_imbalance_max"] = router.imbalance_max
+    fp["shard_restarts"] = 0
+    fp["replayed_groups"] = 0
+    fp["replayed_tokens"] = 0
+    fp["journal_bytes"] = journal_bytes
     return fp, n_requests
 
 
 def run_scenario(name, policy=DECODE_FIRST):
     if name == "sharded_affinity":
         return run_sharded_affinity()
+    if name == "failover_replay":
+        return run_failover_replay()
     if name == "server_replay":
         return run_server_replay()
     engine = Engine(bench_config(name, policy))

@@ -164,12 +164,21 @@ pub fn gate_of(counter: &str) -> Gate {
     }
     match counter {
         "generated_tokens" | "groups_finished" | "stop_finishes"
-        | "beam_finished_hyps" | "cancelled_groups" => Gate::Exact,
+        | "beam_finished_hyps" | "cancelled_groups"
+        // the recovery path is deterministic end to end: the fault plan
+        // fixes which shard dies at which step, so the restart count and
+        // the replayed work are as gate-worthy as any output counter
+        | "shard_restarts" | "replayed_groups"
+        | "replayed_tokens" => Gate::Exact,
         "engine_steps" | "prompt_tokens" | "pages_allocated" | "cow_copies"
         | "preemptions" | "self_preemptions" | "prefix_evictions"
         | "beam_forks" | "beam_prunes" | "beam_pruned_pages"
         | "decode_stall_steps" | "max_decode_gap_steps"
-        | "arena_grows" | "shard_imbalance_max" => Gate::UpIsRegression,
+        | "arena_grows" | "shard_imbalance_max"
+        // journal growth is write-amplification on the admission path:
+        // byte-stable for a fixed workload, and creeping up means
+        // entries got fatter (or something journals twice)
+        | "journal_bytes" => Gate::UpIsRegression,
         "prefix_hit_tokens" | "router_affinity_hits" => Gate::DownIsRegression,
         // `prefill_chunk_deferrals` lands here on purpose: deferring a
         // chunk is the policy *working*, not a cost. `arena_reuses` and
@@ -420,7 +429,7 @@ pub fn default_report_path(label: &str) -> PathBuf {
 // ------------------------------------------------------------- scenarios
 
 /// The in-process scenario matrix, in run order.
-pub const SCENARIOS: [&str; 11] = [
+pub const SCENARIOS: [&str; 12] = [
     "prefill_heavy",
     "decode_heavy",
     "mixed_poisson",
@@ -432,6 +441,7 @@ pub const SCENARIOS: [&str; 11] = [
     "long_context_stall",
     "multi_tenant_storm",
     "sharded_affinity",
+    "failover_replay",
 ];
 
 const VOCAB: usize = 2048;
@@ -520,6 +530,11 @@ pub fn run_scenario(rt: &Rc<Runtime>, model: &str, name: &str)
         // multi-engine: drives its own two-shard tier instead of the
         // single engine below
         return run_sharded_affinity(rt, model);
+    }
+    if name == "failover_replay" {
+        // multi-engine with fault injection: kills a shard mid-storm and
+        // requires journal replay to reproduce the crash-free run
+        return run_failover_replay(rt, model);
     }
     let mut engine = Engine::new(rt.clone(), bench_config(model, name))?;
     engine.warmup()?;
@@ -766,6 +781,7 @@ fn run_sharded_affinity(rt: &Rc<Runtime>, model: &str)
                     .map(|e| ShardStatus {
                         live_rows: e.live_rows(),
                         free_pages: e.kv().free_pages(),
+                        steps: e.metrics.steps,
                     })
                     .collect();
                 let p = router.place(&r.prompt, &statuses);
@@ -839,6 +855,149 @@ fn run_sharded_affinity(rt: &Rc<Runtime>, model: &str)
             request_latency_ms: e0.metrics.group_latency_ms.snapshot(),
         },
         phases: PhaseProfile::from_metrics(&e0.metrics),
+    })
+}
+
+/// Crash-tolerant failover, in process: a two-shard [`SimTier`]
+/// (router + admission journals + fault injection, the same machinery
+/// the TCP dispatcher uses) runs the sharded-affinity storm twice —
+/// once crash-free, once with shard 0 killed halfway through its
+/// crash-free step count. The supervisor replays shard 0's journal into
+/// a replacement engine, and the scenario *fails* unless the faulted
+/// run's merged fingerprint matches the crash-free run on every
+/// counter, the client-visible token streams are byte-identical, and
+/// exactly one restart replayed at least one group. The recovery
+/// counters (`shard_restarts`, `replayed_groups`, `replayed_tokens`,
+/// `journal_bytes`) then join the gated fingerprint, and both runs'
+/// journals are dumped under `target/fault_journals/` so CI can attach
+/// them as artifacts when the gate trips.
+fn run_failover_replay(rt: &Rc<Runtime>, model: &str)
+    -> Result<ScenarioResult> {
+    use crate::config::{FaultPlan, RouterConfig};
+    use crate::journal::SimTier;
+    use crate::workload::ShardedAffinity;
+
+    const SHARDS: usize = 2;
+    let load = ShardedAffinity {
+        families: 3,
+        shared_prefix: 48,
+        tail: 6,
+        max_new_tokens: 4,
+        vocab: VOCAB,
+    };
+    let waves = 3usize;
+    let t0 = Instant::now();
+    let run_tier = |fault: FaultPlan| -> Result<SimTier> {
+        let rcfg = RouterConfig { shards: SHARDS, ..RouterConfig::default() };
+        let mut tier = SimTier::new(rt.clone(),
+                                    bench_config(model, "failover_replay"),
+                                    rcfg, fault)?;
+        // byte-identical admission sequence in both runs; each wave
+        // drains before the next places, like the sharded_affinity tier
+        for wave in load.waves(waves, &mut Rng::new(61)) {
+            for r in &wave {
+                tier.submit(r)?;
+            }
+            tier.drain()?;
+        }
+        Ok(tier)
+    };
+
+    let clean = run_tier(FaultPlan::default())?;
+    let horizon = clean.shard_steps(0);
+    if horizon < 2 {
+        bail!("failover_replay workload too small: shard 0 only reached \
+               step {horizon} crash-free");
+    }
+    // kill mid-storm: half the crash-free trajectory, so in-flight
+    // groups straddle the crash
+    let kill = horizon / 2;
+    let faulted = run_tier(FaultPlan {
+        kill_at_step: Some((0, kill)),
+        ..FaultPlan::default()
+    })?;
+
+    let dump_dir = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("target/fault_journals");
+    for k in 0..SHARDS {
+        clean.journal(k).dump(&dump_dir, "baseline")?;
+        faulted.journal(k).dump(&dump_dir, "faulted")?;
+    }
+
+    // the tentpole invariant: crash + replay must be invisible in the
+    // merged fingerprint — not just outputs, but *every* counter,
+    // because the dead engine's partial work vanished with it and the
+    // replacement re-derived the identical trajectory from the journal
+    let clean_fp = clean.merged_fingerprint();
+    let mut fp = faulted.merged_fingerprint();
+    if fp != clean_fp {
+        let mut diffs = Vec::new();
+        for (k, cv) in &clean_fp.counters {
+            let fv = fp.counters.get(k).copied().unwrap_or(0);
+            if fv != *cv {
+                diffs.push(format!("{k}: clean {cv} vs faulted {fv}"));
+            }
+        }
+        for (k, fv) in &fp.counters {
+            if !clean_fp.counters.contains_key(k) {
+                diffs.push(format!("{k}: clean absent vs faulted {fv}"));
+            }
+        }
+        bail!("failover replay diverged from the crash-free run \
+               (journals in {dump_dir:?}): {}", diffs.join(", "));
+    }
+    if !faulted.log.same_streams(&clean.log) {
+        bail!("failover replay changed a client-visible token stream \
+               (journals in {dump_dir:?})");
+    }
+    if faulted.restarts() != 1 {
+        bail!("expected exactly one shard restart, got {}",
+              faulted.restarts());
+    }
+    let stats = faulted.replay_stats();
+    if stats.replayed_groups == 0 {
+        bail!("the kill at step {kill} of {horizon} replayed no groups — \
+               the fault landed outside the storm");
+    }
+
+    let rc = faulted.router().counters();
+    fp.counters.insert("router_affinity_hits".into(), rc.affinity_hits);
+    fp.counters.insert("router_load_routed".into(), rc.load_routed);
+    fp.counters.insert("shard_imbalance_max".into(), rc.imbalance_max);
+    fp.counters.insert("shard_restarts".into(), faulted.restarts());
+    fp.counters.insert("replayed_groups".into(), stats.replayed_groups);
+    fp.counters.insert("replayed_tokens".into(), stats.replayed_tokens);
+    fp.counters.insert("journal_bytes".into(), faulted.journal_bytes());
+
+    // advisory timings merge across the tier's *live* engines (the
+    // replacement re-recorded shard 0's whole trajectory, so phase
+    // counts still sum to the merged engine_steps)
+    let mut m = crate::metrics::EngineMetrics::default();
+    for e in faulted.engines() {
+        m.ttft_ms.absorb(&e.metrics.ttft_ms);
+        m.inter_token_ms.absorb(&e.metrics.inter_token_ms);
+        m.group_latency_ms.absorb(&e.metrics.group_latency_ms);
+        m.phase_schedule_us.absorb(&e.metrics.phase_schedule_us);
+        m.phase_build_us.absorb(&e.metrics.phase_build_us);
+        m.phase_stage_us.absorb(&e.metrics.phase_stage_us);
+        m.phase_dispatch_us.absorb(&e.metrics.phase_dispatch_us);
+        m.phase_output_us.absorb(&e.metrics.phase_output_us);
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let generated = fp.counters["generated_tokens"];
+    Ok(ScenarioResult {
+        name: "failover_replay".to_string(),
+        deterministic: true,
+        requests: waves * load.families,
+        fingerprint: fp,
+        timings: Timings {
+            wall_s,
+            throughput_tok_s: generated as f64 / wall_s.max(1e-9),
+            ttft_ms: m.ttft_ms.snapshot(),
+            inter_token_ms: m.inter_token_ms.snapshot(),
+            request_latency_ms: m.group_latency_ms.snapshot(),
+        },
+        phases: PhaseProfile::from_metrics(&m),
     })
 }
 
@@ -1309,6 +1468,91 @@ mod tests {
         assert!(cmp2.timing_notes[0].contains("+100.0%"),
                 "real baselines keep percent deltas: {}",
                 cmp2.timing_notes[0]);
+    }
+
+    #[test]
+    fn recovery_counters_gate_in_their_classes() {
+        assert_eq!(gate_of("shard_restarts"), Gate::Exact);
+        assert_eq!(gate_of("replayed_groups"), Gate::Exact);
+        assert_eq!(gate_of("replayed_tokens"), Gate::Exact);
+        assert_eq!(gate_of("journal_bytes"), Gate::UpIsRegression);
+
+        // an unplanned extra restart fails even though "more recovery"
+        // might sound like more robustness: the fault plan is fixed, so
+        // any drift means the failure/detection behavior changed
+        let base = report_with(&[("shard_restarts", 1)]);
+        for v in [0, 2] {
+            let cur = report_with(&[("shard_restarts", v)]);
+            assert!(!compare(&cur, &base, false).passed(),
+                    "restart-count drift {v} must fail in either direction");
+        }
+        let base = report_with(&[("journal_bytes", 4096)]);
+        let fatter = report_with(&[("journal_bytes", 5000)]);
+        assert!(!compare(&fatter, &base, false).passed(),
+                "journal write amplification is a regression");
+        let leaner = report_with(&[("journal_bytes", 4000)]);
+        assert!(compare(&leaner, &base, false).passed());
+    }
+
+    /// Pseudo-random fingerprint over a small key universe, so merges
+    /// exercise both overlapping and disjoint key sets.
+    fn arb_fingerprint(rng: &mut crate::workload::Rng) -> Fingerprint {
+        const KEYS: [&str; 6] = ["engine_steps", "generated_tokens",
+                                 "pages_allocated", "prefix_hit_tokens",
+                                 "wfq_admitted_tokens:acme", "cow_copies"];
+        let mut fp = Fingerprint::default();
+        for k in KEYS {
+            if rng.range(0, 2) == 1 {
+                fp.counters.insert(k.to_string(),
+                                   rng.range(0, 1000) as u64);
+            }
+        }
+        fp
+    }
+
+    #[test]
+    fn merge_is_associative_and_order_independent() {
+        // the sharded scenarios gate on merged fingerprints, so the
+        // merge must not care how the supervisor happens to fold shards
+        let mut rng = crate::workload::Rng::new(97);
+        for _ in 0..200 {
+            let (a, b, c) = (arb_fingerprint(&mut rng),
+                             arb_fingerprint(&mut rng),
+                             arb_fingerprint(&mut rng));
+            // (a + b) + c
+            let mut left = a.clone();
+            left.merge(&b);
+            left.merge(&c);
+            // a + (b + c)
+            let mut bc = b.clone();
+            bc.merge(&c);
+            let mut right = a.clone();
+            right.merge(&bc);
+            assert_eq!(left, right, "merge must be associative");
+            // any permutation folds to the same result
+            let mut rev = c.clone();
+            rev.merge(&b);
+            rev.merge(&a);
+            assert_eq!(left, rev, "merge must be order-independent");
+        }
+    }
+
+    #[test]
+    fn merge_identity_and_missing_keys_sum_as_zero() {
+        let mut rng = crate::workload::Rng::new(131);
+        for _ in 0..50 {
+            let a = arb_fingerprint(&mut rng);
+            let mut with_empty = a.clone();
+            with_empty.merge(&Fingerprint::default());
+            assert_eq!(with_empty, a, "empty fingerprint is the identity");
+        }
+        let mut a = Fingerprint::default();
+        a.counters.insert("only_in_a".into(), 3);
+        let mut b = Fingerprint::default();
+        b.counters.insert("only_in_b".into(), 5);
+        a.merge(&b);
+        assert_eq!(a.counters["only_in_a"], 3);
+        assert_eq!(a.counters["only_in_b"], 5);
     }
 
     #[test]

@@ -626,6 +626,96 @@ impl Default for RouterConfig {
     }
 }
 
+/// Deterministic fault-injection plan for the serving tier (see
+/// `docs/RECOVERY.md`). Faults fire on *virtual* coordinates — an engine
+/// step count or an admission sequence number — never on wall time, so a
+/// crash is a reproducible test input: the same plan against the same
+/// workload kills the same shard at the same point every run.
+///
+/// The empty plan (`FaultPlan::default()`) injects nothing and is the
+/// production configuration.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Kill shard `k` (index) once its engine has dispatched `s` steps:
+    /// the shard thread exits with an error *before* dispatching step
+    /// `s + 1`, exactly as if the engine had panicked between steps. The
+    /// kill is one-shot — the supervisor's replacement shard does not
+    /// inherit it.
+    pub kill_at_step: Option<(usize, u64)>,
+    /// Kill the placed shard when admission sequence number `n` arrives,
+    /// *before* the dispatcher appends the journal entry: the request is
+    /// unrecoverable (never journaled) and the client receives a
+    /// structured `error` event — the documented lost-write window.
+    pub drop_before_append: Option<u64>,
+    /// Kill the placed shard when admission sequence number `n` arrives,
+    /// *after* the journal append but before the submit reaches the
+    /// shard: the request is recovered by replay and the client is
+    /// served with no error — the window the shutdown-ordering bugfix
+    /// closes.
+    pub drop_after_append: Option<u64>,
+    /// Replay the journal twice on every failover. Replay is idempotent
+    /// (a per-engine applied-sequence set makes the second pass a
+    /// no-op), so a doubled replay must not change any counter or emit
+    /// any duplicate event — this knob is how the tests prove it.
+    pub double_replay: bool,
+}
+
+impl FaultPlan {
+    /// Parse the `--fault` spec: comma-separated clauses out of
+    /// `kill:<shard>@<step>`, `drop-before@<seq>`, `drop-after@<seq>`,
+    /// `double-replay`. Example: `kill:0@12,double-replay`.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut plan = FaultPlan::default();
+        for clause in spec.split(',').filter(|c| !c.trim().is_empty()) {
+            let clause = clause.trim();
+            if clause == "double-replay" {
+                plan.double_replay = true;
+            } else if let Some(rest) = clause.strip_prefix("kill:") {
+                let (shard, step) = rest.split_once('@').ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "fault clause '{clause}' (want kill:<shard>@<step>)")
+                })?;
+                plan.kill_at_step = Some((
+                    shard.parse().map_err(|_| {
+                        anyhow::anyhow!("bad shard index in '{clause}'")
+                    })?,
+                    step.parse().map_err(|_| {
+                        anyhow::anyhow!("bad step in '{clause}'")
+                    })?,
+                ));
+            } else if let Some(seq) = clause.strip_prefix("drop-before@") {
+                plan.drop_before_append = Some(seq.parse().map_err(|_| {
+                    anyhow::anyhow!("bad sequence number in '{clause}'")
+                })?);
+            } else if let Some(seq) = clause.strip_prefix("drop-after@") {
+                plan.drop_after_append = Some(seq.parse().map_err(|_| {
+                    anyhow::anyhow!("bad sequence number in '{clause}'")
+                })?);
+            } else {
+                bail!(
+                    "unknown fault clause '{clause}' (expected \
+                     kill:<shard>@<step>, drop-before@<seq>, \
+                     drop-after@<seq> or double-replay)"
+                );
+            }
+        }
+        Ok(plan)
+    }
+
+    /// No faults configured — the production fast path.
+    pub fn is_empty(&self) -> bool {
+        *self == FaultPlan::default()
+    }
+
+    /// The step at which `shard` should die, if this plan kills it.
+    pub fn kill_step_for(&self, shard: usize) -> Option<u64> {
+        match self.kill_at_step {
+            Some((k, s)) if k == shard => Some(s),
+            _ => None,
+        }
+    }
+}
+
 pub fn cdiv(a: usize, b: usize) -> usize {
     a.div_ceil(b)
 }
@@ -832,6 +922,29 @@ mod tests {
         assert_eq!(cfg.prefill_budget(), 32);
         cfg.max_prefill_tokens_per_step = 4096;
         assert_eq!(cfg.prefill_budget(), cfg.max_batched_tokens);
+    }
+
+    #[test]
+    fn fault_plan_parse_roundtrip_and_rejects() {
+        let p = FaultPlan::parse("kill:0@12,double-replay").unwrap();
+        assert_eq!(p.kill_at_step, Some((0, 12)));
+        assert!(p.double_replay);
+        assert_eq!(p.kill_step_for(0), Some(12));
+        assert_eq!(p.kill_step_for(1), None);
+        assert!(!p.is_empty());
+
+        let p = FaultPlan::parse("drop-before@3").unwrap();
+        assert_eq!(p.drop_before_append, Some(3));
+        assert_eq!(p.drop_after_append, None);
+        let p = FaultPlan::parse("drop-after@7,kill:2@1").unwrap();
+        assert_eq!(p.drop_after_append, Some(7));
+        assert_eq!(p.kill_at_step, Some((2, 1)));
+
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("kill:0").is_err(), "missing @step");
+        assert!(FaultPlan::parse("kill:x@1").is_err());
+        assert!(FaultPlan::parse("drop-before@").is_err());
+        assert!(FaultPlan::parse("explode").is_err());
     }
 
     #[test]

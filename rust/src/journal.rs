@@ -1,0 +1,817 @@
+//! Crash-tolerant serving: the per-shard **admission journal** and the
+//! failover **replay** machinery (see `docs/RECOVERY.md`).
+//!
+//! The engine is a deterministic function of its admission sequence
+//! interleaved with step commands — the gated bench fingerprints prove
+//! it every CI run. This module exploits that determinism: the
+//! dispatcher journals every admission (request bytes + sampling params
+//! + the shard's step count at admission) *before* submitting it, and
+//! when a shard dies the supervisor spins up a replacement engine and
+//! replays the journal — stepping the fresh engine to each entry's
+//! admission step before re-admitting it — which reconstructs the dead
+//! shard's exact trajectory. The replacement's final counters equal the
+//! crash-free shard's, so the tier's merged fingerprint survives a kill
+//! byte-for-byte; clients see a latency blip, never a dropped stream.
+//!
+//! Three layers live here:
+//!
+//! * [`JournalEntry`] / [`AdmissionJournal`] — the canonical journal
+//!   line format (one JSON object per line, fixed field order, floats
+//!   as IEEE-754 bit patterns in hex so the Python bench port can
+//!   reproduce the bytes exactly) and the per-shard append log.
+//! * [`replay_journal`] over a [`ReplayHost`] — the one replay routine
+//!   both the TCP shard supervisor (`crate::server`) and the in-process
+//!   [`SimTier`] run. Replay is idempotent: a per-engine-instance
+//!   applied-sequence set makes a second pass (or a duplicate delivery)
+//!   a no-op, which the `double-replay` fault proves.
+//! * [`StreamDedupe`] — the per-connection event filter that makes
+//!   resume-without-re-emit hold *by construction*: replayed token
+//!   events with non-advancing positions and duplicate `done` events
+//!   are dropped at the single choke point every event passes through.
+//!
+//! [`SimTier`] is the deterministic two-sided test harness: the
+//! `failover_replay` bench scenario and the kill-at-every-step property
+//! test drive the same dispatcher logic (journal-before-submit, status
+//! polling, failover, replay, dedupe) in process, where a "kill"
+//! discards the engine outright — exactly what a dead shard thread
+//! loses — and virtual step counts make every crash reproducible.
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::fmt::Write as _;
+use std::fs::File;
+use std::io::Write as _;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::bench::Fingerprint;
+use crate::config::{EngineConfig, FaultPlan, Priority, RequestMeta,
+                    RouterConfig, SamplingMode, SamplingParams};
+use crate::engine::Engine;
+use crate::kvcache::PrefixHasher;
+use crate::router::{Router, ShardStatus};
+use crate::runtime::Runtime;
+use crate::scheduler::RequestId;
+use crate::workload::GroupRequest;
+
+// ------------------------------------------------------------ the journal
+
+/// One journaled admission: everything needed to re-admit the request
+/// into a fresh engine at the exact point of its original admission.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JournalEntry {
+    /// Dispatcher-assigned global sequence number (the wire `id`).
+    pub seq: u64,
+    /// Shard the request was placed on.
+    pub shard: usize,
+    /// The shard engine's dispatched-step count at admission. Replay
+    /// steps the replacement engine to exactly this count before
+    /// re-admitting, reproducing the original admission/step
+    /// interleaving (the engine is deterministic in that interleaving).
+    pub step: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub sampling: SamplingParams,
+    pub meta: RequestMeta,
+}
+
+fn ints(v: &[i32]) -> String {
+    let mut s = String::from("[");
+    for (i, t) in v.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        let _ = write!(s, "{t}");
+    }
+    s.push(']');
+    s
+}
+
+impl JournalEntry {
+    /// The canonical single-line serialization: fixed field order, no
+    /// whitespace, floats as 16-digit-hex IEEE-754 bit patterns
+    /// (`f64::to_bits`) so the bytes are identical across languages —
+    /// `journal_bytes` is a gated counter, so the Python bench port
+    /// must produce the same line lengths.
+    pub fn serialize(&self) -> String {
+        let (beam_width, lp_bits, early) = match self.sampling.mode {
+            SamplingMode::Parallel => (0usize, 0u64, false),
+            SamplingMode::Beam { beam_width, length_penalty,
+                                 early_stopping } =>
+                (beam_width, length_penalty.to_bits(), early_stopping),
+        };
+        let mut seqs = String::from("[");
+        for (i, s) in self.sampling.stop_sequences.iter().enumerate() {
+            if i > 0 {
+                seqs.push(',');
+            }
+            seqs.push_str(&ints(s));
+        }
+        seqs.push(']');
+        format!(
+            "{{\"seq\":{},\"shard\":{},\"step\":{},\"prompt\":{},\
+             \"max_new\":{},\"n\":{},\"seed\":{},\"temp_bits\":\"{:016x}\",\
+             \"beam_width\":{},\"length_penalty_bits\":\"{:016x}\",\
+             \"early_stopping\":{},\"stop_token_ids\":{},\
+             \"stop_sequences\":{},\"priority\":{},\"tenant\":{}}}",
+            self.seq,
+            self.shard,
+            self.step,
+            ints(&self.prompt),
+            self.max_new_tokens,
+            self.sampling.n,
+            self.sampling.seed,
+            self.sampling.temperature.to_bits(),
+            beam_width,
+            lp_bits,
+            early,
+            ints(&self.sampling.stop_token_ids),
+            seqs,
+            crate::json::s(self.meta.priority.as_str()),
+            crate::json::s(&self.meta.tenant),
+        )
+    }
+
+    /// Parse one canonical journal line back into an entry
+    /// (`serialize` → `parse` is identity).
+    pub fn parse(line: &str) -> Result<Self> {
+        let v = crate::json::parse(line).context("parsing journal line")?;
+        let bits = |key: &str| -> Result<u64> {
+            let s = v.req(key)?.as_str()?;
+            u64::from_str_radix(s, 16)
+                .with_context(|| format!("journal field '{key}' = '{s}'"))
+        };
+        let toks = |val: &crate::json::Value| -> Result<Vec<i32>> {
+            val.as_arr()?.iter().map(|t| Ok(t.as_i64()? as i32)).collect()
+        };
+        let beam_width = v.usize_field("beam_width")?;
+        let n = v.usize_field("n")?;
+        let seed = v.req("seed")?.as_f64()? as u64;
+        let temperature = f64::from_bits(bits("temp_bits")?);
+        let mode = if beam_width > 0 {
+            SamplingMode::Beam {
+                beam_width,
+                length_penalty: f64::from_bits(bits("length_penalty_bits")?),
+                early_stopping: v.req("early_stopping")?.as_bool()?,
+            }
+        } else {
+            SamplingMode::Parallel
+        };
+        Ok(JournalEntry {
+            seq: v.req("seq")?.as_f64()? as u64,
+            shard: v.usize_field("shard")?,
+            step: v.req("step")?.as_f64()? as u64,
+            prompt: toks(v.req("prompt")?)?,
+            max_new_tokens: v.usize_field("max_new")?,
+            sampling: SamplingParams {
+                n,
+                seed,
+                temperature,
+                mode,
+                stop_token_ids: toks(v.req("stop_token_ids")?)?,
+                stop_sequences: v
+                    .req("stop_sequences")?
+                    .as_arr()?
+                    .iter()
+                    .map(toks)
+                    .collect::<Result<_>>()?,
+            },
+            meta: RequestMeta {
+                priority: Priority::parse(v.req("priority")?.as_str()?)?,
+                tenant: v.str_field("tenant")?,
+            },
+        })
+    }
+}
+
+/// The per-shard admission log the dispatcher appends to *before* every
+/// submit. Entries live in memory (the in-process supervisor replays
+/// from here); an optional file sink streams every line to disk for
+/// post-mortems and CI artifacts.
+pub struct AdmissionJournal {
+    shard: usize,
+    entries: Vec<JournalEntry>,
+    bytes: u64,
+    sink: Option<File>,
+}
+
+impl AdmissionJournal {
+    pub fn new(shard: usize) -> Self {
+        AdmissionJournal { shard, entries: Vec::new(), bytes: 0, sink: None }
+    }
+
+    /// A journal that also streams every appended line to
+    /// `dir/shard-<index>.journal` (created/truncated).
+    pub fn with_sink(shard: usize, dir: &Path) -> Result<Self> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating journal dir {dir:?}"))?;
+        let path = dir.join(format!("shard-{shard}.journal"));
+        let sink = File::create(&path)
+            .with_context(|| format!("creating journal {path:?}"))?;
+        Ok(AdmissionJournal {
+            shard,
+            entries: Vec::new(),
+            bytes: 0,
+            sink: Some(sink),
+        })
+    }
+
+    /// Append one admission. `bytes` grows by the canonical line length
+    /// plus the newline — the `journal_bytes` gauge of the fingerprint.
+    pub fn append(&mut self, entry: JournalEntry) -> Result<()> {
+        debug_assert_eq!(entry.shard, self.shard);
+        let line = entry.serialize();
+        self.bytes += line.len() as u64 + 1;
+        if let Some(f) = &mut self.sink {
+            writeln!(f, "{line}").context("appending to journal sink")?;
+            f.flush().context("flushing journal sink")?;
+        }
+        self.entries.push(entry);
+        Ok(())
+    }
+
+    pub fn entries(&self) -> &[JournalEntry] {
+        &self.entries
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    /// All journal lines, newline-terminated (dumps, tests).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for e in &self.entries {
+            s.push_str(&e.serialize());
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Write the full journal to `dir/<label>-shard-<index>.journal`
+    /// (the bench scenario dumps these as CI failure artifacts).
+    pub fn dump(&self, dir: &Path, label: &str) -> Result<()> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating journal dir {dir:?}"))?;
+        let path = dir.join(format!("{label}-shard-{}.journal", self.shard));
+        std::fs::write(&path, self.render())
+            .with_context(|| format!("writing journal {path:?}"))
+    }
+
+    /// Load a journal file written by [`AdmissionJournal::dump`] or the
+    /// streaming sink.
+    pub fn load(path: &Path) -> Result<Vec<JournalEntry>> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading journal {path:?}"))?;
+        text.lines()
+            .filter(|l| !l.trim().is_empty())
+            .map(JournalEntry::parse)
+            .collect()
+    }
+}
+
+// ----------------------------------------------------------------- replay
+
+/// Recovery counters of one replay, merged into the shard fingerprint.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ReplayStats {
+    /// Journal entries re-admitted into the replacement engine.
+    pub replayed_groups: u64,
+    /// Tokens the replacement engine had regenerated by the time the
+    /// last journal entry was re-admitted (the catch-up work).
+    pub replayed_tokens: u64,
+}
+
+impl ReplayStats {
+    pub fn absorb(&mut self, other: ReplayStats) {
+        self.replayed_groups += other.replayed_groups;
+        self.replayed_tokens += other.replayed_tokens;
+    }
+}
+
+/// The engine-owning context [`replay_journal`] drives: the TCP shard
+/// thread and the in-process [`SimTier`] each adapt their own
+/// book-keeping (in-flight maps, reply channels, event sinks) behind
+/// this trait so the replay algorithm exists exactly once.
+pub trait ReplayHost {
+    fn engine(&mut self) -> &mut Engine;
+    /// A journal entry was re-admitted as local request id `local`:
+    /// re-register whatever maps events back to the global id.
+    fn register(&mut self, local: RequestId, entry: &JournalEntry);
+    /// Dispatch one engine step, routing its events wherever this host
+    /// routes events (they pass the dedupe filter downstream, so
+    /// re-emissions are harmless).
+    fn step(&mut self) -> Result<()>;
+}
+
+/// Replay `entries` into a fresh engine: for each entry (in order),
+/// step the engine to the entry's admission step, then re-admit it.
+/// Identical admission/step interleaving → identical engine trajectory,
+/// so the replacement's final counters equal the crash-free shard's.
+///
+/// Idempotent via `applied`: entries whose `seq` is already in the set
+/// are skipped, so `passes > 1` (the `double-replay` fault) and
+/// duplicate deliveries are no-ops. `applied` must be scoped to one
+/// engine *instance* — a new replacement starts with an empty set.
+pub fn replay_journal(host: &mut impl ReplayHost, entries: &[JournalEntry],
+                      passes: usize, applied: &mut HashSet<u64>)
+    -> Result<ReplayStats> {
+    let mut stats = ReplayStats::default();
+    let block_size = host.engine().ecfg.block_size;
+    for _ in 0..passes.max(1) {
+        for entry in entries {
+            if applied.contains(&entry.seq) {
+                continue;
+            }
+            while host.engine().metrics.steps < entry.step {
+                if !host.engine().has_unfinished() {
+                    bail!(
+                        "journal replay stalled at step {} targeting step {} \
+                         (seq {}): the journal does not reproduce the \
+                         original workload",
+                        host.engine().metrics.steps, entry.step, entry.seq
+                    );
+                }
+                host.step()?;
+            }
+            // rebuild the router's block-hash memo exactly as placement
+            // built it, so admission probes skip the same hash work and
+            // `prefix_hash_skips` replays bit-for-bit
+            let mut memo = PrefixHasher::default();
+            memo.update(&entry.prompt, block_size);
+            let local = host.engine().add_group_routed(
+                entry.prompt.clone(), entry.max_new_tokens,
+                entry.sampling.clone(), entry.meta.clone(), memo)?;
+            host.register(local, entry);
+            applied.insert(entry.seq);
+            stats.replayed_groups += 1;
+        }
+    }
+    stats.replayed_tokens = host.engine().metrics.generated_tokens;
+    Ok(stats)
+}
+
+// ---------------------------------------------------------- stream dedupe
+
+/// Per-connection event filter enforcing the wire protocol's
+/// position-monotonicity guarantee across failover: a `token` event is
+/// forwarded only when its `position` strictly advances the branch's
+/// stream, and at most one `done` per `(id, branch)` passes. Replay
+/// re-emissions (including an entire `double-replay` pass) are dropped
+/// here, at the single choke point every outgoing event crosses.
+#[derive(Debug, Default)]
+pub struct StreamDedupe {
+    last: HashMap<(u64, usize), usize>,
+    done: HashSet<(u64, usize)>,
+}
+
+impl StreamDedupe {
+    /// Forward this token event? Records the position when it advances.
+    pub fn admit_token(&mut self, id: u64, branch: usize, position: usize)
+        -> bool {
+        match self.last.get_mut(&(id, branch)) {
+            Some(last) if position <= *last => false,
+            Some(last) => {
+                *last = position;
+                true
+            }
+            None => {
+                self.last.insert((id, branch), position);
+                true
+            }
+        }
+    }
+
+    /// Forward this done event? (First one per branch wins.)
+    pub fn admit_done(&mut self, id: u64, branch: usize) -> bool {
+        self.done.insert((id, branch))
+    }
+}
+
+// --------------------------------------------------------------- sim tier
+
+/// What a client of the [`SimTier`] observed, post-dedupe-filter: the
+/// token stream and completion of every `(global id, branch)`. The
+/// property tests compare this map between a faulted and a crash-free
+/// run — byte equality means no client saw a dropped, repeated or
+/// reordered token across the failover.
+#[derive(Debug, Default)]
+pub struct StreamLog {
+    dedupe: StreamDedupe,
+    /// Forwarded tokens per `(id, branch)`, in emission order.
+    pub tokens: BTreeMap<(u64, usize), Vec<i32>>,
+    /// Final outputs per `(id, branch)` from the forwarded `done`s.
+    pub done: BTreeMap<(u64, usize), Vec<i32>>,
+}
+
+impl StreamLog {
+    /// Did the clients of this run observe exactly the same streams as
+    /// the clients of `other`? (The failover parity check.)
+    pub fn same_streams(&self, other: &StreamLog) -> bool {
+        self.tokens == other.tokens && self.done == other.done
+    }
+
+    fn token(&mut self, id: u64, branch: usize, position: usize, token: i32)
+        -> Result<()> {
+        if self.dedupe.admit_token(id, branch, position) {
+            let stream = self.tokens.entry((id, branch)).or_default();
+            if position != stream.len() {
+                bail!(
+                    "position gap on ({id}, {branch}): forwarded position \
+                     {position}, expected {}",
+                    stream.len()
+                );
+            }
+            stream.push(token);
+        }
+        Ok(())
+    }
+
+    fn finish(&mut self, id: u64, branch: usize, tokens: Vec<i32>) {
+        if self.dedupe.admit_done(id, branch) {
+            self.done.insert((id, branch), tokens);
+        }
+    }
+}
+
+struct SimShard {
+    engine: Engine,
+    journal: AdmissionJournal,
+    /// local request id → global sequence number, for the *current*
+    /// engine instance (rebuilt by replay after a kill).
+    locals: HashMap<RequestId, u64>,
+    /// Sequence numbers admitted into the current engine instance.
+    applied: HashSet<u64>,
+    /// One-shot kill: die before dispatching a step once the engine
+    /// has dispatched this many.
+    kill_at: Option<u64>,
+    stats: ReplayStats,
+}
+
+/// In-process replica of the sharded serving tier's dispatcher with the
+/// fault-injection layer built in: N engines behind the real
+/// [`Router`], journal-before-submit, kill/replay failover and the
+/// client-side dedupe filter — everything deterministic in virtual
+/// steps, so "kill shard 0 at step 12" is a reproducible test input.
+/// The `failover_replay` bench scenario and the kill-at-every-step
+/// property test both run on this harness.
+pub struct SimTier {
+    rt: Rc<Runtime>,
+    ecfg: EngineConfig,
+    router: Router,
+    shards: Vec<SimShard>,
+    fault: FaultPlan,
+    next_seq: u64,
+    restarts: u64,
+    /// Client-visible structured errors (e.g. a request lost in the
+    /// pre-journal window of `drop-before@seq`).
+    pub errors: Vec<String>,
+    /// Everything the (virtual) clients observed, post-filter.
+    pub log: StreamLog,
+}
+
+impl SimTier {
+    pub fn new(rt: Rc<Runtime>, ecfg: EngineConfig, rcfg: RouterConfig,
+               fault: FaultPlan) -> Result<Self> {
+        let router = Router::new(rcfg.clone(), ecfg.block_size);
+        let mut shards = Vec::with_capacity(rcfg.shards);
+        for k in 0..rcfg.shards {
+            let engine = Engine::new(rt.clone(), ecfg.clone())?;
+            engine.warmup()?;
+            shards.push(SimShard {
+                engine,
+                journal: AdmissionJournal::new(k),
+                locals: HashMap::new(),
+                applied: HashSet::new(),
+                kill_at: fault.kill_step_for(k),
+                stats: ReplayStats::default(),
+            });
+        }
+        Ok(SimTier {
+            rt,
+            ecfg,
+            router,
+            shards,
+            fault,
+            next_seq: 1,
+            restarts: 0,
+            errors: Vec::new(),
+            log: StreamLog::default(),
+        })
+    }
+
+    /// Place, journal and admit one request; returns its global id.
+    /// The `drop-before`/`drop-after` faults fire here, killing the
+    /// placed shard around the journal append.
+    pub fn submit(&mut self, r: &GroupRequest) -> Result<u64> {
+        let statuses: Vec<ShardStatus> = self
+            .shards
+            .iter()
+            .map(|s| ShardStatus {
+                live_rows: s.engine.live_rows(),
+                free_pages: s.engine.kv().free_pages(),
+                steps: s.engine.metrics.steps,
+            })
+            .collect();
+        let p = self.router.place(&r.prompt, &statuses);
+        let seq = self.next_seq;
+        self.next_seq += 1;
+
+        if self.fault.drop_before_append == Some(seq) {
+            // the shard dies before the journal append: the request is
+            // in the documented lost-write window — the client gets a
+            // structured error, and the failover replay (which cannot
+            // know about an unjournaled request) must still reproduce
+            // every *other* stream
+            self.fail_over(p.shard)?;
+            self.errors.push(format!(
+                "request {seq}: shard {} is gone (lost before journal \
+                 append)",
+                p.shard
+            ));
+            return Ok(seq);
+        }
+
+        let entry = JournalEntry {
+            seq,
+            shard: p.shard,
+            step: statuses[p.shard].steps,
+            prompt: r.prompt.clone(),
+            max_new_tokens: r.max_new_tokens,
+            sampling: r.sampling.clone(),
+            meta: r.meta.clone(),
+        };
+        self.shards[p.shard].journal.append(entry)?;
+
+        if self.fault.drop_after_append == Some(seq) {
+            // journaled but never submitted — the exact window the
+            // shutdown-ordering bugfix closes: failover replays the
+            // entry, so the client is served with no error
+            self.fail_over(p.shard)?;
+            return Ok(seq);
+        }
+
+        let shard = &mut self.shards[p.shard];
+        let entry = shard.journal.entries().last().unwrap().clone();
+        let mut memo = PrefixHasher::default();
+        memo.update(&entry.prompt, self.ecfg.block_size);
+        let local = shard.engine.add_group_routed(
+            entry.prompt.clone(), entry.max_new_tokens,
+            entry.sampling.clone(), entry.meta.clone(), memo)?;
+        shard.locals.insert(local, seq);
+        shard.applied.insert(seq);
+        Ok(seq)
+    }
+
+    /// Drive every shard to completion (shard-by-shard, in shard
+    /// order, like the bench tier's wave drains). The `kill` fault
+    /// fires here: before each dispatch the shard checks its virtual
+    /// kill step and dies in place, triggering failover + replay.
+    pub fn drain(&mut self) -> Result<()> {
+        for k in 0..self.shards.len() {
+            while self.shards[k].engine.has_unfinished() {
+                if let Some(s) = self.shards[k].kill_at {
+                    if self.shards[k].engine.metrics.steps >= s {
+                        self.fail_over(k)?;
+                        continue;
+                    }
+                }
+                let shard = &mut self.shards[k];
+                step_sim(&mut shard.engine, &shard.locals, &mut self.log)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// The supervisor: discard shard `k`'s engine (everything a dead
+    /// shard thread loses — in-flight groups, counters, cache), build
+    /// a replacement and replay the journal into it.
+    fn fail_over(&mut self, k: usize) -> Result<()> {
+        self.restarts += 1;
+        let engine = Engine::new(self.rt.clone(), self.ecfg.clone())?;
+        engine.warmup()?;
+        let shard = &mut self.shards[k];
+        shard.engine = engine;
+        shard.locals.clear();
+        shard.applied.clear();
+        shard.kill_at = None; // kills are one-shot
+        let passes = if self.fault.double_replay { 2 } else { 1 };
+        let entries = shard.journal.entries().to_vec();
+        let mut applied = HashSet::new();
+        let stats = {
+            let shard = &mut self.shards[k];
+            let mut host = SimReplayHost { shard, log: &mut self.log };
+            replay_journal(&mut host, &entries, passes, &mut applied)?
+        };
+        let shard = &mut self.shards[k];
+        shard.applied = applied;
+        shard.stats.absorb(stats);
+        Ok(())
+    }
+
+    /// Merged engine-counter fingerprint across live shards (the dead
+    /// engine's partial counters died with it; its replacement redid
+    /// the full trajectory, so the merge equals the crash-free run's).
+    pub fn merged_fingerprint(&self) -> Fingerprint {
+        let mut fp = Fingerprint::default();
+        for s in &self.shards {
+            fp.merge(&Fingerprint::from_engine(&s.engine));
+        }
+        fp
+    }
+
+    pub fn restarts(&self) -> u64 {
+        self.restarts
+    }
+
+    pub fn replay_stats(&self) -> ReplayStats {
+        let mut stats = ReplayStats::default();
+        for s in &self.shards {
+            stats.absorb(s.stats);
+        }
+        stats
+    }
+
+    pub fn journal_bytes(&self) -> u64 {
+        self.shards.iter().map(|s| s.journal.bytes()).sum()
+    }
+
+    pub fn journal(&self, shard: usize) -> &AdmissionJournal {
+        &self.shards[shard].journal
+    }
+
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    pub fn shard_steps(&self, shard: usize) -> u64 {
+        self.shards[shard].engine.metrics.steps
+    }
+
+    pub fn engines(&self) -> Vec<&Engine> {
+        self.shards.iter().map(|s| &s.engine).collect()
+    }
+}
+
+struct SimReplayHost<'a> {
+    shard: &'a mut SimShard,
+    log: &'a mut StreamLog,
+}
+
+impl ReplayHost for SimReplayHost<'_> {
+    fn engine(&mut self) -> &mut Engine {
+        &mut self.shard.engine
+    }
+
+    fn register(&mut self, local: RequestId, entry: &JournalEntry) {
+        self.shard.locals.insert(local, entry.seq);
+    }
+
+    fn step(&mut self) -> Result<()> {
+        step_sim(&mut self.shard.engine, &self.shard.locals, self.log)
+    }
+}
+
+/// One engine step, with the step's events routed into the stream log
+/// through the dedupe filter (replay re-emissions are dropped there).
+fn step_sim(engine: &mut Engine, locals: &HashMap<RequestId, u64>,
+            log: &mut StreamLog) -> Result<()> {
+    match engine.step()? {
+        Some(report) => {
+            for t in &report.outputs.tokens {
+                if let Some(&global) = locals.get(&t.id) {
+                    log.token(global, t.branch, t.position, t.token)?;
+                }
+            }
+        }
+        None => {
+            if engine.has_unfinished() {
+                bail!("scheduler made no progress with work pending");
+            }
+        }
+    }
+    for g in engine.take_finished() {
+        if let Some(&global) = locals.get(&g.id) {
+            for s in &g.seqs {
+                log.finish(global, s.branch, s.output.clone());
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry() -> JournalEntry {
+        JournalEntry {
+            seq: 7,
+            shard: 1,
+            step: 42,
+            prompt: vec![1, 2, 3, 4],
+            max_new_tokens: 6,
+            sampling: SamplingParams::default(),
+            meta: RequestMeta::default(),
+        }
+    }
+
+    #[test]
+    fn journal_line_roundtrips_and_is_canonical() {
+        let e = entry();
+        let line = e.serialize();
+        assert_eq!(
+            line,
+            "{\"seq\":7,\"shard\":1,\"step\":42,\"prompt\":[1,2,3,4],\
+             \"max_new\":6,\"n\":1,\"seed\":0,\
+             \"temp_bits\":\"0000000000000000\",\"beam_width\":0,\
+             \"length_penalty_bits\":\"0000000000000000\",\
+             \"early_stopping\":false,\"stop_token_ids\":[],\
+             \"stop_sequences\":[],\"priority\":\"interactive\",\
+             \"tenant\":\"default\"}"
+        );
+        assert_eq!(JournalEntry::parse(&line).unwrap(), e);
+    }
+
+    #[test]
+    fn journal_line_roundtrips_beam_and_stops_bit_exactly() {
+        let mut e = entry();
+        e.sampling = SamplingParams::beam(3, 0.7, 9)
+            .with_early_stopping(true)
+            .with_stop_tokens(vec![5, 9])
+            .with_stop_sequences(vec![vec![1, 2], vec![7]]);
+        e.sampling.temperature = 0.3;
+        e.meta = RequestMeta::new(Priority::Batch, "acme");
+        let line = e.serialize();
+        // float fields travel as bit patterns: 0.7 and 0.3 are not
+        // representable exactly, but their bits are
+        assert!(line.contains(&format!("\"temp_bits\":\"{:016x}\"",
+                                       0.3f64.to_bits())));
+        assert!(line.contains(
+            &format!("\"length_penalty_bits\":\"{:016x}\"",
+                     0.7f64.to_bits())));
+        let parsed = JournalEntry::parse(&line).unwrap();
+        assert_eq!(parsed, e);
+        assert_eq!(parsed.sampling.temperature.to_bits(),
+                   0.3f64.to_bits());
+    }
+
+    #[test]
+    fn journal_bytes_counts_lines_with_newlines() {
+        let mut j = AdmissionJournal::new(1);
+        assert_eq!(j.bytes(), 0);
+        let e = entry();
+        let line_len = e.serialize().len() as u64;
+        j.append(e.clone()).unwrap();
+        j.append(e).unwrap();
+        assert_eq!(j.bytes(), 2 * (line_len + 1));
+        assert_eq!(j.entries().len(), 2);
+        assert_eq!(j.render().lines().count(), 2);
+    }
+
+    #[test]
+    fn journal_dump_and_load_roundtrip() {
+        let dir = std::env::temp_dir().join(format!(
+            "journal-test-{}", std::process::id()));
+        let mut j = AdmissionJournal::new(0);
+        let mut e = entry();
+        e.shard = 0;
+        j.append(e.clone()).unwrap();
+        j.dump(&dir, "t").unwrap();
+        let loaded =
+            AdmissionJournal::load(&dir.join("t-shard-0.journal")).unwrap();
+        assert_eq!(loaded, vec![e]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn dedupe_filter_drops_replays_and_duplicate_dones() {
+        let mut d = StreamDedupe::default();
+        assert!(d.admit_token(1, 0, 0));
+        assert!(d.admit_token(1, 0, 1));
+        // a replayed prefix re-emits positions 0 and 1: dropped
+        assert!(!d.admit_token(1, 0, 0));
+        assert!(!d.admit_token(1, 0, 1));
+        // the resumed stream advances
+        assert!(d.admit_token(1, 0, 2));
+        // other branches and ids are independent
+        assert!(d.admit_token(1, 1, 0));
+        assert!(d.admit_token(2, 0, 0));
+        assert!(d.admit_done(1, 0));
+        assert!(!d.admit_done(1, 0), "one done per branch");
+        assert!(d.admit_done(1, 1));
+    }
+
+    #[test]
+    fn stream_log_rejects_position_gaps() {
+        let mut log = StreamLog::default();
+        log.token(1, 0, 0, 10).unwrap();
+        log.token(1, 0, 1, 11).unwrap();
+        // re-emission is silently dropped, not a gap
+        log.token(1, 0, 0, 10).unwrap();
+        assert_eq!(log.tokens[&(1, 0)], vec![10, 11]);
+        // a forwarded position that skips ahead is a protocol violation
+        assert!(log.token(1, 0, 3, 13).is_err());
+    }
+}

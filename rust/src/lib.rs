@@ -14,7 +14,10 @@
 //!   metadata builder, decision-tree kernel heuristics, autotuner, PJRT
 //!   runtime, serving engine, TCP front-end with a sharded data-parallel
 //!   tier behind a prefix-affinity router ([`router`], [`shard`],
-//!   `docs/SHARDING.md`), workload generators, benches
+//!   `docs/SHARDING.md`) with crash-tolerant failover — a per-shard
+//!   admission journal, a supervising dispatcher that replays it into
+//!   replacement shards, and a deterministic fault-injection layer
+//!   ([`journal`], `docs/RECOVERY.md`) — workload generators, benches
 //!   for every figure of the paper's evaluation, and an end-to-end
 //!   serving benchmark subsystem ([`bench`], `repro bench`) whose
 //!   deterministic work-counter fingerprints gate CI against
@@ -257,6 +260,7 @@ pub mod bench;
 pub mod config;
 pub mod engine;
 pub mod heuristics;
+pub mod journal;
 pub mod json;
 pub mod kvcache;
 pub mod manifest;

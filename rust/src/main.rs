@@ -18,8 +18,8 @@ use anyhow::{bail, Context, Result};
 
 use triton_anatomy::autotune;
 use triton_anatomy::bench;
-use triton_anatomy::config::{EngineConfig, RouterConfig, RouterPolicy,
-                             SamplingParams, SchedPolicy};
+use triton_anatomy::config::{EngineConfig, FaultPlan, RouterConfig,
+                             RouterPolicy, SamplingParams, SchedPolicy};
 use triton_anatomy::engine::Engine;
 use triton_anatomy::heuristics::Heuristics;
 use triton_anatomy::microbench::{self, BenchOpts};
@@ -92,6 +92,10 @@ COMMANDS:
                                          shard overflows (default 4)
                [--lockstep]              step only on client run/step commands
                                          (deterministic wire replay)
+               [--fault PLAN]            deterministic fault injection, e.g.
+                                         kill:0@12,double-replay (RECOVERY.md)
+               [--journal-dir DIR]       stream admission journals to
+                                         DIR/shard-<k>.journal
   run          --prompt-len 16 --max-new 16 --model tiny [--heuristics F]
                [--n 4 --sample-seed 1 --temperature 0.7]  parallel sampling
                [--beam-width 3 --length-penalty 1.0]      beam search
@@ -184,11 +188,17 @@ fn cmd_serve(args: &Args, dir: PathBuf) -> Result<()> {
             .usize_or("affinity-overflow-rows",
                       defaults.affinity_overflow_rows)?,
     };
+    let fault = match args.get("fault") {
+        Some(spec) => FaultPlan::parse(spec)?,
+        None => FaultPlan::default(),
+    };
     server::serve_with(dir, engine_config(args)?, server::ServeOpts {
         addr,
         max_requests,
         router,
         lockstep: args.get("lockstep").is_some_and(|v| v != "false"),
+        fault,
+        journal_dir: args.get("journal-dir").map(PathBuf::from),
     })
 }
 

@@ -482,6 +482,59 @@ mod tests {
     }
 
     #[test]
+    fn absorb_quantiles_stay_inside_the_union_envelope() {
+        // Property: fold any partition of a sample set into one histogram
+        // via `absorb` and every quantile of the result lies inside the
+        // union's observed [min, max] envelope, quantiles stay monotone
+        // in q, and count/mean match the union exactly. Randomized over
+        // seeds with a deterministic generator so failures reproduce.
+        let mut rng = crate::workload::Rng::new(17);
+        for round in 0..50 {
+            let parts = 2 + rng.range(0, 4);
+            let mut shards: Vec<Histogram> =
+                (0..parts).map(|_| Histogram::new()).collect();
+            let mut lo = f64::INFINITY;
+            let mut hi = f64::NEG_INFINITY;
+            let mut n = 0u64;
+            let mut sum = 0.0;
+            for _ in 0..(1 + rng.range(0, 200)) {
+                // span several log buckets: 0.5 .. ~1e5 µs
+                let v = (rng.range(1, 200_000) as f64) / 2.0;
+                shards[rng.below(parts)].record(v);
+                lo = lo.min(v);
+                hi = hi.max(v);
+                n += 1;
+                sum += v;
+            }
+            let mut merged = Histogram::new();
+            for s in &shards {
+                merged.absorb(s);
+            }
+            assert_eq!(merged.count(), n, "round {round}: count is additive");
+            assert!((merged.mean() - sum / n as f64).abs() < 1e-9,
+                    "round {round}: mean matches the union");
+            assert_eq!(merged.min(), lo, "round {round}");
+            assert_eq!(merged.max(), hi, "round {round}");
+            let mut prev = f64::NEG_INFINITY;
+            for q in [0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99, 1.0] {
+                let v = merged.quantile(q);
+                assert!(v >= lo && v <= hi,
+                        "round {round}: q={q} v={v} escapes [{lo}, {hi}]");
+                assert!(v >= prev,
+                        "round {round}: q={q} breaks monotonicity");
+                prev = v;
+            }
+            // absorb order must not matter: bucket-wise addition commutes
+            let mut reversed = Histogram::new();
+            for s in shards.iter().rev() {
+                reversed.absorb(s);
+            }
+            assert_eq!(reversed.snapshot(), merged.snapshot(),
+                       "round {round}: absorb is order-independent");
+        }
+    }
+
+    #[test]
     fn metrics_dump_contains_counters() {
         let mut m = EngineMetrics::default();
         m.steps = 3;

@@ -34,6 +34,11 @@ pub struct ShardStatus {
     /// Free KV pages, counting evictable cached pages
     /// (`KvCacheManager::free_pages`).
     pub free_pages: usize,
+    /// Engine steps the shard has dispatched so far. Not a placement
+    /// signal — the dispatcher records it as the *admission step* of
+    /// each journal entry, so failover replay can reconstruct the exact
+    /// admission/step interleaving (`docs/RECOVERY.md`).
+    pub steps: u64,
 }
 
 /// Why a placement landed on its shard.
@@ -235,7 +240,7 @@ mod tests {
     }
 
     fn status(live_rows: usize, free_pages: usize) -> ShardStatus {
-        ShardStatus { live_rows, free_pages }
+        ShardStatus { live_rows, free_pages, steps: 0 }
     }
 
     /// A prompt of `blocks` full 4-token blocks (block_size 4 in these

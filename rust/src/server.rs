@@ -73,21 +73,41 @@
 //!      "total_pages":11}
 //! `metrics` works in free-running mode too; `run`/`step` outside
 //! lockstep yield a structured `error` event.
+//!
+//! # Crash tolerance
+//!
+//! The dispatcher is also the shard *supervisor* (`docs/RECOVERY.md`):
+//! it appends every placed request to a per-shard admission journal
+//! *before* submitting, and when a shard dies (detected at the next
+//! interaction — a failed submit, status poll, `run`/`step`/`metrics`
+//! roundtrip) it joins the corpse, spawns a replacement and replays the
+//! journal into it, reconstructing every in-flight group. Each
+//! connection's writer thread runs a [`crate::journal::StreamDedupe`]
+//! filter, so replay re-emissions are dropped and clients observe their
+//! `position`-monotone streams resume without a gap or a repeat.
+//! [`ServeOpts::fault`] injects deterministic crashes for tests; the
+//! recovery counters `shard_restarts`, `replayed_groups`,
+//! `replayed_tokens` and `journal_bytes` ride the `metrics` event.
 
+use std::collections::{HashMap, HashSet};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread;
 
 use anyhow::{bail, Context, Result};
 
 use crate::bench::Fingerprint;
-use crate::config::{EngineConfig, Priority, RequestMeta, RouterConfig,
-                    SamplingParams};
+use crate::config::{EngineConfig, FaultPlan, Priority, RequestMeta,
+                    RouterConfig, SamplingParams};
+use crate::journal::{AdmissionJournal, JournalEntry, StreamDedupe};
 use crate::json::{self, num, obj, Value};
+use crate::kvcache::PrefixHasher;
 use crate::router::Router;
 use crate::scheduler::RequestId;
-use crate::shard::{ShardCmd, ShardHandle, ShardReport, ShardRequest};
+use crate::shard::{ShardCmd, ShardHandle, ShardOpts, ShardReport,
+                   ShardRequest};
 
 /// A parsed wire line forwarded from a connection to the dispatcher.
 enum ToDispatcher {
@@ -102,6 +122,9 @@ enum ToDispatcher {
         kind: CmdKind,
         reply: Sender<Outgoing>,
     },
+    /// Supervisor → dispatcher: shut the shard pool down (the
+    /// dispatcher owns the handles) and ack with the joined result.
+    Shutdown(Sender<Result<()>>),
 }
 
 /// Wire commands (`{"cmd": ...}` lines).
@@ -196,7 +219,8 @@ fn event_json(ev: &Outgoing) -> String {
 }
 
 /// Serving-tier options beyond the engine config: bind address,
-/// test-mode request cap, shard/router knobs, lockstep mode.
+/// test-mode request cap, shard/router knobs, lockstep mode, fault
+/// injection and journal persistence.
 #[derive(Debug, Clone)]
 pub struct ServeOpts {
     pub addr: String,
@@ -208,6 +232,13 @@ pub struct ServeOpts {
     pub router: RouterConfig,
     /// Step engines only on client `run`/`step` commands.
     pub lockstep: bool,
+    /// Deterministic fault injection (`--fault`, `docs/RECOVERY.md`);
+    /// empty by default.
+    pub fault: FaultPlan,
+    /// Stream every admission-journal line to
+    /// `<dir>/shard-<k>.journal` (`--journal-dir`); the in-memory
+    /// journal drives failover either way.
+    pub journal_dir: Option<PathBuf>,
 }
 
 impl Default for ServeOpts {
@@ -217,6 +248,8 @@ impl Default for ServeOpts {
             max_requests: None,
             router: RouterConfig::default(),
             lockstep: false,
+            fault: FaultPlan::default(),
+            journal_dir: None,
         }
     }
 }
@@ -233,8 +266,9 @@ pub fn serve(artifacts_dir: std::path::PathBuf, ecfg: EngineConfig,
 }
 
 /// The sharded serving tier: bind, spawn N engine shards + the
-/// dispatcher (which owns the [`Router`]), then supervise completions
-/// until `max_requests` is reached (or forever).
+/// dispatcher (which owns the [`Router`] and supervises the shard
+/// pool), then count completions until `max_requests` is reached (or
+/// forever).
 pub fn serve_with(artifacts_dir: std::path::PathBuf, ecfg: EngineConfig,
                   opts: ServeOpts) -> Result<()> {
     let listener = TcpListener::bind(&opts.addr)
@@ -244,6 +278,7 @@ pub fn serve_with(artifacts_dir: std::path::PathBuf, ecfg: EngineConfig,
               opts.router.shards, opts.router.policy.name(),
               if opts.lockstep { ", lockstep" } else { "" });
     let (tx, rx) = channel::<ToDispatcher>();
+    let shutdown_tx = tx.clone();
 
     // acceptor: one reader thread per connection
     thread::spawn(move || {
@@ -255,106 +290,367 @@ pub fn serve_with(artifacts_dir: std::path::PathBuf, ecfg: EngineConfig,
         }
     });
 
-    // engine shards: each loads its own runtime on its own thread
+    // engine shards: each loads its own runtime on its own thread. A
+    // boot-time health roundtrip surfaces load failures here instead of
+    // hanging the supervisor (the pool keeps a completions sender alive
+    // for respawns, so a closed channel no longer signals "all dead").
     let (completions_tx, completions_rx) = channel::<RequestId>();
-    let mut shards: Vec<ShardHandle> = Vec::new();
-    for i in 0..opts.router.shards.max(1) {
-        shards.push(ShardHandle::spawn(i, artifacts_dir.clone(),
-                                       ecfg.clone(), opts.lockstep,
-                                       completions_tx.clone()));
-    }
-    drop(completions_tx);
+    let mut pool = ShardPool::new(artifacts_dir, ecfg.clone(), &opts,
+                                  completions_tx)?;
+    pool.health_check()?;
 
-    // dispatcher: owns the router, places requests, serves commands
+    // dispatcher: owns the router + the shard pool, places requests,
+    // serves commands, supervises failover
     let router = Router::new(opts.router.clone(), ecfg.block_size);
-    let cmd_channels: Vec<Sender<ShardCmd>> =
-        shards.iter().map(|s| s.cmd.clone()).collect();
     let lockstep = opts.lockstep;
     let dispatcher = thread::spawn(move || {
-        dispatcher_loop(rx, cmd_channels, router, lockstep)
+        dispatcher_loop(rx, pool, router, lockstep)
     });
 
-    // supervisor: count completions (finished + cancelled requests)
+    // supervisor: count completions (finished + cancelled requests).
+    // Replayed groups may re-complete after a failover, so count each
+    // global id once.
     let mut completed = 0usize;
+    let mut seen: HashSet<RequestId> = HashSet::new();
     loop {
         match completions_rx.recv() {
-            Ok(_) => {
+            Ok(id) => {
+                if !seen.insert(id) {
+                    continue;
+                }
                 completed += 1;
                 if opts.max_requests.is_some_and(|m| completed >= m) {
                     break;
                 }
             }
-            // every shard exited (e.g. a runtime load failure): stop
-            // supervising and surface the error from join below
+            // the dispatcher (and with it the pool) is gone: stop
+            // supervising and surface its error from join below
             Err(_) => break,
         }
     }
     eprintln!("[server] served {completed} requests, exiting");
-    for s in &shards {
-        let _ = s.cmd.send(ShardCmd::Shutdown);
-    }
+    let (ack_tx, ack_rx) = channel();
     let mut result = Ok(());
-    for s in shards {
-        if let Err(e) = s.join() {
-            result = Err(e);
+    if shutdown_tx.send(ToDispatcher::Shutdown(ack_tx)).is_ok() {
+        if let Ok(r) = ack_rx.recv() {
+            result = r;
         }
     }
-    drop(dispatcher); // detaches; its channel senders are gone with us
+    if let Err(e) = dispatcher.join().unwrap_or(Ok(())) {
+        result = Err(e);
+    }
     result
 }
 
-/// The dispatcher thread: one placement (status poll → router → shard
-/// submit) per request, strictly in intake order, so the placement
-/// sequence is a pure function of the admission sequence and the
-/// status snapshots it observed.
-fn dispatcher_loop(rx: Receiver<ToDispatcher>,
-                   shards: Vec<Sender<ShardCmd>>, mut router: Router,
-                   lockstep: bool) -> Result<()> {
+/// The dispatcher's supervised shard pool: spawn-capable slots, each
+/// carrying its admission journal and the reply channel of every
+/// journaled request, so a dead shard can be respawned and replayed at
+/// any interaction point (`docs/RECOVERY.md`).
+struct ShardPool {
+    artifacts_dir: std::path::PathBuf,
+    ecfg: EngineConfig,
+    lockstep: bool,
+    fault: FaultPlan,
+    completions: Sender<RequestId>,
+    slots: Vec<ShardSlot>,
+}
+
+struct ShardSlot {
+    handle: Option<ShardHandle>,
+    journal: AdmissionJournal,
+    /// Reply channel per journaled seq — replay re-attaches resumed
+    /// streams to their original connections.
+    replies: HashMap<u64, Sender<Outgoing>>,
+    restarts: u64,
+}
+
+/// Give up on a slot after this many replacements: a shard that cannot
+/// stay up (e.g. broken artifacts) must not respawn-loop forever.
+const MAX_RESTARTS: u64 = 3;
+
+impl ShardPool {
+    fn new(artifacts_dir: std::path::PathBuf, ecfg: EngineConfig,
+           opts: &ServeOpts, completions: Sender<RequestId>)
+        -> Result<Self> {
+        let mut slots = Vec::new();
+        for k in 0..opts.router.shards.max(1) {
+            let journal = match &opts.journal_dir {
+                Some(dir) => AdmissionJournal::with_sink(k, dir)?,
+                None => AdmissionJournal::new(k),
+            };
+            let handle = ShardHandle::spawn(
+                k, artifacts_dir.clone(), ecfg.clone(), opts.lockstep,
+                completions.clone(),
+                ShardOpts {
+                    kill_at_step: opts.fault.kill_step_for(k),
+                    ..ShardOpts::default()
+                });
+            slots.push(ShardSlot {
+                handle: Some(handle),
+                journal,
+                replies: HashMap::new(),
+                restarts: 0,
+            });
+        }
+        Ok(ShardPool {
+            artifacts_dir,
+            ecfg,
+            lockstep: opts.lockstep,
+            fault: opts.fault.clone(),
+            completions,
+            slots,
+        })
+    }
+
+    fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Block until every shard answered a status roundtrip (warmup
+    /// done) or surfaced its boot error.
+    fn health_check(&mut self) -> Result<()> {
+        for k in 0..self.len() {
+            let h = self.slots[k].handle.as_ref().expect("fresh pool");
+            if h.status().is_err() {
+                let h = self.slots[k].handle.take().expect("fresh pool");
+                return Err(h
+                    .join()
+                    .err()
+                    .unwrap_or_else(|| anyhow::anyhow!(
+                        "shard {k} exited during boot")));
+            }
+        }
+        Ok(())
+    }
+
+    /// Join a dead shard's thread, logging (not propagating) its error
+    /// — the supervisor's job is to keep serving.
+    fn bury(&mut self, k: usize) {
+        if let Some(h) = self.slots[k].handle.take() {
+            match h.join() {
+                Ok(()) => eprintln!("[server] shard {k} exited"),
+                Err(e) => eprintln!("[server] shard {k} died: {e:#}"),
+            }
+        }
+    }
+
+    /// Spawn a replacement for slot `k` and replay its journal into it.
+    /// Returns false once the restart budget is spent (the slot is
+    /// permanently down).
+    fn respawn(&mut self, k: usize) -> bool {
+        if self.slots[k].restarts >= MAX_RESTARTS {
+            return false;
+        }
+        self.slots[k].restarts += 1;
+        let slot = &self.slots[k];
+        let replay: Vec<(JournalEntry, Sender<Outgoing>)> = slot
+            .journal
+            .entries()
+            .iter()
+            .map(|e| {
+                let reply = slot
+                    .replies
+                    .get(&e.seq)
+                    .cloned()
+                    .unwrap_or_else(|| channel().0);
+                (e.clone(), reply)
+            })
+            .collect();
+        eprintln!("[server] respawning shard {k} (restart {}, replaying \
+                   {} journaled groups)",
+                  slot.restarts, replay.len());
+        let handle = ShardHandle::spawn(
+            k, self.artifacts_dir.clone(), self.ecfg.clone(), self.lockstep,
+            self.completions.clone(),
+            ShardOpts {
+                // replacements do not inherit the kill: kills are
+                // one-shot by design, so every fault plan converges
+                kill_at_step: None,
+                replay,
+                replay_passes: if self.fault.double_replay { 2 } else { 1 },
+            });
+        self.slots[k].handle = Some(handle);
+        true
+    }
+
+    /// Deterministic kill (the `drop-before`/`drop-after` faults): tell
+    /// the shard to die, then *join it* before returning, so the crash
+    /// point relative to the caller's next action is exact — a send
+    /// succeeding never means the shard processed it.
+    fn kill(&mut self, k: usize) {
+        if let Some(h) = &self.slots[k].handle {
+            let _ = h.cmd.send(ShardCmd::Die);
+        }
+        self.bury(k);
+    }
+
+    /// One command roundtrip against shard `k`, healing a dead shard:
+    /// on a send/recv failure the corpse is buried, a replacement is
+    /// spawned (journal replayed) and the command is re-issued once.
+    fn roundtrip<T>(&mut self, k: usize,
+                    mk: impl Fn(Sender<T>) -> ShardCmd) -> Option<T> {
+        for _ in 0..2 {
+            if self.slots[k].handle.is_none() && !self.respawn(k) {
+                return None;
+            }
+            let (tx, rx) = channel();
+            let h = self.slots[k].handle.as_ref().expect("respawned");
+            if h.cmd.send(mk(tx)).is_ok() {
+                if let Ok(v) = rx.recv() {
+                    return Some(v);
+                }
+            }
+            self.bury(k);
+        }
+        None
+    }
+
+    fn status(&mut self, k: usize) -> crate::router::ShardStatus {
+        self.roundtrip(k, ShardCmd::Status).unwrap_or_default()
+    }
+
+    /// Journal the placed request, then submit it — in that order, so a
+    /// shard dying anywhere around the submit can never lose the
+    /// request: the replacement's replay re-admits every journaled
+    /// entry and the client's stream resumes instead of wedging on a
+    /// `done` that never comes.
+    fn journal_and_submit(&mut self, entry: JournalEntry,
+                          memo: PrefixHasher, reply: Sender<Outgoing>)
+        -> Result<()> {
+        let k = entry.shard;
+        let seq = entry.seq;
+        self.slots[k].replies.insert(seq, reply.clone());
+        self.slots[k].journal.append(entry.clone())?;
+
+        if self.fault.drop_after_append == Some(seq) {
+            // die in the journaled-but-unsubmitted window: replay must
+            // serve the client with no visible error (the shutdown-
+            // ordering bugfix this fault pins)
+            self.kill(k);
+            if !self.respawn(k) {
+                let _ = reply.send(Outgoing::Error(format!(
+                    "shard {k} is permanently down")));
+            }
+            return Ok(());
+        }
+
+        // the entry is journaled from here on: every path below either
+        // hands it to a live shard directly, or spawns a replacement
+        // whose replay admits it — never both (a respawn's replay
+        // covers the entry, so submitting to the replacement as well
+        // would double-admit)
+        if self.slots[k].handle.is_some() {
+            let req = ShardRequest {
+                global_id: seq,
+                prompt: entry.prompt.clone(),
+                max_new_tokens: entry.max_new_tokens,
+                sampling: entry.sampling.clone(),
+                meta: entry.meta.clone(),
+                memo,
+                reply: reply.clone(),
+            };
+            let h = self.slots[k].handle.as_ref().expect("checked");
+            if h.cmd.send(ShardCmd::Submit(req)).is_ok() {
+                return Ok(());
+            }
+            self.bury(k);
+        }
+        if !self.respawn(k) {
+            let _ = reply.send(Outgoing::Error(format!(
+                "shard {k} is permanently down")));
+        }
+        Ok(())
+    }
+
+    fn restarts(&self) -> u64 {
+        self.slots.iter().map(|s| s.restarts).sum()
+    }
+
+    fn journal_bytes(&self) -> u64 {
+        self.slots.iter().map(|s| s.journal.bytes()).sum()
+    }
+
+    /// Orderly exit: every live shard drains its in-flight groups into
+    /// structured errors and dumps metrics; the first join error wins.
+    fn shutdown(&mut self) -> Result<()> {
+        for slot in &self.slots {
+            if let Some(h) = &slot.handle {
+                let _ = h.cmd.send(ShardCmd::Shutdown);
+            }
+        }
+        let mut result = Ok(());
+        for slot in &mut self.slots {
+            if let Some(h) = slot.handle.take() {
+                if let Err(e) = h.join() {
+                    result = Err(e);
+                }
+            }
+        }
+        result
+    }
+}
+
+/// The dispatcher thread: one placement (status poll → router → journal
+/// append → shard submit) per request, strictly in intake order, so the
+/// placement sequence is a pure function of the admission sequence and
+/// the status snapshots it observed. Owns the shard pool: shard deaths
+/// are detected and healed at every interaction point.
+fn dispatcher_loop(rx: Receiver<ToDispatcher>, mut pool: ShardPool,
+                   mut router: Router, lockstep: bool) -> Result<()> {
     let mut next_global: RequestId = 1;
     for msg in rx {
         match msg {
             ToDispatcher::Request { prompt, max_new_tokens, sampling,
                                     meta, reply } => {
-                let mut statuses = Vec::with_capacity(shards.len());
-                for s in &shards {
-                    let (stx, srx) = channel();
-                    if s.send(ShardCmd::Status(stx)).is_err() {
-                        statuses.push(Default::default());
-                        continue;
-                    }
-                    statuses.push(srx.recv().unwrap_or_default());
+                let mut statuses = Vec::with_capacity(pool.len());
+                for k in 0..pool.len() {
+                    statuses.push(pool.status(k));
                 }
                 let placement = router.place(&prompt, &statuses);
-                let req = ShardRequest {
-                    global_id: next_global,
+                let k = placement.shard;
+                let seq = next_global;
+                next_global += 1;
+
+                if pool.fault.drop_before_append == Some(seq) {
+                    // the documented lost-write window: the shard dies
+                    // before the journal append, so replay cannot know
+                    // about this request — the client gets a structured
+                    // error instead of a silent hang
+                    pool.kill(k);
+                    pool.respawn(k);
+                    let _ = reply.send(Outgoing::Error(format!(
+                        "request {seq}: shard {k} is gone (lost before \
+                         journal append)")));
+                    continue;
+                }
+
+                let entry = JournalEntry {
+                    seq,
+                    shard: k,
+                    step: statuses[k].steps,
                     prompt,
                     max_new_tokens,
                     sampling,
                     meta,
-                    memo: placement.memo,
-                    reply: reply.clone(),
                 };
-                next_global += 1;
-                if shards[placement.shard]
-                    .send(ShardCmd::Submit(req))
-                    .is_err()
-                {
-                    let _ = reply.send(Outgoing::Error(format!(
-                        "shard {} is gone", placement.shard)));
-                }
+                pool.journal_and_submit(entry, placement.memo, reply)?;
             }
             ToDispatcher::Command { kind, reply } => {
-                run_command(kind, &shards, &router, lockstep, &reply);
+                run_command(kind, &mut pool, &router, lockstep, &reply);
+            }
+            ToDispatcher::Shutdown(ack) => {
+                let _ = ack.send(pool.shutdown());
+                break;
             }
         }
     }
     Ok(())
 }
 
-/// Execute one wire command against the shard pool.
-fn run_command(kind: CmdKind, shards: &[Sender<ShardCmd>],
-               router: &Router, lockstep: bool,
-               reply: &Sender<Outgoing>) {
+/// Execute one wire command against the shard pool, healing dead
+/// shards along the way ([`ShardPool::roundtrip`]).
+fn run_command(kind: CmdKind, pool: &mut ShardPool, router: &Router,
+               lockstep: bool, reply: &Sender<Outgoing>) {
     match kind {
         CmdKind::Step | CmdKind::Run => {
             if !lockstep {
@@ -366,17 +662,16 @@ fn run_command(kind: CmdKind, shards: &[Sender<ShardCmd>],
                 return;
             }
             // deterministic shard order: shard 0 drains before shard 1
-            // ever steps
+            // ever steps. A shard dying mid-run is respawned, replayed
+            // and re-driven, so the ack always reflects a completed
+            // command.
             let mut executed = 0u64;
-            for s in shards {
-                let (stx, srx) = channel();
-                let cmd = match kind {
-                    CmdKind::Run => ShardCmd::Run(stx),
-                    _ => ShardCmd::Step(stx),
-                };
-                if s.send(cmd).is_ok() {
-                    executed += srx.recv().unwrap_or(0);
-                }
+            for k in 0..pool.len() {
+                let n = pool.roundtrip(k, |tx| match kind {
+                    CmdKind::Run => ShardCmd::Run(tx),
+                    _ => ShardCmd::Step(tx),
+                });
+                executed += n.unwrap_or(0);
             }
             let _ = reply.send(Outgoing::Stepped { executed });
         }
@@ -384,13 +679,11 @@ fn run_command(kind: CmdKind, shards: &[Sender<ShardCmd>],
             let mut merged = Fingerprint::default();
             let mut free_pages = 0usize;
             let mut total_pages = 0usize;
-            for s in shards {
-                let (stx, srx) = channel();
-                if s.send(ShardCmd::Metrics(stx)).is_err() {
-                    continue;
-                }
-                if let Ok(ShardReport { fingerprint, free_pages: f,
-                                        total_pages: t }) = srx.recv() {
+            for k in 0..pool.len() {
+                if let Some(ShardReport { fingerprint, free_pages: f,
+                                          total_pages: t }) =
+                    pool.roundtrip(k, ShardCmd::Metrics)
+                {
                     merged.merge(&fingerprint);
                     free_pages += f;
                     total_pages += t;
@@ -401,6 +694,8 @@ fn run_command(kind: CmdKind, shards: &[Sender<ShardCmd>],
             c.insert("router_affinity_hits".into(), rc.affinity_hits);
             c.insert("router_load_routed".into(), rc.load_routed);
             c.insert("shard_imbalance_max".into(), rc.imbalance_max);
+            c.insert("shard_restarts".into(), pool.restarts());
+            c.insert("journal_bytes".into(), pool.journal_bytes());
             let _ = reply.send(Outgoing::Metrics {
                 counters: merged.counters,
                 free_pages,
@@ -416,9 +711,27 @@ fn handle_connection(stream: TcpStream, tx: Sender<ToDispatcher>) -> Result<()> 
     let reader = BufReader::new(stream);
     let (reply_tx, reply_rx) = channel::<Outgoing>();
 
-    // writer thread: serialize events back to the socket
+    // writer thread: serialize events back to the socket. The dedupe
+    // filter sits here — the single choke point every event to this
+    // connection crosses — so failover-replay re-emissions (repeated
+    // positions, duplicate dones) are dropped and the wire stream
+    // stays `position`-monotone with exactly one `done` per branch,
+    // crash or no crash.
     let w = thread::spawn(move || {
+        let mut dedupe = StreamDedupe::default();
         for ev in reply_rx {
+            let forward = match &ev {
+                Outgoing::Token { id, branch, position, .. } => {
+                    dedupe.admit_token(*id, *branch, *position)
+                }
+                Outgoing::Done { id, branch, .. } => {
+                    dedupe.admit_done(*id, *branch)
+                }
+                _ => true,
+            };
+            if !forward {
+                continue;
+            }
             let line = event_json(&ev);
             if writeln!(writer, "{line}").is_err() {
                 break;
@@ -1171,6 +1484,158 @@ mod tests {
 
         // fourth completion releases the server
         c.generate(&[5, 6], 2).unwrap();
+        handle.join().unwrap().unwrap();
+    }
+
+    /// Kill a shard mid-run over real TCP: the dispatcher buries the
+    /// corpse, respawns a replacement, replays the journal and re-drives
+    /// the interrupted `run` — both clients' requests complete, and the
+    /// recovery counters surface in `metrics`.
+    #[test]
+    fn failover_replay_resumes_streams_over_tcp() {
+        let dir = crate::default_artifacts_dir();
+        let bound = ephemeral_addr();
+        let server_addr = bound.clone();
+        let handle = std::thread::spawn(move || {
+            serve_with(dir, EngineConfig::default(), ServeOpts {
+                addr: server_addr,
+                max_requests: Some(3),
+                router: RouterConfig { shards: 2,
+                                       ..RouterConfig::default() },
+                lockstep: true,
+                fault: FaultPlan::parse("kill:0@2").unwrap(),
+                ..ServeOpts::default()
+            })
+        });
+        std::thread::sleep(Duration::from_millis(300));
+
+        let mut c = Client::connect(&bound).unwrap();
+        // two distinct families: least-loaded placement spreads them
+        // over both shards; shard 0 dies 2 steps into the run
+        let prompt_a: Vec<i32> = (0..20).collect();
+        let prompt_b: Vec<i32> = (500..520).collect();
+        c.submit(&prompt_a, 8).unwrap();
+        c.submit(&prompt_b, 8).unwrap();
+        c.send_cmd("run").unwrap();
+        let a = c.wait_done().unwrap();
+        let b = c.wait_done().unwrap();
+        assert_eq!(a.tokens.len(), 8, "stream survived the crash");
+        assert_eq!(b.tokens.len(), 8);
+        let executed = c.wait_stepped().unwrap();
+        assert!(executed > 0);
+
+        let m = c.fetch_metrics().unwrap();
+        assert_eq!(m.counters.get("shard_restarts"), Some(&1),
+                   "exactly one failover: {:?}", m.counters);
+        assert!(m.counters.get("replayed_groups").copied().unwrap_or(0)
+                    >= 1,
+                "the dead shard's group must have been replayed: {:?}",
+                m.counters);
+        assert!(m.counters.get("journal_bytes").copied().unwrap_or(0) > 0);
+
+        // third completion releases the server
+        c.submit(&[1, 2, 3], 1).unwrap();
+        c.send_cmd("run").unwrap();
+        c.wait_done().unwrap();
+        c.wait_stepped().unwrap();
+        handle.join().unwrap().unwrap();
+    }
+
+    /// Regression test for the journal-append-vs-submit shutdown
+    /// ordering: a shard dying *between* the journal append and the
+    /// submit must not leave the client awaiting a `done` that never
+    /// comes — the replacement's replay admits the journaled entry and
+    /// the request completes with no visible error.
+    #[test]
+    fn journaled_but_unsubmitted_request_survives_shard_death() {
+        let dir = crate::default_artifacts_dir();
+        let bound = ephemeral_addr();
+        let server_addr = bound.clone();
+        let handle = std::thread::spawn(move || {
+            serve_with(dir, EngineConfig::default(), ServeOpts {
+                addr: server_addr,
+                max_requests: Some(1),
+                lockstep: true,
+                fault: FaultPlan::parse("drop-after@1").unwrap(),
+                ..ServeOpts::default()
+            })
+        });
+        std::thread::sleep(Duration::from_millis(300));
+
+        let mut c = Client::connect(&bound).unwrap();
+        c.submit(&[4, 8, 15, 16, 23, 42], 4).unwrap();
+        c.send_cmd("run").unwrap();
+        let done = c.wait_done().unwrap();
+        assert_eq!(done.tokens.len(), 4,
+                   "journaled request served by the replacement");
+        c.wait_stepped().unwrap();
+        handle.join().unwrap().unwrap();
+    }
+
+    /// The documented lost-write window: a shard dying *before* the
+    /// journal append takes the request with it — the client must get a
+    /// structured error (never a hang), and the tier keeps serving.
+    #[test]
+    fn lost_before_journal_append_yields_structured_error() {
+        let dir = crate::default_artifacts_dir();
+        let bound = ephemeral_addr();
+        let server_addr = bound.clone();
+        let handle = std::thread::spawn(move || {
+            serve_with(dir, EngineConfig::default(), ServeOpts {
+                addr: server_addr,
+                max_requests: Some(1),
+                lockstep: true,
+                fault: FaultPlan::parse("drop-before@1").unwrap(),
+                ..ServeOpts::default()
+            })
+        });
+        std::thread::sleep(Duration::from_millis(300));
+
+        let mut c = Client::connect(&bound).unwrap();
+        c.submit(&[1, 2, 3], 4).unwrap();
+        let e = c.wait_done().unwrap_err();
+        assert!(format!("{e:#}").contains("lost before journal append"),
+                "{e:#}");
+
+        // the replacement shard serves the next request normally
+        c.submit(&[9, 9, 9], 2).unwrap();
+        c.send_cmd("run").unwrap();
+        let done = c.wait_done().unwrap();
+        assert_eq!(done.tokens.len(), 2);
+        c.wait_stepped().unwrap();
+        handle.join().unwrap().unwrap();
+    }
+
+    /// Shutdown-ordering bugfix, orderly-exit side: a shard told to
+    /// shut down with a group still in flight must hand that client a
+    /// structured error and a completion tick — never a silently
+    /// dropped stream.
+    #[test]
+    fn shutdown_with_inflight_group_errors_instead_of_stranding() {
+        let dir = crate::default_artifacts_dir();
+        let bound = ephemeral_addr();
+        let server_addr = bound.clone();
+        let handle = std::thread::spawn(move || {
+            serve_with(dir, EngineConfig::default(), ServeOpts {
+                addr: server_addr,
+                max_requests: Some(1),
+                ..ServeOpts::default()
+            })
+        });
+        std::thread::sleep(Duration::from_millis(300));
+
+        // A: a decode far too long to finish before B completes
+        let mut a = Client::connect(&bound).unwrap();
+        a.submit(&(0..8).collect::<Vec<i32>>(), 200).unwrap();
+        // B: completes almost immediately, reaching max_requests
+        let mut b = Client::connect(&bound).unwrap();
+        let done = b.generate(&[900, 901], 1).unwrap();
+        assert_eq!(done.tokens.len(), 1);
+
+        // the tier shuts down with A's group in flight: A must see a
+        // structured error, not a wedged socket
+        let e = a.wait_done().unwrap_err();
+        assert!(format!("{e:#}").contains("shut down"), "{e:#}");
         handle.join().unwrap().unwrap();
     }
 }

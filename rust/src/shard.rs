@@ -21,18 +21,30 @@
 //! a connection's reply channel cancels the group
 //! ([`Engine::cancel_group`]), reclaiming its pages instead of decoding
 //! into a dead socket.
+//!
+//! Crash tolerance: a shard spawned with a non-empty
+//! [`ShardOpts::replay`] is a *replacement* — before serving commands
+//! it replays the dead shard's admission journal
+//! ([`crate::journal::replay_journal`]), reconstructing every in-flight
+//! group and re-registering it against its original connection's reply
+//! channel. Re-emitted events are dropped by the connection's dedupe
+//! filter, so clients see their streams resume exactly where they left
+//! off (`docs/RECOVERY.md`). [`ShardOpts::kill_at_step`] and
+//! [`ShardCmd::Die`] are the fault-injection hooks that make shard
+//! deaths deterministic test inputs.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::thread::{self, JoinHandle};
 use std::time::Duration;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::bench::Fingerprint;
 use crate::config::{EngineConfig, RequestMeta, SamplingParams};
 use crate::engine::Engine;
+use crate::journal::{replay_journal, JournalEntry, ReplayHost, ReplayStats};
 use crate::kvcache::PrefixHasher;
 use crate::router::ShardStatus;
 use crate::runtime::Runtime;
@@ -78,6 +90,33 @@ pub enum ShardCmd {
     Metrics(Sender<ShardReport>),
     /// Dump metrics and exit the shard thread.
     Shutdown,
+    /// Fault injection: exit the thread with an error *immediately*,
+    /// dropping the engine and every in-flight group — a deterministic
+    /// stand-in for a crash. The dispatcher joins the corpse and spins
+    /// up a replacement (`docs/RECOVERY.md`).
+    Die,
+}
+
+/// Spawn-time options: fault injection and failover replay.
+pub struct ShardOpts {
+    /// One-shot deterministic kill: the shard thread bails out (as if
+    /// it crashed) before dispatching a step once the engine has
+    /// dispatched this many. Replacements do not inherit the kill.
+    pub kill_at_step: Option<u64>,
+    /// Admission journal to replay into the fresh engine before
+    /// serving, each entry paired with the reply channel of its
+    /// originating connection. Non-empty marks this shard a
+    /// replacement.
+    pub replay: Vec<(JournalEntry, Sender<Outgoing>)>,
+    /// Replay passes over the journal (`double-replay` runs 2 to prove
+    /// idempotence; extra passes must be no-ops).
+    pub replay_passes: usize,
+}
+
+impl Default for ShardOpts {
+    fn default() -> Self {
+        ShardOpts { kill_at_step: None, replay: Vec::new(), replay_passes: 1 }
+    }
 }
 
 /// Handle to a spawned shard: its command channel + join handle.
@@ -92,13 +131,14 @@ impl ShardHandle {
     /// inside the thread; a load failure surfaces from [`Self::join`]
     /// (and closes `completions`, which the supervisor observes).
     pub fn spawn(index: usize, artifacts_dir: PathBuf, ecfg: EngineConfig,
-                 lockstep: bool, completions: Sender<RequestId>) -> Self {
+                 lockstep: bool, completions: Sender<RequestId>,
+                 opts: ShardOpts) -> Self {
         let (cmd_tx, cmd_rx) = channel::<ShardCmd>();
         let join = thread::Builder::new()
             .name(format!("shard-{index}"))
             .spawn(move || {
                 shard_main(index, artifacts_dir, ecfg, lockstep, cmd_rx,
-                           completions)
+                           completions, opts)
             })
             .expect("spawning shard thread");
         ShardHandle { index, cmd: cmd_tx, join }
@@ -134,7 +174,7 @@ struct Inflight {
 
 fn shard_main(index: usize, artifacts_dir: PathBuf, ecfg: EngineConfig,
               lockstep: bool, rx: Receiver<ShardCmd>,
-              completions: Sender<RequestId>) -> Result<()> {
+              completions: Sender<RequestId>, opts: ShardOpts) -> Result<()> {
     let rt = std::rc::Rc::new(Runtime::load_dir(artifacts_dir)?);
     let mut engine = Engine::new(rt, ecfg)?;
     let n = engine.warmup()?;
@@ -142,6 +182,33 @@ fn shard_main(index: usize, artifacts_dir: PathBuf, ecfg: EngineConfig,
               engine.model_name);
 
     let mut inflight: HashMap<RequestId, Inflight> = HashMap::new();
+    let mut replay_stats = ReplayStats::default();
+    let kill_at_step = opts.kill_at_step;
+
+    if !opts.replay.is_empty() {
+        // replacement shard: reconstruct the dead shard's state from
+        // its journal before serving commands. Events re-emitted during
+        // catch-up are dropped by each connection's dedupe filter.
+        let entries: Vec<JournalEntry> =
+            opts.replay.iter().map(|(e, _)| e.clone()).collect();
+        let replies: HashMap<u64, Sender<Outgoing>> = opts
+            .replay
+            .iter()
+            .map(|(e, r)| (e.seq, r.clone()))
+            .collect();
+        let mut applied = HashSet::new();
+        let mut host = ShardReplayHost {
+            engine: &mut engine,
+            inflight: &mut inflight,
+            completions: &completions,
+            replies: &replies,
+        };
+        replay_stats = replay_journal(&mut host, &entries,
+                                      opts.replay_passes, &mut applied)?;
+        eprintln!("[shard {index}] replayed {} journaled groups \
+                   ({} tokens regenerated)",
+                  replay_stats.replayed_groups, replay_stats.replayed_tokens);
+    }
 
     loop {
         let cmd = if lockstep {
@@ -189,11 +256,13 @@ fn shard_main(index: usize, artifacts_dir: PathBuf, ecfg: EngineConfig,
                     let _ = reply.send(ShardStatus {
                         live_rows: engine.live_rows(),
                         free_pages: engine.kv().free_pages(),
+                        steps: engine.metrics.steps,
                     });
                 }
                 ShardCmd::Run(reply) => {
                     let mut steps = 0u64;
                     while engine.has_unfinished() {
+                        check_kill(index, kill_at_step, &engine)?;
                         step_once(&mut engine, &mut inflight, &completions)?;
                         steps += 1;
                     }
@@ -201,6 +270,7 @@ fn shard_main(index: usize, artifacts_dir: PathBuf, ecfg: EngineConfig,
                 }
                 ShardCmd::Step(reply) => {
                     let steps = if engine.has_unfinished() {
+                        check_kill(index, kill_at_step, &engine)?;
                         step_once(&mut engine, &mut inflight, &completions)?;
                         1
                     } else {
@@ -210,16 +280,42 @@ fn shard_main(index: usize, artifacts_dir: PathBuf, ecfg: EngineConfig,
                 }
                 ShardCmd::Metrics(reply) => {
                     engine.sync_report_metrics();
+                    let mut fingerprint = Fingerprint::from_engine(&engine);
+                    // recovery counters ride the shard fingerprint so
+                    // the merged tier report gates on them
+                    fingerprint.counters.insert(
+                        "replayed_groups".into(),
+                        replay_stats.replayed_groups);
+                    fingerprint.counters.insert(
+                        "replayed_tokens".into(),
+                        replay_stats.replayed_tokens);
                     let _ = reply.send(ShardReport {
-                        fingerprint: Fingerprint::from_engine(&engine),
+                        fingerprint,
                         free_pages: engine.kv().free_pages(),
                         total_pages: engine.kv().total_pages(),
                     });
                 }
                 ShardCmd::Shutdown => {
+                    // never strand a journaled-but-unserved client: a
+                    // request sitting in flight when the shard is told
+                    // to exit gets a structured error and a completion
+                    // tick instead of a silently dropped stream
+                    for (_, inf) in inflight.drain() {
+                        if !inf.dead {
+                            let _ = inf.reply.send(Outgoing::Error(format!(
+                                "shard {index} shut down with request {} \
+                                 in flight",
+                                inf.global
+                            )));
+                        }
+                        let _ = completions.send(inf.global);
+                    }
                     eprintln!("[shard {index}] shutting down");
                     eprintln!("{}", engine.metrics.dump());
                     return Ok(());
+                }
+                ShardCmd::Die => {
+                    bail!("shard {index} killed by fault injection");
                 }
             }
             // drain every queued command before stepping
@@ -227,8 +323,57 @@ fn shard_main(index: usize, artifacts_dir: PathBuf, ecfg: EngineConfig,
         }
 
         if !lockstep && engine.has_unfinished() {
+            check_kill(index, kill_at_step, &engine)?;
             step_once(&mut engine, &mut inflight, &completions)?;
         }
+    }
+}
+
+/// The `kill:<shard>@<step>` fault: crash (bail out of the shard
+/// thread) instead of dispatching a step once the engine has dispatched
+/// `kill_at_step` steps. Checked before *every* dispatch so the crash
+/// point is deterministic in virtual steps, not wall time.
+fn check_kill(index: usize, kill_at_step: Option<u64>, engine: &Engine)
+    -> Result<()> {
+    if let Some(s) = kill_at_step {
+        if engine.metrics.steps >= s {
+            bail!("shard {index} killed by fault plan at step {s}");
+        }
+    }
+    Ok(())
+}
+
+/// Adapter running [`replay_journal`] inside the shard thread: replayed
+/// groups re-register in the in-flight map against their original
+/// connections, and catch-up steps stream through the normal
+/// [`step_once`] path (the connection-side dedupe filter drops
+/// re-emissions).
+struct ShardReplayHost<'a> {
+    engine: &'a mut Engine,
+    inflight: &'a mut HashMap<RequestId, Inflight>,
+    completions: &'a Sender<RequestId>,
+    replies: &'a HashMap<u64, Sender<Outgoing>>,
+}
+
+impl ReplayHost for ShardReplayHost<'_> {
+    fn engine(&mut self) -> &mut Engine {
+        self.engine
+    }
+
+    fn register(&mut self, local: RequestId, entry: &JournalEntry) {
+        if let Some(reply) = self.replies.get(&entry.seq) {
+            let enqueue_ns = self.engine.now_ns();
+            self.inflight.insert(local, Inflight {
+                global: entry.seq,
+                reply: reply.clone(),
+                enqueue_ns,
+                dead: false,
+            });
+        }
+    }
+
+    fn step(&mut self) -> Result<()> {
+        step_once(self.engine, self.inflight, self.completions)
     }
 }
 

@@ -1,0 +1,181 @@
+//! Fault-injection property tests on the deterministic sim tier
+//! (`journal::SimTier`): kill a shard at *every* virtual step of a
+//! randomized workload and require the recovered run to be
+//! client-indistinguishable from a crash-free one. Requires the
+//! compiled artifacts (`make artifacts`), like `integration.rs`.
+
+use std::rc::Rc;
+
+use triton_anatomy::config::{EngineConfig, FaultPlan, RouterConfig};
+use triton_anatomy::journal::SimTier;
+use triton_anatomy::runtime::Runtime;
+use triton_anatomy::workload::{GroupRequest, Rng, ShardedAffinity};
+
+fn runtime() -> Rc<Runtime> {
+    Rc::new(Runtime::load_dir(triton_anatomy::default_artifacts_dir()).unwrap())
+}
+
+fn ecfg() -> EngineConfig {
+    EngineConfig {
+        max_batched_tokens: 128,
+        max_num_seqs: 8,
+        ..Default::default()
+    }
+}
+
+/// Randomized-but-seeded workload: two shared-prefix families over two
+/// waves, so the router exercises affinity placement and the journal
+/// records admissions at more than one step.
+fn workload(seed: u64) -> Vec<Vec<GroupRequest>> {
+    let load = ShardedAffinity {
+        families: 2,
+        shared_prefix: 16,
+        tail: 3,
+        max_new_tokens: 3,
+        vocab: 2048,
+    };
+    load.waves(2, &mut Rng::new(seed))
+}
+
+/// Build a tier under `fault`, submit the workload wave by wave (drain
+/// between waves, like the serving dispatcher), and return it.
+fn run_tier(rt: &Rc<Runtime>, fault: FaultPlan, seed: u64) -> SimTier {
+    let rcfg = RouterConfig { shards: 2, ..RouterConfig::default() };
+    let mut tier = SimTier::new(rt.clone(), ecfg(), rcfg, fault).unwrap();
+    for wave in workload(seed) {
+        for r in &wave {
+            tier.submit(r).unwrap();
+        }
+        tier.drain().unwrap();
+    }
+    tier
+}
+
+/// The tentpole property: for every step `s` the engine of shard 0 ever
+/// dispatches, killing the shard at `s` must leave the merged
+/// fingerprint and every client stream byte-identical to the
+/// uninterrupted run. Iterating `s` ascending makes the first failing
+/// step the minimal counterexample — the loop is its own shrinker. A
+/// drain that forwarded a repeated or regressed `position` would have
+/// failed inside `StreamLog` already, so reaching the assertions also
+/// proves stream monotonicity across the failover.
+#[test]
+fn kill_at_every_step_is_client_invisible() {
+    let rt = runtime();
+    let seed = 29;
+    let clean = run_tier(&rt, FaultPlan::default(), seed);
+    assert_eq!(clean.restarts(), 0);
+    let horizon = clean.shard_steps(0);
+    assert!(horizon >= 2, "workload too small to place kills (horizon \
+                           {horizon})");
+    let clean_fp = clean.merged_fingerprint();
+
+    // `s = horizon` never fires (the shard is idle by then), so the
+    // kill range is 1..horizon.
+    for s in 1..horizon {
+        let faulted = run_tier(
+            &rt,
+            FaultPlan { kill_at_step: Some((0, s)), ..FaultPlan::default() },
+            seed,
+        );
+        assert_eq!(faulted.restarts(), 1,
+                   "kill at step {s} did not fire exactly once");
+        assert!(faulted.errors.is_empty(),
+                "kill at step {s} surfaced client errors: {:?}",
+                faulted.errors);
+        assert!(faulted.replay_stats().replayed_groups > 0,
+                "kill at step {s} recovered without replaying anything");
+        assert!(faulted.log.same_streams(&clean.log),
+                "kill at step {s}: client streams diverged (minimal \
+                 counterexample — smaller kill steps all passed)");
+        assert_eq!(faulted.merged_fingerprint(), clean_fp,
+                   "kill at step {s}: merged fingerprint diverged \
+                    (minimal counterexample)");
+    }
+}
+
+/// Replay idempotence: replaying the journal twice on failover must be
+/// a no-op for the second pass — same counters, same streams, same
+/// replay accounting as a single-pass recovery.
+#[test]
+fn double_replay_is_a_no_op() {
+    let rt = runtime();
+    let seed = 43;
+    let clean = run_tier(&rt, FaultPlan::default(), seed);
+    let kill = (clean.shard_steps(0) / 2).max(1);
+    let single = run_tier(
+        &rt,
+        FaultPlan { kill_at_step: Some((0, kill)), ..FaultPlan::default() },
+        seed,
+    );
+    let double = run_tier(
+        &rt,
+        FaultPlan {
+            kill_at_step: Some((0, kill)),
+            double_replay: true,
+            ..FaultPlan::default()
+        },
+        seed,
+    );
+    assert_eq!(double.restarts(), 1);
+    assert_eq!(double.merged_fingerprint(), single.merged_fingerprint(),
+               "second replay pass changed engine counters");
+    assert_eq!(double.merged_fingerprint(), clean.merged_fingerprint());
+    assert!(double.log.same_streams(&clean.log),
+            "second replay pass leaked duplicate events to clients");
+    let (s, d) = (single.replay_stats(), double.replay_stats());
+    assert_eq!(d.replayed_groups, s.replayed_groups,
+               "idempotence: the applied-set must absorb the second pass");
+    assert_eq!(d.replayed_tokens, s.replayed_tokens);
+}
+
+/// The shutdown-ordering window: a request journaled but never
+/// submitted (the shard died in between) must be recovered by replay
+/// with no client-visible error and no stream divergence.
+#[test]
+fn journaled_but_unsubmitted_request_is_recovered() {
+    let rt = runtime();
+    let seed = 57;
+    let clean = run_tier(&rt, FaultPlan::default(), seed);
+    let faulted = run_tier(
+        &rt,
+        FaultPlan { drop_after_append: Some(1), ..FaultPlan::default() },
+        seed,
+    );
+    assert_eq!(faulted.restarts(), 1);
+    assert!(faulted.errors.is_empty(),
+            "a journaled request must never error: {:?}", faulted.errors);
+    assert!(faulted.log.same_streams(&clean.log));
+    assert_eq!(faulted.merged_fingerprint(), clean.merged_fingerprint());
+}
+
+/// The documented lost-write window: a request dropped *before* the
+/// journal append is gone — the client gets a structured error — but
+/// every other stream must still match the crash-free run exactly.
+#[test]
+fn lost_before_append_loses_exactly_one_request() {
+    let rt = runtime();
+    let seed = 71;
+    let clean = run_tier(&rt, FaultPlan::default(), seed);
+    let faulted = run_tier(
+        &rt,
+        FaultPlan { drop_before_append: Some(1), ..FaultPlan::default() },
+        seed,
+    );
+    assert_eq!(faulted.restarts(), 1);
+    assert_eq!(faulted.errors.len(), 1, "exactly one structured error");
+    assert!(faulted.errors[0].contains("lost before journal append"),
+            "error names the window: {}", faulted.errors[0]);
+    // request 1's streams are gone; every surviving stream is identical
+    assert!(faulted.log.tokens.keys().all(|(id, _)| *id != 1));
+    for (key, stream) in &faulted.log.tokens {
+        assert_eq!(Some(stream), clean.log.tokens.get(key),
+                   "surviving stream {key:?} diverged");
+    }
+    for (key, out) in &faulted.log.done {
+        assert_eq!(Some(out), clean.log.done.get(key));
+    }
+    assert_eq!(faulted.log.done.len(),
+               clean.log.done.len() - clean.log.done.keys()
+                   .filter(|(id, _)| *id == 1).count());
+}

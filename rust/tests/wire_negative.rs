@@ -1,0 +1,188 @@
+//! Negative-path wire-protocol tests: garbage lines, unknown commands
+//! and post-shutdown submissions must produce structured `error` events
+//! or a clean close — never a panic, a wedged connection, or a wedged
+//! server. Driven over raw sockets (the typed `server::Client` can't
+//! produce malformed input by design). Requires the compiled artifacts
+//! (`make artifacts`).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::thread;
+use std::time::Duration;
+
+use triton_anatomy::config::EngineConfig;
+use triton_anatomy::json::{self, Value};
+use triton_anatomy::server::{serve_with, ServeOpts};
+
+fn ephemeral_addr() -> String {
+    let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+    let port = probe.local_addr().unwrap().port();
+    drop(probe);
+    format!("127.0.0.1:{port}")
+}
+
+fn start_server(addr: &str, max_requests: usize, lockstep: bool)
+    -> thread::JoinHandle<anyhow::Result<()>> {
+    let dir = triton_anatomy::default_artifacts_dir();
+    let server_addr = addr.to_string();
+    thread::spawn(move || {
+        serve_with(dir, EngineConfig::default(), ServeOpts {
+            addr: server_addr,
+            max_requests: Some(max_requests),
+            lockstep,
+            ..ServeOpts::default()
+        })
+    })
+}
+
+/// Raw line-oriented wire connection.
+struct Wire {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Wire {
+    fn open(addr: &str) -> Wire {
+        // the server binds before spawning shards, so a short retry
+        // loop outlasts any boot latency
+        for _ in 0..200 {
+            if let Ok(s) = TcpStream::connect(addr) {
+                s.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+                return Wire {
+                    writer: s.try_clone().unwrap(),
+                    reader: BufReader::new(s),
+                };
+            }
+            thread::sleep(Duration::from_millis(50));
+        }
+        panic!("server at {addr} never accepted a connection");
+    }
+
+    fn send(&mut self, line: &str) {
+        writeln!(self.writer, "{line}").unwrap();
+        self.writer.flush().unwrap();
+    }
+
+    /// Next event line, parsed. Panics on timeout or close — every
+    /// caller expects the connection to still be alive.
+    fn read_event(&mut self) -> Value {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line)
+            .expect("read timed out: connection wedged");
+        assert!(n > 0, "connection closed while an event was expected");
+        json::parse(line.trim()).unwrap()
+    }
+
+    /// Expect a structured `error` event whose message contains
+    /// `needle`; returns the message.
+    fn expect_error(&mut self, needle: &str) -> String {
+        let ev = self.read_event();
+        assert_eq!(ev.str_field("event").unwrap(), "error",
+                   "expected an error event, got: {ev:?}");
+        let msg = ev.str_field("message").unwrap();
+        assert!(msg.contains(needle),
+                "error message missing '{needle}': {msg}");
+        msg
+    }
+
+    /// Expect the server to close the connection (EOF), not wedge.
+    fn expect_eof(&mut self) {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line)
+            .expect("read timed out waiting for the server to close");
+        assert_eq!(n, 0, "expected a clean close, got: {line}");
+    }
+}
+
+/// Every malformed line gets exactly one structured `error` event, the
+/// connection survives all of them, and a well-formed request completes
+/// afterwards — garbage never panics or wedges the reader.
+#[test]
+fn malformed_lines_get_structured_errors_and_never_wedge() {
+    let addr = ephemeral_addr();
+    let handle = start_server(&addr, 1, true);
+    let mut w = Wire::open(&addr);
+
+    for (line, needle) in [
+        ("{\"prompt\": [1, 2", ""),             // truncated JSON
+        ("these are not the tokens", ""),        // not JSON at all
+        ("{\"cmd\": \"frobnicate\"}", "unknown command"),
+        ("{\"cmd\": 7}", ""),                    // command name not a string
+        ("{}", "prompt"),                        // missing required field
+        ("{\"prompt\": \"abc\"}", ""),           // prompt not an array
+        ("{\"prompt\": [1], \"priority\": \"urgent\"}", "priority"),
+        ("{\"prompt\": [1], \"tenant\": \"\"}", "tenant"),
+        ("{\"prompt\": [1], \"max_new_tokens\": \"many\"}", ""),
+    ] {
+        w.send(line);
+        let msg = w.expect_error(needle);
+        assert!(!msg.is_empty(), "error for {line:?} carries a message");
+    }
+
+    // the connection is still healthy: a valid request completes
+    w.send("{\"prompt\": [5, 6, 7], \"max_new_tokens\": 2}");
+    w.send("{\"cmd\": \"run\"}");
+    let mut done = false;
+    let mut stepped = false;
+    while !(done && stepped) {
+        let ev = w.read_event();
+        match ev.str_field("event").unwrap().as_str() {
+            "done" => done = true,
+            "stepped" => stepped = true,
+            "token" => {}
+            other => panic!("unexpected event after recovery: {other}"),
+        }
+    }
+    handle.join().unwrap().unwrap();
+}
+
+/// `run`/`step` against a free-running server is a client mistake, not
+/// a server crash: a structured error that names the fix.
+#[test]
+fn lockstep_commands_without_lockstep_mode_error_cleanly() {
+    let addr = ephemeral_addr();
+    let handle = start_server(&addr, 1, false);
+    let mut w = Wire::open(&addr);
+    w.send("{\"cmd\": \"run\"}");
+    w.expect_error("lockstep");
+    w.send("{\"cmd\": \"step\"}");
+    w.expect_error("--lockstep");
+
+    // free-running completion still works on the same connection
+    w.send("{\"prompt\": [9, 8, 7], \"max_new_tokens\": 2}");
+    loop {
+        let ev = w.read_event();
+        if ev.str_field("event").unwrap() == "done" {
+            break;
+        }
+    }
+    handle.join().unwrap().unwrap();
+}
+
+/// A submission racing the server's shutdown must end in a clean close
+/// (EOF after the in-flight events), never a wedged read or a panic:
+/// the dispatcher is gone, the reader thread folds, and every socket
+/// handle is released.
+#[test]
+fn submit_after_shutdown_closes_cleanly() {
+    let addr = ephemeral_addr();
+    let handle = start_server(&addr, 1, true);
+    let mut w = Wire::open(&addr);
+
+    w.send("{\"prompt\": [3, 1, 4, 1, 5], \"max_new_tokens\": 2}");
+    w.send("{\"cmd\": \"run\"}");
+    let mut done = false;
+    let mut stepped = false;
+    while !(done && stepped) {
+        match w.read_event().str_field("event").unwrap().as_str() {
+            "done" => done = true,
+            "stepped" => stepped = true,
+            _ => {}
+        }
+    }
+    // the completion hit max_requests: wait for the server to finish
+    // its shutdown handshake, then submit into the corpse
+    handle.join().unwrap().unwrap();
+    w.send("{\"prompt\": [1, 2, 3], \"max_new_tokens\": 1}");
+    w.expect_eof();
+}
