@@ -5,7 +5,7 @@
 # real JAX/Pallas AOT flow (`python -m compile.aot`) produces the same
 # manifest schema on a machine with a working XLA toolchain.
 
-.PHONY: artifacts test tier1 test-fault bench bench-gate profile
+.PHONY: artifacts test tier1 test-fault bench bench-gate profile docs
 
 artifacts:
 	python3 python/compile/gen_sim_artifacts.py
@@ -39,3 +39,13 @@ profile:
 bench-gate:
 	cd rust && cargo build --release && \
 	  ./target/release/repro bench --compare ../BENCH_baseline.json
+
+# The CI docs job, locally: rustdoc with warnings denied, the runnable
+# doctests (incl. the admission rejection-event examples), the offline
+# markdown link checker, and the counter<->gate-table drift check
+# (docs/README.md lists what each guard covers).
+docs:
+	cd rust && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+	cd rust && cargo test -q --doc
+	python3 python/check_doc_links.py docs ROADMAP.md PAPER.md PAPERS.md CHANGES.md
+	python3 python/check_counter_docs.py

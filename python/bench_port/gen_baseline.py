@@ -1435,6 +1435,60 @@ class Router:
         return shard
 
 
+class AdmissionController:
+    """admission.rs AdmissionController — the same pure state machine:
+    the tenant bucket is checked before the queue cap, a queue-full shed
+    spends no token, dequeue ticks refill every bucket (capped at the
+    burst), and counting stays active even with both knobs off (0)."""
+
+    def __init__(self, queue_cap, tenant_burst, tenant_refill):
+        self.queue_cap = queue_cap
+        self.burst = tenant_burst
+        self.refill = tenant_refill
+        self.depth = 0
+        self.buckets = {}  # tenant -> remaining tokens (lazily full)
+        self.admitted = 0
+        self.shed = 0
+        self.shed_by_tenant = {}
+        self.peak = 0
+
+    def offer(self, tenant):
+        """None admits (the caller owes one on_dequeue); otherwise the
+        shed reason's wire spelling."""
+        if self.burst > 0:
+            if tenant not in self.buckets:
+                self.buckets[tenant] = self.burst
+            if self.buckets[tenant] == 0:
+                return self._shed(tenant, "tenant_rate_limited")
+        if self.queue_cap > 0 and self.depth >= self.queue_cap:
+            return self._shed(tenant, "queue_full")
+        if self.burst > 0:
+            self.buckets[tenant] -= 1
+        self.depth += 1
+        self.admitted += 1
+        self.peak = max(self.peak, self.depth)
+        return None
+
+    def _shed(self, tenant, reason):
+        self.shed += 1
+        self.shed_by_tenant[tenant] = self.shed_by_tenant.get(tenant, 0) + 1
+        return reason
+
+    def on_dequeue(self):
+        self.depth = max(self.depth - 1, 0)
+        if self.burst > 0 and self.refill > 0:
+            for t in self.buckets:
+                self.buckets[t] = min(self.buckets[t] + self.refill,
+                                      self.burst)
+
+    def export_into(self, fp):
+        fp["admitted_requests"] = self.admitted
+        fp["shed_requests"] = self.shed
+        for t in sorted(self.shed_by_tenant):
+            fp["shed_by_tenant:%s" % t] = self.shed_by_tenant[t]
+        fp["intake_queue_peak"] = self.peak
+
+
 # ---------------------------------------------------------------------------
 # Bench harness (bench.rs)
 # ---------------------------------------------------------------------------
@@ -1442,7 +1496,8 @@ class Router:
 SCENARIOS = ["prefill_heavy", "decode_heavy", "mixed_poisson", "prefix_replay",
              "parallel_sampling", "beam_search", "beam_early_stop",
              "preemption_pressure", "long_context_stall", "multi_tenant_storm",
-             "sharded_affinity", "failover_replay", "server_replay"]
+             "sharded_affinity", "failover_replay", "server_replay",
+             "admission_storm"]
 
 STEPS_PER_S = 25.0
 SCHEMA_VERSION = 1
@@ -1491,7 +1546,7 @@ def merge_fingerprints(fps):
     return out
 
 
-def journal_line(seq, shard, step, prompt, max_new):
+def journal_line(seq, shard, step, prompt, max_new, tenant="default"):
     """journal.rs JournalEntry::serialize for default (greedy) sampling:
     fixed field order, no whitespace, floats as 16-hex f64 bit patterns.
     `journal_bytes` is a gated counter, so every line must be the exact
@@ -1501,9 +1556,9 @@ def journal_line(seq, shard, step, prompt, max_new):
             '"n":1,"seed":0,"temp_bits":"%s","beam_width":0,'
             '"length_penalty_bits":"%s","early_stopping":false,'
             '"stop_token_ids":[],"stop_sequences":[],'
-            '"priority":"interactive","tenant":"default"}'
+            '"priority":"interactive","tenant":"%s"}'
             % (seq, shard, step,
-               ",".join(str(t) for t in prompt), max_new, bits, bits))
+               ",".join(str(t) for t in prompt), max_new, bits, bits, tenant))
 
 
 def sharded_affinity_waves(families, shared_prefix, tail, waves, rng):
@@ -1659,7 +1714,66 @@ def run_server_replay():
     fp["replayed_groups"] = 0
     fp["replayed_tokens"] = 0
     fp["journal_bytes"] = journal_bytes
+    # admission counters: nothing sheds, and each lockstep submit is
+    # drained by its own `run` before the next one arrives (peak 1)
+    fp["admitted_requests"] = n_requests
+    fp["shed_requests"] = 0
+    fp["intake_queue_peak"] = 1
     return fp, n_requests
+
+
+def admission_storm_requests(rng):
+    """workload.rs AdmissionStorm::requests for the bench plan: 15
+    round-robin submits across three tenants, one rng.range + rng.tokens
+    pair per request, in request order."""
+    tenants = ["acme", "bligh", "corto"]
+    out = []
+    for i in range(15):
+        ln = rng.range(8, 24)
+        out.append(Request(rng.tokens(ln), SamplingParams.greedy(), 6,
+                           INTERACTIVE, tenants[i % 3]))
+    return out
+
+
+def run_admission_storm():
+    """bench.rs run_admission_storm — the lockstep TCP storm reduces to:
+    offer all 15 submits to the controller (in lockstep the whole burst
+    is offered before any dequeue), then drain the admitted subset
+    through the two-shard router exactly like the dispatcher's `run`
+    boundary (one dequeue tick + one journal line + one placement per
+    request, all at engine step 0), and run each shard to completion in
+    shard order. Shed requests spend no global seq and touch nothing
+    downstream, so the merged fingerprint is the admitted subset's plus
+    the controller's exported admission counters."""
+    reqs = admission_storm_requests(Rng(47))
+    ctrl = AdmissionController(7, 3, 1)
+    admitted = [r for r in reqs if ctrl.offer(r.tenant) is None]
+    shards = 2
+    router = Router(shards, AFFINITY, BLOCK_SIZE)
+    engines = [Engine(bench_config("admission_storm"))
+               for _ in range(shards)]
+    journal_bytes = 0
+    for seq, r in enumerate(admitted, 1):
+        ctrl.on_dequeue()
+        statuses = [(e.live_rows(), e.kv.free_pages()) for e in engines]
+        shard, memo = router.place(r.prompt, statuses)
+        line = journal_line(seq, shard, engines[shard].m["steps"],
+                            r.prompt, r.max_new, tenant=r.tenant)
+        journal_bytes += len(line) + 1
+        engines[shard].add_group_routed(r.prompt, SamplingParams.greedy(),
+                                        r.max_new, memo, tenant=r.tenant)
+    for e in engines:
+        e.run_to_completion()
+    fp = merge_fingerprints([fingerprint(e.m) for e in engines])
+    fp["router_affinity_hits"] = router.affinity_hits
+    fp["router_load_routed"] = router.load_routed
+    fp["shard_imbalance_max"] = router.imbalance_max
+    fp["shard_restarts"] = 0
+    fp["replayed_groups"] = 0
+    fp["replayed_tokens"] = 0
+    fp["journal_bytes"] = journal_bytes
+    ctrl.export_into(fp)
+    return fp, len(reqs)
 
 
 def run_scenario(name, policy=DECODE_FIRST):
@@ -1669,6 +1783,8 @@ def run_scenario(name, policy=DECODE_FIRST):
         return run_failover_replay()
     if name == "server_replay":
         return run_server_replay()
+    if name == "admission_storm":
+        return run_admission_storm()
     engine = Engine(bench_config(name, policy))
     engine.warmup()
     if name == "prefill_heavy":

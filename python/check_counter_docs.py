@@ -1,0 +1,117 @@
+#!/usr/bin/env python3
+"""Counter <-> gate-table drift check.
+
+Usage: python3 python/check_counter_docs.py [BASELINE] [BENCHMARKS_MD]
+
+Asserts that the gate table in ``docs/BENCHMARKS.md`` and the
+fingerprint counters of ``BENCH_baseline.json`` name exactly the same
+set:
+
+* every counter appearing in any scenario fingerprint of the baseline
+  must be listed in the gate table (an undocumented counter has an
+  undocumented gate class), and
+* every counter the gate table lists must still exist in the baseline
+  (a documented counter the code no longer emits is stale docs).
+
+Per-tenant counters are normalized to the spellings the table uses:
+``wfq_admitted_tokens:acme`` matches the documented
+``wfq_admitted_tokens:<tenant>``, likewise ``shed_by_tenant:<tenant>``.
+
+Exits non-zero listing every drifted name; fails closed when either
+input file or the gate table itself is missing. Stdlib only — runs in
+the offline CI ``docs`` job and under ``make docs``.
+"""
+import json
+import os
+import re
+import sys
+
+# per-tenant counter families: one table row spelling covers the whole
+# family
+TENANT_PREFIXES = ("wfq_admitted_tokens:", "shed_by_tenant:")
+
+GATE_HEADER = re.compile(r"^\|\s*gate\s*\|\s*counters\s*\|", re.IGNORECASE)
+BACKTICKED = re.compile(r"`([^`]+)`")
+
+
+def normalize(counter):
+    for prefix in TENANT_PREFIXES:
+        if counter.startswith(prefix):
+            return prefix + "<tenant>"
+    return counter
+
+
+def baseline_counters(path):
+    with open(path, encoding="utf-8") as f:
+        report = json.load(f)
+    counters = set()
+    for scenario in report["scenarios"]:
+        counters.update(normalize(k) for k in scenario["fingerprint"])
+    return counters
+
+
+def documented_counters(path):
+    """Backticked names from the counters column of the gate table."""
+    with open(path, encoding="utf-8") as f:
+        lines = f.read().splitlines()
+    rows = []
+    in_table = False
+    for line in lines:
+        if GATE_HEADER.match(line):
+            in_table = True
+            continue
+        if in_table:
+            if not line.startswith("|"):
+                break
+            if re.match(r"^\|[\s|:-]+$", line):  # separator row
+                continue
+            rows.append(line)
+    if not rows:
+        return None
+    documented = set()
+    for row in rows:
+        cells = row.split("|")
+        if len(cells) < 3:
+            continue
+        # cells[1] is the gate class, cells[2] the counters column;
+        # backticked names in the rationale column are prose, not policy
+        documented.update(normalize(c) for c in BACKTICKED.findall(cells[2]))
+    return documented
+
+
+def main(argv):
+    baseline = argv[0] if argv else "BENCH_baseline.json"
+    benchmarks = argv[1] if len(argv) > 1 else os.path.join(
+        "docs", "BENCHMARKS.md")
+    failures = 0
+    for path in (baseline, benchmarks):
+        if not os.path.isfile(path):
+            # fail closed: a moved input must not turn the guard into a
+            # silent no-op
+            print(f"check_counter_docs: no such file: {path}",
+                  file=sys.stderr)
+            failures += 1
+    if failures:
+        return 1
+    in_baseline = baseline_counters(baseline)
+    documented = documented_counters(benchmarks)
+    if documented is None:
+        print(f"check_counter_docs: no gate table "
+              f"('| gate | counters | ...') found in {benchmarks}",
+              file=sys.stderr)
+        return 1
+    for name in sorted(in_baseline - documented):
+        print(f"{benchmarks}: counter '{name}' is in {baseline} but "
+              f"missing from the gate table", file=sys.stderr)
+        failures += 1
+    for name in sorted(documented - in_baseline):
+        print(f"{benchmarks}: gate table lists '{name}' but no scenario "
+              f"in {baseline} produces it", file=sys.stderr)
+        failures += 1
+    print(f"check_counter_docs: {len(in_baseline)} baseline counters, "
+          f"{len(documented)} documented, {failures} drifted")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

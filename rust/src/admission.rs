@@ -1,0 +1,326 @@
+//! Deterministic admission control for the serving tier's intake.
+//!
+//! Every wire request now passes through an [`AdmissionController`]
+//! before it reaches the dispatcher's router: a bounded admission queue
+//! plus per-tenant token buckets, both configured by
+//! [`AdmissionConfig`](crate::config::AdmissionConfig) (all knobs
+//! default to off). A request the policy rejects is *shed* — the client
+//! receives a structured `error` event
+//! (`code: "admission_rejected"`, `reason: "queue_full" |
+//! "tenant_rate_limited"`, see `docs/WIRE_PROTOCOL.md`) and the
+//! connection stays healthy; nothing is silently dropped and nothing
+//! wedges.
+//!
+//! ## Determinism contract
+//!
+//! The controller is a pure state machine over two inputs: the arrival
+//! order of [`offer`](AdmissionController::offer) calls and the dequeue
+//! ticks of [`on_dequeue`](AdmissionController::on_dequeue). Token
+//! buckets refill per dequeue tick — a *virtual* clock, never wall
+//! time — so under `--lockstep` (where the queue drains only at client
+//! command boundaries) the shed set is a byte-reproducible function of
+//! the submission sequence. The gated `admission_storm` bench scenario
+//! pins exactly this: same submissions in, same shed set out, and the
+//! admitted subset's engine fingerprint equal to running that subset
+//! without the storm.
+//!
+//! ## Wire shape
+//!
+//! A shed request's rejection event is ordinary JSON on the same
+//! connection, parseable with the crate's own [`json`](crate::json)
+//! module:
+//!
+//! ```
+//! use triton_anatomy::json;
+//!
+//! let line = r#"{"event": "error", "code": "admission_rejected",
+//!                "reason": "queue_full", "tenant": "acme",
+//!                "message": "request shed: admission queue is full"}"#;
+//! let ev = json::parse(line).unwrap();
+//! assert_eq!(ev.str_field("event").unwrap(), "error");
+//! assert_eq!(ev.str_field("code").unwrap(), "admission_rejected");
+//! assert_eq!(ev.str_field("reason").unwrap(), "queue_full");
+//! assert_eq!(ev.str_field("tenant").unwrap(), "acme");
+//! ```
+//!
+//! And the controller itself is deterministic in its inputs:
+//!
+//! ```
+//! use triton_anatomy::admission::{AdmissionController, ShedReason};
+//! use triton_anatomy::config::AdmissionConfig;
+//!
+//! let cfg = AdmissionConfig { queue_cap: 2, tenant_burst: 1, tenant_refill: 1 };
+//! let mut ctrl = AdmissionController::new(cfg);
+//! assert_eq!(ctrl.offer("acme"), Ok(()));
+//! assert_eq!(ctrl.offer("acme"), Err(ShedReason::TenantRateLimited));
+//! assert_eq!(ctrl.offer("bligh"), Ok(()));
+//! assert_eq!(ctrl.offer("corto"), Err(ShedReason::QueueFull));
+//! ctrl.on_dequeue(); // a dequeue tick refills every bucket
+//! assert_eq!(ctrl.offer("acme"), Ok(()));
+//! assert_eq!(ctrl.counters().admitted, 3);
+//! assert_eq!(ctrl.counters().shed, 2);
+//! ```
+
+use std::collections::BTreeMap;
+
+use crate::config::AdmissionConfig;
+
+/// Why a request was shed. Serialized as the `reason` field of the
+/// structured `admission_rejected` error event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The admission queue already holds `queue_cap` requests awaiting
+    /// placement.
+    QueueFull,
+    /// The tenant's token bucket is empty.
+    TenantRateLimited,
+}
+
+impl ShedReason {
+    /// Wire spelling of the reason.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ShedReason::QueueFull => "queue_full",
+            ShedReason::TenantRateLimited => "tenant_rate_limited",
+        }
+    }
+
+    /// Human-readable rejection message for the error event.
+    pub fn message(&self) -> &'static str {
+        match self {
+            ShedReason::QueueFull => "request shed: admission queue is full",
+            ShedReason::TenantRateLimited => {
+                "request shed: tenant rate limit exceeded"
+            }
+        }
+    }
+}
+
+/// Deterministic admission counters, merged into the server's metrics
+/// fingerprint (all gated, see `docs/BENCHMARKS.md`).
+#[derive(Debug, Clone, Default)]
+pub struct AdmissionCounters {
+    /// Requests that passed admission and reached the router.
+    pub admitted: u64,
+    /// Requests shed (both reasons).
+    pub shed: u64,
+    /// Shed requests by tenant (`shed_by_tenant:<tenant>` counters;
+    /// a tenant with no sheds emits no counter).
+    pub shed_by_tenant: BTreeMap<String, u64>,
+    /// High-water mark of the admission-queue depth.
+    pub queue_peak: u64,
+}
+
+/// Pure deterministic admission state machine: a depth-capped queue
+/// account plus per-tenant token buckets (see the module docs for the
+/// determinism contract). The dispatcher owns one; the bench's
+/// `admission_storm` scenario runs a second replica to *predict* the
+/// shed set and asserts the wire agrees.
+#[derive(Debug, Clone)]
+pub struct AdmissionController {
+    cfg: AdmissionConfig,
+    /// Requests admitted but not yet dequeued for placement.
+    depth: usize,
+    /// Per-tenant remaining burst tokens. Lazily populated: an unseen
+    /// tenant's bucket starts full.
+    buckets: BTreeMap<String, u64>,
+    counters: AdmissionCounters,
+}
+
+impl AdmissionController {
+    pub fn new(cfg: AdmissionConfig) -> Self {
+        AdmissionController {
+            cfg,
+            depth: 0,
+            buckets: BTreeMap::new(),
+            counters: AdmissionCounters::default(),
+        }
+    }
+
+    /// Offer one request for admission. `Ok(())` admits it into the
+    /// queue (the caller must eventually call
+    /// [`on_dequeue`](Self::on_dequeue) once per admitted request);
+    /// `Err` sheds it with the winning reason. The tenant bucket is
+    /// checked before the queue cap, and a queue-full shed does *not*
+    /// spend the tenant's token.
+    pub fn offer(&mut self, tenant: &str) -> Result<(), ShedReason> {
+        if self.cfg.tenant_burst > 0 {
+            let bucket = self
+                .buckets
+                .entry(tenant.to_string())
+                .or_insert(self.cfg.tenant_burst);
+            if *bucket == 0 {
+                return Err(self.shed(tenant, ShedReason::TenantRateLimited));
+            }
+        }
+        if self.cfg.queue_cap > 0 && self.depth >= self.cfg.queue_cap {
+            return Err(self.shed(tenant, ShedReason::QueueFull));
+        }
+        if self.cfg.tenant_burst > 0 {
+            // the entry exists: the bucket check above populated it
+            *self.buckets.get_mut(tenant).expect("bucket populated") -= 1;
+        }
+        self.depth += 1;
+        self.counters.admitted += 1;
+        self.counters.queue_peak = self.counters.queue_peak.max(self.depth as u64);
+        Ok(())
+    }
+
+    fn shed(&mut self, tenant: &str, reason: ShedReason) -> ShedReason {
+        self.counters.shed += 1;
+        *self
+            .counters
+            .shed_by_tenant
+            .entry(tenant.to_string())
+            .or_insert(0) += 1;
+        reason
+    }
+
+    /// One dequeue tick: a previously admitted request left the queue
+    /// for the router. Advances the virtual clock — every tenant bucket
+    /// refills by `tenant_refill`, capped at `tenant_burst`.
+    pub fn on_dequeue(&mut self) {
+        self.depth = self.depth.saturating_sub(1);
+        if self.cfg.tenant_burst > 0 && self.cfg.tenant_refill > 0 {
+            for bucket in self.buckets.values_mut() {
+                *bucket = (*bucket + self.cfg.tenant_refill)
+                    .min(self.cfg.tenant_burst);
+            }
+        }
+    }
+
+    /// Requests currently admitted but not yet dequeued.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    pub fn counters(&self) -> &AdmissionCounters {
+        &self.counters
+    }
+
+    /// Merge the admission counters into a metrics counter map under
+    /// their wire names (the spellings the bench fingerprint gates).
+    pub fn export_into(&self, counters: &mut BTreeMap<String, u64>) {
+        counters.insert("admitted_requests".into(), self.counters.admitted);
+        counters.insert("shed_requests".into(), self.counters.shed);
+        for (tenant, n) in &self.counters.shed_by_tenant {
+            counters.insert(format!("shed_by_tenant:{tenant}"), *n);
+        }
+        counters.insert("intake_queue_peak".into(), self.counters.queue_peak);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(queue_cap: usize, burst: u64, refill: u64) -> AdmissionConfig {
+        AdmissionConfig { queue_cap, tenant_burst: burst, tenant_refill: refill }
+    }
+
+    /// The disabled default admits everything and still counts.
+    #[test]
+    fn disabled_controller_admits_everything_and_counts() {
+        let mut ctrl = AdmissionController::new(AdmissionConfig::default());
+        for i in 0..100 {
+            assert_eq!(ctrl.offer(if i % 2 == 0 { "a" } else { "b" }), Ok(()));
+        }
+        assert_eq!(ctrl.counters().admitted, 100);
+        assert_eq!(ctrl.counters().shed, 0);
+        assert!(ctrl.counters().shed_by_tenant.is_empty());
+        assert_eq!(ctrl.counters().queue_peak, 100);
+        for _ in 0..100 {
+            ctrl.on_dequeue();
+        }
+        assert_eq!(ctrl.depth(), 0);
+    }
+
+    /// Queue cap sheds exactly the overflow, and dequeues reopen slots.
+    #[test]
+    fn queue_cap_sheds_overflow_and_reopens_on_dequeue() {
+        let mut ctrl = AdmissionController::new(cfg(3, 0, 0));
+        assert_eq!(ctrl.offer("t"), Ok(()));
+        assert_eq!(ctrl.offer("t"), Ok(()));
+        assert_eq!(ctrl.offer("t"), Ok(()));
+        assert_eq!(ctrl.offer("t"), Err(ShedReason::QueueFull));
+        assert_eq!(ctrl.depth(), 3);
+        ctrl.on_dequeue();
+        assert_eq!(ctrl.offer("t"), Ok(()));
+        assert_eq!(ctrl.counters().admitted, 4);
+        assert_eq!(ctrl.counters().shed, 1);
+        assert_eq!(ctrl.counters().shed_by_tenant["t"], 1);
+        assert_eq!(ctrl.counters().queue_peak, 3);
+    }
+
+    /// An empty tenant bucket sheds that tenant only; dequeue ticks
+    /// refill every bucket (capped at the burst).
+    #[test]
+    fn tenant_buckets_rate_limit_per_tenant_and_refill_on_dequeue() {
+        let mut ctrl = AdmissionController::new(cfg(0, 2, 1));
+        assert_eq!(ctrl.offer("acme"), Ok(()));
+        assert_eq!(ctrl.offer("acme"), Ok(()));
+        assert_eq!(ctrl.offer("acme"), Err(ShedReason::TenantRateLimited));
+        // another tenant's bucket is untouched
+        assert_eq!(ctrl.offer("bligh"), Ok(()));
+        // one dequeue tick refills acme 0 -> 1 (and bligh 1 -> 2)
+        ctrl.on_dequeue();
+        assert_eq!(ctrl.offer("acme"), Ok(()));
+        assert_eq!(ctrl.offer("acme"), Err(ShedReason::TenantRateLimited));
+        // refills cap at the burst: many idle ticks never exceed 2
+        for _ in 0..10 {
+            ctrl.on_dequeue();
+        }
+        assert_eq!(ctrl.offer("acme"), Ok(()));
+        assert_eq!(ctrl.offer("acme"), Ok(()));
+        assert_eq!(ctrl.offer("acme"), Err(ShedReason::TenantRateLimited));
+    }
+
+    /// A queue-full shed does not spend the tenant's token: once the
+    /// queue drains the tenant still has its burst available.
+    #[test]
+    fn queue_full_shed_spends_no_tenant_token() {
+        let mut ctrl = AdmissionController::new(cfg(1, 1, 0));
+        assert_eq!(ctrl.offer("a"), Ok(()));
+        assert_eq!(ctrl.offer("b"), Err(ShedReason::QueueFull));
+        ctrl.on_dequeue();
+        assert_eq!(ctrl.offer("b"), Ok(()), "b's token survived the shed");
+    }
+
+    /// The shed set is a pure function of the offer/dequeue sequence —
+    /// two replicas fed the same inputs agree verdict by verdict.
+    #[test]
+    fn shed_set_is_deterministic_across_replicas() {
+        let plan = cfg(4, 2, 1);
+        let tenants = ["acme", "bligh", "corto"];
+        let run = |mut ctrl: AdmissionController| -> Vec<Option<ShedReason>> {
+            let mut verdicts = Vec::new();
+            for i in 0..32 {
+                verdicts.push(ctrl.offer(tenants[i % 3]).err());
+                if i % 5 == 4 {
+                    ctrl.on_dequeue();
+                }
+            }
+            verdicts
+        };
+        let a = run(AdmissionController::new(plan.clone()));
+        let b = run(AdmissionController::new(plan));
+        assert_eq!(a, b);
+        assert!(a.iter().any(|v| v.is_some()), "the plan actually sheds");
+    }
+
+    /// `export_into` spells the gated counter names exactly.
+    #[test]
+    fn export_uses_gated_counter_spellings() {
+        let mut ctrl = AdmissionController::new(cfg(1, 0, 0));
+        ctrl.offer("a").unwrap();
+        assert!(ctrl.offer("b").is_err());
+        let mut m = BTreeMap::new();
+        ctrl.export_into(&mut m);
+        assert_eq!(m["admitted_requests"], 1);
+        assert_eq!(m["shed_requests"], 1);
+        assert_eq!(m["shed_by_tenant:b"], 1);
+        assert_eq!(m["intake_queue_peak"], 1);
+        assert!(!m.contains_key("shed_by_tenant:a"),
+                "tenants with no sheds emit no counter");
+    }
+}

@@ -38,13 +38,15 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::config::{EngineConfig, RequestMeta, SamplingParams};
+use crate::config::{AdmissionConfig, EngineConfig, RequestMeta, RouterConfig,
+                    SamplingParams};
 use crate::engine::Engine;
 use crate::json::{self, num, obj, Value};
 use crate::metrics::Snapshot;
 use crate::runtime::Runtime;
-use crate::workload::{ArrivalProcess, BeamSearchLoad, BestOfN, GroupRequest,
-                      LongContextStall, MultiTenantStorm, PrefixReplay, Rng};
+use crate::workload::{AdmissionStorm, ArrivalProcess, BeamSearchLoad, BestOfN,
+                      GroupRequest, LongContextStall, MultiTenantStorm,
+                      PrefixReplay, Rng};
 
 /// Version of the `BENCH_*.json` schema; bumped on incompatible change.
 /// `compare` refuses to gate across versions.
@@ -162,6 +164,12 @@ pub fn gate_of(counter: &str) -> Gate {
     if counter.starts_with("wfq_admitted_tokens:") {
         return Gate::Exact;
     }
+    // per-tenant shed counts: which tenant got load-shed is part of the
+    // admission policy's contract, not a cost — any drift means the shed
+    // set changed
+    if counter.starts_with("shed_by_tenant:") {
+        return Gate::Exact;
+    }
     match counter {
         "generated_tokens" | "groups_finished" | "stop_finishes"
         | "beam_finished_hyps" | "cancelled_groups"
@@ -169,7 +177,11 @@ pub fn gate_of(counter: &str) -> Gate {
         // fixes which shard dies at which step, so the restart count and
         // the replayed work are as gate-worthy as any output counter
         | "shard_restarts" | "replayed_groups"
-        | "replayed_tokens" => Gate::Exact,
+        | "replayed_tokens"
+        // admission verdicts are a deterministic function of the replayed
+        // submit order: a drifted shed/admit split is a policy change,
+        // failing in either direction
+        | "admitted_requests" | "shed_requests" => Gate::Exact,
         "engine_steps" | "prompt_tokens" | "pages_allocated" | "cow_copies"
         | "preemptions" | "self_preemptions" | "prefix_evictions"
         | "beam_forks" | "beam_prunes" | "beam_pruned_pages"
@@ -178,7 +190,10 @@ pub fn gate_of(counter: &str) -> Gate {
         // journal growth is write-amplification on the admission path:
         // byte-stable for a fixed workload, and creeping up means
         // entries got fatter (or something journals twice)
-        | "journal_bytes" => Gate::UpIsRegression,
+        | "journal_bytes"
+        // intake backlog high-water mark: deeper queues mean the
+        // dispatcher fell further behind the same replayed submit burst
+        | "intake_queue_peak" => Gate::UpIsRegression,
         "prefix_hit_tokens" | "router_affinity_hits" => Gate::DownIsRegression,
         // `prefill_chunk_deferrals` lands here on purpose: deferring a
         // chunk is the policy *working*, not a cost. `arena_reuses` and
@@ -1083,9 +1098,216 @@ pub fn run_server_replay(artifacts_dir: PathBuf, model: &str)
     })
 }
 
+/// What one lockstep admission run produced: the merged counter
+/// snapshot plus the advisory timing material.
+struct AdmissionRunOutcome {
+    counters: BTreeMap<String, u64>,
+    wall_s: f64,
+    tokens: u64,
+    ttft: Snapshot,
+    latency: Snapshot,
+}
+
+/// Drive one lockstep admission run over a two-shard tier: submit
+/// `requests` in order, assert the structured rejections match
+/// `expect_shed` exactly (reason, tenant, *order* — in lockstep every
+/// verdict lands before any engine work, so shed events arrive in
+/// submit order with nothing interleaved), `run` the admitted work to
+/// completion, and snapshot the merged counters. A throwaway request
+/// afterwards releases the server's `max_requests` latch outside the
+/// snapshot, exactly like `run_server_replay`.
+fn drive_admission_run(artifacts_dir: PathBuf, model: &str,
+                       admission: AdmissionConfig,
+                       requests: &[GroupRequest],
+                       expect_shed: &[(String, String)])
+    -> Result<AdmissionRunOutcome> {
+    use crate::metrics::Histogram;
+    use crate::server::{serve_with, Client, ServeOpts};
+    use std::net::TcpListener;
+
+    let probe = TcpListener::bind("127.0.0.1:0")?;
+    let addr = format!("127.0.0.1:{}", probe.local_addr()?.port());
+    drop(probe);
+    let n_admitted = requests.len() - expect_shed.len();
+    let ecfg = bench_config(model, "admission_storm");
+    let bound = addr.clone();
+    let server = std::thread::spawn(move || {
+        serve_with(artifacts_dir, ecfg, ServeOpts {
+            addr: bound,
+            // +1 for the post-snapshot release request below
+            max_requests: Some(n_admitted + 1),
+            router: RouterConfig { shards: 2, ..RouterConfig::default() },
+            lockstep: true,
+            admission,
+            ..ServeOpts::default()
+        })
+    });
+    let connected = (0..100).find_map(|_| {
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        Client::connect(&addr).ok()
+    });
+    let Some(mut client) = connected else {
+        // surface the server thread's real failure when it already died
+        if server.is_finished() {
+            server.join().unwrap().context("bench server failed")?;
+        }
+        bail!("bench server did not come up on {addr}");
+    };
+
+    let t0 = Instant::now();
+    for r in requests {
+        client.submit_with_meta(&r.prompt, r.max_new_tokens,
+                                &r.sampling, &r.meta)?;
+    }
+    for (i, (reason, tenant)) in expect_shed.iter().enumerate() {
+        let (got_reason, got_tenant) = client.wait_rejected()?;
+        if &got_reason != reason || &got_tenant != tenant {
+            bail!("shed #{i}: predicted ({reason}, {tenant}), the wire \
+                   said ({got_reason}, {got_tenant})");
+        }
+    }
+    let mut ttft = Histogram::new();
+    let mut latency = Histogram::new();
+    let mut tokens = 0u64;
+    client.send_cmd("run")?;
+    for _ in 0..n_admitted {
+        let done = client.wait_done()?;
+        ttft.record(done.ttft_ms);
+        latency.record(done.total_ms);
+        tokens += done.tokens.len() as u64;
+    }
+    client.wait_stepped()?;
+    let wall_s = t0.elapsed().as_secs_f64();
+    // the counter snapshot covers exactly the burst replayed above
+    let m = client.fetch_metrics()?;
+    // a throwaway request releases the server's max_requests latch
+    // without entering the snapshot
+    client.submit(&[1, 2, 3], 1)?;
+    client.send_cmd("run")?;
+    client.wait_done()?;
+    server.join().unwrap()?;
+    Ok(AdmissionRunOutcome {
+        counters: m.counters,
+        wall_s,
+        tokens,
+        ttft: ttft.snapshot(),
+        latency: latency.snapshot(),
+    })
+}
+
+/// TCP admission storm, in lockstep: a 15-request round-robin burst
+/// from three tenants hits a two-shard tier behind a 7-deep admission
+/// queue with 3-token tenant buckets (1 token refilled per dequeue).
+/// Three contracts gate at once:
+///
+/// 1. the shed *set* is deterministic — every rejection's
+///    `(reason, tenant)` pair matches an
+///    [`AdmissionController`](crate::admission::AdmissionController)
+///    replica fed the same submit order, in the same order, and the
+///    server's admission counters equal the replica's;
+/// 2. admission is invisible to admitted work — a control run with the
+///    policy off and only the admitted subset submitted produces the
+///    identical counters except `shed_requests` / `shed_by_tenant:*`
+///    themselves;
+/// 3. the router's determinism contract survives the storm — the
+///    control-equality check covers every router counter, so a
+///    placement drift between the runs fails here before it could
+///    reach the baseline gate.
+///
+/// The fingerprint is the storm run's merged counter snapshot.
+pub fn run_admission_storm(artifacts_dir: PathBuf, model: &str)
+    -> Result<ScenarioResult> {
+    use crate::admission::AdmissionController;
+
+    let admission = AdmissionConfig {
+        queue_cap: 7,
+        tenant_burst: 3,
+        tenant_refill: 1,
+    };
+    let load = AdmissionStorm {
+        tenants: vec!["acme".into(), "bligh".into(), "corto".into()],
+        burst: 15,
+        min_prompt: 8,
+        max_prompt: 24,
+        max_new_tokens: 6,
+        vocab: VOCAB,
+    };
+    let mut rng = Rng::new(47);
+    let requests = load.requests(&mut rng);
+
+    // replay the verdicts on a controller replica: in lockstep the whole
+    // burst is offered before any dequeue, so the replica sees exactly
+    // the sequence the server's dispatcher sees
+    let mut replica = AdmissionController::new(admission.clone());
+    let mut admitted = Vec::new();
+    let mut expect_shed = Vec::new();
+    for r in &requests {
+        match replica.offer(&r.meta.tenant) {
+            Ok(()) => admitted.push(r.clone()),
+            Err(reason) => expect_shed.push(
+                (reason.as_str().to_string(), r.meta.tenant.clone())),
+        }
+    }
+    if expect_shed.is_empty() || admitted.is_empty() {
+        bail!("degenerate storm: the burst must both admit and shed");
+    }
+
+    let storm = drive_admission_run(artifacts_dir.clone(), model,
+                                    admission, &requests, &expect_shed)?;
+    let control = drive_admission_run(artifacts_dir, model,
+                                      AdmissionConfig::default(),
+                                      &admitted, &[])?;
+    // contract 2 + 3: the shed overflow is the ONLY difference between
+    // the storm and the control run, in both directions
+    for (k, &cv) in &control.counters {
+        if k == "shed_requests" {
+            continue;
+        }
+        if storm.counters.get(k) != Some(&cv) {
+            bail!("admission must be invisible to admitted work: \
+                   counter '{k}' is {:?} under the storm but {cv} in \
+                   the control run", storm.counters.get(k));
+        }
+    }
+    for k in storm.counters.keys() {
+        if k == "shed_requests" || k.starts_with("shed_by_tenant:") {
+            continue;
+        }
+        if !control.counters.contains_key(k) {
+            bail!("storm-only counter '{k}' is not a shed counter");
+        }
+    }
+    // contract 1 (second half): the server's admission counters equal
+    // the replica's prediction
+    let mut predicted = BTreeMap::new();
+    replica.export_into(&mut predicted);
+    for (k, &pv) in &predicted {
+        if storm.counters.get(k) != Some(&pv) {
+            bail!("admission counter '{k}': the server says {:?}, the \
+                   controller replica says {pv}", storm.counters.get(k));
+        }
+    }
+
+    Ok(ScenarioResult {
+        name: "admission_storm".to_string(),
+        deterministic: true,
+        requests: requests.len(),
+        fingerprint: Fingerprint { counters: storm.counters },
+        timings: Timings {
+            wall_s: storm.wall_s,
+            throughput_tok_s: storm.tokens as f64 / storm.wall_s.max(1e-9),
+            ttft_ms: storm.ttft,
+            inter_token_ms: Snapshot::default(),
+            request_latency_ms: storm.latency,
+        },
+        phases: PhaseProfile::default(),
+    })
+}
+
 /// Run the scenario matrix (all of [`SCENARIOS`], or the `only` subset)
-/// and assemble a report. `wire` appends the TCP `server_replay`
-/// scenario (lockstep, deterministic — CI runs with it on).
+/// and assemble a report. `wire` appends the TCP scenarios
+/// (`server_replay`, then `admission_storm` — both lockstep and
+/// deterministic; CI runs with `--wire` on).
 pub fn run_matrix(artifacts_dir: PathBuf, model: &str, only: Option<&[String]>,
                   wire: bool) -> Result<BenchReport> {
     let rt = Rc::new(Runtime::load_dir(artifacts_dir.clone())?);
@@ -1101,7 +1323,9 @@ pub fn run_matrix(artifacts_dir: PathBuf, model: &str, only: Option<&[String]>,
     }
     if wire {
         eprintln!("[bench] running scenario 'server_replay' (TCP, lockstep)");
-        scenarios.push(run_server_replay(artifacts_dir, model)?);
+        scenarios.push(run_server_replay(artifacts_dir.clone(), model)?);
+        eprintln!("[bench] running scenario 'admission_storm' (TCP, lockstep)");
+        scenarios.push(run_admission_storm(artifacts_dir, model)?);
     }
     if scenarios.is_empty() {
         bail!("scenario filter matched nothing");
@@ -1372,6 +1596,29 @@ mod tests {
         let drift = report_with(&[("wfq_admitted_tokens:acme", 80)]);
         assert!(!compare(&drift, &base, false).passed(),
                 "a fair-share drift fails in either direction");
+    }
+
+    #[test]
+    fn admission_counters_gate_in_their_classes() {
+        assert_eq!(gate_of("admitted_requests"), Gate::Exact);
+        assert_eq!(gate_of("shed_requests"), Gate::Exact);
+        assert_eq!(gate_of("shed_by_tenant:acme"), Gate::Exact);
+        assert_eq!(gate_of("shed_by_tenant:anyone-else"), Gate::Exact);
+        assert_eq!(gate_of("intake_queue_peak"), Gate::UpIsRegression);
+
+        let base = report_with(&[("shed_requests", 8)]);
+        for v in [7, 9] {
+            let drift = report_with(&[("shed_requests", v)]);
+            assert!(!compare(&drift, &base, false).passed(),
+                    "a shed-set drift to {v} fails in either direction");
+        }
+        let base = report_with(&[("intake_queue_peak", 7)]);
+        let worse = report_with(&[("intake_queue_peak", 9)]);
+        assert!(!compare(&worse, &base, false).passed(),
+                "a deeper intake backlog for the same burst is a \
+                 regression");
+        let better = report_with(&[("intake_queue_peak", 5)]);
+        assert!(compare(&better, &base, false).passed());
     }
 
     #[test]

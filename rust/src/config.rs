@@ -626,6 +626,39 @@ impl Default for RouterConfig {
     }
 }
 
+/// Admission-control policy of the serving tier's intake (see
+/// [`crate::admission`] and `docs/OPERATIONS.md`). All knobs default to
+/// `0` = *off*: the disabled controller admits everything and only
+/// counts, so the legacy wire behavior — and every pre-existing gated
+/// fingerprint — is byte-identical.
+///
+/// Determinism: the token buckets refill on *dequeue ticks* (requests
+/// leaving the admission queue for the router), never on wall time, so
+/// the shed set is a pure function of the submission order.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct AdmissionConfig {
+    /// Global admission-queue depth cap. A request arriving while
+    /// `queue_cap` admitted requests await placement is shed with
+    /// `reason: "queue_full"`. `0` = unbounded.
+    pub queue_cap: usize,
+    /// Per-tenant token-bucket capacity (burst size). Every tenant's
+    /// bucket starts full; each admitted request spends one token, and
+    /// an empty bucket sheds with `reason: "tenant_rate_limited"`.
+    /// `0` = rate limiting off.
+    pub tenant_burst: u64,
+    /// Tokens refilled into *every* tenant bucket (capped at
+    /// `tenant_burst`) per dequeue tick. `0` = buckets never refill.
+    pub tenant_refill: u64,
+}
+
+impl AdmissionConfig {
+    /// Whether any shedding policy is active. The disabled controller
+    /// still counts `admitted_requests` / `intake_queue_peak`.
+    pub fn is_enabled(&self) -> bool {
+        self.queue_cap > 0 || self.tenant_burst > 0
+    }
+}
+
 /// Deterministic fault-injection plan for the serving tier (see
 /// `docs/RECOVERY.md`). Faults fire on *virtual* coordinates — an engine
 /// step count or an admission sequence number — never on wall time, so a

@@ -17,7 +17,11 @@
 //!   `docs/SHARDING.md`) with crash-tolerant failover — a per-shard
 //!   admission journal, a supervising dispatcher that replays it into
 //!   replacement shards, and a deterministic fault-injection layer
-//!   ([`journal`], `docs/RECOVERY.md`) — workload generators, benches
+//!   ([`journal`], `docs/RECOVERY.md`) — fronted by a non-blocking
+//!   intake that multiplexes every connection onto the dispatcher
+//!   through a deterministic admission-control layer (queue caps,
+//!   per-tenant token buckets, structured load-shedding; [`admission`],
+//!   `docs/OPERATIONS.md`) — workload generators, benches
 //!   for every figure of the paper's evaluation, and an end-to-end
 //!   serving benchmark subsystem ([`bench`], `repro bench`) whose
 //!   deterministic work-counter fingerprints gate CI against
@@ -254,6 +258,7 @@
 //! sampler for model steps — preserving every scheduling/caching
 //! invariant the tests pin down while staying toolchain-free.
 
+pub mod admission;
 pub mod autotune;
 pub mod batch;
 pub mod bench;

@@ -18,8 +18,9 @@ use anyhow::{bail, Context, Result};
 
 use triton_anatomy::autotune;
 use triton_anatomy::bench;
-use triton_anatomy::config::{EngineConfig, FaultPlan, RouterConfig,
-                             RouterPolicy, SamplingParams, SchedPolicy};
+use triton_anatomy::config::{AdmissionConfig, EngineConfig, FaultPlan,
+                             RouterConfig, RouterPolicy, SamplingParams,
+                             SchedPolicy};
 use triton_anatomy::engine::Engine;
 use triton_anatomy::heuristics::Heuristics;
 use triton_anatomy::microbench::{self, BenchOpts};
@@ -96,6 +97,12 @@ COMMANDS:
                                          kill:0@12,double-replay (RECOVERY.md)
                [--journal-dir DIR]       stream admission journals to
                                          DIR/shard-<k>.journal
+               [--admit-queue-cap N]     shed requests beyond N queued
+                                         admissions (0 = unbounded)
+               [--admit-tenant-burst N]  per-tenant token-bucket burst
+                                         (0 = rate limiting off)
+               [--admit-tenant-refill N] bucket tokens refilled per
+                                         dequeue tick (OPERATIONS.md)
   run          --prompt-len 16 --max-new 16 --model tiny [--heuristics F]
                [--n 4 --sample-seed 1 --temperature 0.7]  parallel sampling
                [--beam-width 3 --length-penalty 1.0]      beam search
@@ -192,6 +199,11 @@ fn cmd_serve(args: &Args, dir: PathBuf) -> Result<()> {
         Some(spec) => FaultPlan::parse(spec)?,
         None => FaultPlan::default(),
     };
+    let admission = AdmissionConfig {
+        queue_cap: args.usize_or("admit-queue-cap", 0)?,
+        tenant_burst: args.usize_or("admit-tenant-burst", 0)? as u64,
+        tenant_refill: args.usize_or("admit-tenant-refill", 0)? as u64,
+    };
     server::serve_with(dir, engine_config(args)?, server::ServeOpts {
         addr,
         max_requests,
@@ -199,6 +211,7 @@ fn cmd_serve(args: &Args, dir: PathBuf) -> Result<()> {
         lockstep: args.get("lockstep").is_some_and(|v| v != "false"),
         fault,
         journal_dir: args.get("journal-dir").map(PathBuf::from),
+        admission,
     })
 }
 

@@ -1,15 +1,22 @@
 //! TCP JSON-lines serving front-end.
 //!
 //! The PJRT client is not `Send`, so every engine owns its thread.
-//! Intake and dispatch are split: per-connection reader threads parse
-//! requests onto one dispatcher channel; the dispatcher owns the
-//! prefix-affinity [`Router`] and places each request onto one of N
+//! Intake and dispatch are split: a single non-blocking *intake thread*
+//! multiplexes every connection (non-blocking accept + per-connection
+//! line buffers), parses requests and forwards them onto one dispatcher
+//! channel — thousands of idle connections cost zero threads, where the
+//! previous design burned one blocking reader thread each. The
+//! dispatcher runs every arrival through the [`crate::admission`]
+//! controller (queue cap, per-tenant token buckets; off by default),
+//! sheds rejected requests with a structured `error` event, and places
+//! admitted ones via the prefix-affinity [`Router`] onto one of N
 //! engine shards ([`crate::shard`]), polling per-shard status channels
 //! for the load signal. With the default single shard the tier
 //! degenerates to the classic engine-loop server. Events fan in from
 //! the shards straight to each connection's writer channel; a group
 //! lives wholly on one shard, so per-branch `position` monotonicity on
-//! the wire is preserved by construction. See `docs/SHARDING.md`.
+//! the wire is preserved by construction. See `docs/SHARDING.md` and
+//! `docs/OPERATIONS.md`.
 //!
 //! Protocol (one JSON object per line; the field-by-field reference
 //! lives in `docs/WIRE_PROTOCOL.md`). `n`, `seed` and `temperature` are
@@ -74,6 +81,24 @@
 //! `metrics` works in free-running mode too; `run`/`step` outside
 //! lockstep yield a structured `error` event.
 //!
+//! # Admission control
+//!
+//! [`ServeOpts::admission`] bounds the intake
+//! ([`crate::config::AdmissionConfig`]; every knob defaults to off): a
+//! global queue-depth cap plus per-tenant token buckets that refill on
+//! dequeue ticks, never wall time. A shed request gets a structured
+//! `error` event carrying `code: "admission_rejected"`,
+//! `reason: "queue_full" | "tenant_rate_limited"` and the `tenant` —
+//! the connection stays usable. In lockstep mode admitted requests
+//! queue in the dispatcher and are placed at the next command boundary
+//! (`run`/`step`/`metrics`/shutdown), which is behavior-identical —
+//! engines never step between lockstep submits — and makes the shed
+//! set plus the `intake_queue_peak` counter deterministic; free-running
+//! mode places each admitted request immediately. The counters
+//! `admitted_requests`, `shed_requests`, `shed_by_tenant:*` and
+//! `intake_queue_peak` ride the `metrics` event and are gated
+//! (`docs/BENCHMARKS.md`, `admission_storm` scenario).
+//!
 //! # Crash tolerance
 //!
 //! The dispatcher is also the shard *supervisor* (`docs/RECOVERY.md`):
@@ -89,18 +114,20 @@
 //! recovery counters `shard_restarts`, `replayed_groups`,
 //! `replayed_tokens` and `journal_bytes` ride the `metrics` event.
 
-use std::collections::{HashMap, HashSet};
-use std::io::{BufRead, BufReader, Write};
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread;
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
+use crate::admission::{AdmissionController, ShedReason};
 use crate::bench::Fingerprint;
-use crate::config::{EngineConfig, FaultPlan, Priority, RequestMeta,
-                    RouterConfig, SamplingParams};
+use crate::config::{AdmissionConfig, EngineConfig, FaultPlan, Priority,
+                    RequestMeta, RouterConfig, SamplingParams};
 use crate::journal::{AdmissionJournal, JournalEntry, StreamDedupe};
 use crate::json::{self, num, obj, Value};
 use crate::kvcache::PrefixHasher;
@@ -165,6 +192,10 @@ pub enum Outgoing {
         free_pages: usize,
         total_pages: usize,
     },
+    /// Structured admission rejection: serialized as an `error` event
+    /// with machine-readable `code`/`reason`/`tenant` fields alongside
+    /// the human-readable `message` (`docs/WIRE_PROTOCOL.md`).
+    Reject { reason: ShedReason, tenant: String },
     Error(String),
 }
 
@@ -210,6 +241,14 @@ fn event_json(ev: &Outgoing) -> String {
             ])
             .to_string()
         }
+        Outgoing::Reject { reason, tenant } => obj(vec![
+            ("event", json::s("error")),
+            ("code", json::s("admission_rejected")),
+            ("reason", json::s(reason.as_str())),
+            ("tenant", json::s(tenant)),
+            ("message", json::s(reason.message())),
+        ])
+        .to_string(),
         Outgoing::Error(msg) => obj(vec![
             ("event", json::s("error")),
             ("message", json::s(msg)),
@@ -239,6 +278,10 @@ pub struct ServeOpts {
     /// `<dir>/shard-<k>.journal` (`--journal-dir`); the in-memory
     /// journal drives failover either way.
     pub journal_dir: Option<PathBuf>,
+    /// Admission-control policy (`--admit-queue-cap`,
+    /// `--admit-tenant-burst`, `--admit-tenant-refill`); the default
+    /// admits everything and only counts.
+    pub admission: AdmissionConfig,
 }
 
 impl Default for ServeOpts {
@@ -250,6 +293,7 @@ impl Default for ServeOpts {
             lockstep: false,
             fault: FaultPlan::default(),
             journal_dir: None,
+            admission: AdmissionConfig::default(),
         }
     }
 }
@@ -280,15 +324,9 @@ pub fn serve_with(artifacts_dir: std::path::PathBuf, ecfg: EngineConfig,
     let (tx, rx) = channel::<ToDispatcher>();
     let shutdown_tx = tx.clone();
 
-    // acceptor: one reader thread per connection
-    thread::spawn(move || {
-        for stream in listener.incoming().flatten() {
-            let tx = tx.clone();
-            thread::spawn(move || {
-                let _ = handle_connection(stream, tx);
-            });
-        }
-    });
+    // intake: one non-blocking thread multiplexes every connection —
+    // accept, buffer, split lines, parse, forward to the dispatcher
+    thread::spawn(move || intake_loop(listener, tx));
 
     // engine shards: each loads its own runtime on its own thread. A
     // boot-time health roundtrip surfaces load failures here instead of
@@ -303,8 +341,9 @@ pub fn serve_with(artifacts_dir: std::path::PathBuf, ecfg: EngineConfig,
     // serves commands, supervises failover
     let router = Router::new(opts.router.clone(), ecfg.block_size);
     let lockstep = opts.lockstep;
+    let admission = opts.admission.clone();
     let dispatcher = thread::spawn(move || {
-        dispatcher_loop(rx, pool, router, lockstep)
+        dispatcher_loop(rx, pool, router, lockstep, admission)
     });
 
     // supervisor: count completions (finished + cancelled requests).
@@ -590,56 +629,69 @@ impl ShardPool {
     }
 }
 
-/// The dispatcher thread: one placement (status poll → router → journal
-/// append → shard submit) per request, strictly in intake order, so the
-/// placement sequence is a pure function of the admission sequence and
-/// the status snapshots it observed. Owns the shard pool: shard deaths
-/// are detected and healed at every interaction point.
+/// An admitted request awaiting placement in the dispatcher's
+/// admission queue (lockstep drains at command boundaries; free-running
+/// drains immediately after every admission).
+struct QueuedRequest {
+    prompt: Vec<i32>,
+    max_new_tokens: usize,
+    sampling: SamplingParams,
+    meta: RequestMeta,
+    reply: Sender<Outgoing>,
+}
+
+/// The dispatcher thread: every arrival is offered to the admission
+/// controller first — shed requests get a structured rejection and
+/// never touch the router — then placed (status poll → router → journal
+/// append → shard submit) strictly in admission order, so the placement
+/// sequence is a pure function of the admitted sequence and the status
+/// snapshots it observed. Owns the shard pool: shard deaths are
+/// detected and healed at every interaction point.
 fn dispatcher_loop(rx: Receiver<ToDispatcher>, mut pool: ShardPool,
-                   mut router: Router, lockstep: bool) -> Result<()> {
+                   mut router: Router, lockstep: bool,
+                   admission: AdmissionConfig) -> Result<()> {
+    let mut ctrl = AdmissionController::new(admission);
+    let mut queue: VecDeque<QueuedRequest> = VecDeque::new();
     let mut next_global: RequestId = 1;
     for msg in rx {
         match msg {
             ToDispatcher::Request { prompt, max_new_tokens, sampling,
                                     meta, reply } => {
-                let mut statuses = Vec::with_capacity(pool.len());
-                for k in 0..pool.len() {
-                    statuses.push(pool.status(k));
-                }
-                let placement = router.place(&prompt, &statuses);
-                let k = placement.shard;
-                let seq = next_global;
-                next_global += 1;
-
-                if pool.fault.drop_before_append == Some(seq) {
-                    // the documented lost-write window: the shard dies
-                    // before the journal append, so replay cannot know
-                    // about this request — the client gets a structured
-                    // error instead of a silent hang
-                    pool.kill(k);
-                    pool.respawn(k);
-                    let _ = reply.send(Outgoing::Error(format!(
-                        "request {seq}: shard {k} is gone (lost before \
-                         journal append)")));
+                if let Err(reason) = ctrl.offer(&meta.tenant) {
+                    // shed: structured rejection, no global seq spent —
+                    // the admitted sequence stays dense, so the storm
+                    // run's placements match the storm-free run's
+                    let _ = reply.send(Outgoing::Reject {
+                        reason,
+                        tenant: meta.tenant.clone(),
+                    });
                     continue;
                 }
-
-                let entry = JournalEntry {
-                    seq,
-                    shard: k,
-                    step: statuses[k].steps,
-                    prompt,
-                    max_new_tokens,
-                    sampling,
-                    meta,
-                };
-                pool.journal_and_submit(entry, placement.memo, reply)?;
+                queue.push_back(QueuedRequest {
+                    prompt, max_new_tokens, sampling, meta, reply,
+                });
+                if !lockstep {
+                    // free-running: place immediately (the queue never
+                    // backs up; the tenant buckets are the limiter)
+                    drain_queue(&mut queue, &mut ctrl, &mut pool,
+                                &mut router, &mut next_global)?;
+                }
             }
             ToDispatcher::Command { kind, reply } => {
-                run_command(kind, &mut pool, &router, lockstep, &reply);
+                // lockstep command boundary: place everything admitted
+                // since the last command, in admission order — engines
+                // never step between lockstep submits, so deferring
+                // placement here is behavior-identical and makes the
+                // queue-depth peak deterministic
+                drain_queue(&mut queue, &mut ctrl, &mut pool, &mut router,
+                            &mut next_global)?;
+                run_command(kind, &mut pool, &router, lockstep, &ctrl,
+                            &reply);
             }
             ToDispatcher::Shutdown(ack) => {
-                let _ = ack.send(pool.shutdown());
+                let drained = drain_queue(&mut queue, &mut ctrl, &mut pool,
+                                          &mut router, &mut next_global);
+                let _ = ack.send(drained.and_then(|()| pool.shutdown()));
                 break;
             }
         }
@@ -647,10 +699,58 @@ fn dispatcher_loop(rx: Receiver<ToDispatcher>, mut pool: ShardPool,
     Ok(())
 }
 
+/// Place every queued admitted request, in admission order. Each
+/// dequeue ticks the admission controller's virtual clock (token-bucket
+/// refill).
+fn drain_queue(queue: &mut VecDeque<QueuedRequest>,
+               ctrl: &mut AdmissionController, pool: &mut ShardPool,
+               router: &mut Router, next_global: &mut RequestId)
+    -> Result<()> {
+    while let Some(q) = queue.pop_front() {
+        ctrl.on_dequeue();
+        let QueuedRequest { prompt, max_new_tokens, sampling, meta,
+                            reply } = q;
+        let mut statuses = Vec::with_capacity(pool.len());
+        for k in 0..pool.len() {
+            statuses.push(pool.status(k));
+        }
+        let placement = router.place(&prompt, &statuses);
+        let k = placement.shard;
+        let seq = *next_global;
+        *next_global += 1;
+
+        if pool.fault.drop_before_append == Some(seq) {
+            // the documented lost-write window: the shard dies
+            // before the journal append, so replay cannot know
+            // about this request — the client gets a structured
+            // error instead of a silent hang
+            pool.kill(k);
+            pool.respawn(k);
+            let _ = reply.send(Outgoing::Error(format!(
+                "request {seq}: shard {k} is gone (lost before \
+                 journal append)")));
+            continue;
+        }
+
+        let entry = JournalEntry {
+            seq,
+            shard: k,
+            step: statuses[k].steps,
+            prompt,
+            max_new_tokens,
+            sampling,
+            meta,
+        };
+        pool.journal_and_submit(entry, placement.memo, reply)?;
+    }
+    Ok(())
+}
+
 /// Execute one wire command against the shard pool, healing dead
 /// shards along the way ([`ShardPool::roundtrip`]).
 fn run_command(kind: CmdKind, pool: &mut ShardPool, router: &Router,
-               lockstep: bool, reply: &Sender<Outgoing>) {
+               lockstep: bool, ctrl: &AdmissionController,
+               reply: &Sender<Outgoing>) {
     match kind {
         CmdKind::Step | CmdKind::Run => {
             if !lockstep {
@@ -696,6 +796,7 @@ fn run_command(kind: CmdKind, pool: &mut ShardPool, router: &Router,
             c.insert("shard_imbalance_max".into(), rc.imbalance_max);
             c.insert("shard_restarts".into(), pool.restarts());
             c.insert("journal_bytes".into(), pool.journal_bytes());
+            ctrl.export_into(c);
             let _ = reply.send(Outgoing::Metrics {
                 counters: merged.counters,
                 free_pages,
@@ -705,19 +806,176 @@ fn run_command(kind: CmdKind, pool: &mut ShardPool, router: &Router,
     }
 }
 
-fn handle_connection(stream: TcpStream, tx: Sender<ToDispatcher>) -> Result<()> {
-    let peer = stream.peer_addr()?;
-    let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    let (reply_tx, reply_rx) = channel::<Outgoing>();
+/// One multiplexed connection in the intake loop: the non-blocking read
+/// half plus its line buffer and reply channel. The blocking-style
+/// writer thread is spawned at accept and lives until the reply channel
+/// closes or the socket breaks.
+struct Conn {
+    stream: TcpStream,
+    peer: String,
+    /// Bytes received but not yet terminated by `\n`.
+    buf: Vec<u8>,
+    reply: Sender<Outgoing>,
+}
 
-    // writer thread: serialize events back to the socket. The dedupe
-    // filter sits here — the single choke point every event to this
-    // connection crosses — so failover-replay re-emissions (repeated
-    // positions, duplicate dones) are dropped and the wire stream
-    // stays `position`-monotone with exactly one `done` per branch,
-    // crash or no crash.
-    let w = thread::spawn(move || {
+/// The intake thread: non-blocking accept + non-blocking reads over
+/// every connection, multiplexed in one loop — the async front that
+/// replaces thread-per-connection blocking readers. Parsed lines are
+/// forwarded to the dispatcher; parse errors turn into structured
+/// `error` events without ever reaching it. Exits (closing every
+/// connection) once the dispatcher is gone.
+fn intake_loop(listener: TcpListener, tx: Sender<ToDispatcher>) {
+    if listener.set_nonblocking(true).is_err() {
+        return;
+    }
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut scratch = [0u8; 4096];
+    loop {
+        let mut progressed = false;
+
+        // accept every pending connection
+        loop {
+            match listener.accept() {
+                Ok((stream, peer)) => {
+                    progressed = true;
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let Ok(write_half) = stream.try_clone() else {
+                        continue;
+                    };
+                    conns.push(Conn {
+                        stream,
+                        peer: peer.to_string(),
+                        buf: Vec::new(),
+                        reply: spawn_writer(write_half),
+                    });
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(_) => return, // listener is gone
+            }
+        }
+
+        // pump every connection; drop the ones that closed or whose
+        // lines can no longer reach the dispatcher
+        let mut dispatcher_gone = false;
+        conns.retain_mut(|conn| {
+            match pump_conn(conn, &mut scratch, &tx) {
+                Pump::Idle => true,
+                Pump::Progress => {
+                    progressed = true;
+                    true
+                }
+                Pump::Closed => {
+                    eprintln!("[server] {} disconnected", conn.peer);
+                    false
+                }
+                Pump::DispatcherGone => {
+                    dispatcher_gone = true;
+                    false
+                }
+            }
+        });
+        if dispatcher_gone {
+            // server shutting down: dropping the listener and every
+            // conn (and with them the reply senders) EOFs all clients
+            return;
+        }
+        if !progressed {
+            thread::sleep(Duration::from_millis(1));
+        }
+    }
+}
+
+/// Outcome of one read pump over a connection.
+enum Pump {
+    /// Nothing to read right now.
+    Idle,
+    /// Read and/or forwarded something.
+    Progress,
+    /// Peer closed (or the socket errored): drop the connection.
+    Closed,
+    /// The dispatcher channel is closed: the server is shutting down.
+    DispatcherGone,
+}
+
+/// Drain everything currently readable from `conn`, split complete
+/// lines and forward them. At EOF a non-terminated trailing line is
+/// still processed (matching `BufRead::lines`).
+fn pump_conn(conn: &mut Conn, scratch: &mut [u8],
+             tx: &Sender<ToDispatcher>) -> Pump {
+    let mut progressed = false;
+    loop {
+        match conn.stream.read(scratch) {
+            Ok(0) => {
+                if !conn.buf.is_empty() {
+                    let tail = std::mem::take(&mut conn.buf);
+                    if forward_line(&tail, &conn.reply, tx).is_err() {
+                        return Pump::DispatcherGone;
+                    }
+                }
+                return Pump::Closed;
+            }
+            Ok(n) => {
+                progressed = true;
+                conn.buf.extend_from_slice(&scratch[..n]);
+                while let Some(pos) =
+                    conn.buf.iter().position(|&b| b == b'\n')
+                {
+                    let line: Vec<u8> = conn.buf.drain(..=pos).collect();
+                    if forward_line(&line[..pos], &conn.reply, tx).is_err() {
+                        return Pump::DispatcherGone;
+                    }
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                return if progressed { Pump::Progress } else { Pump::Idle };
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(_) => return Pump::Closed,
+        }
+    }
+}
+
+/// Parse one wire line and forward it to the dispatcher; malformed
+/// lines get a structured `error` event on the connection instead.
+/// `Err` means the dispatcher is gone (never a client mistake).
+fn forward_line(raw: &[u8], reply: &Sender<Outgoing>,
+                tx: &Sender<ToDispatcher>) -> Result<()> {
+    let line = String::from_utf8_lossy(raw);
+    let line = line.trim();
+    if line.is_empty() {
+        return Ok(());
+    }
+    match parse_line(line) {
+        Ok(Parsed::Request(prompt, max_new, sampling, meta)) => {
+            tx.send(ToDispatcher::Request {
+                prompt, max_new_tokens: max_new, sampling, meta,
+                reply: reply.clone() })
+                .context("dispatcher gone")?;
+        }
+        Ok(Parsed::Command(kind)) => {
+            tx.send(ToDispatcher::Command { kind, reply: reply.clone() })
+                .context("dispatcher gone")?;
+        }
+        Err(e) => {
+            let _ = reply.send(Outgoing::Error(format!("{e:#}")));
+        }
+    }
+    Ok(())
+}
+
+/// Spawn the per-connection writer thread: serialize events back to the
+/// socket. The dedupe filter sits here — the single choke point every
+/// event to this connection crosses — so failover-replay re-emissions
+/// (repeated positions, duplicate dones) are dropped and the wire
+/// stream stays `position`-monotone with exactly one `done` per branch,
+/// crash or no crash. The write half shares the intake's non-blocking
+/// file description, so writes retry on `WouldBlock` instead of
+/// treating a full socket buffer as a dead peer.
+fn spawn_writer(mut writer: TcpStream) -> Sender<Outgoing> {
+    let (reply_tx, reply_rx) = channel::<Outgoing>();
+    thread::spawn(move || {
         let mut dedupe = StreamDedupe::default();
         for ev in reply_rx {
             let forward = match &ev {
@@ -732,39 +990,33 @@ fn handle_connection(stream: TcpStream, tx: Sender<ToDispatcher>) -> Result<()> 
             if !forward {
                 continue;
             }
-            let line = event_json(&ev);
-            if writeln!(writer, "{line}").is_err() {
+            let mut line = event_json(&ev);
+            line.push('\n');
+            if write_all_retrying(&mut writer, line.as_bytes()).is_err() {
                 break;
             }
-            let _ = writer.flush();
         }
     });
+    reply_tx
+}
 
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
-        }
-        match parse_line(&line) {
-            Ok(Parsed::Request(prompt, max_new, sampling, meta)) => {
-                tx.send(ToDispatcher::Request {
-                    prompt, max_new_tokens: max_new, sampling, meta,
-                    reply: reply_tx.clone() })
-                    .context("dispatcher gone")?;
+/// `write_all` over a non-blocking socket: retry `WouldBlock` (briefly
+/// sleeping — the writer thread may block, the intake thread never
+/// does) and `Interrupted`; any other error is a dead peer.
+fn write_all_retrying(w: &mut TcpStream, mut buf: &[u8])
+    -> std::io::Result<()> {
+    while !buf.is_empty() {
+        match w.write(buf) {
+            Ok(0) => return Err(ErrorKind::WriteZero.into()),
+            Ok(n) => buf = &buf[n..],
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(1));
             }
-            Ok(Parsed::Command(kind)) => {
-                tx.send(ToDispatcher::Command {
-                    kind, reply: reply_tx.clone() })
-                    .context("dispatcher gone")?;
-            }
-            Err(e) => {
-                let _ = reply_tx.send(Outgoing::Error(format!("{e:#}")));
-            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
         }
     }
-    drop(reply_tx);
-    let _ = w.join();
-    eprintln!("[server] {peer} disconnected");
+    let _ = w.flush();
     Ok(())
 }
 
@@ -1011,6 +1263,28 @@ impl Client {
         Ok(out)
     }
 
+    /// Wait for the next structured admission rejection
+    /// (`code: "admission_rejected"`), returning its `(reason, tenant)`
+    /// wire fields. Token/done events on the way are passed through; any
+    /// *other* error event still fails with its `message`.
+    pub fn wait_rejected(&mut self) -> Result<(String, String)> {
+        loop {
+            let mut line = String::new();
+            if self.reader.read_line(&mut line)? == 0 {
+                anyhow::bail!("server closed connection");
+            }
+            let v = json::parse(line.trim())?;
+            if v.req("event")?.as_str()? != "error" {
+                continue;
+            }
+            let code = v.get("code").map(|c| c.as_str()).transpose()?;
+            if code == Some("admission_rejected") {
+                return Ok((v.str_field("reason")?, v.str_field("tenant")?));
+            }
+            anyhow::bail!("server error: {}", v.str_field("message")?);
+        }
+    }
+
     /// Send a bare wire command (`"run"`, `"step"`, `"metrics"`).
     pub fn send_cmd(&mut self, cmd: &str) -> Result<()> {
         let req = obj(vec![("cmd", json::s(cmd))]);
@@ -1199,6 +1473,24 @@ mod tests {
         assert_eq!(v.req("position").unwrap().as_usize().unwrap(), 5);
         assert!((v.req("logprob").unwrap().as_f64().unwrap() + 3.25).abs()
                 < 1e-12);
+        // admission rejections are `error` events with machine-readable
+        // code/reason/tenant alongside the message
+        let rej = Outgoing::Reject {
+            reason: ShedReason::TenantRateLimited,
+            tenant: "acme".to_string(),
+        };
+        let v = json::parse(&event_json(&rej)).unwrap();
+        assert_eq!(v.str_field("event").unwrap(), "error");
+        assert_eq!(v.str_field("code").unwrap(), "admission_rejected");
+        assert_eq!(v.str_field("reason").unwrap(), "tenant_rate_limited");
+        assert_eq!(v.str_field("tenant").unwrap(), "acme");
+        assert!(v.str_field("message").unwrap().contains("rate limit"));
+        let rej = Outgoing::Reject {
+            reason: ShedReason::QueueFull,
+            tenant: "default".to_string(),
+        };
+        let v = json::parse(&event_json(&rej)).unwrap();
+        assert_eq!(v.str_field("reason").unwrap(), "queue_full");
     }
 
     /// Full loop: spawn a server bound to an ephemeral port, run two
@@ -1433,6 +1725,64 @@ mod tests {
         b.submit(&[1, 2, 3], 2).unwrap();
         b.send_cmd("run").unwrap();
         b.wait_done().unwrap();
+        handle.join().unwrap().unwrap();
+    }
+
+    /// Admission control end to end: a lockstep burst beyond the queue
+    /// cap sheds the tail with structured rejections, shed requests
+    /// consume no serving slot, the connection keeps working, and the
+    /// admission counters ride the `metrics` event.
+    #[test]
+    fn admission_queue_cap_sheds_burst_tail_over_tcp() {
+        let dir = crate::default_artifacts_dir();
+        let bound = ephemeral_addr();
+        let server_addr = bound.clone();
+        let handle = std::thread::spawn(move || {
+            serve_with(dir, EngineConfig::default(), ServeOpts {
+                addr: server_addr,
+                max_requests: Some(3),
+                lockstep: true,
+                admission: AdmissionConfig {
+                    queue_cap: 2,
+                    tenant_burst: 0,
+                    tenant_refill: 0,
+                },
+                ..ServeOpts::default()
+            })
+        });
+        std::thread::sleep(Duration::from_millis(300));
+
+        let mut c = Client::connect(&bound).unwrap();
+        // four submits against a cap of 2: #3 and #4 shed immediately
+        // (lockstep: no dequeue happens before the next command)
+        for start in 0..4 {
+            c.submit(&[start, start + 1, start + 2], 2).unwrap();
+        }
+        for _ in 0..2 {
+            let e = c.wait_done().unwrap_err();
+            assert!(format!("{e:#}").contains("admission queue is full"),
+                    "{e:#}");
+        }
+        // the two admitted requests complete normally on the same
+        // connection — a shed never wedges it
+        c.send_cmd("run").unwrap();
+        assert_eq!(c.wait_done().unwrap().tokens.len(), 2);
+        assert_eq!(c.wait_done().unwrap().tokens.len(), 2);
+        assert!(c.wait_stepped().unwrap() > 0);
+
+        let m = c.fetch_metrics().unwrap();
+        assert_eq!(m.counters.get("admitted_requests"), Some(&2),
+                   "counters: {:?}", m.counters);
+        assert_eq!(m.counters.get("shed_requests"), Some(&2));
+        assert_eq!(m.counters.get("shed_by_tenant:default"), Some(&2));
+        assert_eq!(m.counters.get("intake_queue_peak"), Some(&2));
+
+        // shed requests consumed no serving slot: a third completion is
+        // still needed to release the server
+        c.submit(&[9, 9, 9], 1).unwrap();
+        c.send_cmd("run").unwrap();
+        c.wait_done().unwrap();
+        c.wait_stepped().unwrap();
         handle.join().unwrap().unwrap();
     }
 

@@ -465,6 +465,48 @@ impl MultiTenantStorm {
     }
 }
 
+/// Admission-storm workload: one oversubscribing burst of requests,
+/// tenants interleaved round-robin, submitted faster than the admission
+/// queue drains. Against an [`AdmissionConfig`]
+/// (`crate::config::AdmissionConfig`) with a queue cap and tenant
+/// buckets, the burst's tail must be *shed* — deterministically, since
+/// under lockstep no dequeue tick lands between submissions. The
+/// `admission_storm` bench scenario predicts the shed set with a
+/// controller replica, asserts the wire agrees, and requires the
+/// admitted subset's fingerprint to equal a storm-free run of the same
+/// subset.
+#[derive(Debug, Clone)]
+pub struct AdmissionStorm {
+    /// Tenants in round-robin submission order (request `i` belongs to
+    /// `tenants[i % tenants.len()]`).
+    pub tenants: Vec<String>,
+    /// Total requests in the burst.
+    pub burst: usize,
+    /// Prompt length range (uniform per request).
+    pub min_prompt: usize,
+    pub max_prompt: usize,
+    pub max_new_tokens: usize,
+    pub vocab: usize,
+}
+
+impl AdmissionStorm {
+    /// Generate the burst, deterministic in `rng`.
+    pub fn requests(&self, rng: &mut Rng) -> Vec<GroupRequest> {
+        (0..self.burst)
+            .map(|i| {
+                let tenant = self.tenants[i % self.tenants.len()].clone();
+                let len = rng.range(self.min_prompt, self.max_prompt);
+                GroupRequest {
+                    prompt: rng.tokens(len.max(1), self.vocab),
+                    sampling: SamplingParams::default(),
+                    max_new_tokens: self.max_new_tokens,
+                    meta: RequestMeta::new(Priority::Interactive, tenant),
+                }
+            })
+            .collect()
+    }
+}
+
 /// Sharded-affinity workload: `families` distinct long shared prefixes,
 /// issued in interleaved waves (one request per family per wave, each
 /// with a unique tail). Routed by prefix affinity, every family's
@@ -738,6 +780,31 @@ mod tests {
         // deterministic for a fixed seed
         let again = w.requests(2, &mut Rng::new(23));
         assert_eq!(reqs[7].prompt, again[7].prompt);
+    }
+
+    #[test]
+    fn admission_storm_interleaves_round_robin_and_replays() {
+        let w = AdmissionStorm {
+            tenants: vec!["a".into(), "b".into(), "c".into()],
+            burst: 8,
+            min_prompt: 4,
+            max_prompt: 10,
+            max_new_tokens: 3,
+            vocab: 2048,
+        };
+        let reqs = w.requests(&mut Rng::new(47));
+        assert_eq!(reqs.len(), 8);
+        let tenants: Vec<&str> =
+            reqs.iter().map(|r| r.meta.tenant.as_str()).collect();
+        assert_eq!(tenants, ["a", "b", "c", "a", "b", "c", "a", "b"],
+                   "strict round-robin interleave");
+        assert!(reqs.iter().all(|r| {
+            (w.min_prompt..=w.max_prompt).contains(&r.prompt.len())
+                && r.sampling.is_greedy()
+        }));
+        // deterministic for a fixed seed
+        let again = w.requests(&mut Rng::new(47));
+        assert_eq!(reqs[5].prompt, again[5].prompt);
     }
 
     #[test]

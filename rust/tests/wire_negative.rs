@@ -1,16 +1,17 @@
-//! Negative-path wire-protocol tests: garbage lines, unknown commands
-//! and post-shutdown submissions must produce structured `error` events
-//! or a clean close — never a panic, a wedged connection, or a wedged
-//! server. Driven over raw sockets (the typed `server::Client` can't
-//! produce malformed input by design). Requires the compiled artifacts
-//! (`make artifacts`).
+//! Negative-path wire-protocol tests: garbage lines, unknown commands,
+//! load-shed submissions and post-shutdown submissions must produce
+//! structured `error` events or a clean close — never a panic, a wedged
+//! connection, or a wedged server. Driven over raw sockets (the typed
+//! `server::Client` can't produce malformed input by design, and these
+//! tests pin the exact wire fields `docs/WIRE_PROTOCOL.md` promises).
+//! Requires the compiled artifacts (`make artifacts`).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::thread;
 use std::time::Duration;
 
-use triton_anatomy::config::EngineConfig;
+use triton_anatomy::config::{AdmissionConfig, EngineConfig};
 use triton_anatomy::json::{self, Value};
 use triton_anatomy::server::{serve_with, ServeOpts};
 
@@ -185,4 +186,144 @@ fn submit_after_shutdown_closes_cleanly() {
     handle.join().unwrap().unwrap();
     w.send("{\"prompt\": [1, 2, 3], \"max_new_tokens\": 1}");
     w.expect_eof();
+}
+
+// ------------------------------------------------- admission control
+
+fn start_admission_server(addr: &str, max_requests: usize,
+                          admission: AdmissionConfig)
+    -> thread::JoinHandle<anyhow::Result<()>> {
+    let dir = triton_anatomy::default_artifacts_dir();
+    let server_addr = addr.to_string();
+    thread::spawn(move || {
+        serve_with(dir, EngineConfig::default(), ServeOpts {
+            addr: server_addr,
+            max_requests: Some(max_requests),
+            lockstep: true,
+            admission,
+            ..ServeOpts::default()
+        })
+    })
+}
+
+/// Drain `n` admission rejections off the wire and drive the admitted
+/// work to completion (`expect_done` groups + the lockstep ack). Every
+/// rejection must carry the machine-readable fields next to the human
+/// `message`; returns the `(reason, tenant)` pairs in arrival order.
+fn read_sheds_then_finish(w: &mut Wire, n: usize, expect_done: usize)
+    -> Vec<(String, String)> {
+    let mut sheds = Vec::new();
+    for _ in 0..n {
+        let ev = w.read_event();
+        assert_eq!(ev.str_field("event").unwrap(), "error",
+                   "expected a rejection, got: {ev:?}");
+        assert_eq!(ev.str_field("code").unwrap(), "admission_rejected");
+        assert!(!ev.str_field("message").unwrap().is_empty(),
+                "a rejection still carries a human-readable message");
+        sheds.push((ev.str_field("reason").unwrap(),
+                    ev.str_field("tenant").unwrap()));
+    }
+    // the sheds didn't wedge the socket: the admitted head completes
+    w.send("{\"cmd\": \"run\"}");
+    let mut dones = 0;
+    let mut stepped = false;
+    while !(dones == expect_done && stepped) {
+        match w.read_event().str_field("event").unwrap().as_str() {
+            "done" => dones += 1,
+            "stepped" => stepped = true,
+            "token" => {}
+            other => panic!("unexpected event during drain: {other}"),
+        }
+    }
+    sheds
+}
+
+/// A rate-limited submit gets one structured `error` event carrying the
+/// machine-readable rejection fields (`code`, `reason`, `tenant`) next
+/// to the human `message` — and the connection survives: the admitted
+/// request still completes on the same socket.
+#[test]
+fn admission_rejection_carries_code_reason_and_tenant() {
+    let addr = ephemeral_addr();
+    let handle = start_admission_server(&addr, 1, AdmissionConfig {
+        queue_cap: 0, // unbounded queue: isolate the rate limiter
+        tenant_burst: 1,
+        tenant_refill: 0,
+    });
+    let mut w = Wire::open(&addr);
+    w.send("{\"prompt\": [1, 2, 3], \"max_new_tokens\": 1, \
+            \"tenant\": \"acme\"}");
+    w.send("{\"prompt\": [4, 5, 6], \"max_new_tokens\": 1, \
+            \"tenant\": \"acme\"}");
+    let ev = w.read_event();
+    assert_eq!(ev.str_field("event").unwrap(), "error");
+    assert_eq!(ev.str_field("code").unwrap(), "admission_rejected");
+    assert_eq!(ev.str_field("reason").unwrap(), "tenant_rate_limited");
+    assert_eq!(ev.str_field("tenant").unwrap(), "acme");
+    assert!(ev.str_field("message").unwrap().contains("rate limit"));
+
+    let sheds = read_sheds_then_finish(&mut w, 0, 1);
+    assert!(sheds.is_empty());
+    handle.join().unwrap().unwrap();
+}
+
+/// The burst tail beyond the queue cap is shed with `queue_full` (on
+/// the implicit `default` tenant when the submit names none), and the
+/// capped head still completes — a shed never wedges the connection.
+#[test]
+fn queue_full_shed_reports_reason_and_completes_the_head() {
+    let addr = ephemeral_addr();
+    let handle = start_admission_server(&addr, 1, AdmissionConfig {
+        queue_cap: 1,
+        tenant_burst: 0, // rate limiting off: isolate the queue cap
+        tenant_refill: 0,
+    });
+    let mut w = Wire::open(&addr);
+    for p in [1, 2, 3] {
+        w.send(&format!("{{\"prompt\": [{p}], \"max_new_tokens\": 1}}"));
+    }
+    let sheds = read_sheds_then_finish(&mut w, 2, 1);
+    for (reason, tenant) in &sheds {
+        assert_eq!(reason, "queue_full");
+        assert_eq!(tenant, "default");
+    }
+    handle.join().unwrap().unwrap();
+}
+
+/// One lockstep replay of a mixed-tenant burst: returns its shed set.
+/// Cap 4, burst 2, refill 1 over nine round-robin submits sheds a mix
+/// of `queue_full` and `tenant_rate_limited` verdicts.
+fn replay_shed_set(addr: &str) -> Vec<(String, String)> {
+    let mut w = Wire::open(addr);
+    let tenants = ["x", "y", "z"];
+    for (i, t) in (0..9).map(|i| (i, tenants[i % 3])) {
+        w.send(&format!(
+            "{{\"prompt\": [{}, 2, 3], \"max_new_tokens\": 1, \
+               \"tenant\": \"{t}\"}}", i + 1));
+    }
+    read_sheds_then_finish(&mut w, 5, 4)
+}
+
+/// The shed *set* is a deterministic function of the submit order under
+/// `--lockstep`: two fresh servers replaying the identical burst shed
+/// the identical `(reason, tenant)` sequence.
+#[test]
+fn shed_set_is_identical_across_lockstep_replays() {
+    let admission = AdmissionConfig {
+        queue_cap: 4,
+        tenant_burst: 2,
+        tenant_refill: 1,
+    };
+    let mut runs = Vec::new();
+    for _ in 0..2 {
+        let addr = ephemeral_addr();
+        let handle = start_admission_server(&addr, 4, admission.clone());
+        runs.push(replay_shed_set(&addr));
+        handle.join().unwrap().unwrap();
+    }
+    assert_eq!(runs[0], runs[1],
+               "replaying the same burst must shed the same set");
+    assert_eq!(runs[0].len(), 5);
+    assert!(runs[0].iter().any(|(r, _)| r == "queue_full"));
+    assert!(runs[0].iter().any(|(r, _)| r == "tenant_rate_limited"));
 }
